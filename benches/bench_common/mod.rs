@@ -1,0 +1,60 @@
+#![allow(dead_code)] // shared across multiple bench binaries; each uses a subset
+//! Shared helpers for the paper-figure benches: synthetic eigensystems
+//! with kernel-like decaying spectra, the N sweep, and output formatting.
+//!
+//! The figures time *per-iterate evaluation* given the eigendecomposition
+//! (exactly what the paper's §3 measures: "the average execution time of
+//! these quantities"), so the eigensystem here is synthesized directly —
+//! a geometric spectrum matching what RBF Gram matrices produce — rather
+//! than paying an O(N^3) decomposition per sweep point.
+
+use gpml::spectral::EigenSystem;
+use gpml::util::rng::Rng;
+
+/// The paper's sweep: N = 32 .. 8192 on a log2 scale.
+pub const PAPER_SWEEP: [usize; 9] = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+
+/// Kernel-like eigensystem: geometrically decaying spectrum + unit-scale
+/// projected targets.
+pub fn synthetic_eigensystem(n: usize, seed: u64) -> EigenSystem {
+    let mut rng = Rng::new(seed);
+    let decay = 0.999f64;
+    let s: Vec<f64> = (0..n)
+        .map(|i| (n as f64) * decay.powi(i as i32) * rng.uniform_in(0.5, 1.0))
+        .collect();
+    let yt: Vec<f64> = rng.normal_vec(n);
+    let yy = yt.iter().map(|v| v * v).sum();
+    EigenSystem::from_parts(s, yt.iter().map(|v| v * v).collect(), n, yy)
+}
+
+/// Iterations for a rust-path measurement at size n (keeps total time
+/// bounded while retaining enough samples at small n).
+pub fn rust_iters(n: usize) -> usize {
+    (2_000_000 / n).clamp(200, 20_000)
+}
+
+/// Iterations for a PJRT-path measurement (dispatch-dominated).
+pub fn pjrt_iters(_n: usize) -> usize {
+    300
+}
+
+/// Open the artifact runtime if present (benches degrade to rust-only).
+pub fn open_runtime() -> Option<gpml::runtime::PjrtRuntime> {
+    let dir = std::env::var_os("GPML_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    match gpml::runtime::PjrtRuntime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("(no PJRT artifacts: {e:#}; rust-only bench)");
+            None
+        }
+    }
+}
+
+/// Print the tau(N) = a + b N fit next to the paper's reported fit.
+pub fn print_fit(label: &str, ns: &[f64], us: &[f64], paper: &str) {
+    let (a, b, r2) = gpml::util::timing::linear_fit(ns, us);
+    println!("\nfit {label}: tau(N) = {a:.2} + {b:.5} N  [us]  (R^2 = {r2:.4})");
+    println!("paper (MATLAB R2010a, Core2 Q9550): {paper}");
+}

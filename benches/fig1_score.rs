@@ -1,0 +1,55 @@
+//! Figure 1: evaluation time of the score function L_y (eq. 19) vs N.
+//!
+//! Paper result: tau_L(N) ~= 42.26 + 0.05 N [us] — a flat dispatch
+//! overhead plus ~0.05 us per eigenvalue.  We report the same series for
+//! (a) the pure-rust O(N) evaluator and (b) the PJRT score artifact with
+//! staged buffers, and fit tau(N) = a + b N to each.
+
+mod bench_common;
+
+use bench_common::*;
+use gpml::spectral::HyperParams;
+use gpml::util::timing::{measure_block, Table};
+
+fn main() {
+    println!("== Figure 1: score evaluation time vs N ==");
+    let rt = open_runtime();
+    let hp = HyperParams::new(0.7, 1.3);
+
+    let mut table = Table::new(&["N", "rust us/eval", "pjrt us/eval"]);
+    let (mut ns, mut rust_us, mut pjrt_us) = (vec![], vec![], vec![]);
+
+    for &n in &PAPER_SWEEP {
+        let es = synthetic_eigensystem(n, n as u64);
+        let t_rust = measure_block(50, rust_iters(n), || {
+            std::hint::black_box(es.score(hp));
+        });
+        let t_pjrt = rt.as_ref().map(|rt| {
+            let ev = rt.evaluator(&es).expect("evaluator");
+            measure_block(20, pjrt_iters(n), || {
+                std::hint::black_box(ev.try_eval(hp).expect("pjrt eval"));
+            })
+        });
+        ns.push(n as f64);
+        rust_us.push(t_rust);
+        if let Some(t) = t_pjrt {
+            pjrt_us.push(t);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{t_rust:.2}"),
+            t_pjrt.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print();
+
+    print_fit("rust", &ns, &rust_us, "tau_L(N) ~= 42.26 + 0.05 N [us]");
+    if pjrt_us.len() == ns.len() {
+        print_fit("pjrt", &ns, &pjrt_us, "tau_L(N) ~= 42.26 + 0.05 N [us]");
+    }
+    // eq. 45 checkpoint: at N ~= 8000 the paper reports ~440 us per global
+    // iteration (score only)
+    if let Some(last) = rust_us.last() {
+        println!("\neq. 45 checkpoint @ N=8192: paper ~ 440 us higher-level; measured rust {last:.1} us");
+    }
+}

@@ -1,0 +1,63 @@
+//! Figure 2: evaluation time of the Jacobian (eqs. 20-21) vs N.
+//!
+//! Paper result: tau_J(N) ~= 44.54 + 0.086 N [us] — the slope is ~2x the
+//! score slope because two derivative sums are accumulated.  The rust
+//! series times `EigenSystem::grad`; there is deliberately no
+//! Jacobian-only PJRT artifact (the fused artifact returns
+//! score+Jacobian+Hessian in one dispatch — see fig3), so the PJRT column
+//! here reports that fused dispatch as an upper bound.
+
+mod bench_common;
+
+use bench_common::*;
+use gpml::spectral::HyperParams;
+use gpml::util::timing::{measure_block, Table};
+
+fn main() {
+    println!("== Figure 2: Jacobian evaluation time vs N ==");
+    let rt = open_runtime();
+    let hp = HyperParams::new(0.7, 1.3);
+
+    let mut table = Table::new(&["N", "rust us/eval", "pjrt(fused) us/eval"]);
+    let (mut ns, mut rust_us) = (vec![], vec![]);
+
+    for &n in &PAPER_SWEEP {
+        let es = synthetic_eigensystem(n, 10 + n as u64);
+        let t_rust = measure_block(50, rust_iters(n), || {
+            std::hint::black_box(es.grad(hp));
+        });
+        let t_pjrt = rt.as_ref().map(|rt| {
+            let ev = rt.evaluator(&es).expect("evaluator");
+            measure_block(20, pjrt_iters(n), || {
+                std::hint::black_box(ev.try_eval_full(hp).expect("pjrt fused"));
+            })
+        });
+        ns.push(n as f64);
+        rust_us.push(t_rust);
+        table.row(&[
+            n.to_string(),
+            format!("{t_rust:.2}"),
+            t_pjrt.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print();
+
+    print_fit("rust", &ns, &rust_us, "tau_J(N) ~= 44.54 + 0.086 N [us]");
+
+    // shape check the paper calls out: Jacobian slope ~ 2x score slope
+    let score_us: Vec<f64> = PAPER_SWEEP
+        .iter()
+        .map(|&n| {
+            let es = synthetic_eigensystem(n, n as u64);
+            measure_block(50, rust_iters(n), || {
+                std::hint::black_box(es.score(hp));
+            })
+        })
+        .collect();
+    let (_, b_score, _) = gpml::util::timing::linear_fit(&ns, &score_us);
+    let (_, b_jac, _) = gpml::util::timing::linear_fit(&ns, &rust_us);
+    println!(
+        "\nslope ratio jacobian/score: measured {:.2} (paper: 0.086/0.05 = 1.72)",
+        b_jac / b_score
+    );
+}

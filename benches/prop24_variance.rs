@@ -1,0 +1,99 @@
+//! Proposition 2.4 — posterior covariance Sigma_c:
+//!   eq. (36) needs two O(N^3) inversions;
+//!   the spectral form U Q U' costs one Strassen multiply (O(N^2.807))
+//!   for the full matrix, or O(N) per requested element for the diagonal.
+//! This bench regenerates that three-way comparison (plus the PJRT
+//! diag artifact when available).
+
+mod bench_common;
+
+use std::time::Instant;
+
+use bench_common::*;
+use gpml::kernelfn::{gram, Kernel};
+use gpml::linalg::{gemm, Cholesky, Matrix};
+use gpml::spectral::{HyperParams, SpectralGp};
+use gpml::util::rng::Rng;
+use gpml::util::timing::Table;
+
+/// Dense eq. (36): sigma2 (K + rI)^{-1} K^{-1} via two Cholesky inversions.
+/// `k` must be SPD — the caller jitters the Gram matrix, and the spectral
+/// path decomposes the *same* jittered matrix, so both sides compute the
+/// same well-defined quantity (a raw RBF Gram is numerically singular and
+/// K^{-1} is meaningless for either method).
+fn dense_sigma_c(k: &Matrix, hp: HyperParams) -> Matrix {
+    let mut m = k.clone();
+    m.add_diag(hp.sigma2 / hp.lambda2);
+    let minv = Cholesky::new(&m).expect("SPD").inverse();
+    let kinv = Cholesky::new(k).expect("SPD").inverse();
+    let mut out = gemm::matmul(&minv, &kinv);
+    out.scale(hp.sigma2);
+    out
+}
+
+fn main() {
+    println!("== Prop. 2.4: posterior covariance Sigma_c ==");
+    let rt = open_runtime();
+    let hp = HyperParams::new(0.5, 2.0);
+    let kern = Kernel::Rbf { xi2: 1.5 };
+
+    let mut table = Table::new(&[
+        "N",
+        "eq36 dense s",
+        "strassen UQU' s",
+        "diag-only s",
+        "pjrt diag s",
+        "max|diff| dense vs spectral",
+    ]);
+
+    for &n in &[128usize, 256, 512, 1024] {
+        let mut rng = Rng::new(n as u64);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let mut k = gram(kern, &x);
+        k.add_diag(1e-6 * n as f64); // make K^{-1} well-defined for both paths
+        let gp = SpectralGp::fit_from_gram(kern, x.clone(), &k).expect("fit");
+
+        let t = Instant::now();
+        let dense = dense_sigma_c(&k, hp);
+        let t_dense = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let full = gp.posterior_var_full(hp);
+        let t_full = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let diag = gp.posterior_var_diag(hp);
+        let t_diag = t.elapsed().as_secs_f64();
+
+        let t_pjrt = rt.as_ref().and_then(|rt| {
+            if n > 4096 {
+                return None;
+            }
+            let t = Instant::now();
+            let d = rt
+                .posterior_var_diag(&gp.eigen().vectors, &gp.eigen().values, hp)
+                .ok()?;
+            std::hint::black_box(d);
+            Some(t.elapsed().as_secs_f64())
+        });
+
+        // correctness: diagonal agreement between all paths
+        let mut max_diff = 0.0f64;
+        for i in 0..n {
+            max_diff = max_diff.max((dense[(i, i)] - diag[i]).abs());
+            max_diff = max_diff.max((full[(i, i)] - diag[i]).abs());
+        }
+
+        table.row(&[
+            n.to_string(),
+            format!("{t_dense:.3}"),
+            format!("{t_full:.3}"),
+            format!("{t_diag:.4}"),
+            t_pjrt.map(|t| format!("{t:.4}")).unwrap_or_else(|| "-".into()),
+            format!("{max_diff:.2e}"),
+        ]);
+    }
+    table.print();
+    println!("\npaper: eq. (36) costs two O(N^3) inversions; U Q U' via Strassen is");
+    println!("O(N^2.807); interesting elements (the diagonal) are O(N) each.");
+}

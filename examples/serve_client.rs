@@ -1,0 +1,73 @@
+//! Serving demo: start the coordinator server in-process, submit tuning
+//! jobs from several client connections (including a repeated job that
+//! hits the eigen-cache and a multi-output job), and print the responses.
+//!
+//! Run: `cargo run --release --example serve_client`
+
+use gpml::coordinator::client::Client;
+use gpml::coordinator::server::Server;
+use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    println!("== coordinator serving demo ==");
+    // ephemeral port; the worker thread owns the (non-Send) coordinator
+    let server = Server::start("127.0.0.1:0", Coordinator::auto)?;
+    println!("server listening on {}", server.addr);
+
+    let mut client = Client::connect(&server.addr.to_string())?;
+    println!("ping -> {}", client.ping()?);
+
+    // job 1: single output
+    let spec = SyntheticSpec { n: 128, p: 4, sigma2: 0.1, lambda2: 1.0, seed: 3, ..Default::default() };
+    let ds = synthetic(spec, 1);
+    let mut req = TuneRequest::new(ds.x.clone(), ds.ys.clone(), Kernel::Rbf { xi2: 2.0 });
+    req.strategy = GlobalStrategy::Pso { particles: 32, iterations: 15 };
+    req.objective = ObjectiveKind::Evidence;
+    let res = client.tune(&req)?;
+    print_result("job 1 (fresh dataset)", &res);
+
+    // job 2: identical dataset -> eigen-cache hit on the server
+    let res2 = client.tune(&req)?;
+    print_result("job 2 (same dataset, cache hit expected)", &res2);
+
+    // job 3: multi-output over a second connection
+    let ds3 = synthetic(spec, 3);
+    let mut req3 = TuneRequest::new(ds3.x, ds3.ys, Kernel::Rbf { xi2: 2.0 });
+    req3.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+    let mut client2 = Client::connect(&server.addr.to_string())?;
+    let res3 = client2.tune(&req3)?;
+    print_result("job 3 (3 outputs, new connection)", &res3);
+
+    let info = client.info()?;
+    println!(
+        "\nserver info: pjrt={} cache_hits={} cache_misses={}",
+        info.get("pjrt").and_then(Json::as_bool).unwrap_or(false),
+        info.get("cache_hits").and_then(Json::as_f64).unwrap_or(-1.0),
+        info.get("cache_misses").and_then(Json::as_f64).unwrap_or(-1.0),
+    );
+
+    server.stop();
+    println!("server stopped; demo OK");
+    Ok(())
+}
+
+fn print_result(label: &str, res: &Json) {
+    let cached = res.get("eigen_cached").and_then(Json::as_bool).unwrap_or(false);
+    let tune_s = res.get("tune_seconds").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let eigen_s = res.get("eigen_seconds").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    println!("\n{label}:");
+    println!("  eigen_cached={cached} eigen={eigen_s:.3}s tune={tune_s:.3}s");
+    if let Some(outs) = res.get("outputs").and_then(Json::as_arr) {
+        for (i, o) in outs.iter().enumerate() {
+            println!(
+                "  y{i}: sigma2={:.4e} lambda2={:.4e} score={:.4}",
+                o.get("sigma2").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                o.get("lambda2").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                o.get("score").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            );
+        }
+    }
+}

@@ -1,0 +1,122 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser on the rust side
+(``HloModuleProto::from_text_file``) reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per (entry point, bucket) plus a
+``manifest.json`` that the rust runtime reads to discover buckets and
+shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = jnp.float64
+
+# Bucket ladder — matches the paper's simulation sweep (N = 32 .. 8192 on a
+# log2 scale).  A dataset of size N is served by the smallest bucket >= N.
+N_BUCKETS = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192]
+# Global-search wavefront width (grid/PSO swarm size per dispatch).
+B_BATCH = 64
+# Feature-dimension ceiling for the gram artifact (features zero-pad exactly).
+P_PAD = 32
+# The (N, N) artifacts (gram, posterior-variance) stop earlier: an f64
+# 8192 x 8192 literal is 512 MiB per buffer, past the point where the rust
+# eigensolver dominates anyway.
+NN_BUCKETS = [n for n in N_BUCKETS if n <= 4096]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def build_entries():
+    """(name, jax_fn, example_args, meta) for every artifact."""
+    entries = []
+    for n in N_BUCKETS:
+        vec, hp, sc = _spec(n), _spec(2), _spec()
+        entries.append(
+            (f"score_n{n}", model.score, (vec, vec, hp, sc, sc),
+             {"entry": "score", "n": n})
+        )
+        entries.append(
+            (f"fused_n{n}", model.fused, (vec, vec, hp, sc, sc),
+             {"entry": "fused", "n": n})
+        )
+        hps = _spec(B_BATCH, 2)
+        entries.append(
+            (f"batched_b{B_BATCH}_n{n}", model.batched_score,
+             (vec, vec, hps, sc, sc),
+             {"entry": "batched_score", "n": n, "b": B_BATCH})
+        )
+    for n in NN_BUCKETS:
+        entries.append(
+            (f"gram_n{n}_p{P_PAD}", model.gram, (_spec(n, P_PAD), _spec(2)),
+             {"entry": "gram", "n": n, "p": P_PAD})
+        )
+        entries.append(
+            (f"pvar_n{n}", model.posterior_var_diag,
+             (_spec(n, n), _spec(n), _spec(2)),
+             {"entry": "posterior_var_diag", "n": n})
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated artifact-name filter (substring match)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dtype": "f64", "b_batch": B_BATCH, "p_pad": P_PAD,
+                "artifacts": []}
+    for name, fn, specs, meta in build_entries():
+        if args.only and not any(tok in name for tok in args.only.split(",")):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        rec = {"name": name, "file": fname, **meta}
+        manifest["artifacts"].append(rec)
+        print(f"  wrote {fname:<28} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

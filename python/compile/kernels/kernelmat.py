@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: Gram-matrix construction.
+
+Builds the RBF (or polynomial / linear) kernel matrix from the padded input
+matrix ``X`` in (BI, BJ) output tiles.  TPU mapping: each tile is an
+MXU-shaped ``(BI, P) @ (P, BJ)`` matmul (the cross-term of the
+``||x||^2 + ||y||^2 - 2<x,y>`` decomposition) followed by VPU elementwise
+exp — the same schedule a CUDA version would express with threadblocks is
+expressed here with a BlockSpec grid over output tiles.
+
+Feature padding with zero columns is exact for all three kernels: zeros
+change neither inner products nor squared distances (the polynomial/linear
+kernels add their constant after the dot product).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+BLOCK_I = 128
+BLOCK_J = 128
+
+# Kernel-family codes shared with Layer 2 / the rust side (manifest.json).
+RBF, POLY, LINEAR = 0.0, 1.0, 2.0
+
+
+def _gram_kernel(xi_ref, xj_ref, hp_ref, o_ref):
+    """hp = [family, theta]; theta = xi2 bandwidth (RBF) or degree (poly)."""
+    family = hp_ref[0]
+    theta = hp_ref[1]
+    xi = xi_ref[...]                       # (BI, P)
+    xj = xj_ref[...]                       # (BJ, P)
+    cross = jnp.dot(xi, xj.T)              # MXU tile
+    sqi = jnp.sum(xi * xi, axis=1)[:, None]
+    sqj = jnp.sum(xj * xj, axis=1)[None, :]
+    d2 = jnp.maximum(sqi + sqj - 2.0 * cross, 0.0)
+    rbf = jnp.exp(-d2 / (2.0 * theta))
+    poly = (cross + 1.0) ** theta
+    lin = cross
+    o_ref[...] = jnp.where(family == RBF, rbf, jnp.where(family == POLY, poly, lin))
+
+
+def gram(X: jnp.ndarray, hp: jnp.ndarray) -> jnp.ndarray:
+    """Full (N, N) Gram matrix; ``hp = [family_code, theta]`` runtime input."""
+    n, p = X.shape
+    # tiles must divide n exactly (the grid truncates otherwise); bucket
+    # sizes are powers of two >= 32 so this is BLOCK_I/J in production.
+    bi = BLOCK_I if n % BLOCK_I == 0 else n
+    bj = BLOCK_J if n % BLOCK_J == 0 else n
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(n // bi, n // bj),
+        in_specs=[
+            pl.BlockSpec((bi, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, p), lambda i, j: (j, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), X.dtype),
+        interpret=True,
+    )(X, X, hp)

@@ -1,0 +1,151 @@
+"""Pure-jnp correctness oracles for the spectral marginal-likelihood kernels.
+
+Two independent layers of ground truth:
+
+1. ``dense_*`` — the paper's eq. (15) evaluated literally: build
+   ``Sigma_y``, invert it, take the slogdet.  O(N^3).  Derivatives come
+   from ``jax.grad`` / ``jax.hessian`` of the dense score, so they do not
+   share *any* algebra with the spectral identities.
+2. ``spectral_*_ref`` — straightforward ``jnp`` implementations of the
+   paper's O(N) identities (Propositions 2.1-2.3), without pallas.
+
+The pallas kernels in ``spectral.py`` are tested against (2), and (2) is
+tested against (1); together this validates both the paper's identities and
+our kernels.
+
+All functions are f64 (the sigma^8 / lambda^8 order terms in eqs. 24/35
+underflow f32 for ill-scaled inputs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Dense formulation (paper eqs. 10, 11, 15)
+# ---------------------------------------------------------------------------
+
+def dense_sigma_y(K: jnp.ndarray, sigma2, lam2) -> jnp.ndarray:
+    """Sigma_y = sigma^2 (K (K + sigma^2/lambda^2 I)^{-1} + I)   (eq. 11)."""
+    n = K.shape[0]
+    M = K + (sigma2 / lam2) * jnp.eye(n, dtype=K.dtype)
+    return sigma2 * (K @ jnp.linalg.inv(M) + jnp.eye(n, dtype=K.dtype))
+
+
+def dense_mu_y(K: jnp.ndarray, y: jnp.ndarray, sigma2, lam2) -> jnp.ndarray:
+    """mu_y = K (K + sigma^2/lambda^2 I)^{-1} y   (eq. 10)."""
+    n = K.shape[0]
+    M = K + (sigma2 / lam2) * jnp.eye(n, dtype=K.dtype)
+    return K @ jnp.linalg.solve(M, y)
+
+
+def dense_score(K: jnp.ndarray, y: jnp.ndarray, sigma2, lam2):
+    """L_y = log|Sigma_y| + (mu_y - y)' Sigma_y^{-1} (mu_y - y)   (eq. 15)."""
+    Sy = dense_sigma_y(K, sigma2, lam2)
+    r = dense_mu_y(K, y, sigma2, lam2) - y
+    sign, logdet = jnp.linalg.slogdet(Sy)
+    return logdet + r @ jnp.linalg.solve(Sy, r)
+
+
+def dense_grad(K, y, sigma2, lam2):
+    """(dL/dsigma2, dL/dlambda2) by autodiff of the dense score."""
+    g = jax.grad(lambda s, l: dense_score(K, y, s, l), argnums=(0, 1))
+    return g(jnp.float64(sigma2), jnp.float64(lam2))
+
+
+def dense_hess(K, y, sigma2, lam2):
+    """2x2 Hessian of the dense score by autodiff."""
+    f = lambda hp: dense_score(K, y, hp[0], hp[1])
+    return jax.hessian(f)(jnp.array([sigma2, lam2], dtype=jnp.float64))
+
+
+def dense_posterior_var(K: jnp.ndarray, sigma2, lam2) -> jnp.ndarray:
+    """Sigma_c = sigma^2 (K + sigma^2/lambda^2 I)^{-1} K^{-1}   (eq. 36)."""
+    n = K.shape[0]
+    M = K + (sigma2 / lam2) * jnp.eye(n, dtype=K.dtype)
+    return sigma2 * jnp.linalg.inv(M) @ jnp.linalg.inv(K)
+
+
+# ---------------------------------------------------------------------------
+# Spectral formulation (Propositions 2.1-2.4), plain jnp
+# ---------------------------------------------------------------------------
+
+def _d(s, sigma2, lam2):
+    """d_i = (2 lam2 s + sigma2)/(lam2 s + sigma2): eigenvalues of Sigma_y/sigma2."""
+    return (2.0 * lam2 * s + sigma2) / (lam2 * s + sigma2)
+
+
+def _g(s, sigma2, lam2):
+    """g_i = (d^2 + 4)/(sigma2 d): eigenvalues of sigma^-4 Sigma_y + 4 Sigma_y^-1."""
+    d = _d(s, sigma2, lam2)
+    return (d * d + 4.0) / (sigma2 * d)
+
+
+def spectral_score_ref(s, y2t, n, yy, sigma2, lam2):
+    """Proposition 2.1 (eq. 19). ``s``: eigenvalues of K; ``y2t``: (U'y)_i^2;
+    ``n``: true number of examples; ``yy``: y'y."""
+    core = jnp.sum(jnp.log(_d(s, sigma2, lam2)) + y2t * _g(s, sigma2, lam2))
+    return n * jnp.log(sigma2) + core - 4.0 * yy / sigma2
+
+
+def spectral_grad_ref(s, y2t, n, yy, sigma2, lam2):
+    """Proposition 2.2 (eqs. 20-25)."""
+    A = sigma2 + lam2 * s
+    B = sigma2 + 2.0 * lam2 * s
+    dlogd_ds = 1.0 / B - 1.0 / A                                   # eq. 22
+    dlogd_dl = s * sigma2 / (A * B)                                # eq. 23
+    dg_ds = -4.0 / sigma2**2 - (
+        sigma2**4 - 2.0 * lam2**2 * s**2 * sigma2**2
+    ) / (sigma2**2 * A**2 * B**2)                                  # eq. 24
+    dg_dl = s / A**2 - 4.0 * s / B**2                              # eq. 25
+    dL_ds = n / sigma2 + 4.0 * yy / sigma2**2 + jnp.sum(dlogd_ds + y2t * dg_ds)
+    dL_dl = jnp.sum(dlogd_dl + y2t * dg_dl)
+    return dL_ds, dL_dl
+
+
+def spectral_hess_ref(s, y2t, n, yy, sigma2, lam2):
+    """Proposition 2.3 (eqs. 26-35). Returns (d2_ss, d2_sl, d2_ll)."""
+    A = sigma2 + lam2 * s
+    B = sigma2 + 2.0 * lam2 * s
+    d2logd_ll = s**2 / A**2 - 4.0 * s**2 / B**2                    # eq. 30
+    d2logd_sl = s / A**2 - 2.0 * s / B**2                          # eq. 31
+    d2logd_ss = 1.0 / A**2 - 1.0 / B**2                            # eq. 32
+    d2g_ll = 16.0 * s**2 / B**3 - 2.0 * s**2 / A**3                # eq. 33
+    d2g_sl = 8.0 * s / B**3 - 2.0 * s / A**3                       # eq. 34
+    d2g_ss = 8.0 / sigma2**3 - (
+        12.0 * lam2**3 * s**3 * sigma2**3
+        + 12.0 * lam2**2 * s**2 * sigma2**4
+        - 2.0 * sigma2**6
+    ) / (sigma2**3 * A**3 * B**3)                                  # eq. 35
+    h_ll = jnp.sum(d2logd_ll + y2t * d2g_ll)                       # eq. 26
+    h_sl = jnp.sum(d2logd_sl + y2t * d2g_sl)                       # eq. 27
+    h_ss = (
+        -n / sigma2**2
+        - 8.0 * yy / sigma2**3
+        + jnp.sum(d2logd_ss + y2t * d2g_ss)
+    )                                                              # eq. 28
+    return h_ss, h_sl, h_ll
+
+
+def spectral_posterior_var_diag_ref(s, U, sigma2, lam2):
+    """Proposition 2.4: diag(Sigma_c) = diag(U Q U'), q_i = sigma2*lam2 /
+    ((lam2 s_i + sigma2) s_i).  O(N) per requested element."""
+    q = sigma2 * lam2 / ((lam2 * s + sigma2) * s)
+    return jnp.sum(U * U * q[None, :], axis=1)
+
+
+def rbf_gram_ref(X, xi2):
+    """RBF Gram matrix  K[i,j] = exp(-||x_i - x_j||^2 / (2 xi2))."""
+    sq = jnp.sum(X * X, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * X @ X.T
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-d2 / (2.0 * xi2))
+
+
+def poly_gram_ref(X, degree):
+    """Polynomial Gram matrix  K[i,j] = (<x_i, x_j> + 1)^degree."""
+    return (X @ X.T + 1.0) ** degree

@@ -1,0 +1,250 @@
+"""Layer-1 Pallas kernels: the paper's O(N) spectral reductions.
+
+Each kernel consumes the eigendecomposition products of the Gram matrix —
+the eigenvalue vector ``s`` and the squared projected targets
+``y2t = (U'y)^2`` — plus the hyperparameter pair ``hp = [sigma2, lambda2]``,
+and reduces the per-eigenvalue closed forms of Propositions 2.1-2.3 into
+scalar sums.
+
+TPU mapping (DESIGN.md §6): the reduction is expressed as a grid over
+N-blocks with VMEM-sized tiles.  Each grid step loads a ``(BLK,)`` slice of
+``s`` and ``y2t`` into VMEM, evaluates the rational per-eigenvalue terms on
+the VPU, and accumulates a partial sum into the (tiny) output block that
+stays resident across the whole grid.  ``interpret=True`` everywhere: on the
+CPU PJRT backend a Mosaic custom-call cannot run, so the kernels lower to
+plain HLO (see /opt/xla-example/README.md).
+
+Zero-padding neutrality: ``s = 0`` gives ``d = 1`` so ``log d`` and all six
+of its derivatives vanish; ``y2t = 0`` kills every ``g`` term.  A single
+compiled bucket therefore serves any true N <= bucket (the closure terms use
+the *true* N and y'y which are runtime scalars added by Layer 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Default eigenvalue-block size.  8 bytes * BLK * ~4 live vectors ≈ 8 KiB of
+# VMEM per step at 256 — far below the ~16 MiB budget; chosen so that even
+# the smallest bucket (N=32) divides evenly via min(BLK, N).
+BLOCK = 256
+
+
+def _blk(n: int) -> int:
+    """Largest tile that evenly divides ``n`` (grid truncates otherwise).
+    Bucket sizes are powers of two so this is BLOCK in production; odd test
+    sizes fall back to a single block."""
+    return BLOCK if n % BLOCK == 0 else n
+
+
+# ---------------------------------------------------------------------------
+# per-eigenvalue closed forms (shared by all kernels)
+# ---------------------------------------------------------------------------
+
+def _terms_score(s, y2, sigma2, lam2):
+    """log d_i + y2_i * g_i   (Proposition 2.1)."""
+    a = lam2 * s + sigma2
+    b = 2.0 * lam2 * s + sigma2
+    d = b / a
+    g = (d * d + 4.0) / (sigma2 * d)
+    return jnp.log(d) + y2 * g
+
+
+def _terms_jac(s, y2, sigma2, lam2):
+    """(eq.20 summand, eq.21 summand)  (Proposition 2.2)."""
+    A = sigma2 + lam2 * s
+    B = sigma2 + 2.0 * lam2 * s
+    dlogd_ds = 1.0 / B - 1.0 / A                                    # eq. 22
+    dlogd_dl = s * sigma2 / (A * B)                                 # eq. 23
+    dg_ds = -4.0 / (sigma2 * sigma2) - (
+        sigma2**4 - 2.0 * lam2 * lam2 * s * s * sigma2 * sigma2
+    ) / (sigma2 * sigma2 * A * A * B * B)                           # eq. 24
+    dg_dl = s / (A * A) - 4.0 * s / (B * B)                         # eq. 25
+    return dlogd_ds + y2 * dg_ds, dlogd_dl + y2 * dg_dl
+
+
+def _terms_hess(s, y2, sigma2, lam2):
+    """(eq.28, eq.27, eq.26 summands) = (ss, sl, ll)  (Proposition 2.3)."""
+    A = sigma2 + lam2 * s
+    B = sigma2 + 2.0 * lam2 * s
+    A2, B2 = A * A, B * B
+    A3, B3 = A2 * A, B2 * B
+    s2 = s * s
+    d2logd_ll = s2 / A2 - 4.0 * s2 / B2                             # eq. 30
+    d2logd_sl = s / A2 - 2.0 * s / B2                               # eq. 31
+    d2logd_ss = 1.0 / A2 - 1.0 / B2                                 # eq. 32
+    d2g_ll = 16.0 * s2 / B3 - 2.0 * s2 / A3                         # eq. 33
+    d2g_sl = 8.0 * s / B3 - 2.0 * s / A3                            # eq. 34
+    s6 = sigma2**3
+    d2g_ss = 8.0 / s6 - (
+        12.0 * lam2**3 * s2 * s * s6
+        + 12.0 * lam2 * lam2 * s2 * sigma2**4
+        - 2.0 * sigma2**6
+    ) / (s6 * A3 * B3)                                              # eq. 35
+    return (
+        d2logd_ss + y2 * d2g_ss,
+        d2logd_sl + y2 * d2g_sl,
+        d2logd_ll + y2 * d2g_ll,
+    )
+
+
+# ---------------------------------------------------------------------------
+# score kernel: out[0] = sum_i log d_i + y2_i g_i
+# ---------------------------------------------------------------------------
+
+def _score_kernel(s_ref, y2_ref, hp_ref, o_ref):
+    sigma2 = hp_ref[0]
+    lam2 = hp_ref[1]
+    part = jnp.sum(_terms_score(s_ref[...], y2_ref[...], sigma2, lam2))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0] = 0.0
+
+    o_ref[0] += part
+
+
+def score_core(s: jnp.ndarray, y2t: jnp.ndarray, hp: jnp.ndarray) -> jnp.ndarray:
+    """Pallas reduction of the eigenvalue sum in eq. (19); returns shape (1,)."""
+    n = s.shape[0]
+    blk = _blk(n)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), s.dtype),
+        interpret=True,
+    )(s, y2t, hp)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel: score + Jacobian + Hessian sums in one pass
+# out = [score_core, jac_s, jac_l, hess_ss, hess_sl, hess_ll]
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(s_ref, y2_ref, hp_ref, o_ref):
+    sigma2 = hp_ref[0]
+    lam2 = hp_ref[1]
+    s = s_ref[...]
+    y2 = y2_ref[...]
+    t0 = jnp.sum(_terms_score(s, y2, sigma2, lam2))
+    j_s, j_l = _terms_jac(s, y2, sigma2, lam2)
+    h_ss, h_sl, h_ll = _terms_hess(s, y2, sigma2, lam2)
+    part = jnp.stack(
+        [t0, jnp.sum(j_s), jnp.sum(j_l), jnp.sum(h_ss), jnp.sum(h_sl), jnp.sum(h_ll)]
+    )
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((6,), dtype=part.dtype)
+
+    o_ref[...] += part
+
+
+def fused_core(s: jnp.ndarray, y2t: jnp.ndarray, hp: jnp.ndarray) -> jnp.ndarray:
+    """One-pass score/Jacobian/Hessian eigenvalue sums; returns shape (6,)."""
+    n = s.shape[0]
+    blk = _blk(n)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((6,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((6,), s.dtype),
+        interpret=True,
+    )(s, y2t, hp)
+
+
+# ---------------------------------------------------------------------------
+# batched score: B hyperparameter points against one eigensystem.
+# This is the global-search wavefront (grid / PSO swarm): the coordinator
+# amortizes one PJRT dispatch over the whole swarm.
+# ---------------------------------------------------------------------------
+
+def _batched_kernel(s_ref, y2_ref, hp_ref, o_ref):
+    s = s_ref[...][None, :]          # (1, BLK)
+    y2 = y2_ref[...][None, :]        # (1, BLK)
+    sigma2 = hp_ref[...][:, 0:1]     # (B, 1)
+    lam2 = hp_ref[...][:, 1:2]       # (B, 1)
+    part = jnp.sum(_terms_score(s, y2, sigma2, lam2), axis=1)  # (B,)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def batched_score_core(
+    s: jnp.ndarray, y2t: jnp.ndarray, hps: jnp.ndarray
+) -> jnp.ndarray:
+    """Eigenvalue sums of eq. (19) for a (B, 2) batch of hyperparameter
+    points; returns shape (B,)."""
+    n = s.shape[0]
+    b = hps.shape[0]
+    blk = _blk(n)
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((b, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), s.dtype),
+        interpret=True,
+    )(s, y2t, hps)
+
+
+# ---------------------------------------------------------------------------
+# posterior variance diagonal (Proposition 2.4):
+#   diag(Sigma_c)[i] = sum_j U[i,j]^2 q_j,   q_j = sigma2 lam2 / ((lam2 s_j + sigma2) s_j)
+# Grid over row blocks; each step loads a (BI, N) slab of U.
+# ---------------------------------------------------------------------------
+
+def _pvar_kernel(u_ref, s_ref, hp_ref, o_ref):
+    sigma2 = hp_ref[0]
+    lam2 = hp_ref[1]
+    s = s_ref[...]
+    # guard padded (zero) eigenvalues: q is only meaningful for s > 0, and
+    # padded columns of U are zero anyway, so clamp the denominator.
+    denom = (lam2 * s + sigma2) * s
+    q = jnp.where(s > 0.0, sigma2 * lam2 / jnp.where(s > 0.0, denom, 1.0), 0.0)
+    u = u_ref[...]
+    o_ref[...] = jnp.sum(u * u * q[None, :], axis=1)
+
+
+def posterior_var_diag(
+    U: jnp.ndarray, s: jnp.ndarray, hp: jnp.ndarray
+) -> jnp.ndarray:
+    """diag(Sigma_c) via Prop. 2.4; returns shape (N,)."""
+    n = s.shape[0]
+    bi = _blk(n)
+    return pl.pallas_call(
+        _pvar_kernel,
+        grid=(n // bi,),
+        in_specs=[
+            pl.BlockSpec((bi, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bi,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), s.dtype),
+        interpret=True,
+    )(U, s, hp)

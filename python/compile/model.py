@@ -1,0 +1,73 @@
+"""Layer-2 JAX entry points: the paper's score function and derivatives.
+
+Each function here composes a Layer-1 pallas kernel with the scalar
+"closure" terms of Propositions 2.1-2.3 (the terms that depend on the true
+N and y'y rather than on the eigenvalues) so that a single compiled bucket
+serves any dataset size <= bucket via zero-padding.
+
+These are the functions ``aot.py`` lowers to HLO text; the rust runtime
+executes them through PJRT.  Argument convention (all f64):
+
+    s    (N,)   eigenvalues of K, zero-padded to the bucket
+    y2t  (N,)   squared projected targets (U'y)^2, zero-padded
+    hp   (2,)   [sigma2, lambda2]          -- or (B, 2) for the batch
+    n    ()     true number of examples (as a float)
+    yy   ()     y'y of the unpadded targets
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kernelmat, spectral
+
+jax.config.update("jax_enable_x64", True)
+
+
+def score(s, y2t, hp, n, yy):
+    """Eq. (19): L_y = N log sigma2 + sum_i (log d_i + y2_i g_i) - 4 y'y/sigma2.
+
+    Returns a 1-tuple ``(L,)`` (AOT lowering uses return_tuple=True)."""
+    sigma2 = hp[0]
+    core = spectral.score_core(s, y2t, hp)[0]
+    return (n * jnp.log(sigma2) + core - 4.0 * yy / sigma2,)
+
+
+def fused(s, y2t, hp, n, yy):
+    """Score + Jacobian + Hessian in one pass (Props 2.1-2.3).
+
+    Returns a 1-tuple of a (6,) vector:
+      [L, dL/dsigma2, dL/dlambda2, d2L/dsigma2^2, d2L/dsigma2 dlambda2,
+       d2L/dlambda2^2].
+    """
+    sigma2 = hp[0]
+    c = spectral.fused_core(s, y2t, hp)
+    out = jnp.stack(
+        [
+            n * jnp.log(sigma2) + c[0] - 4.0 * yy / sigma2,            # eq. 19
+            n / sigma2 + 4.0 * yy / sigma2**2 + c[1],                  # eq. 20
+            c[2],                                                      # eq. 21
+            -n / sigma2**2 - 8.0 * yy / sigma2**3 + c[3],              # eq. 28
+            c[4],                                                      # eq. 27
+            c[5],                                                      # eq. 26
+        ]
+    )
+    return (out,)
+
+
+def batched_score(s, y2t, hps, n, yy):
+    """Eq. (19) at a (B, 2) batch of hyperparameter points -> ((B,),)."""
+    sigma2 = hps[:, 0]
+    core = spectral.batched_score_core(s, y2t, hps)
+    return (n * jnp.log(sigma2) + core - 4.0 * yy / sigma2,)
+
+
+def gram(X, hp):
+    """Gram matrix of the (padded) inputs; hp = [family_code, theta]."""
+    return (kernelmat.gram(X, hp),)
+
+
+def posterior_var_diag(U, s, hp):
+    """Prop. 2.4: diag(Sigma_c) in O(N) per element."""
+    return (spectral.posterior_var_diag(U, s, hp),)

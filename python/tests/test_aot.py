@@ -1,0 +1,90 @@
+"""AOT pipeline tests: every entry point lowers to custom-call-free HLO
+text (the property the xla_extension-0.5.1 rust runtime depends on), and the
+manifest covers the full bucket ladder.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+
+def _lower_text(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+@pytest.mark.parametrize("n", [32, 256])
+def test_score_lowers_without_custom_calls(n):
+    t = _lower_text(model.score, _spec(n), _spec(n), _spec(2), _spec(), _spec())
+    assert "custom-call" not in t
+    assert "ENTRY" in t
+
+
+@pytest.mark.parametrize("n", [32, 256])
+def test_fused_lowers_without_custom_calls(n):
+    t = _lower_text(model.fused, _spec(n), _spec(n), _spec(2), _spec(), _spec())
+    assert "custom-call" not in t
+    # output is a 1-tuple of a (6,) vector
+    assert "(f64[6]" in t
+
+
+def test_batched_lowers_without_custom_calls():
+    t = _lower_text(
+        model.batched_score, _spec(64), _spec(64), _spec(16, 2), _spec(), _spec()
+    )
+    assert "custom-call" not in t
+    assert "(f64[16]" in t
+
+
+def test_gram_lowers_without_custom_calls():
+    t = _lower_text(model.gram, _spec(128, 32), _spec(2))
+    assert "custom-call" not in t
+    assert "(f64[128,128]" in t
+
+
+def test_pvar_lowers_without_custom_calls():
+    t = _lower_text(model.posterior_var_diag, _spec(64, 64), _spec(64), _spec(2))
+    assert "custom-call" not in t
+
+
+def test_build_entries_cover_bucket_ladder():
+    entries = aot.build_entries()
+    names = [e[0] for e in entries]
+    for n in aot.N_BUCKETS:
+        assert f"score_n{n}" in names
+        assert f"fused_n{n}" in names
+        assert f"batched_b{aot.B_BATCH}_n{n}" in names
+    for n in aot.NN_BUCKETS:
+        assert f"gram_n{n}_p{aot.P_PAD}" in names
+        assert f"pvar_n{n}" in names
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    """Run the CLI end-to-end for the two smallest score buckets."""
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "score_n32,score_n64"],
+        cwd=repo_py, env=env, check=True, capture_output=True,
+    )
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {"score_n32", "score_n64"}
+    for a in manifest["artifacts"]:
+        text = (tmp_path / a["file"]).read_text()
+        assert "custom-call" not in text
+        assert a["n"] in (32, 64)

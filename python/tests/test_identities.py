@@ -1,0 +1,176 @@
+"""Validate every closed-form identity printed in the paper (eqs. 16-35)
+against autodiff of the primitive quantities.  These tests are the
+paper-correctness layer: if one of them fails, the *paper's algebra* (or our
+transcription of it) is wrong, independent of any pallas/XLA machinery.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref
+
+
+def _logd(s, sig, lam):
+    return jnp.log((2 * lam * s + sig) / (lam * s + sig))
+
+
+def _g(s, sig, lam):
+    d = (2 * lam * s + sig) / (lam * s + sig)
+    return (d * d + 4) / (sig * d)
+
+
+POINTS = [
+    (1.7, 0.6, 2.3),
+    (0.01, 0.5, 0.5),
+    (25.0, 3.0, 0.05),
+    (1e-6, 1.0, 1.0),
+    (100.0, 0.01, 10.0),
+]
+
+
+@pytest.mark.parametrize("s,sig,lam", POINTS)
+def test_logd_first_derivatives(s, sig, lam):
+    """eqs. 22-23 == autodiff of log d."""
+    A, B = sig + lam * s, sig + 2 * lam * s
+    got_s = jax.grad(_logd, argnums=1)(s, sig, lam)
+    got_l = jax.grad(_logd, argnums=2)(s, sig, lam)
+    np.testing.assert_allclose(got_s, 1 / B - 1 / A, rtol=1e-10)
+    np.testing.assert_allclose(got_l, s * sig / (A * B), rtol=1e-10)
+
+
+@pytest.mark.parametrize("s,sig,lam", POINTS)
+def test_g_first_derivatives(s, sig, lam):
+    """eqs. 24-25 == autodiff of g."""
+    A, B = sig + lam * s, sig + 2 * lam * s
+    got_s = jax.grad(_g, argnums=1)(s, sig, lam)
+    got_l = jax.grad(_g, argnums=2)(s, sig, lam)
+    eq24 = -4 / sig**2 - (sig**4 - 2 * lam**2 * s**2 * sig**2) / (
+        sig**2 * A**2 * B**2
+    )
+    eq25 = s / A**2 - 4 * s / B**2
+    np.testing.assert_allclose(got_s, eq24, rtol=1e-9)
+    np.testing.assert_allclose(got_l, eq25, rtol=1e-9, atol=1e-300)
+
+
+@pytest.mark.parametrize("s,sig,lam", POINTS)
+def test_logd_second_derivatives(s, sig, lam):
+    """eqs. 30-32 == second autodiff of log d."""
+    A, B = sig + lam * s, sig + 2 * lam * s
+    ss = jax.grad(jax.grad(_logd, argnums=1), argnums=1)(s, sig, lam)
+    sl = jax.grad(jax.grad(_logd, argnums=1), argnums=2)(s, sig, lam)
+    ll = jax.grad(jax.grad(_logd, argnums=2), argnums=2)(s, sig, lam)
+    np.testing.assert_allclose(ll, s**2 / A**2 - 4 * s**2 / B**2, rtol=1e-9, atol=1e-300)
+    np.testing.assert_allclose(sl, s / A**2 - 2 * s / B**2, rtol=1e-9, atol=1e-300)
+    np.testing.assert_allclose(ss, 1 / A**2 - 1 / B**2, rtol=1e-9, atol=1e-300)
+
+
+@pytest.mark.parametrize("s,sig,lam", POINTS)
+def test_g_second_derivatives(s, sig, lam):
+    """eqs. 33-35 == second autodiff of g."""
+    A, B = sig + lam * s, sig + 2 * lam * s
+    ss = jax.grad(jax.grad(_g, argnums=1), argnums=1)(s, sig, lam)
+    sl = jax.grad(jax.grad(_g, argnums=1), argnums=2)(s, sig, lam)
+    ll = jax.grad(jax.grad(_g, argnums=2), argnums=2)(s, sig, lam)
+    eq33 = 16 * s**2 / B**3 - 2 * s**2 / A**3
+    eq34 = 8 * s / B**3 - 2 * s / A**3
+    eq35 = 8 / sig**3 - (
+        12 * lam**3 * s**3 * sig**3 + 12 * lam**2 * s**2 * sig**4 - 2 * sig**6
+    ) / (sig**3 * A**3 * B**3)
+    np.testing.assert_allclose(ll, eq33, rtol=1e-9, atol=1e-300)
+    np.testing.assert_allclose(sl, eq34, rtol=1e-9, atol=1e-300)
+    np.testing.assert_allclose(ss, eq35, rtol=1e-8)
+
+
+def _setup(n=60, p=4, seed=0, kernel="rbf"):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p))
+    if kernel == "rbf":
+        K = np.asarray(ref.rbf_gram_ref(jnp.array(X), 1.5))
+    else:
+        K = np.array(ref.poly_gram_ref(jnp.array(X), 2.0))
+        K += 1e-8 * np.eye(n)  # poly gram is low-rank; keep eigh stable
+    y = rng.normal(size=n)
+    s, U = np.linalg.eigh(K)
+    y2t = (U.T @ y) ** 2
+    return K, y, s, y2t
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "poly"])
+@pytest.mark.parametrize("sig,lam", [(0.7, 1.3), (0.05, 4.0), (3.0, 0.2)])
+def test_eq19_equals_eq15(kernel, sig, lam):
+    """Proposition 2.1: the spectral score == the dense eq. (15) exactly
+    (not merely up to a constant)."""
+    K, y, s, y2t = _setup(kernel=kernel)
+    dense = ref.dense_score(jnp.array(K), jnp.array(y), sig, lam)
+    spec = ref.spectral_score_ref(
+        jnp.array(s), jnp.array(y2t), float(len(y)), float(y @ y), sig, lam
+    )
+    np.testing.assert_allclose(float(spec), float(dense), rtol=1e-8)
+
+
+def test_eq16_residual_identity():
+    """(mu_y - y) = (Sigma_y - 2 sigma^2 I) y / sigma^2  (pre-eq. 16)."""
+    K, y, _, _ = _setup()
+    sig, lam = 0.9, 1.7
+    n = len(y)
+    Sy = np.asarray(ref.dense_sigma_y(jnp.array(K), sig, lam))
+    mu = np.asarray(ref.dense_mu_y(jnp.array(K), jnp.array(y), sig, lam))
+    lhs = mu - y
+    rhs = (Sy - 2 * sig * np.eye(n)) @ y / sig
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("sig,lam", [(0.7, 1.3), (0.1, 2.5)])
+def test_prop22_grad_vs_dense_autodiff(sig, lam):
+    """Proposition 2.2 == jax.grad of the dense eq. (15)."""
+    K, y, s, y2t = _setup()
+    n, yy = float(len(y)), float(y @ y)
+    want = ref.dense_grad(jnp.array(K), jnp.array(y), sig, lam)
+    got = ref.spectral_grad_ref(jnp.array(s), jnp.array(y2t), n, yy, sig, lam)
+    np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=1e-7)
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-7)
+
+
+@pytest.mark.parametrize("sig,lam", [(0.7, 1.3), (0.1, 2.5)])
+def test_prop23_hess_vs_dense_autodiff(sig, lam):
+    """Proposition 2.3 == jax.hessian of the dense eq. (15)."""
+    K, y, s, y2t = _setup()
+    n, yy = float(len(y)), float(y @ y)
+    want = np.asarray(ref.dense_hess(jnp.array(K), jnp.array(y), sig, lam))
+    h_ss, h_sl, h_ll = ref.spectral_hess_ref(
+        jnp.array(s), jnp.array(y2t), n, yy, sig, lam
+    )
+    np.testing.assert_allclose(float(h_ss), want[0, 0], rtol=1e-6)
+    np.testing.assert_allclose(float(h_sl), want[0, 1], rtol=1e-6)
+    np.testing.assert_allclose(float(h_ll), want[1, 1], rtol=1e-6)
+
+
+def test_prop24_posterior_variance():
+    """Prop. 2.4: diag(U Q U') == diag(Sigma_c) from eq. (36)."""
+    K, y, s, y2t = _setup()
+    sig, lam = 0.8, 1.1
+    _, U = np.linalg.eigh(K)
+    want = np.diag(np.asarray(ref.dense_posterior_var(jnp.array(K), sig, lam)))
+    got = np.asarray(
+        ref.spectral_posterior_var_diag_ref(jnp.array(s), jnp.array(U), sig, lam)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-7)
+
+
+def test_d_and_g_are_the_claimed_eigenvalues():
+    """d_i are eigenvalues of Sigma_y / sigma^2; g_i of
+    (sigma^-4 Sigma_y + 4 Sigma_y^-1)."""
+    K, y, s, _ = _setup(n=30)
+    sig, lam = 0.6, 2.0
+    Sy = np.asarray(ref.dense_sigma_y(jnp.array(K), sig, lam))
+    d_want = np.sort(np.linalg.eigvalsh(Sy / sig))
+    d_got = np.sort(np.asarray(ref._d(jnp.array(s), sig, lam)))
+    np.testing.assert_allclose(d_got, d_want, rtol=1e-8)
+    M = Sy / sig**2 + 4 * np.linalg.inv(Sy)
+    g_want = np.sort(np.linalg.eigvalsh(M))
+    g_got = np.sort(np.asarray(ref._g(jnp.array(s), sig, lam)))
+    np.testing.assert_allclose(g_got, g_want, rtol=1e-8)

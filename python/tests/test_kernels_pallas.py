@@ -1,0 +1,199 @@
+"""Pallas kernels vs the pure-jnp oracle (``ref.py``).
+
+Hypothesis sweeps shapes and hyperparameter magnitudes; every kernel must
+match its oracle to near machine precision, and zero-padding must be exactly
+neutral (the property the bucketed AOT runtime relies on).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import kernelmat, ref, spectral
+
+
+def _eigsys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 4))
+    K = np.asarray(ref.rbf_gram_ref(jnp.array(X), 1.0 + rng.random()))
+    y = rng.normal(size=n)
+    s, U = np.linalg.eigh(K)
+    return jnp.array(s), jnp.array((U.T @ y) ** 2), float(n), float(y @ y)
+
+
+hp_pos = st.floats(min_value=1e-3, max_value=1e3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 100, 257, 512]),
+    sig=hp_pos,
+    lam=hp_pos,
+    seed=st.integers(0, 10),
+)
+def test_score_kernel_matches_ref(n, sig, lam, seed):
+    s, y2t, nn, yy = _eigsys(n, seed)
+    hp = jnp.array([sig, lam])
+    got = float(model.score(s, y2t, hp, nn, yy)[0])
+    want = float(ref.spectral_score_ref(s, y2t, nn, yy, sig, lam))
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 64, 200, 512]),
+    sig=hp_pos,
+    lam=hp_pos,
+    seed=st.integers(0, 10),
+)
+def test_fused_kernel_matches_ref(n, sig, lam, seed):
+    s, y2t, nn, yy = _eigsys(n, seed)
+    hp = jnp.array([sig, lam])
+    got = np.asarray(model.fused(s, y2t, hp, nn, yy)[0])
+    L = float(ref.spectral_score_ref(s, y2t, nn, yy, sig, lam))
+    j_s, j_l = ref.spectral_grad_ref(s, y2t, nn, yy, sig, lam)
+    h_ss, h_sl, h_ll = ref.spectral_hess_ref(s, y2t, nn, yy, sig, lam)
+    want = np.array([L, j_s, j_l, h_ss, h_sl, h_ll], dtype=np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 128, 300]),
+    b=st.sampled_from([1, 3, 16, 64]),
+    seed=st.integers(0, 5),
+)
+def test_batched_score_matches_scalar(n, b, seed):
+    s, y2t, nn, yy = _eigsys(n, seed)
+    rng = np.random.default_rng(seed + 99)
+    hps = jnp.array(np.exp(rng.uniform(-3, 3, size=(b, 2))))
+    got = np.asarray(model.batched_score(s, y2t, hps, nn, yy)[0])
+    want = np.array(
+        [
+            float(ref.spectral_score_ref(s, y2t, nn, yy, float(h[0]), float(h[1])))
+            for h in np.asarray(hps)
+        ]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 50, 130]),
+    pad_to=st.sampled_from([256, 512]),
+    sig=hp_pos,
+    lam=hp_pos,
+)
+def test_zero_padding_is_exactly_neutral(n, pad_to, sig, lam):
+    """The bucketed-artifact contract: padding (s, y2t) with zeros changes
+    nothing, because log d(0) = 0, all its derivatives vanish, and y2t = 0
+    kills the g terms."""
+    s, y2t, nn, yy = _eigsys(n, seed=3)
+    hp = jnp.array([sig, lam])
+    sp = jnp.zeros(pad_to).at[:n].set(s)
+    y2p = jnp.zeros(pad_to).at[:n].set(y2t)
+    a = np.asarray(model.fused(s, y2t, hp, nn, yy)[0])
+    b = np.asarray(model.fused(sp, y2p, hp, nn, yy)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 200, 256]),
+    p=st.sampled_from([1, 3, 8, 32]),
+    xi2=st.floats(min_value=0.05, max_value=50.0),
+    seed=st.integers(0, 5),
+)
+def test_gram_rbf_matches_ref(n, p, xi2, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.array(rng.normal(size=(n, p)))
+    got = np.asarray(kernelmat.gram(X, jnp.array([kernelmat.RBF, xi2])))
+    want = np.asarray(ref.rbf_gram_ref(X, xi2))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([16, 100]),
+    degree=st.sampled_from([1.0, 2.0, 3.0, 5.0]),
+    seed=st.integers(0, 5),
+)
+def test_gram_poly_matches_ref(n, degree, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.array(rng.normal(size=(n, 4)))
+    got = np.asarray(kernelmat.gram(X, jnp.array([kernelmat.POLY, degree])))
+    want = np.asarray(ref.poly_gram_ref(X, degree))
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_gram_linear_matches_ref():
+    rng = np.random.default_rng(7)
+    X = jnp.array(rng.normal(size=(64, 6)))
+    got = np.asarray(kernelmat.gram(X, jnp.array([kernelmat.LINEAR, 0.0])))
+    np.testing.assert_allclose(got, np.asarray(X @ X.T), rtol=1e-12)
+
+
+def test_gram_feature_padding_is_exact():
+    """Zero feature columns change no inner product / distance (up to BLAS
+    accumulation-order noise, which depends on the reduction width)."""
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(64, 5))
+    Xp = np.zeros((64, 32))
+    Xp[:, :5] = X
+    a = np.asarray(kernelmat.gram(jnp.array(X), jnp.array([kernelmat.RBF, 2.0])))
+    b = np.asarray(kernelmat.gram(jnp.array(Xp), jnp.array([kernelmat.RBF, 2.0])))
+    np.testing.assert_allclose(a, b, rtol=1e-13, atol=1e-14)
+
+
+def test_posterior_var_diag_matches_dense():
+    rng = np.random.default_rng(5)
+    n = 96
+    X = rng.normal(size=(n, 3))
+    K = np.asarray(ref.rbf_gram_ref(jnp.array(X), 1.2))
+    s, U = np.linalg.eigh(K)
+    sig, lam = 0.5, 2.0
+    got = np.asarray(
+        model.posterior_var_diag(jnp.array(U), jnp.array(s), jnp.array([sig, lam]))[0]
+    )
+    want = np.diag(np.asarray(ref.dense_posterior_var(jnp.array(K), sig, lam)))
+    np.testing.assert_allclose(got, want, rtol=1e-7)
+
+
+def test_posterior_var_padded_eigenvalues_guarded():
+    """Padded (zero) eigenvalues must not produce inf/nan in the pvar kernel."""
+    rng = np.random.default_rng(6)
+    n, npad = 50, 128
+    X = rng.normal(size=(n, 3))
+    K = np.asarray(ref.rbf_gram_ref(jnp.array(X), 1.2))
+    s, U = np.linalg.eigh(K)
+    sp = np.zeros(npad)
+    sp[:n] = s
+    Up = np.zeros((npad, npad))
+    Up[:n, :n] = U
+    got = np.asarray(
+        model.posterior_var_diag(jnp.array(Up), jnp.array(sp), jnp.array([0.5, 2.0]))[0]
+    )
+    assert np.all(np.isfinite(got))
+    want = np.diag(np.asarray(ref.dense_posterior_var(jnp.array(K), 0.5, 2.0)))
+    np.testing.assert_allclose(got[:n], want, rtol=1e-7)
+
+
+@pytest.mark.parametrize("n", [32, 256, 1024])
+def test_score_f32_agrees_loosely(n):
+    """f32 path sanity: the kernels are dtype-generic even though the
+    shipped artifacts are f64."""
+    s, y2t, nn, yy = _eigsys(n, seed=1)
+    hp32 = jnp.array([0.7, 1.3], dtype=jnp.float32)
+    got = float(
+        model.score(
+            s.astype(jnp.float32), y2t.astype(jnp.float32), hp32,
+            jnp.float32(nn), jnp.float32(yy),
+        )[0]
+    )
+    want = float(ref.spectral_score_ref(s, y2t, nn, yy, 0.7, 1.3))
+    np.testing.assert_allclose(got, want, rtol=2e-3)

@@ -1,0 +1,54 @@
+//! Blocking client for the coordinator's newline-JSON protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{protocol, TuneRequest};
+use crate::util::json::{self, Json};
+
+/// One connection to a running coordinator server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send a raw line, read one JSON response line.
+    pub fn raw(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut response = String::new();
+        self.reader.read_line(&mut response)?;
+        if response.is_empty() {
+            return Err(anyhow!("server closed connection"));
+        }
+        json::parse(response.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let v = self.raw(r#"{"op":"ping"}"#)?;
+        Ok(v.get("pong").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    pub fn info(&mut self) -> Result<Json> {
+        self.raw(r#"{"op":"info"}"#)
+    }
+
+    /// Submit a tuning job and return the parsed response (check `ok`).
+    pub fn tune(&mut self, req: &TuneRequest) -> Result<Json> {
+        let v = self.raw(&protocol::tune_request_json(req))?;
+        if v.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = v.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+            return Err(anyhow!("server error: {msg}"));
+        }
+        Ok(v)
+    }
+}

@@ -1,0 +1,394 @@
+//! Tuning coordinator — the Layer-3 service around the paper's identities.
+//!
+//! Responsibilities:
+//! - **Eigen-cache**: the O(N^3) decomposition is keyed by a fingerprint
+//!   of (inputs, kernel) and reused across tuning jobs; an M-output job
+//!   pays it once (paper §2.1's multi-output advantage).
+//! - **Backend routing**: global search goes through the PJRT
+//!   batched-score artifact (one dispatch per swarm generation); Newton
+//!   refinement uses the fused artifact or the pure-rust evaluator.
+//! - **Serving**: a threaded TCP server (`server.rs`) feeds jobs through
+//!   an mpsc channel to the single worker that owns the (non-`Send`) PJRT
+//!   client; responses return on per-job channels. (tokio is not vendored
+//!   in this image — DESIGN.md §5.)
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernelfn::{self, Kernel};
+use crate::linalg::{Matrix, SymEigen};
+use crate::optim::{self, Bounds, NewtonOptions, Objective, PsoOptions};
+use crate::runtime::PjrtRuntime;
+use crate::spectral::{EigenSystem, HyperParams};
+
+/// Which evaluator backs the objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust O(N) loops (always available).
+    Rust,
+    /// AOT artifacts through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Global-search strategy for the first stage of §1.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalStrategy {
+    Grid { points_per_axis: usize },
+    Pso { particles: usize, iterations: usize },
+}
+
+impl Default for GlobalStrategy {
+    fn default() -> Self {
+        GlobalStrategy::Pso { particles: 64, iterations: 25 }
+    }
+}
+
+/// Which marginal-likelihood objective to minimize.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// The paper's eq. 19 (posterior predictive at the training points).
+    /// Note: unbounded below as sigma2 -> 0 (see DESIGN.md); pair it with
+    /// bounds that reflect a noise floor.
+    #[default]
+    PaperScore,
+    /// The classical GP evidence -2 log N(y; 0, lambda2 K + sigma2 I) —
+    /// same O(N) spectral treatment, interior optimum (extension).
+    Evidence,
+}
+
+/// A tuning job over one dataset (possibly multi-output).
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    pub x: Matrix,
+    pub ys: Vec<Vec<f64>>,
+    pub kernel: Kernel,
+    pub bounds: Bounds,
+    pub strategy: GlobalStrategy,
+    pub backend: Backend,
+    pub objective: ObjectiveKind,
+    pub seed: u64,
+}
+
+impl TuneRequest {
+    pub fn new(x: Matrix, ys: Vec<Vec<f64>>, kernel: Kernel) -> Self {
+        TuneRequest {
+            x,
+            ys,
+            kernel,
+            bounds: Bounds::default(),
+            strategy: GlobalStrategy::default(),
+            backend: Backend::Rust,
+            objective: ObjectiveKind::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// Per-output tuning outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct OutputResult {
+    pub hp: HyperParams,
+    pub score: f64,
+    /// Score evaluations in the global stage.
+    pub global_evals: usize,
+    /// Fused evaluations in the Newton stage.
+    pub newton_evals: usize,
+    pub converged: bool,
+}
+
+/// Whole-job outcome, including stage timings.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub outputs: Vec<OutputResult>,
+    /// True if the eigendecomposition came from the cache.
+    pub eigen_cached: bool,
+    pub gram_seconds: f64,
+    pub eigen_seconds: f64,
+    pub tune_seconds: f64,
+    pub backend: Backend,
+}
+
+/// FNV-1a over the little-endian bytes of the inputs + kernel encoding —
+/// the eigen-cache key.
+pub fn fingerprint(x: &Matrix, kernel: Kernel) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    eat(&(x.rows() as u64).to_le_bytes());
+    eat(&(x.cols() as u64).to_le_bytes());
+    for v in x.data() {
+        eat(&v.to_le_bytes());
+    }
+    eat(format!("{kernel:?}").as_bytes());
+    h
+}
+
+/// Cached eigendecomposition for one (dataset, kernel) fingerprint.
+struct CacheEntry {
+    eigen: SymEigen,
+}
+
+/// The coordinator: owns the runtime and the eigen-cache.  Single-threaded
+/// by construction (the PJRT client is not `Send`); the server wraps it in
+/// a worker thread.
+pub struct Coordinator {
+    runtime: Option<PjrtRuntime>,
+    cache: HashMap<u64, CacheEntry>,
+    /// Cache statistics (hits, misses).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl Coordinator {
+    /// Coordinator with a PJRT runtime (artifact-backed fast paths).
+    pub fn with_runtime(runtime: PjrtRuntime) -> Self {
+        Coordinator { runtime: Some(runtime), cache: HashMap::new(), cache_hits: 0, cache_misses: 0 }
+    }
+
+    /// Pure-rust coordinator (no artifacts needed).
+    pub fn rust_only() -> Self {
+        Coordinator { runtime: None, cache: HashMap::new(), cache_hits: 0, cache_misses: 0 }
+    }
+
+    /// Open the default artifact dir if present, else fall back to rust.
+    pub fn auto() -> Self {
+        match PjrtRuntime::open(crate::runtime::default_artifact_dir()) {
+            Ok(rt) => Coordinator::with_runtime(rt),
+            Err(_) => Coordinator::rust_only(),
+        }
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Execute a tuning job.
+    pub fn tune(&mut self, req: &TuneRequest) -> Result<TuneResult> {
+        if req.ys.is_empty() {
+            return Err(anyhow!("no output vectors"));
+        }
+        for (i, y) in req.ys.iter().enumerate() {
+            if y.len() != req.x.rows() {
+                return Err(anyhow!("output {i}: length {} != N {}", y.len(), req.x.rows()));
+            }
+        }
+        let backend = match req.backend {
+            Backend::Pjrt if self.runtime.is_none() => {
+                return Err(anyhow!("PJRT backend requested but no artifacts loaded"))
+            }
+            b => b,
+        };
+
+        // --- O(N^3) overhead: Gram + eigendecomposition, cached ---
+        let key = fingerprint(&req.x, req.kernel);
+        let t0 = Instant::now();
+        let mut gram_seconds = 0.0;
+        let mut eigen_seconds = 0.0;
+        let eigen_cached = self.cache.contains_key(&key);
+        if !eigen_cached {
+            self.cache_misses += 1;
+            let tg = Instant::now();
+            let k = match (&self.runtime, backend) {
+                (Some(rt), Backend::Pjrt) if req.kernel.artifact_code().is_some() => {
+                    match rt.gram(&req.x, req.kernel) {
+                        Ok(k) => k,
+                        // dataset larger than any gram bucket: rust fallback
+                        Err(_) => kernelfn::gram(req.kernel, &req.x),
+                    }
+                }
+                _ => kernelfn::gram(req.kernel, &req.x),
+            };
+            gram_seconds = tg.elapsed().as_secs_f64();
+            let te = Instant::now();
+            let eigen = SymEigen::new(&k).map_err(|e| anyhow!("eigensolver: {e}"))?;
+            eigen_seconds = te.elapsed().as_secs_f64();
+            self.cache.insert(key, CacheEntry { eigen });
+        } else {
+            self.cache_hits += 1;
+        }
+        let eigen = &self.cache.get(&key).unwrap().eigen;
+
+        // --- O(N)-per-iterate tuning per output ---
+        let tt = Instant::now();
+        let mut outputs = Vec::with_capacity(req.ys.len());
+        for y in &req.ys {
+            let es = EigenSystem::new(eigen, y);
+            let out = match (&self.runtime, backend, req.objective) {
+                // the evidence artifacts are not part of the AOT set; the
+                // evidence objective always runs on the rust evaluator
+                // (its per-iterate cost is the same O(N))
+                (Some(rt), Backend::Pjrt, ObjectiveKind::PaperScore) => {
+                    let mut ev = rt.evaluator(&es)?;
+                    tune_one(&mut ev, req)
+                }
+                (_, _, ObjectiveKind::Evidence) => {
+                    let mut ev = optim::EvidenceObjective(es.clone());
+                    tune_one(&mut ev, req)
+                }
+                _ => {
+                    let mut ev = es.clone();
+                    tune_one(&mut ev, req)
+                }
+            };
+            outputs.push(out);
+        }
+        let tune_seconds = tt.elapsed().as_secs_f64();
+        let _ = t0;
+
+        Ok(TuneResult {
+            outputs,
+            eigen_cached,
+            gram_seconds,
+            eigen_seconds,
+            tune_seconds,
+            backend,
+        })
+    }
+
+    /// Look up a cached eigendecomposition (e.g. for prediction after a
+    /// tune).
+    pub fn cached_eigen(&self, x: &Matrix, kernel: Kernel) -> Option<&SymEigen> {
+        self.cache.get(&fingerprint(x, kernel)).map(|e| &e.eigen)
+    }
+
+    pub fn runtime(&self) -> Option<&PjrtRuntime> {
+        self.runtime.as_ref()
+    }
+}
+
+/// Global stage + Newton refinement over any objective.
+fn tune_one<O: Objective>(obj: &mut O, req: &TuneRequest) -> OutputResult {
+    let global = match req.strategy {
+        GlobalStrategy::Grid { points_per_axis } => {
+            optim::grid_search(obj, req.bounds, points_per_axis, 64)
+        }
+        GlobalStrategy::Pso { particles, iterations } => optim::pso_search(
+            obj,
+            req.bounds,
+            PsoOptions { particles, iterations, seed: req.seed, ..Default::default() },
+        ),
+    };
+    let refined = optim::newton_refine(obj, global.hp, req.bounds, NewtonOptions::default());
+    // Newton should never regress below the global stage's best
+    let (hp, score) = if refined.score <= global.score {
+        (refined.hp, refined.score)
+    } else {
+        (global.hp, global.score)
+    };
+    OutputResult {
+        hp,
+        score,
+        global_evals: global.evals,
+        newton_evals: refined.evals,
+        converged: refined.converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, SyntheticSpec};
+
+    fn small_request(outputs: usize) -> TuneRequest {
+        let spec = SyntheticSpec { n: 60, p: 3, sigma2: 0.1, lambda2: 1.0, seed: 5, ..Default::default() };
+        let ds = synthetic(spec, outputs);
+        let mut r = TuneRequest::new(ds.x, ds.ys, spec.kernel);
+        r.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+        r
+    }
+
+    #[test]
+    fn tune_evidence_recovers_reasonable_hyperparams() {
+        let mut c = Coordinator::rust_only();
+        let mut req = small_request(1);
+        req.objective = ObjectiveKind::Evidence;
+        let res = c.tune(&req).unwrap();
+        let out = &res.outputs[0];
+        // generating values sigma2=0.1, lambda2=1.0; the evidence has an
+        // interior optimum near them
+        assert!(out.hp.sigma2 > 1e-3 && out.hp.sigma2 < 10.0, "{:?}", out.hp);
+        assert!(out.score.is_finite());
+        assert!(!res.eigen_cached);
+    }
+
+    #[test]
+    fn tune_paper_score_runs_to_noise_floor() {
+        // documented pathology of eq. 19 (DESIGN.md): without a noise
+        // floor the paper score minimizes at the sigma2 lower bound.
+        let mut c = Coordinator::rust_only();
+        let req = small_request(1);
+        let res = c.tune(&req).unwrap();
+        let out = &res.outputs[0];
+        assert!(
+            out.hp.sigma2 <= req.bounds.sigma2.0 * 1.01,
+            "expected boundary solution, got {:?}",
+            out.hp
+        );
+        assert!(out.score.is_finite());
+    }
+
+    #[test]
+    fn eigen_cache_hits_on_second_job() {
+        let mut c = Coordinator::rust_only();
+        let req = small_request(1);
+        let r1 = c.tune(&req).unwrap();
+        let r2 = c.tune(&req).unwrap();
+        assert!(!r1.eigen_cached);
+        assert!(r2.eigen_cached);
+        assert_eq!(c.cache_hits, 1);
+        assert_eq!(c.cache_misses, 1);
+        // identical results from identical requests
+        assert_eq!(r1.outputs[0].hp, r2.outputs[0].hp);
+    }
+
+    #[test]
+    fn multi_output_shares_decomposition() {
+        let mut c = Coordinator::rust_only();
+        let res = c.tune(&small_request(3)).unwrap();
+        assert_eq!(res.outputs.len(), 3);
+        assert_eq!(c.cache_misses, 1);
+        for o in &res.outputs {
+            assert!(o.score.is_finite());
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_outputs() {
+        let mut c = Coordinator::rust_only();
+        let mut req = small_request(1);
+        req.ys[0].pop();
+        assert!(c.tune(&req).is_err());
+        req.ys.clear();
+        assert!(c.tune(&req).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_without_runtime_errors() {
+        let mut c = Coordinator::rust_only();
+        let mut req = small_request(1);
+        req.backend = Backend::Pjrt;
+        assert!(c.tune(&req).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_kernel_and_data() {
+        let ds = synthetic(SyntheticSpec { n: 10, p: 2, seed: 1, ..Default::default() }, 1);
+        let a = fingerprint(&ds.x, Kernel::Rbf { xi2: 1.0 });
+        let b = fingerprint(&ds.x, Kernel::Rbf { xi2: 2.0 });
+        let c2 = fingerprint(&ds.x, Kernel::Linear);
+        assert_ne!(a, b);
+        assert_ne!(a, c2);
+        let ds2 = synthetic(SyntheticSpec { n: 10, p: 2, seed: 2, ..Default::default() }, 1);
+        assert_ne!(a, fingerprint(&ds2.x, Kernel::Rbf { xi2: 1.0 }));
+    }
+}

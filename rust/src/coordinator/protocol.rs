@@ -1,0 +1,255 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests:
+//! ```json
+//! {"op": "ping"}
+//! {"op": "info"}
+//! {"op": "tune", "x": [[...], ...], "ys": [[...], ...],
+//!  "kernel": "rbf:2.0", "backend": "rust"|"pjrt",
+//!  "strategy": "pso"|"grid", "particles": 64, "iterations": 25,
+//!  "grid": 17, "seed": 42}
+//! ```
+//! Responses: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
+
+use crate::coordinator::{Backend, GlobalStrategy, ObjectiveKind, TuneRequest, TuneResult};
+use crate::kernelfn;
+use crate::linalg::Matrix;
+use crate::util::json::{self, Json};
+
+/// Parsed request operations.
+#[derive(Debug)]
+pub enum Request {
+    Ping,
+    Info,
+    Tune(Box<TuneRequest>),
+    Shutdown,
+}
+
+fn parse_matrix(v: &Json) -> Result<Matrix, String> {
+    let rows = v.as_arr().ok_or("x must be an array of rows")?;
+    if rows.is_empty() {
+        return Err("x is empty".into());
+    }
+    let p = rows[0].as_arr().ok_or("x rows must be arrays")?.len();
+    let mut data = Vec::with_capacity(rows.len() * p);
+    for (i, r) in rows.iter().enumerate() {
+        let r = r.as_arr().ok_or("x rows must be arrays")?;
+        if r.len() != p {
+            return Err(format!("row {i} has {} cols, expected {p}", r.len()));
+        }
+        for c in r {
+            data.push(c.as_f64().ok_or("x entries must be numbers")?);
+        }
+    }
+    Ok(Matrix::from_vec(rows.len(), p, data))
+}
+
+fn parse_vec(v: &Json) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or("expected array")?
+        .iter()
+        .map(|x| x.as_f64().ok_or("expected number".to_string()))
+        .collect()
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = json::parse(line)?;
+    match v.get("op").and_then(Json::as_str) {
+        Some("ping") => Ok(Request::Ping),
+        Some("info") => Ok(Request::Info),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some("tune") => {
+            let x = parse_matrix(v.get("x").ok_or("missing x")?)?;
+            let ys_json = v.get("ys").ok_or("missing ys")?;
+            let ys: Result<Vec<Vec<f64>>, String> = ys_json
+                .as_arr()
+                .ok_or("ys must be an array")?
+                .iter()
+                .map(parse_vec)
+                .collect();
+            let ys = ys?;
+            let kernel =
+                kernelfn::parse_kernel(v.get("kernel").and_then(Json::as_str).unwrap_or("rbf:1.0"))?;
+            let mut req = TuneRequest::new(x, ys, kernel);
+            req.backend = match v.get("backend").and_then(Json::as_str) {
+                Some("pjrt") => Backend::Pjrt,
+                _ => Backend::Rust,
+            };
+            req.objective = match v.get("objective").and_then(Json::as_str) {
+                Some("evidence") => ObjectiveKind::Evidence,
+                _ => ObjectiveKind::PaperScore,
+            };
+            req.strategy = match v.get("strategy").and_then(Json::as_str) {
+                Some("grid") => GlobalStrategy::Grid {
+                    points_per_axis: v.get("grid").and_then(Json::as_usize).unwrap_or(17),
+                },
+                _ => GlobalStrategy::Pso {
+                    particles: v.get("particles").and_then(Json::as_usize).unwrap_or(64),
+                    iterations: v.get("iterations").and_then(Json::as_usize).unwrap_or(25),
+                },
+            };
+            if let Some(seed) = v.get("seed").and_then(Json::as_f64) {
+                req.seed = seed as u64;
+            }
+            Ok(Request::Tune(Box::new(req)))
+        }
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+/// Serialize a tune result.
+pub fn tune_response(res: &TuneResult) -> String {
+    let outputs: Vec<Json> = res
+        .outputs
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("sigma2", Json::Num(o.hp.sigma2)),
+                ("lambda2", Json::Num(o.hp.lambda2)),
+                ("score", Json::Num(o.score)),
+                ("global_evals", Json::Num(o.global_evals as f64)),
+                ("newton_evals", Json::Num(o.newton_evals as f64)),
+                ("converged", Json::Bool(o.converged)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("outputs", Json::Arr(outputs)),
+        ("eigen_cached", Json::Bool(res.eigen_cached)),
+        ("gram_seconds", Json::Num(res.gram_seconds)),
+        ("eigen_seconds", Json::Num(res.eigen_seconds)),
+        ("tune_seconds", Json::Num(res.tune_seconds)),
+        (
+            "backend",
+            Json::str(match res.backend {
+                Backend::Rust => "rust",
+                Backend::Pjrt => "pjrt",
+            }),
+        ),
+    ])
+    .to_string()
+}
+
+pub fn error_response(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).to_string()
+}
+
+pub fn pong_response() -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
+}
+
+/// Serialize a tune request (client side).
+pub fn tune_request_json(req: &TuneRequest) -> String {
+    let x_rows: Vec<Json> = (0..req.x.rows()).map(|i| Json::arr_f64(req.x.row(i))).collect();
+    let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
+    let kernel = match req.kernel {
+        crate::kernelfn::Kernel::Rbf { xi2 } => format!("rbf:{xi2}"),
+        crate::kernelfn::Kernel::Polynomial { degree } => format!("poly:{degree}"),
+        crate::kernelfn::Kernel::Linear => "linear".to_string(),
+        crate::kernelfn::Kernel::Matern32 { ell } => format!("matern32:{ell}"),
+        crate::kernelfn::Kernel::Matern52 { ell } => format!("matern52:{ell}"),
+    };
+    let mut fields = vec![
+        ("op", Json::str("tune")),
+        ("x", Json::Arr(x_rows)),
+        ("ys", Json::Arr(ys)),
+        ("kernel", Json::str(&kernel)),
+        (
+            "objective",
+            Json::str(match req.objective {
+                ObjectiveKind::PaperScore => "paper",
+                ObjectiveKind::Evidence => "evidence",
+            }),
+        ),
+        (
+            "backend",
+            Json::str(match req.backend {
+                Backend::Rust => "rust",
+                Backend::Pjrt => "pjrt",
+            }),
+        ),
+        ("seed", Json::Num(req.seed as f64)),
+    ];
+    match req.strategy {
+        GlobalStrategy::Grid { points_per_axis } => {
+            fields.push(("strategy", Json::str("grid")));
+            fields.push(("grid", Json::Num(points_per_axis as f64)));
+        }
+        GlobalStrategy::Pso { particles, iterations } => {
+            fields.push(("strategy", Json::str("pso")));
+            fields.push(("particles", Json::Num(particles as f64)));
+            fields.push(("iterations", Json::Num(iterations as f64)));
+        }
+    }
+    Json::obj(fields).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OutputResult;
+    use crate::spectral::HyperParams;
+
+    #[test]
+    fn ping_and_info_parse() {
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(parse_request(r#"{"op":"info"}"#).unwrap(), Request::Info));
+        assert!(matches!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn tune_request_roundtrip() {
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut req = TuneRequest::new(x, vec![vec![0.5, -0.5]], crate::kernelfn::Kernel::Rbf { xi2: 2.0 });
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+        req.backend = Backend::Rust;
+        let line = tune_request_json(&req);
+        match parse_request(&line).unwrap() {
+            Request::Tune(r) => {
+                assert_eq!(r.x.rows(), 2);
+                assert_eq!(r.ys[0], vec![0.5, -0.5]);
+                assert_eq!(r.kernel, crate::kernelfn::Kernel::Rbf { xi2: 2.0 });
+                assert_eq!(r.strategy, GlobalStrategy::Grid { points_per_axis: 9 });
+            }
+            other => panic!("expected tune, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tune_response_shape() {
+        let res = TuneResult {
+            outputs: vec![OutputResult {
+                hp: HyperParams::new(0.5, 2.0),
+                score: -12.5,
+                global_evals: 100,
+                newton_evals: 7,
+                converged: true,
+            }],
+            eigen_cached: true,
+            gram_seconds: 0.0,
+            eigen_seconds: 0.1,
+            tune_seconds: 0.01,
+            backend: Backend::Rust,
+        };
+        let text = tune_response(&res);
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs[0].get("sigma2").unwrap().as_f64(), Some(0.5));
+        assert_eq!(outs[0].get("converged").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn malformed_tune_requests_rejected() {
+        assert!(parse_request(r#"{"op":"tune"}"#).is_err());
+        assert!(parse_request(r#"{"op":"tune","x":[[1,2]],"ys":"no"}"#).is_err());
+        assert!(parse_request(r#"{"op":"tune","x":[[1],[2,3]],"ys":[[1,2]]}"#).is_err());
+        assert!(
+            parse_request(r#"{"op":"tune","x":[[1]],"ys":[[1]],"kernel":"bogus"}"#).is_err()
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Threaded TCP server: acceptor threads parse newline-JSON requests and
+//! forward them over an mpsc channel to the single worker thread that owns
+//! the [`Coordinator`] (the PJRT client is not `Send`); responses travel
+//! back on per-job channels.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use crate::coordinator::{protocol, Coordinator};
+use crate::util::json::Json;
+
+/// A job in flight: the parsed request and the channel to answer on.
+enum Job {
+    Handle(protocol::Request, Sender<String>),
+    Stop,
+}
+
+/// Server handle: the bound address and a way to stop the loop.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop_tx: Sender<Job>,
+    stopping: Arc<AtomicBool>,
+    accept_handle: Option<thread::JoinHandle<()>>,
+    worker_handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
+    /// the acceptor + worker threads.  `make_coordinator` runs *on the
+    /// worker thread* (the coordinator is not `Send`).
+    pub fn start<F>(addr: &str, make_coordinator: F) -> std::io::Result<Server>
+    where
+        F: FnOnce() -> Coordinator + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+
+        // worker: owns the coordinator, executes jobs serially
+        let worker_handle = thread::spawn(move || {
+            let mut coord = make_coordinator();
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Stop => break,
+                    Job::Handle(req, reply) => {
+                        let response = dispatch(&mut coord, req);
+                        let _ = reply.send(response);
+                    }
+                }
+            }
+        });
+
+        // acceptor: one thread per connection; exits when `stopping` is
+        // set (stop() pokes it with a dummy connection to unblock accept)
+        let stopping = Arc::new(AtomicBool::new(false));
+        let tx_accept = tx.clone();
+        let stop_flag = stopping.clone();
+        let accept_handle = thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop_flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { break };
+                let tx = tx_accept.clone();
+                thread::spawn(move || {
+                    let _ = handle_connection(stream, tx);
+                });
+            }
+        });
+
+        Ok(Server {
+            addr: local,
+            stop_tx: tx,
+            stopping,
+            accept_handle: Some(accept_handle),
+            worker_handle: Some(worker_handle),
+        })
+    }
+
+    /// Stop the worker and the acceptor, joining both threads.
+    pub fn stop(mut self) {
+        let _ = self.stop_tx.send(Job::Stop);
+        if let Some(h) = self.worker_handle.take() {
+            let _ = h.join();
+        }
+        // the acceptor blocks in accept(); raise the flag, then poke it
+        self.stopping.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch(coord: &mut Coordinator, req: protocol::Request) -> String {
+    match req {
+        protocol::Request::Ping => protocol::pong_response(),
+        protocol::Request::Shutdown => protocol::pong_response(),
+        protocol::Request::Info => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("pjrt", Json::Bool(coord.has_runtime())),
+            ("cache_hits", Json::Num(coord.cache_hits as f64)),
+            ("cache_misses", Json::Num(coord.cache_misses as f64)),
+        ])
+        .to_string(),
+        protocol::Request::Tune(req) => match coord.tune(&req) {
+            Ok(res) => protocol::tune_response(&res),
+            Err(e) => protocol::error_response(&format!("{e:#}")),
+        },
+    }
+}
+
+fn handle_connection(stream: TcpStream, jobs: Sender<Job>) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match protocol::parse_request(trimmed) {
+            Err(e) => protocol::error_response(&e),
+            Ok(protocol::Request::Shutdown) => {
+                // acknowledged; the CLI layer decides whether to exit
+                let _ = jobs.send(Job::Stop);
+                writer.write_all(protocol::pong_response().as_bytes())?;
+                writer.write_all(b"\n")?;
+                return Ok(());
+            }
+            Ok(req) => {
+                let (reply_tx, reply_rx) = channel();
+                if jobs.send(Job::Handle(req, reply_tx)).is_err() {
+                    protocol::error_response("worker stopped")
+                } else {
+                    reply_rx
+                        .recv()
+                        .unwrap_or_else(|_| protocol::error_response("worker dropped job"))
+                }
+            }
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        let _ = peer;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::Client;
+    use crate::coordinator::{Coordinator, GlobalStrategy, TuneRequest};
+    use crate::data::{synthetic, SyntheticSpec};
+
+    #[test]
+    fn ping_info_roundtrip() {
+        let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        assert!(client.ping().unwrap());
+        let info = client.info().unwrap();
+        assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+        server.stop();
+    }
+
+    #[test]
+    fn tune_over_the_wire() {
+        let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let ds = synthetic(SyntheticSpec { n: 40, p: 2, seed: 3, ..Default::default() }, 2);
+        let mut req = TuneRequest::new(ds.x, ds.ys, crate::kernelfn::Kernel::Rbf { xi2: 2.0 });
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+        let res = client.tune(&req).unwrap();
+        let outs = res.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 2);
+        for o in outs {
+            assert!(o.get("sigma2").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // second identical request hits the eigen cache
+        let res2 = client.tune(&req).unwrap();
+        assert_eq!(res2.get("eigen_cached").unwrap().as_bool(), Some(true));
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_line_gets_error_response() {
+        let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let v = client.raw("this is not json").unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_are_serialized_safely() {
+        let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let ds = synthetic(
+                        SyntheticSpec { n: 30, p: 2, seed: i, ..Default::default() },
+                        1,
+                    );
+                    let mut req =
+                        TuneRequest::new(ds.x, ds.ys, crate::kernelfn::Kernel::Rbf { xi2: 1.0 });
+                    req.strategy = GlobalStrategy::Grid { points_per_axis: 5 };
+                    let res = client.tune(&req).unwrap();
+                    assert_eq!(res.get("ok").unwrap().as_bool(), Some(true));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+}

@@ -1,0 +1,285 @@
+//! Dataset utilities: synthetic GP-regression generators (the paper's
+//! simulation study uses synthetic data), CSV I/O, standardization, and
+//! train/test splitting.
+
+use crate::kernelfn::{self, Kernel};
+use crate::linalg::{Cholesky, Matrix};
+use crate::util::rng::Rng;
+
+/// A regression dataset: inputs (N x P) and one or more output columns.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub ys: Vec<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+    pub fn y(&self) -> &[f64] {
+        &self.ys[0]
+    }
+
+    /// Split into (train, test) by a shuffled index set.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.n();
+        let ntr = ((n as f64) * train_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| Dataset {
+            x: Matrix::from_fn(ids.len(), self.p(), |i, j| self.x[(ids[i], j)]),
+            ys: self
+                .ys
+                .iter()
+                .map(|y| ids.iter().map(|&i| y[i]).collect())
+                .collect(),
+        };
+        (take(&idx[..ntr]), take(&idx[ntr..]))
+    }
+}
+
+/// Parameters of the synthetic generator.
+#[derive(Clone, Copy, Debug)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub p: usize,
+    pub kernel: Kernel,
+    /// True coefficient-scale hyperparameter lambda^2 (eq. 6).
+    pub lambda2: f64,
+    /// True noise variance sigma^2 (eq. 4).
+    pub sigma2: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            n: 256,
+            p: 8,
+            kernel: Kernel::Rbf { xi2: 2.0 },
+            lambda2: 1.0,
+            sigma2: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+/// Draw a dataset from the paper's *generative model* (eqs. 4-6):
+/// `c ~ N(0, lambda2 K^{-1})`, `y = K c + eps`, `eps ~ N(0, sigma2 I)`.
+/// Sampling `K c` with `c ~ N(0, lambda2 K^{-1})` is equivalent to drawing
+/// `f ~ N(0, lambda2 K)`, i.e. `f = sqrt(lambda2) L z` with `K = L L'`.
+pub fn synthetic(spec: SyntheticSpec, outputs: usize) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let x = Matrix::from_fn(spec.n, spec.p, |_, _| rng.normal());
+    let mut k = kernelfn::gram(spec.kernel, &x);
+    k.add_diag(1e-8 * spec.n as f64); // jitter for the factorization
+    let ch = Cholesky::new(&k).expect("jittered Gram must be SPD");
+    let ys = (0..outputs)
+        .map(|_| {
+            let z = rng.normal_vec(spec.n);
+            // f = sqrt(lambda2) L z
+            let mut f = vec![0.0; spec.n];
+            for i in 0..spec.n {
+                let row = ch.l().row(i);
+                f[i] = spec.lambda2.sqrt()
+                    * row[..=i].iter().zip(&z[..=i]).map(|(a, b)| a * b).sum::<f64>();
+            }
+            // y = f + eps
+            f.iter().map(|v| v + spec.sigma2.sqrt() * rng.normal()).collect()
+        })
+        .collect();
+    Dataset { x, ys }
+}
+
+/// Standardize each feature column and each output to zero mean / unit
+/// variance (in place); returns the per-column (mean, std) for features.
+pub fn standardize(ds: &mut Dataset) -> Vec<(f64, f64)> {
+    let (n, p) = (ds.n(), ds.p());
+    let mut stats = Vec::with_capacity(p);
+    for j in 0..p {
+        let col: Vec<f64> = (0..n).map(|i| ds.x[(i, j)]).collect();
+        let mean = col.iter().sum::<f64>() / n as f64;
+        let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        let std = var.sqrt().max(1e-12);
+        for i in 0..n {
+            ds.x[(i, j)] = (ds.x[(i, j)] - mean) / std;
+        }
+        stats.push((mean, std));
+    }
+    for y in &mut ds.ys {
+        let mean = y.iter().sum::<f64>() / n as f64;
+        let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        let std = var.sqrt().max(1e-12);
+        for v in y.iter_mut() {
+            *v = (*v - mean) / std;
+        }
+    }
+    stats
+}
+
+/// Root-mean-square error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let s: f64 = pred.iter().zip(truth).map(|(a, b)| (a - b) * (a - b)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Write a dataset as CSV (`x0,...,xP-1,y0[,y1...]`).
+pub fn write_csv(path: &str, ds: &Dataset) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let header: Vec<String> = (0..ds.p())
+        .map(|j| format!("x{j}"))
+        .chain((0..ds.ys.len()).map(|j| format!("y{j}")))
+        .collect();
+    writeln!(f, "{}", header.join(","))?;
+    for i in 0..ds.n() {
+        let mut cells: Vec<String> = ds.x.row(i).iter().map(|v| format!("{v}")).collect();
+        for y in &ds.ys {
+            cells.push(format!("{}", y[i]));
+        }
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV written by [`write_csv`] (or any headered numeric CSV where
+/// output columns are named `y*`).
+pub fn read_csv(path: &str) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty csv")?;
+    let cols: Vec<&str> = header.split(',').map(|s| s.trim()).collect();
+    let y_cols: Vec<usize> = cols
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.starts_with('y'))
+        .map(|(i, _)| i)
+        .collect();
+    if y_cols.is_empty() {
+        return Err("csv has no y* columns".into());
+    }
+    let x_cols: Vec<usize> =
+        (0..cols.len()).filter(|i| !y_cols.contains(i)).collect();
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<Vec<f64>> = vec![Vec::new(); y_cols.len()];
+    let mut n = 0usize;
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> =
+            line.split(',').map(|t| t.trim().parse::<f64>()).collect();
+        let vals = vals.map_err(|e| format!("line {}: {e}", lineno + 2))?;
+        if vals.len() != cols.len() {
+            return Err(format!("line {}: {} fields, expected {}", lineno + 2, vals.len(), cols.len()));
+        }
+        for &i in &x_cols {
+            xs.push(vals[i]);
+        }
+        for (k, &i) in y_cols.iter().enumerate() {
+            ys[k].push(vals[i]);
+        }
+        n += 1;
+    }
+    Ok(Dataset { x: Matrix::from_vec(n, x_cols.len(), xs), ys })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spectral::{HyperParams, SpectralGp};
+
+    #[test]
+    fn synthetic_shapes_and_determinism() {
+        let spec = SyntheticSpec { n: 50, p: 3, seed: 7, ..Default::default() };
+        let a = synthetic(spec, 2);
+        let b = synthetic(spec, 2);
+        assert_eq!(a.n(), 50);
+        assert_eq!(a.p(), 3);
+        assert_eq!(a.ys.len(), 2);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.ys[0], b.ys[0]);
+    }
+
+    #[test]
+    fn synthetic_likelihood_prefers_true_hyperparams_region() {
+        // score at the generating hyperparameters should beat wildly wrong ones
+        let spec = SyntheticSpec {
+            n: 120,
+            sigma2: 0.1,
+            lambda2: 1.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let ds = synthetic(spec, 1);
+        let gp = SpectralGp::fit(spec.kernel, ds.x.clone()).unwrap();
+        let es = gp.eigensystem(ds.y());
+        let at_truth = es.score(HyperParams::new(0.1, 1.0));
+        let far_off = es.score(HyperParams::new(100.0, 1e-3));
+        assert!(at_truth < far_off, "{at_truth} !< {far_off}");
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = synthetic(SyntheticSpec { n: 80, p: 2, seed: 9, ..Default::default() }, 1);
+        standardize(&mut ds);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..80).map(|i| ds.x[(i, j)]).collect();
+            let mean = col.iter().sum::<f64>() / 80.0;
+            let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 80.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn split_partitions_dataset() {
+        let ds = synthetic(SyntheticSpec { n: 100, ..Default::default() }, 1);
+        let mut rng = Rng::new(1);
+        let (tr, te) = ds.split(0.8, &mut rng);
+        assert_eq!(tr.n(), 80);
+        assert_eq!(te.n(), 20);
+        assert_eq!(tr.p(), ds.p());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = synthetic(SyntheticSpec { n: 20, p: 2, seed: 5, ..Default::default() }, 2);
+        let path = std::env::temp_dir().join("gpml_test_roundtrip.csv");
+        let path = path.to_str().unwrap();
+        write_csv(path, &ds).unwrap();
+        let back = read_csv(path).unwrap();
+        assert_eq!(back.n(), 20);
+        assert_eq!(back.p(), 2);
+        assert_eq!(back.ys.len(), 2);
+        for i in 0..20 {
+            assert!((back.ys[0][i] - ds.ys[0][i]).abs() < 1e-12);
+            assert!((back.x[(i, 1)] - ds.x[(i, 1)]).abs() < 1e-12);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn read_csv_rejects_malformed() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("gpml_bad1.csv");
+        std::fs::write(&p1, "x0,x1\n1,2\n").unwrap(); // no y column
+        assert!(read_csv(p1.to_str().unwrap()).is_err());
+        let p2 = dir.join("gpml_bad2.csv");
+        std::fs::write(&p2, "x0,y0\n1,2\n3\n").unwrap(); // ragged row
+        assert!(read_csv(p2.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(p1);
+        let _ = std::fs::remove_file(p2);
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! Kernel functions and Gram-matrix construction (paper §1 eq. 3, §2.2).
+//!
+//! The [`Kernel`] enum covers the families the paper names (RBF with
+//! bandwidth `xi^2`, polynomial with degree `l`, linear) plus Matérn 3/2
+//! and 5/2 for the examples.  The rust builders here are the CPU fallback;
+//! the PJRT `gram` artifact (Layer 1 `kernelmat.py`) computes the same
+//! matrices through XLA and is cross-checked against these in integration
+//! tests.
+
+use crate::linalg::Matrix;
+
+/// A positive-definite kernel function `K(x, y)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `exp(-||x - y||^2 / (2 xi2))`
+    Rbf { xi2: f64 },
+    /// `(<x, y> + 1)^degree`
+    Polynomial { degree: u32 },
+    /// `<x, y>`
+    Linear,
+    /// Matérn nu=3/2 with length-scale `ell`.
+    Matern32 { ell: f64 },
+    /// Matérn nu=5/2 with length-scale `ell`.
+    Matern52 { ell: f64 },
+}
+
+impl Kernel {
+    /// Evaluate on two feature vectors.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Rbf { xi2 } => {
+                let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+                (-d2 / (2.0 * xi2)).exp()
+            }
+            Kernel::Polynomial { degree } => {
+                let ip: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+                (ip + 1.0).powi(degree as i32)
+            }
+            Kernel::Linear => x.iter().zip(y).map(|(a, b)| a * b).sum(),
+            Kernel::Matern32 { ell } => {
+                let d = dist(x, y);
+                let t = 3f64.sqrt() * d / ell;
+                (1.0 + t) * (-t).exp()
+            }
+            Kernel::Matern52 { ell } => {
+                let d = dist(x, y);
+                let t = 5f64.sqrt() * d / ell;
+                (1.0 + t + t * t / 3.0) * (-t).exp()
+            }
+        }
+    }
+
+    /// The `[family, theta]` encoding of the PJRT gram artifact, if this
+    /// family is artifact-backed (RBF / polynomial / linear).
+    pub fn artifact_code(&self) -> Option<[f64; 2]> {
+        match *self {
+            Kernel::Rbf { xi2 } => Some([0.0, xi2]),
+            Kernel::Polynomial { degree } => Some([1.0, degree as f64]),
+            Kernel::Linear => Some([2.0, 0.0]),
+            _ => None,
+        }
+    }
+
+    /// Replace the tunable kernel hyperparameter (Algorithm 1's `theta`).
+    pub fn with_theta(&self, theta: f64) -> Kernel {
+        match *self {
+            Kernel::Rbf { .. } => Kernel::Rbf { xi2: theta },
+            Kernel::Polynomial { .. } => Kernel::Polynomial { degree: theta.round().max(1.0) as u32 },
+            Kernel::Linear => Kernel::Linear,
+            Kernel::Matern32 { .. } => Kernel::Matern32 { ell: theta },
+            Kernel::Matern52 { .. } => Kernel::Matern52 { ell: theta },
+        }
+    }
+
+    /// The tunable hyperparameter value, if any.
+    pub fn theta(&self) -> Option<f64> {
+        match *self {
+            Kernel::Rbf { xi2 } => Some(xi2),
+            Kernel::Polynomial { degree } => Some(degree as f64),
+            Kernel::Linear => None,
+            Kernel::Matern32 { ell } => Some(ell),
+            Kernel::Matern52 { ell } => Some(ell),
+        }
+    }
+}
+
+fn dist(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+}
+
+/// Full Gram matrix `K[i, j] = K(x_i, x_j)` (eq. 3); exploits symmetry.
+pub fn gram(kernel: Kernel, x: &Matrix) -> Matrix {
+    let n = x.rows();
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = kernel.eval(x.row(i), x.row(j));
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    k
+}
+
+/// Cross-Gram `K[i, j] = K(a_i, b_j)` for prediction (`k_x~` rows, eq. 4).
+pub fn cross_gram(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "feature dims differ");
+    Matrix::from_fn(a.rows(), b.rows(), |i, j| kernel.eval(a.row(i), b.row(j)))
+}
+
+/// Parse `--kernel` CLI syntax: `rbf:1.5`, `poly:3`, `linear`,
+/// `matern32:0.8`, `matern52:1.2`.
+pub fn parse_kernel(s: &str) -> Result<Kernel, String> {
+    let (name, arg) = match s.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (s, None),
+    };
+    let num = |default: f64| -> Result<f64, String> {
+        match arg {
+            None => Ok(default),
+            Some(a) => a.parse().map_err(|_| format!("bad kernel parameter '{a}'")),
+        }
+    };
+    match name {
+        "rbf" => Ok(Kernel::Rbf { xi2: num(1.0)? }),
+        "poly" | "polynomial" => Ok(Kernel::Polynomial { degree: num(2.0)? as u32 }),
+        "linear" => Ok(Kernel::Linear),
+        "matern32" => Ok(Kernel::Matern32 { ell: num(1.0)? }),
+        "matern52" => Ok(Kernel::Matern52 { ell: num(1.0)? }),
+        _ => Err(format!("unknown kernel '{name}' (rbf|poly|linear|matern32|matern52)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SymEigen;
+    use crate::util::rng::Rng;
+
+    fn random_x(rng: &mut Rng, n: usize, p: usize) -> Matrix {
+        Matrix::from_fn(n, p, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn rbf_diagonal_is_one_and_symmetric() {
+        let mut rng = Rng::new(1);
+        let x = random_x(&mut rng, 20, 4);
+        let k = gram(Kernel::Rbf { xi2: 2.0 }, &x);
+        for i in 0..20 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-14);
+            for j in 0..20 {
+                assert_eq!(k[(i, j)], k[(j, i)]);
+                assert!(k[(i, j)] > 0.0 && k[(i, j)] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_gram_is_psd() {
+        let mut rng = Rng::new(2);
+        let x = random_x(&mut rng, 30, 3);
+        let k = gram(Kernel::Rbf { xi2 : 1.0 }, &x);
+        let eg = SymEigen::new(&k).unwrap();
+        assert!(eg.values[0] > -1e-9, "min eigenvalue {}", eg.values[0]);
+    }
+
+    #[test]
+    fn matern_gram_is_psd() {
+        let mut rng = Rng::new(3);
+        let x = random_x(&mut rng, 25, 2);
+        for kern in [Kernel::Matern32 { ell: 0.7 }, Kernel::Matern52 { ell: 1.3 }] {
+            let k = gram(kern, &x);
+            let eg = SymEigen::new(&k).unwrap();
+            assert!(eg.values[0] > -1e-9, "{kern:?}: min {}", eg.values[0]);
+        }
+    }
+
+    #[test]
+    fn polynomial_matches_formula() {
+        let k = Kernel::Polynomial { degree: 3 };
+        let v = k.eval(&[1.0, 2.0], &[0.5, -1.0]);
+        assert!((v - (1.0 * 0.5 + 2.0 * (-1.0) + 1.0f64).powi(3)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn linear_matches_dot() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn cross_gram_consistent_with_gram() {
+        let mut rng = Rng::new(4);
+        let x = random_x(&mut rng, 12, 3);
+        let kern = Kernel::Rbf { xi2: 1.5 };
+        let full = gram(kern, &x);
+        let cross = cross_gram(kern, &x, &x);
+        assert!(full.max_abs_diff(&cross) < 1e-15);
+    }
+
+    #[test]
+    fn matern_limits() {
+        // at distance 0 both Matérn kernels are 1
+        let x = [0.3, -0.2];
+        assert!((Kernel::Matern32 { ell: 1.0 }.eval(&x, &x) - 1.0).abs() < 1e-15);
+        assert!((Kernel::Matern52 { ell: 1.0 }.eval(&x, &x) - 1.0).abs() < 1e-15);
+        // monotone decreasing in distance
+        let k = Kernel::Matern52 { ell: 1.0 };
+        let near = k.eval(&[0.0], &[0.1]);
+        let far = k.eval(&[0.0], &[2.0]);
+        assert!(near > far);
+    }
+
+    #[test]
+    fn parse_kernel_syntax() {
+        assert_eq!(parse_kernel("rbf:2.5").unwrap(), Kernel::Rbf { xi2: 2.5 });
+        assert_eq!(parse_kernel("poly:3").unwrap(), Kernel::Polynomial { degree: 3 });
+        assert_eq!(parse_kernel("linear").unwrap(), Kernel::Linear);
+        assert_eq!(parse_kernel("matern32:0.5").unwrap(), Kernel::Matern32 { ell: 0.5 });
+        assert!(parse_kernel("cubic").is_err());
+        assert!(parse_kernel("rbf:abc").is_err());
+    }
+
+    #[test]
+    fn artifact_codes() {
+        assert_eq!(Kernel::Rbf { xi2: 1.5 }.artifact_code(), Some([0.0, 1.5]));
+        assert_eq!(Kernel::Polynomial { degree: 2 }.artifact_code(), Some([1.0, 2.0]));
+        assert_eq!(Kernel::Linear.artifact_code(), Some([2.0, 0.0]));
+        assert_eq!(Kernel::Matern32 { ell: 1.0 }.artifact_code(), None);
+    }
+
+    #[test]
+    fn with_theta_roundtrip() {
+        let k = Kernel::Rbf { xi2: 1.0 }.with_theta(3.5);
+        assert_eq!(k.theta(), Some(3.5));
+    }
+}

@@ -1,0 +1,50 @@
+//! # gpml — Efficient Marginal Likelihood Computation for GP Regression
+//!
+//! Reproduction of Schirru, Pampuri, De Nicolao & McLoone (2011):
+//! after a one-time O(N^3) eigendecomposition of the kernel Gram matrix,
+//! the GP marginal-likelihood score (eq. 19), Jacobian (eqs. 20-21) and
+//! Hessian (eqs. 26-28) are evaluated in O(N) per hyperparameter iterate
+//! with O(N) memory — turning global+local hyperparameter optimization
+//! from `k* O(N^3)` into `O(N^3) + k* O(N)`.
+//!
+//! ## Architecture (three layers; see DESIGN.md)
+//!
+//! - **Layer 1/2 (build time, python)** — pallas kernels + JAX entry
+//!   points AOT-lowered to HLO-text artifacts in `artifacts/`.
+//! - **Layer 3 (this crate)** — the [`runtime`] loads the artifacts via
+//!   PJRT, the [`coordinator`] batches tuning work over them, and the
+//!   pure-rust [`spectral`] evaluator mirrors the same identities for the
+//!   scalar fast path.  [`naive`] (O(N^3)) and [`sparse`] (O(N m^2)) are
+//!   the paper's comparison baselines; [`optim`] implements §1.1's
+//!   global+local strategy and §2.2's Algorithm 1.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gpml::kernelfn::Kernel;
+//! use gpml::optim::{self, Bounds};
+//! use gpml::spectral::SpectralGp;
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let ds = gpml::data::synthetic(gpml::data::SyntheticSpec::default(), 1);
+//! let gp = SpectralGp::fit(Kernel::Rbf { xi2: 2.0 }, ds.x.clone())?; // O(N^3), once
+//! let mut es = gp.eigensystem(ds.y());                               // O(N) state
+//! let coarse = optim::grid_search(&mut es, Bounds::default(), 25, 64);
+//! let tuned = optim::newton_refine(&mut es, coarse.hp, Bounds::default(),
+//!                                  Default::default());
+//! println!("sigma2={:.4} lambda2={:.4}", tuned.hp.sigma2, tuned.hp.lambda2);
+//! # Ok(()) }
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod kernelfn;
+pub mod linalg;
+pub mod naive;
+pub mod optim;
+pub mod runtime;
+pub mod sparse;
+pub mod spectral;
+pub mod util;
+
+pub use spectral::{EigenSystem, Evaluation, HyperParams, SpectralGp};

@@ -1,0 +1,249 @@
+//! Cholesky decomposition and SPD solves — the engine of the naive O(N^3)
+//! baseline (paper §1.1): every score evaluation without the spectral
+//! identities costs one factorization per hyperparameter iterate.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `L L' = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+/// Errors from the factorization.
+#[derive(Debug, PartialEq)]
+pub enum CholError {
+    NotSquare,
+    NotPositiveDefinite { pivot: usize, value: f64 },
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotSquare => write!(f, "matrix is not square"),
+            CholError::NotPositiveDefinite { pivot, value } => {
+                write!(f, "matrix not positive definite (pivot {pivot}: {value:.3e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (reads the lower
+    /// triangle only).
+    pub fn new(a: &Matrix) -> Result<Cholesky, CholError> {
+        if !a.is_square() {
+            return Err(CholError::NotSquare);
+        }
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            // diagonal
+            let mut d = a[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholError::NotPositiveDefinite { pivot: j, value: d });
+            }
+            let dj = d.sqrt();
+            l[(j, j)] = dj;
+            // column below the diagonal
+            for i in (j + 1)..n {
+                let mut s = a[(i, j)];
+                let (ri, rj) = (l.row(i), l.row(j));
+                s -= ri[..j].iter().zip(&rj[..j]).map(|(x, y)| x * y).sum::<f64>();
+                l[(i, j)] = s / dj;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// `log |A| = 2 sum_i log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve `A x = b` in place (forward then backward substitution).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        // L y = b
+        for i in 0..n {
+            let row = self.l.row(i);
+            let s: f64 = row[..i].iter().zip(x[..i].iter()).map(|(a, b)| a * b).sum();
+            x[i] = (x[i] - s) / row[i];
+        }
+        // L' x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Solve `A X = B` column-by-column.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let mut col = b.col(j);
+            self.solve_in_place(&mut col);
+            for i in 0..n {
+                out[(i, j)] = col[i];
+            }
+        }
+        out
+    }
+
+    /// Explicit inverse (used by the naive baseline where the paper's
+    /// procedure stores `Sigma_y^{-1}`).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_mat(&Matrix::eye(self.n()))
+    }
+
+    /// Quadratic form `b' A^{-1} b` without materializing the inverse.
+    pub fn quad_form(&self, b: &[f64]) -> f64 {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // y = L^{-1} b, result = y'y
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let s: f64 = row[..i].iter().zip(y[..i].iter()).map(|(a, b)| a * b).sum();
+            y[i] = (y[i] - s) / row[i];
+        }
+        y.iter().map(|v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_bt};
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    /// Random SPD matrix `B B' + eps I`.
+    fn spd(rng: &mut Rng, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = matmul_bt(&b, &b);
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(1);
+        let a = spd(&mut rng, 24);
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = matmul_bt(ch.l(), ch.l());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(2);
+        let a = spd(&mut rng, 16);
+        let x_true = rng.normal_vec(16);
+        let b = a.matvec(&x_true);
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve(&b);
+        let err: f64 = x.iter().zip(&x_true).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        // A = [[4, 2], [2, 3]] => det = 8
+        let a = Matrix::from_vec(2, 2, vec![4.0, 2.0, 2.0, 3.0]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - 8f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logdet_of_diag() {
+        let a = Matrix::diag(&[1.0, 2.0, 4.0, 8.0]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - 64f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quad_form_matches_solve() {
+        let mut rng = Rng::new(3);
+        let a = spd(&mut rng, 12);
+        let b = rng.normal_vec(12);
+        let ch = Cholesky::new(&a).unwrap();
+        let direct: f64 = b.iter().zip(ch.solve(&b)).map(|(u, v)| u * v).sum();
+        assert!((ch.quad_form(&b) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Rng::new(4);
+        let a = spd(&mut rng, 10);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        assert!(matmul(&a, &inv).max_abs_diff(&Matrix::eye(10)) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        match Cholesky::new(&a) {
+            Err(CholError::NotPositiveDefinite { .. }) => {}
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert_eq!(Cholesky::new(&Matrix::zeros(2, 3)).unwrap_err(), CholError::NotSquare);
+    }
+
+    #[test]
+    fn property_solve_residual_small() {
+        forall(
+            "chol solve residual",
+            11,
+            15,
+            |r| {
+                let n = 2 + r.below(30);
+                let a = spd(r, n);
+                let b = r.normal_vec(n);
+                (a, b)
+            },
+            |(a, b)| {
+                let ch = Cholesky::new(a).map_err(|e| e.to_string())?;
+                let x = ch.solve(b);
+                let r = a.matvec(&x);
+                let res: f64 =
+                    r.iter().zip(b).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+                if res < 1e-8 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {res}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,446 @@
+//! Symmetric eigendecomposition — the paper's one-time O(N^3) overhead
+//! (eq. 17: `K = U S U'`).
+//!
+//! Classic two-phase dense solver, implemented from scratch:
+//!  1. Householder tridiagonalization with accumulation of the orthogonal
+//!     transform (EISPACK `tred2`).
+//!  2. Implicit-shift QL iteration on the tridiagonal matrix, rotating the
+//!     accumulated transform into the eigenvector matrix (EISPACK `tql2`).
+//!
+//! Output convention matches the paper: ascending eigenvalues `s` and an
+//! orthogonal `U` whose *columns* are eigenvectors, `K = U diag(s) U'`.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition `A = U diag(s) U'` of a symmetric matrix.
+#[derive(Clone, Debug)]
+pub struct SymEigen {
+    /// Ascending eigenvalues.
+    pub values: Vec<f64>,
+    /// Orthogonal matrix; column `j` is the eigenvector of `values[j]`.
+    pub vectors: Matrix,
+}
+
+/// QL failed to converge (pathological input; never observed on Gram
+/// matrices).
+#[derive(Debug)]
+pub struct NoConvergence {
+    pub eigenvalue_index: usize,
+}
+
+impl std::fmt::Display for NoConvergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QL iteration failed to converge for eigenvalue {}", self.eigenvalue_index)
+    }
+}
+impl std::error::Error for NoConvergence {}
+
+impl SymEigen {
+    /// Decompose a symmetric matrix (only the lower triangle is read; the
+    /// input is copied).
+    pub fn new(a: &Matrix) -> Result<SymEigen, NoConvergence> {
+        assert!(a.is_square(), "eigendecomposition needs a square matrix");
+        let n = a.rows();
+        if n == 0 {
+            return Ok(SymEigen { values: vec![], vectors: Matrix::zeros(0, 0) });
+        }
+        let mut z = a.clone();
+        z.symmetrize();
+        let mut d = vec![0.0; n]; // diagonal
+        let mut e = vec![0.0; n]; // sub-diagonal
+        tred2(&mut z, &mut d, &mut e);
+        tql2(&mut z, &mut d, &mut e)?;
+        Ok(SymEigen { values: d, vectors: z })
+    }
+
+    /// `U' y` — projection of targets onto the eigenbasis (eq. 18).
+    pub fn project(&self, y: &[f64]) -> Vec<f64> {
+        self.vectors.matvec_t(y)
+    }
+
+    /// `U x` — back-projection.
+    pub fn back_project(&self, x: &[f64]) -> Vec<f64> {
+        self.vectors.matvec(x)
+    }
+
+    /// Reconstruct `U diag(s) U'` (test/diagnostic helper).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.values.len();
+        let mut scaled = self.vectors.clone(); // columns scaled by eigenvalue
+        for i in 0..n {
+            for j in 0..n {
+                scaled[(i, j)] *= self.values[j];
+            }
+        }
+        crate::linalg::gemm::matmul_bt(&scaled, &self.vectors)
+    }
+}
+
+/// Householder reduction to tridiagonal form, accumulating the transform.
+/// On exit `z` holds the orthogonal matrix, `d` the diagonal, `e[1..]` the
+/// sub-diagonal. (Port of EISPACK tred2 as given in Numerical Recipes §11.2.)
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| z[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let delta = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    // Transform accumulation, restructured from per-column dot products
+    // (stride-N accesses) into two row-streaming sweeps over the leading
+    // i x i block (EXPERIMENTS.md §Perf): first g[j] = sum_k z[i][k] z[k][j]
+    // accumulated row-by-row, then the rank-1 update z[k][j] -= g[j] z[k][i]
+    // applied row-by-row.
+    let mut gbuf = vec![0.0f64; n];
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for gj in gbuf[..i].iter_mut() {
+                *gj = 0.0;
+            }
+            for k in 0..i {
+                let vik = z[(i, k)];
+                if vik != 0.0 {
+                    let row = &z.data()[k * n..k * n + i];
+                    for (gj, &zkj) in gbuf[..i].iter_mut().zip(row) {
+                        *gj += vik * zkj;
+                    }
+                }
+            }
+            for k in 0..i {
+                let zki = z[(k, i)];
+                if zki != 0.0 {
+                    let row = &mut z.data_mut()[k * n..k * n + i];
+                    for (zkj, &gj) in row.iter_mut().zip(&gbuf[..i]) {
+                        *zkj -= gj * zki;
+                    }
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL on the tridiagonal (d, e), rotating `z` into the
+/// eigenvector matrix; sorts ascending. (Port of EISPACK tql2.)
+///
+/// Perf (EXPERIMENTS.md §Perf): the Givens rotations update eigenvector
+/// *columns*; on the row-major [`Matrix`] that is a stride-N access
+/// pattern which dominated the O(N^3) overhead.  The rotations therefore
+/// run on a transposed copy (`zt`, one eigenvector per contiguous row) and
+/// the result is transposed back — two O(N^2) copies buy cache-linear
+/// O(N^3) inner loops (~8x at N=1024).
+fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergence> {
+    let n = d.len();
+    if n == 1 {
+        return Ok(());
+    }
+    // zt[i] (row) == eigenvector i == column i of z
+    let mut zt = vec![0.0f64; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            zt[c * n + r] = z[(r, c)];
+        }
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    // Absolute deflation floor scaled to the matrix norm: Gram matrices
+    // have large clusters of numerically-zero eigenvalues where the
+    // relative test (|e| <= eps * (|d_m| + |d_m+1|)) never fires because
+    // the cluster's d values are themselves ~eps * ||A||.
+    let anorm = d
+        .iter()
+        .zip(e.iter())
+        .map(|(a, b)| a.abs() + b.abs())
+        .fold(0.0f64, f64::max)
+        .max(f64::MIN_POSITIVE);
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small sub-diagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                // deflating at |e| <= eps*(dd + anorm) perturbs eigenvalues
+                // by at most eps*||A|| (Weyl), the same bound LAPACK's
+                // absolute criterion accepts.
+                if e[m].abs() <= f64::EPSILON * (dd + anorm) {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(NoConvergence { eigenvalue_index: l });
+            }
+            // form shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false; // NR's `r == 0.0 && i >= l` early break
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors: rotate two contiguous rows of zt
+                let (lo, hi) = zt.split_at_mut((i + 1) * n);
+                let row_i = &mut lo[i * n..(i + 1) * n];
+                let row_i1 = &mut hi[..n];
+                for (zi, zi1) in row_i.iter_mut().zip(row_i1.iter_mut()) {
+                    let f = *zi1;
+                    *zi1 = s * *zi + c * f;
+                    *zi = c * *zi - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // sort ascending, permuting eigenvector rows of zt
+    for i in 0..n - 1 {
+        let mut k = i;
+        for j in (i + 1)..n {
+            if d[j] < d[k] {
+                k = j;
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            for c in 0..n {
+                zt.swap(i * n + c, k * n + c);
+            }
+        }
+    }
+    // write back transposed: z column i = zt row i
+    for r in 0..n {
+        for c in 0..n {
+            z[(r, c)] = zt[c * n + r];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_bt};
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.add(&b.t());
+        a.scale(0.5);
+        a
+    }
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        matmul_bt(&b, &b)
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let eg = SymEigen::new(&a).unwrap();
+        assert!((eg.values[0] - 1.0).abs() < 1e-12);
+        assert!((eg.values[1] - 2.0).abs() < 1e-12);
+        assert!((eg.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let eg = SymEigen::new(&a).unwrap();
+        assert!((eg.values[0] - 1.0).abs() < 1e-12);
+        assert!((eg.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(8);
+        for &n in &[1usize, 2, 3, 10, 33, 64] {
+            let a = random_sym(&mut rng, n);
+            let eg = SymEigen::new(&a).unwrap();
+            assert!(eg.reconstruct().max_abs_diff(&a) < 1e-9, "reconstruct n={n}");
+            let utu = matmul(&eg.vectors.t(), &eg.vectors);
+            assert!(utu.max_abs_diff(&Matrix::eye(n)) < 1e-10, "orthogonal n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_ascending() {
+        let mut rng = Rng::new(9);
+        let a = random_sym(&mut rng, 40);
+        let eg = SymEigen::new(&a).unwrap();
+        for w in eg.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn spd_eigenvalues_nonnegative() {
+        let mut rng = Rng::new(10);
+        let a = random_spd(&mut rng, 25);
+        let eg = SymEigen::new(&a).unwrap();
+        assert!(eg.values[0] > -1e-9, "smallest {}", eg.values[0]);
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let mut rng = Rng::new(11);
+        let a = random_spd(&mut rng, 15);
+        let eg = SymEigen::new(&a).unwrap();
+        let tr: f64 = eg.values.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-9);
+        // det via cholesky logdet vs sum of log eigenvalues
+        let ld: f64 = eg.values.iter().map(|v| v.ln()).sum();
+        let ch = crate::linalg::chol::Cholesky::new(&a).unwrap();
+        assert!((ld - ch.logdet()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn project_roundtrip() {
+        let mut rng = Rng::new(12);
+        let a = random_sym(&mut rng, 20);
+        let eg = SymEigen::new(&a).unwrap();
+        let y = rng.normal_vec(20);
+        let yt = eg.project(&y);
+        let back = eg.back_project(&yt);
+        let err: f64 = back.iter().zip(&y).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10);
+        // norm preservation (SVD property the paper uses: y~'y~ = y'y)
+        let n1: f64 = y.iter().map(|v| v * v).sum();
+        let n2: f64 = yt.iter().map(|v| v * v).sum();
+        assert!((n1 - n2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_eigenvalues_identity() {
+        let eg = SymEigen::new(&Matrix::eye(8)).unwrap();
+        for v in &eg.values {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+        assert!(eg.reconstruct().max_abs_diff(&Matrix::eye(8)) < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_matrix() {
+        // rank-1: outer product
+        let u = [1.0, 2.0, 3.0, 4.0];
+        let a = Matrix::from_fn(4, 4, |i, j| u[i] * u[j]);
+        let eg = SymEigen::new(&a).unwrap();
+        let total: f64 = u.iter().map(|x| x * x).sum();
+        assert!((eg.values[3] - total).abs() < 1e-9);
+        for v in &eg.values[..3] {
+            assert!(v.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn property_eigen_residual() {
+        forall(
+            "A u = s u",
+            21,
+            10,
+            |r| {
+                let n = 2 + r.below(25);
+                random_sym(r, n)
+            },
+            |a| {
+                let n = a.rows();
+                let eg = SymEigen::new(a).map_err(|e| e.to_string())?;
+                for j in 0..n {
+                    let u = eg.vectors.col(j);
+                    let au = a.matvec(&u);
+                    for i in 0..n {
+                        let want = eg.values[j] * u[i];
+                        if (au[i] - want).abs() > 1e-8 {
+                            return Err(format!(
+                                "residual at eigpair {j}, row {i}: {} vs {}",
+                                au[i], want
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

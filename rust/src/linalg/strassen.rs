@@ -1,0 +1,112 @@
+//! Strassen matrix multiplication — Proposition 2.4 cites Strassen's
+//! O(N^2.807) algorithm for materializing the full posterior covariance
+//! `Sigma_c = U Q U'`.  Recursion with zero-padding to even dimensions and
+//! a blocked-GEMM base case.
+
+use super::gemm;
+use super::matrix::Matrix;
+
+/// Below this edge the O(N^3) blocked GEMM wins (crossover measured in
+/// `benches/prop24_variance.rs`).
+const BASE: usize = 128;
+
+/// `A * B` via Strassen's algorithm.
+pub fn strassen(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "strassen dimension mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let dim = m.max(k).max(n);
+    if dim <= BASE {
+        return gemm::matmul(a, b);
+    }
+    // pad to next even size at each recursion level; simplest is to pad to
+    // a power-of-two-ish even envelope once
+    let p = dim.next_power_of_two();
+    let ap = pad(a, p, p);
+    let bp = pad(b, p, p);
+    let cp = strassen_sq(&ap, &bp);
+    cp.top_left(m, n)
+}
+
+fn pad(a: &Matrix, r: usize, c: usize) -> Matrix {
+    let mut out = Matrix::zeros(r, c);
+    for i in 0..a.rows() {
+        out.row_mut(i)[..a.cols()].copy_from_slice(a.row(i));
+    }
+    out
+}
+
+/// Square power-of-two recursion.
+fn strassen_sq(a: &Matrix, b: &Matrix) -> Matrix {
+    let n = a.rows();
+    if n <= BASE {
+        return gemm::matmul(a, b);
+    }
+    let h = n / 2;
+    let (a11, a12, a21, a22) = split(a, h);
+    let (b11, b12, b21, b22) = split(b, h);
+
+    let m1 = strassen_sq(&a11.add(&a22), &b11.add(&b22));
+    let m2 = strassen_sq(&a21.add(&a22), &b11);
+    let m3 = strassen_sq(&a11, &b12.sub(&b22));
+    let m4 = strassen_sq(&a22, &b21.sub(&b11));
+    let m5 = strassen_sq(&a11.add(&a12), &b22);
+    let m6 = strassen_sq(&a21.sub(&a11), &b11.add(&b12));
+    let m7 = strassen_sq(&a12.sub(&a22), &b21.add(&b22));
+
+    let c11 = m1.add(&m4).sub(&m5).add(&m7);
+    let c12 = m3.add(&m5);
+    let c21 = m2.add(&m4);
+    let c22 = m1.sub(&m2).add(&m3).add(&m6);
+
+    join(&c11, &c12, &c21, &c22)
+}
+
+fn split(a: &Matrix, h: usize) -> (Matrix, Matrix, Matrix, Matrix) {
+    let block = |r0: usize, c0: usize| Matrix::from_fn(h, h, |i, j| a[(r0 + i, c0 + j)]);
+    (block(0, 0), block(0, h), block(h, 0), block(h, h))
+}
+
+fn join(c11: &Matrix, c12: &Matrix, c21: &Matrix, c22: &Matrix) -> Matrix {
+    let h = c11.rows();
+    Matrix::from_fn(2 * h, 2 * h, |i, j| match (i < h, j < h) {
+        (true, true) => c11[(i, j)],
+        (true, false) => c12[(i, j - h)],
+        (false, true) => c21[(i - h, j)],
+        (false, false) => c22[(i - h, j - h)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matches_gemm_small() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 30, 30);
+        let b = random(&mut rng, 30, 30);
+        assert!(strassen(&a, &b).max_abs_diff(&gemm::matmul(&a, &b)) < 1e-10);
+    }
+
+    #[test]
+    fn matches_gemm_above_base() {
+        let mut rng = Rng::new(2);
+        let n = BASE * 2 + 17; // force one recursion + padding
+        let a = random(&mut rng, n, n);
+        let b = random(&mut rng, n, n);
+        assert!(strassen(&a, &b).max_abs_diff(&gemm::matmul(&a, &b)) < 1e-8);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, BASE + 40, BASE + 3);
+        let b = random(&mut rng, BASE + 3, BASE + 90);
+        assert!(strassen(&a, &b).max_abs_diff(&gemm::matmul(&a, &b)) < 1e-8);
+    }
+}

@@ -1,0 +1,212 @@
+//! `gpml` CLI — tune GP hyperparameters via the paper's O(N) spectral
+//! identities, serve tuning jobs over TCP, or inspect the artifact
+//! runtime.
+
+use anyhow::{anyhow, Result};
+
+use gpml::coordinator::{
+    client::Client, server::Server, Backend, Coordinator, GlobalStrategy, ObjectiveKind,
+    TuneRequest,
+};
+use gpml::data;
+use gpml::kernelfn::{self, Kernel};
+use gpml::runtime::{default_artifact_dir, PjrtRuntime};
+use gpml::spectral::{HyperParams, SpectralGp};
+use gpml::util::cli::Args;
+
+const USAGE: &str = "\
+gpml — Efficient Marginal Likelihood Computation for GP Regression (Schirru et al., 2011)
+
+USAGE:
+  gpml tune   --data <csv> [--kernel rbf:2.0] [--backend rust|pjrt]
+              [--strategy pso|grid] [--particles 64] [--iterations 25] [--grid 17]
+              [--evidence] [--predict]
+                                      tune (sigma2, lambda2) per y* column;
+                                      --evidence swaps the paper's eq. 19 score
+                                      for the classical GP evidence
+  gpml synth  --n 256 --p 8 [--sigma2 0.05] [--lambda2 1.0] [--outputs 1]
+              [--seed 42] --out <csv> generate a synthetic GP dataset
+  gpml serve  [--addr 127.0.0.1:7070] [--no-pjrt]
+                                      run the tuning coordinator server
+  gpml client --addr <host:port> --data <csv> [tune options]
+                                      submit a tuning job to a server
+  gpml info   [--artifacts <dir>]     list compiled artifacts and buckets
+  gpml help                           this text
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "tune" => cmd_tune(&args),
+        "synth" => cmd_synth(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_common(args: &Args) -> Result<(Kernel, Backend, GlobalStrategy, u64)> {
+    let kernel = kernelfn::parse_kernel(args.get_or("kernel", "rbf:1.0"))
+        .map_err(|e| anyhow!(e))?;
+    let backend = match args.get_or("backend", "rust") {
+        "rust" => Backend::Rust,
+        "pjrt" => Backend::Pjrt,
+        other => return Err(anyhow!("unknown backend '{other}'")),
+    };
+    let strategy = match args.get_or("strategy", "pso") {
+        "grid" => GlobalStrategy::Grid {
+            points_per_axis: args.get_usize("grid", 17).map_err(|e| anyhow!(e))?,
+        },
+        "pso" => GlobalStrategy::Pso {
+            particles: args.get_usize("particles", 64).map_err(|e| anyhow!(e))?,
+            iterations: args.get_usize("iterations", 25).map_err(|e| anyhow!(e))?,
+        },
+        other => return Err(anyhow!("unknown strategy '{other}'")),
+    };
+    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    Ok((kernel, backend, strategy, seed))
+}
+
+fn load_request(args: &Args) -> Result<TuneRequest> {
+    let path = args.get("data").ok_or_else(|| anyhow!("--data <csv> is required"))?;
+    let ds = data::read_csv(path).map_err(|e| anyhow!(e))?;
+    let (kernel, backend, strategy, seed) = parse_common(args)?;
+    let mut req = TuneRequest::new(ds.x, ds.ys, kernel);
+    req.backend = backend;
+    req.strategy = strategy;
+    req.seed = seed;
+    if args.flag("evidence") {
+        req.objective = ObjectiveKind::Evidence;
+    }
+    Ok(req)
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let req = load_request(args)?;
+    let n = req.x.rows();
+    let mut coord = match req.backend {
+        Backend::Pjrt => Coordinator::with_runtime(PjrtRuntime::open(
+            args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir),
+        )?),
+        Backend::Rust => Coordinator::rust_only(),
+    };
+    println!(
+        "tuning N={} P={} outputs={} kernel={:?} backend={:?}",
+        n,
+        req.x.cols(),
+        req.ys.len(),
+        req.kernel,
+        req.backend
+    );
+    let res = coord.tune(&req)?;
+    println!(
+        "overhead: gram {:.3}s + eigendecomposition {:.3}s (cached: {})",
+        res.gram_seconds, res.eigen_seconds, res.eigen_cached
+    );
+    println!("tuning:   {:.3}s for {} output(s)", res.tune_seconds, res.outputs.len());
+    for (i, o) in res.outputs.iter().enumerate() {
+        println!(
+            "  y{i}: sigma2={:.6e} lambda2={:.6e} score={:.6} (global {} + newton {} evals, converged={})",
+            o.hp.sigma2, o.hp.lambda2, o.score, o.global_evals, o.newton_evals, o.converged
+        );
+    }
+    if args.flag("predict") {
+        // in-sample fit quality, using the tuned hyperparameters
+        let gp = SpectralGp::fit(req.kernel, req.x.clone())
+            .map_err(|e| anyhow!("eigensolver: {e}"))?;
+        for (i, (y, o)) in req.ys.iter().zip(&res.outputs).enumerate() {
+            let hp = HyperParams::new(o.hp.sigma2, o.hp.lambda2);
+            let mu = gp.posterior_mean_train(y, hp);
+            println!("  y{i}: in-sample rmse = {:.6}", data::rmse(&mu, y));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let out = args.get("out").ok_or_else(|| anyhow!("--out <csv> is required"))?;
+    let kernel = kernelfn::parse_kernel(args.get_or("kernel", "rbf:2.0")).map_err(|e| anyhow!(e))?;
+    let spec = data::SyntheticSpec {
+        n: args.get_usize("n", 256).map_err(|e| anyhow!(e))?,
+        p: args.get_usize("p", 8).map_err(|e| anyhow!(e))?,
+        kernel,
+        sigma2: args.get_f64("sigma2", 0.05).map_err(|e| anyhow!(e))?,
+        lambda2: args.get_f64("lambda2", 1.0).map_err(|e| anyhow!(e))?,
+        seed: args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64,
+    };
+    let outputs = args.get_usize("outputs", 1).map_err(|e| anyhow!(e))?;
+    let ds = data::synthetic(spec, outputs);
+    data::write_csv(out, &ds)?;
+    println!("wrote {} rows x ({} features + {} outputs) to {out}", ds.n(), ds.p(), outputs);
+    println!("true hyperparameters: sigma2={} lambda2={}", spec.sigma2, spec.lambda2);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+    let no_pjrt = args.flag("no-pjrt");
+    let artifacts: std::path::PathBuf =
+        args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir);
+    let server = Server::start(&addr, move || {
+        if no_pjrt {
+            Coordinator::rust_only()
+        } else {
+            match PjrtRuntime::open(&artifacts) {
+                Ok(rt) => {
+                    eprintln!("serving with PJRT artifacts from {}", artifacts.display());
+                    Coordinator::with_runtime(rt)
+                }
+                Err(e) => {
+                    eprintln!("no artifacts ({e:#}); serving rust-only");
+                    Coordinator::rust_only()
+                }
+            }
+        }
+    })?;
+    println!("gpml coordinator listening on {}", server.addr);
+    println!("protocol: newline-delimited JSON; ops: ping | info | tune | shutdown");
+    // block forever: the acceptor thread owns the listener
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr <host:port> is required"))?;
+    let req = load_request(args)?;
+    let mut client = Client::connect(addr)?;
+    let res = client.tune(&req)?;
+    println!("{res}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir: std::path::PathBuf =
+        args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir);
+    let rt = PjrtRuntime::open(&dir)?;
+    let m = rt.manifest();
+    println!("artifact dir: {} (dtype {})", dir.display(), m.dtype);
+    println!("batch width B={}, feature pad P={}", m.b_batch, m.p_pad);
+    for entry in ["score", "fused", "batched_score", "gram", "posterior_var_diag"] {
+        let buckets = m.buckets(entry);
+        println!("  {entry:<20} buckets: {buckets:?}");
+    }
+    println!("total artifacts: {}", m.artifacts.len());
+    Ok(())
+}

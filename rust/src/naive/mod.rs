@@ -1,0 +1,212 @@
+//! The naive O(N^3)-per-iterate baseline (paper §1.1): evaluate eq. (15)
+//! by building `Sigma_y`, factorizing it, and forming the quadratic form —
+//! exactly the procedure the spectral identities replace.  The Jacobian
+//! uses the trace identity `d log|S|/dtheta = tr(S^{-1} dS/dtheta)` with
+//! the O(N^3) products the paper describes.
+
+use crate::linalg::{gemm, Cholesky, Matrix};
+use crate::spectral::HyperParams;
+
+/// Dense evaluator over a fixed `(K, y)` pair.  Every [`score`] /
+/// [`score_grad`] call is O(N^3) — this is the baseline the Figure 1-3 and
+/// speed-up benches compare against.
+///
+/// [`score`]: NaiveEvaluator::score
+/// [`score_grad`]: NaiveEvaluator::score_grad
+pub struct NaiveEvaluator {
+    k: Matrix,
+    y: Vec<f64>,
+    yy: f64,
+}
+
+impl NaiveEvaluator {
+    pub fn new(k: Matrix, y: Vec<f64>) -> Self {
+        assert!(k.is_square());
+        assert_eq!(k.rows(), y.len());
+        let yy = y.iter().map(|v| v * v).sum();
+        NaiveEvaluator { k, y, yy }
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// `W = (K + sigma2/lambda2 I)^{-1}` via Cholesky (O(N^3)).
+    fn w_inverse(&self, hp: HyperParams) -> Matrix {
+        let mut m = self.k.clone();
+        m.add_diag(hp.sigma2 / hp.lambda2);
+        Cholesky::new(&m)
+            .expect("K + rI must be SPD for r > 0")
+            .inverse()
+    }
+
+    /// `Sigma_y = sigma2 (K W + I)` (eq. 11).
+    pub fn sigma_y(&self, hp: HyperParams) -> Matrix {
+        let w = self.w_inverse(hp);
+        let mut sy = gemm::matmul(&self.k, &w);
+        sy.add_diag(1.0);
+        sy.scale(hp.sigma2);
+        sy.symmetrize(); // guard factorization against accumulation asymmetry
+        sy
+    }
+
+    /// Eq. (15): `log|Sigma_y| + (mu_y - y)' Sigma_y^{-1} (mu_y - y)`.
+    /// One O(N^3) inverse + one O(N^3) factorization, as in §1.1.
+    pub fn score(&self, hp: HyperParams) -> f64 {
+        let w = self.w_inverse(hp);
+        let kw = gemm::matmul(&self.k, &w);
+        let mut sy = kw.clone();
+        sy.add_diag(1.0);
+        sy.scale(hp.sigma2);
+        sy.symmetrize();
+        let ch = Cholesky::new(&sy).expect("Sigma_y must be SPD");
+        // mu_y - y = (K W - I) y
+        let mu = kw.matvec(&self.y);
+        let r: Vec<f64> = mu.iter().zip(&self.y).map(|(m, yi)| m - yi).collect();
+        ch.logdet() + ch.quad_form(&r)
+    }
+
+    /// Score and Jacobian via the dense trace identities.  Uses the
+    /// eq. (16) form whose theta-dependence is explicit:
+    /// `L = log|Sy| + sigma^-4 y'Sy y + 4 y'Sy^{-1} y - 4 y'y / sigma2`.
+    pub fn score_grad(&self, hp: HyperParams) -> (f64, [f64; 2]) {
+        let HyperParams { sigma2, lambda2 } = hp;
+        let n = self.n();
+        let w = self.w_inverse(hp);
+        let kw = gemm::matmul(&self.k, &w);
+        let mut sy = kw.clone();
+        sy.add_diag(1.0);
+        sy.scale(sigma2);
+        sy.symmetrize();
+        let ch = Cholesky::new(&sy).expect("Sigma_y must be SPD");
+        let sy_inv = ch.inverse();
+
+        // derivative of Sigma_y:
+        //   dSy/dsigma2 = (K W + I) - (sigma2/lambda2) K W W
+        //   dSy/dlambda2 = (sigma4/lambda4) K W W
+        let kww = gemm::matmul(&kw, &w);
+        let mut dsy_ds = kw.clone();
+        dsy_ds.add_diag(1.0);
+        {
+            let coef = sigma2 / lambda2;
+            let kww_d = kww.data();
+            let out = dsy_ds.data_mut();
+            for (o, &k) in out.iter_mut().zip(kww_d) {
+                *o -= coef * k;
+            }
+        }
+        let mut dsy_dl = kww.clone();
+        dsy_dl.scale(sigma2 * sigma2 / (lambda2 * lambda2));
+
+        // score (eq. 16 form)
+        let sy_y = sy.matvec(&self.y);
+        let y_sy_y: f64 = self.y.iter().zip(&sy_y).map(|(a, b)| a * b).sum();
+        let syinv_y = sy_inv.matvec(&self.y);
+        let y_syinv_y: f64 = self.y.iter().zip(&syinv_y).map(|(a, b)| a * b).sum();
+        let s4 = sigma2 * sigma2;
+        let score =
+            ch.logdet() + y_sy_y / s4 + 4.0 * y_syinv_y - 4.0 * self.yy / sigma2;
+
+        // gradient pieces shared by both components
+        let grad_for = |dsy: &Matrix, is_sigma: bool| -> f64 {
+            // tr(Sy^{-1} dSy)
+            let mut tr = 0.0;
+            for i in 0..n {
+                tr += crate::linalg::dot(sy_inv.row(i), &dsy.col(i));
+            }
+            // y' dSy y / sigma4
+            let dsy_y = dsy.matvec(&self.y);
+            let y_dsy_y: f64 = self.y.iter().zip(&dsy_y).map(|(a, b)| a * b).sum();
+            // -4 y' Sy^{-1} dSy Sy^{-1} y
+            let t = dsy.matvec(&syinv_y);
+            let quad: f64 = syinv_y.iter().zip(&t).map(|(a, b)| a * b).sum();
+            let mut g = tr + y_dsy_y / s4 - 4.0 * quad;
+            if is_sigma {
+                g += -2.0 * y_sy_y / (s4 * sigma2) + 4.0 * self.yy / s4;
+            }
+            g
+        };
+
+        let gs = grad_for(&dsy_ds, true);
+        let gl = grad_for(&dsy_dl, false);
+        (score, [gs, gl])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelfn::{gram, Kernel};
+    use crate::spectral::SpectralGp;
+    use crate::util::proptest::{check_close, forall};
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+        (x, y)
+    }
+
+    #[test]
+    fn naive_score_matches_spectral() {
+        forall(
+            "naive == spectral score",
+            41,
+            8,
+            |r| {
+                let n = 10 + r.below(40);
+                let seed = r.next_u64();
+                let hp = HyperParams::new(r.uniform_in(0.1, 3.0), r.uniform_in(0.1, 3.0));
+                (n, seed, hp)
+            },
+            |&(n, seed, hp)| {
+                let (x, y) = setup(n, seed);
+                let kern = Kernel::Rbf { xi2: 1.2 };
+                let k = gram(kern, &x);
+                let naive = NaiveEvaluator::new(k, y.clone());
+                let gp = SpectralGp::fit(kern, x).unwrap();
+                let es = gp.eigensystem(&y);
+                check_close("score", naive.score(hp), es.score(hp), 1e-7, 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    fn naive_grad_matches_spectral() {
+        forall(
+            "naive grad == spectral grad",
+            43,
+            6,
+            |r| {
+                let n = 10 + r.below(30);
+                let seed = r.next_u64();
+                let hp = HyperParams::new(r.uniform_in(0.3, 2.0), r.uniform_in(0.3, 2.0));
+                (n, seed, hp)
+            },
+            |&(n, seed, hp)| {
+                let (x, y) = setup(n, seed);
+                let kern = Kernel::Rbf { xi2: 1.0 };
+                let k = gram(kern, &x);
+                let naive = NaiveEvaluator::new(k, y.clone());
+                let gp = SpectralGp::fit(kern, x).unwrap();
+                let es = gp.eigensystem(&y);
+                let (sc, g) = naive.score_grad(hp);
+                check_close("score", sc, es.score(hp), 1e-7, 1e-9)?;
+                let gs = es.grad(hp);
+                check_close("dsigma2", g[0], gs[0], 1e-6, 1e-8)?;
+                check_close("dlambda2", g[1], gs[1], 1e-6, 1e-8)
+            },
+        );
+    }
+
+    #[test]
+    fn score_grad_score_consistent_with_score() {
+        let (x, y) = setup(25, 7);
+        let k = gram(Kernel::Rbf { xi2: 2.0 }, &x);
+        let ev = NaiveEvaluator::new(k, y);
+        let hp = HyperParams::new(0.8, 1.2);
+        let (sc, _) = ev.score_grad(hp);
+        assert!((sc - ev.score(hp)).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,79 @@
+//! Log-space grid search — the simplest global stage of §1.1, and the one
+//! whose cost is purely `(grid points) x (score evaluations)`, i.e. the
+//! regime where the paper's O(N) identities pay off most directly.
+//!
+//! Evaluations are issued through [`Objective::eval_batch`] in fixed-size
+//! chunks so a PJRT-backed objective can fold each chunk into a single
+//! batched-artifact dispatch.
+
+use super::{Bounds, Objective, SearchResult};
+use crate::spectral::HyperParams;
+
+/// Evaluate a `g x g` log-spaced grid over `bounds`; returns the best
+/// point. `chunk` is the batch size handed to the objective (use the
+/// runtime's `b_batch` for the PJRT path).
+pub fn grid_search<O: Objective>(
+    obj: &mut O,
+    bounds: Bounds,
+    g: usize,
+    chunk: usize,
+) -> SearchResult {
+    assert!(g >= 2, "grid needs at least 2 points per axis");
+    let [ls, ll] = bounds.log();
+    let mut points = Vec::with_capacity(g * g);
+    for i in 0..g {
+        let es = ls.0 + (ls.1 - ls.0) * i as f64 / (g - 1) as f64;
+        for j in 0..g {
+            let el = ll.0 + (ll.1 - ll.0) * j as f64 / (g - 1) as f64;
+            points.push(HyperParams::new(10f64.powf(es), 10f64.powf(el)));
+        }
+    }
+    let mut best = SearchResult {
+        hp: points[0],
+        score: f64::INFINITY,
+        evals: points.len(),
+    };
+    for ch in points.chunks(chunk.max(1)) {
+        let scores = obj.eval_batch(ch);
+        for (&hp, &sc) in ch.iter().zip(&scores) {
+            if sc < best.score {
+                best.score = sc;
+                best.hp = hp;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::Bowl;
+
+    #[test]
+    fn finds_bowl_minimum_region() {
+        let mut obj = Bowl::new(0.5, 2.0);
+        let r = grid_search(&mut obj, Bounds::default(), 33, 16);
+        // grid resolution on [-4, 4] with 33 points is 0.25 in log10
+        assert!((r.hp.sigma2.log10() - 0.5f64.log10()).abs() < 0.3, "{:?}", r.hp);
+        assert!((r.hp.lambda2.log10() - 2.0f64.log10()).abs() < 0.3, "{:?}", r.hp);
+        assert_eq!(r.evals, 33 * 33);
+        assert_eq!(obj.evals, 33 * 33);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut obj = Bowl::new(1e-8, 1e8); // optimum outside bounds
+        let b = Bounds { sigma2: (0.1, 10.0), lambda2: (0.1, 10.0) };
+        let r = grid_search(&mut obj, b, 9, 7);
+        assert!(b.contains(r.hp));
+    }
+
+    #[test]
+    fn chunking_does_not_change_result() {
+        let r1 = grid_search(&mut Bowl::new(0.7, 0.9), Bounds::default(), 17, 1);
+        let r2 = grid_search(&mut Bowl::new(0.7, 0.9), Bounds::default(), 17, 64);
+        assert_eq!(r1.hp, r2.hp);
+        assert_eq!(r1.score, r2.score);
+    }
+}

@@ -1,0 +1,211 @@
+//! Hyperparameter optimization (paper §1.1): global search (grid / PSO /
+//! Nelder-Mead) followed by local Newton-Raphson refinement, all driven
+//! through the [`Objective`] trait so the same algorithms run against the
+//! pure-rust spectral evaluator, the PJRT artifacts, the naive O(N^3)
+//! baseline, or the sparse approximation.
+
+pub mod grid;
+pub mod neldermead;
+pub mod newton;
+pub mod pso;
+pub mod two_step;
+
+pub use grid::grid_search;
+pub use neldermead::nelder_mead;
+pub use newton::{newton_refine, NewtonOptions, NewtonResult};
+pub use pso::{pso_search, PsoOptions};
+pub use two_step::{two_step_tune, TwoStepOptions, TwoStepResult};
+
+use crate::spectral::{Evaluation, HyperParams};
+
+/// Something that can score hyperparameter pairs. `&mut self` so
+/// implementations may cache, batch, or count.
+pub trait Objective {
+    /// Score function L_y (lower is better — eq. 14 minimizes).
+    fn eval(&mut self, hp: HyperParams) -> f64;
+
+    /// Batched evaluation. The PJRT-backed objective overrides this to
+    /// amortize one dispatch over the whole batch (the global-search
+    /// wavefront); the default is a scalar loop.
+    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
+        hps.iter().map(|&h| self.eval(h)).collect()
+    }
+
+    /// Score + Jacobian + Hessian (for Newton refinement).
+    fn eval_full(&mut self, hp: HyperParams) -> Evaluation;
+}
+
+impl Objective for crate::spectral::EigenSystem {
+    fn eval(&mut self, hp: HyperParams) -> f64 {
+        self.score(hp)
+    }
+    fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
+        self.evaluate(hp)
+    }
+}
+
+/// The classical GP evidence objective over an eigensystem (extension;
+/// see `EigenSystem::evidence` for why this exists alongside the paper's
+/// eq. 19 score).
+pub struct EvidenceObjective(pub crate::spectral::EigenSystem);
+
+impl Objective for EvidenceObjective {
+    fn eval(&mut self, hp: HyperParams) -> f64 {
+        self.0.evidence(hp)
+    }
+    fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
+        self.0.evidence_evaluate(hp)
+    }
+}
+
+/// An [`Objective`] wrapper that counts evaluations (used by benches to
+/// report k*, and by tests).
+pub struct Counting<O> {
+    pub inner: O,
+    pub evals: usize,
+    pub full_evals: usize,
+}
+
+impl<O> Counting<O> {
+    pub fn new(inner: O) -> Self {
+        Counting { inner, evals: 0, full_evals: 0 }
+    }
+}
+
+impl<O: Objective> Objective for Counting<O> {
+    fn eval(&mut self, hp: HyperParams) -> f64 {
+        self.evals += 1;
+        self.inner.eval(hp)
+    }
+    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
+        self.evals += hps.len();
+        self.inner.eval_batch(hps)
+    }
+    fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
+        self.full_evals += 1;
+        self.inner.eval_full(hp)
+    }
+}
+
+/// Search-space bounds in raw (sigma2, lambda2) space; global optimizers
+/// work on log10 coordinates internally.
+#[derive(Clone, Copy, Debug)]
+pub struct Bounds {
+    pub sigma2: (f64, f64),
+    pub lambda2: (f64, f64),
+}
+
+impl Default for Bounds {
+    fn default() -> Self {
+        // generous: 1e-4 .. 1e4 on both axes
+        Bounds { sigma2: (1e-4, 1e4), lambda2: (1e-4, 1e4) }
+    }
+}
+
+impl Bounds {
+    pub fn log(&self) -> [(f64, f64); 2] {
+        [
+            (self.sigma2.0.log10(), self.sigma2.1.log10()),
+            (self.lambda2.0.log10(), self.lambda2.1.log10()),
+        ]
+    }
+    pub fn clamp(&self, hp: HyperParams) -> HyperParams {
+        HyperParams::new(
+            hp.sigma2.clamp(self.sigma2.0, self.sigma2.1),
+            hp.lambda2.clamp(self.lambda2.0, self.lambda2.1),
+        )
+    }
+    pub fn contains(&self, hp: HyperParams) -> bool {
+        hp.sigma2 >= self.sigma2.0
+            && hp.sigma2 <= self.sigma2.1
+            && hp.lambda2 >= self.lambda2.0
+            && hp.lambda2 <= self.lambda2.1
+    }
+}
+
+/// Result of a global search stage.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchResult {
+    pub hp: HyperParams,
+    pub score: f64,
+    pub evals: usize,
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// A smooth synthetic objective with a known unique minimum at
+    /// (s*, l*) in log space — used to test optimizers without GP
+    /// machinery.
+    pub struct Bowl {
+        pub opt: HyperParams,
+        pub evals: usize,
+    }
+
+    impl Bowl {
+        pub fn new(sigma2: f64, lambda2: f64) -> Self {
+            Bowl { opt: HyperParams::new(sigma2, lambda2), evals: 0 }
+        }
+    }
+
+    impl Objective for Bowl {
+        fn eval(&mut self, hp: HyperParams) -> f64 {
+            self.evals += 1;
+            let ds = hp.sigma2.ln() - self.opt.sigma2.ln();
+            let dl = hp.lambda2.ln() - self.opt.lambda2.ln();
+            ds * ds + 0.5 * dl * dl + 0.2 * ds * dl
+        }
+        fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
+            let score = self.eval(hp);
+            let ds = hp.sigma2.ln() - self.opt.sigma2.ln();
+            let dl = hp.lambda2.ln() - self.opt.lambda2.ln();
+            // chain rule: d/dx f(ln x) = f'(ln x)/x
+            let (s, l) = (hp.sigma2, hp.lambda2);
+            let gs = (2.0 * ds + 0.2 * dl) / s;
+            let gl = (dl + 0.2 * ds) / l;
+            let hss = (2.0 - (2.0 * ds + 0.2 * dl)) / (s * s);
+            let hll = (1.0 - (dl + 0.2 * ds)) / (l * l);
+            let hsl = 0.2 / (s * l);
+            Evaluation { score, jac: [gs, gl], hess: [[hss, hsl], [hsl, hll]] }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_clamp_and_contains() {
+        let b = Bounds::default();
+        assert!(b.contains(HyperParams::new(1.0, 1.0)));
+        assert!(!b.contains(HyperParams::new(1e9, 1.0)));
+        let c = b.clamp(HyperParams::new(1e9, 1e-9));
+        assert!(b.contains(c));
+    }
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let mut c = Counting::new(testutil::Bowl::new(1.0, 1.0));
+        c.eval(HyperParams::new(1.0, 1.0));
+        c.eval_batch(&[HyperParams::new(1.0, 2.0), HyperParams::new(2.0, 1.0)]);
+        c.eval_full(HyperParams::new(1.0, 1.0));
+        assert_eq!(c.evals, 3);
+        assert_eq!(c.full_evals, 1);
+    }
+
+    #[test]
+    fn bowl_gradient_is_consistent() {
+        let mut b = testutil::Bowl::new(0.5, 2.0);
+        let hp = HyperParams::new(1.0, 1.0);
+        let ev = b.eval_full(hp);
+        let h = 1e-7;
+        let fs = (b.eval(HyperParams::new(1.0 + h, 1.0)) - b.eval(HyperParams::new(1.0 - h, 1.0)))
+            / (2.0 * h);
+        let fl = (b.eval(HyperParams::new(1.0, 1.0 + h)) - b.eval(HyperParams::new(1.0, 1.0 - h)))
+            / (2.0 * h);
+        assert!((ev.jac[0] - fs).abs() < 1e-5);
+        assert!((ev.jac[1] - fl).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,146 @@
+//! Nelder-Mead simplex in log-hyperparameter space — a derivative-free
+//! local polish stage for objectives where only score evaluations are
+//! available (e.g. the naive baseline under time budget, or the sparse
+//! approximation whose paper-form derivatives we do not implement).
+
+use super::{Bounds, Objective, SearchResult};
+use crate::spectral::HyperParams;
+
+/// Standard NM coefficients (reflection 1, expansion 2, contraction 0.5,
+/// shrink 0.5) on a 2-simplex.
+pub fn nelder_mead<O: Objective>(
+    obj: &mut O,
+    start: HyperParams,
+    bounds: Bounds,
+    max_iters: usize,
+    tol: f64,
+) -> SearchResult {
+    let lb = bounds.log();
+    let clamp = |p: [f64; 2]| {
+        [p[0].clamp(lb[0].0, lb[0].1), p[1].clamp(lb[1].0, lb[1].1)]
+    };
+    let to_hp = |p: [f64; 2]| HyperParams::new(10f64.powf(p[0]), 10f64.powf(p[1]));
+
+    let p0 = clamp([start.sigma2.log10(), start.lambda2.log10()]);
+    let step = 0.25;
+    let mut simplex = [
+        p0,
+        clamp([p0[0] + step, p0[1]]),
+        clamp([p0[0], p0[1] + step]),
+    ];
+    let mut evals = 0usize;
+    let mut f = [0.0f64; 3];
+    for i in 0..3 {
+        f[i] = obj.eval(to_hp(simplex[i]));
+        evals += 1;
+    }
+
+    for _ in 0..max_iters {
+        // order ascending
+        let mut order = [0usize, 1, 2];
+        order.sort_by(|&a, &b| f[a].partial_cmp(&f[b]).unwrap());
+        let (b, m, w) = (order[0], order[1], order[2]);
+        if (f[w] - f[b]).abs() < tol * (1.0 + f[b].abs()) {
+            break;
+        }
+        let centroid = [
+            0.5 * (simplex[b][0] + simplex[m][0]),
+            0.5 * (simplex[b][1] + simplex[m][1]),
+        ];
+        let refl = clamp([
+            centroid[0] + (centroid[0] - simplex[w][0]),
+            centroid[1] + (centroid[1] - simplex[w][1]),
+        ]);
+        let fr = obj.eval(to_hp(refl));
+        evals += 1;
+        if fr < f[b] {
+            // try expansion
+            let exp = clamp([
+                centroid[0] + 2.0 * (centroid[0] - simplex[w][0]),
+                centroid[1] + 2.0 * (centroid[1] - simplex[w][1]),
+            ]);
+            let fe = obj.eval(to_hp(exp));
+            evals += 1;
+            if fe < fr {
+                simplex[w] = exp;
+                f[w] = fe;
+            } else {
+                simplex[w] = refl;
+                f[w] = fr;
+            }
+        } else if fr < f[m] {
+            simplex[w] = refl;
+            f[w] = fr;
+        } else {
+            // contraction
+            let con = clamp([
+                centroid[0] + 0.5 * (simplex[w][0] - centroid[0]),
+                centroid[1] + 0.5 * (simplex[w][1] - centroid[1]),
+            ]);
+            let fc = obj.eval(to_hp(con));
+            evals += 1;
+            if fc < f[w] {
+                simplex[w] = con;
+                f[w] = fc;
+            } else {
+                // shrink toward best
+                for i in [m, w] {
+                    simplex[i] = clamp([
+                        simplex[b][0] + 0.5 * (simplex[i][0] - simplex[b][0]),
+                        simplex[b][1] + 0.5 * (simplex[i][1] - simplex[b][1]),
+                    ]);
+                    f[i] = obj.eval(to_hp(simplex[i]));
+                    evals += 1;
+                }
+            }
+        }
+    }
+
+    let mut bi = 0;
+    for i in 1..3 {
+        if f[i] < f[bi] {
+            bi = i;
+        }
+    }
+    SearchResult { hp: to_hp(simplex[bi]), score: f[bi], evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::Bowl;
+
+    #[test]
+    fn polishes_to_bowl_minimum() {
+        let mut obj = Bowl::new(0.5, 2.0);
+        let r = nelder_mead(
+            &mut obj,
+            HyperParams::new(1.0, 1.0),
+            Bounds::default(),
+            200,
+            1e-12,
+        );
+        assert!((r.hp.sigma2.ln() - 0.5f64.ln()).abs() < 1e-3, "{:?}", r.hp);
+        assert!((r.hp.lambda2.ln() - 2.0f64.ln()).abs() < 1e-3, "{:?}", r.hp);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let b = Bounds { sigma2: (0.8, 1.2), lambda2: (0.8, 1.2) };
+        let r = nelder_mead(&mut Bowl::new(100.0, 100.0), HyperParams::new(1.0, 1.0), b, 100, 1e-10);
+        assert!(b.contains(r.hp));
+    }
+
+    #[test]
+    fn few_iterations_terminates() {
+        let r = nelder_mead(
+            &mut Bowl::new(1.0, 1.0),
+            HyperParams::new(3.0, 0.3),
+            Bounds::default(),
+            3,
+            1e-10,
+        );
+        assert!(r.evals < 20);
+        assert!(r.score.is_finite());
+    }
+}

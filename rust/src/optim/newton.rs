@@ -1,0 +1,190 @@
+//! Newton-Raphson local refinement (paper §1.1's "descent algorithm that
+//! exploits the Jacobian and possibly the Hessian").  Uses the full
+//! [`Evaluation`] — exactly the quantities Propositions 2.1-2.3 make O(N)
+//! — with Levenberg-style Hessian regularization and a backtracking line
+//! search that enforces constraint (13).
+
+use super::{Bounds, Objective};
+use crate::spectral::{Evaluation, HyperParams};
+
+#[derive(Clone, Copy, Debug)]
+pub struct NewtonOptions {
+    pub max_iters: usize,
+    /// Stop when the gradient inf-norm falls below this.
+    pub grad_tol: f64,
+    /// Stop when the relative score improvement falls below this.
+    pub score_tol: f64,
+}
+
+impl Default for NewtonOptions {
+    fn default() -> Self {
+        NewtonOptions { max_iters: 60, grad_tol: 1e-8, score_tol: 1e-14 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NewtonResult {
+    pub hp: HyperParams,
+    pub score: f64,
+    pub iters: usize,
+    /// Full evaluations consumed (each is one O(N) fused pass).
+    pub evals: usize,
+    pub converged: bool,
+    /// Score trace (one entry per accepted iterate).
+    pub trace: Vec<f64>,
+}
+
+/// Solve the 2x2 system `(H + tau I) d = -g`, bumping `tau` until the
+/// modified Hessian is positive definite (so `d` is a descent direction).
+fn descent_direction(ev: &Evaluation) -> [f64; 2] {
+    let g = ev.jac;
+    let h = ev.hess;
+    let mut tau = 0.0;
+    let scale = h[0][0].abs().max(h[1][1].abs()).max(1e-12);
+    for _ in 0..60 {
+        let a = h[0][0] + tau;
+        let d = h[1][1] + tau;
+        let b = h[0][1];
+        let det = a * d - b * b;
+        if a > 0.0 && det > 1e-300 {
+            let dx = (-g[0] * d + g[1] * b) / det;
+            let dy = (-g[1] * a + g[0] * b) / det;
+            // confirm descent
+            if dx * g[0] + dy * g[1] < 0.0 {
+                return [dx, dy];
+            }
+        }
+        tau = if tau == 0.0 { 1e-6 * scale } else { tau * 10.0 };
+    }
+    // fallback: steepest descent scaled to the Hessian magnitude
+    [-g[0] / scale, -g[1] / scale]
+}
+
+/// Newton-Raphson with backtracking; `start` should come from a global
+/// stage (grid/PSO).  Never leaves `bounds`.
+pub fn newton_refine<O: Objective>(
+    obj: &mut O,
+    start: HyperParams,
+    bounds: Bounds,
+    opt: NewtonOptions,
+) -> NewtonResult {
+    let mut hp = bounds.clamp(start);
+    let mut ev = obj.eval_full(hp);
+    let mut evals = 1usize;
+    let mut trace = vec![ev.score];
+    let mut converged = false;
+    let mut iters = 0;
+
+    for _ in 0..opt.max_iters {
+        iters += 1;
+        let gnorm = ev.jac[0].abs().max(ev.jac[1].abs());
+        if gnorm < opt.grad_tol {
+            converged = true;
+            break;
+        }
+        let dir = descent_direction(&ev);
+        // backtracking line search with feasibility projection
+        let mut step = 1.0;
+        let mut accepted = false;
+        for _ in 0..40 {
+            let cand = bounds.clamp(HyperParams::new(
+                hp.sigma2 + step * dir[0],
+                hp.lambda2 + step * dir[1],
+            ));
+            if cand.feasible() && (cand.sigma2 != hp.sigma2 || cand.lambda2 != hp.lambda2) {
+                let cev = obj.eval_full(cand);
+                evals += 1;
+                if cev.score.is_finite() && cev.score < ev.score {
+                    let rel = (ev.score - cev.score).abs() / (1.0 + ev.score.abs());
+                    hp = cand;
+                    ev = cev;
+                    trace.push(ev.score);
+                    accepted = true;
+                    if rel < opt.score_tol {
+                        converged = true;
+                    }
+                    break;
+                }
+            }
+            step *= 0.5;
+        }
+        if !accepted || converged {
+            converged = converged || !accepted && ev.jac[0].abs().max(ev.jac[1].abs()) < 1e-4;
+            break;
+        }
+    }
+
+    NewtonResult { hp, score: ev.score, iters, evals, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::Bowl;
+    use crate::optim::Counting;
+
+    #[test]
+    fn converges_on_bowl() {
+        let mut obj = Counting::new(Bowl::new(0.5, 2.0));
+        let r = newton_refine(
+            &mut obj,
+            HyperParams::new(1.5, 0.8),
+            Bounds::default(),
+            NewtonOptions::default(),
+        );
+        assert!(r.converged, "{r:?}");
+        assert!((r.hp.sigma2 - 0.5).abs() < 1e-4, "{:?}", r.hp);
+        assert!((r.hp.lambda2 - 2.0).abs() < 1e-4, "{:?}", r.hp);
+        assert_eq!(obj.full_evals, r.evals);
+    }
+
+    #[test]
+    fn trace_is_monotone_decreasing() {
+        let mut obj = Bowl::new(0.9, 1.3);
+        let r = newton_refine(
+            &mut obj,
+            HyperParams::new(5.0, 0.1),
+            Bounds::default(),
+            NewtonOptions::default(),
+        );
+        for w in r.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "trace not monotone: {:?}", r.trace);
+        }
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let b = Bounds { sigma2: (0.9, 1.1), lambda2: (0.9, 1.1) };
+        let r = newton_refine(
+            &mut Bowl::new(100.0, 0.01),
+            HyperParams::new(1.0, 1.0),
+            b,
+            NewtonOptions::default(),
+        );
+        assert!(b.contains(r.hp));
+    }
+
+    #[test]
+    fn already_at_minimum_converges_immediately() {
+        let mut obj = Bowl::new(1.0, 1.0);
+        let r = newton_refine(
+            &mut obj,
+            HyperParams::new(1.0, 1.0),
+            Bounds::default(),
+            NewtonOptions::default(),
+        );
+        assert!(r.converged);
+        assert!(r.iters <= 2);
+    }
+
+    #[test]
+    fn descent_direction_handles_indefinite_hessian() {
+        let ev = Evaluation {
+            score: 0.0,
+            jac: [1.0, -1.0],
+            hess: [[-2.0, 0.0], [0.0, 1.0]], // indefinite
+        };
+        let d = descent_direction(&ev);
+        assert!(d[0] * ev.jac[0] + d[1] * ev.jac[1] < 0.0, "must be descent: {d:?}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Particle Swarm Optimization in log-hyperparameter space — the paper's
+//! §1.1 cites PSO (Petelin et al. 2011) as a standard global stage for GP
+//! hyperparameter tuning.
+//!
+//! Each generation evaluates the whole swarm through
+//! [`Objective::eval_batch`], which the PJRT objective folds into one
+//! batched-artifact dispatch (swarm size == artifact batch B by default).
+
+use super::{Bounds, Objective, SearchResult};
+use crate::spectral::HyperParams;
+use crate::util::rng::Rng;
+
+/// PSO settings (defaults follow the common w=0.729, c1=c2=1.49 "constriction" values).
+#[derive(Clone, Copy, Debug)]
+pub struct PsoOptions {
+    pub particles: usize,
+    pub iterations: usize,
+    pub inertia: f64,
+    pub cognitive: f64,
+    pub social: f64,
+    pub seed: u64,
+}
+
+impl Default for PsoOptions {
+    fn default() -> Self {
+        PsoOptions {
+            particles: 64,
+            iterations: 25,
+            inertia: 0.729,
+            cognitive: 1.49,
+            social: 1.49,
+            seed: 0x9505_eed0,
+        }
+    }
+}
+
+/// Run PSO; returns the best point found and the number of evaluations.
+pub fn pso_search<O: Objective>(obj: &mut O, bounds: Bounds, opt: PsoOptions) -> SearchResult {
+    let mut rng = Rng::new(opt.seed);
+    let lb = bounds.log();
+    let np = opt.particles.max(2);
+
+    // state in log10 space
+    let mut pos: Vec<[f64; 2]> = (0..np)
+        .map(|_| {
+            [
+                rng.uniform_in(lb[0].0, lb[0].1),
+                rng.uniform_in(lb[1].0, lb[1].1),
+            ]
+        })
+        .collect();
+    let vmax = [(lb[0].1 - lb[0].0) * 0.2, (lb[1].1 - lb[1].0) * 0.2];
+    let mut vel: Vec<[f64; 2]> = (0..np)
+        .map(|_| {
+            [
+                rng.uniform_in(-vmax[0], vmax[0]),
+                rng.uniform_in(-vmax[1], vmax[1]),
+            ]
+        })
+        .collect();
+
+    let to_hp = |p: &[f64; 2]| HyperParams::new(10f64.powf(p[0]), 10f64.powf(p[1]));
+
+    let mut evals = 0usize;
+    let scores = {
+        let hps: Vec<HyperParams> = pos.iter().map(to_hp).collect();
+        evals += hps.len();
+        obj.eval_batch(&hps)
+    };
+    let mut pbest = pos.clone();
+    let mut pbest_score = scores;
+    let (mut gbest, mut gbest_score) = {
+        let mut bi = 0;
+        for i in 1..np {
+            if pbest_score[i] < pbest_score[bi] {
+                bi = i;
+            }
+        }
+        (pbest[bi], pbest_score[bi])
+    };
+
+    for _ in 0..opt.iterations {
+        for i in 0..np {
+            for d in 0..2 {
+                let r1 = rng.uniform();
+                let r2 = rng.uniform();
+                vel[i][d] = opt.inertia * vel[i][d]
+                    + opt.cognitive * r1 * (pbest[i][d] - pos[i][d])
+                    + opt.social * r2 * (gbest[d] - pos[i][d]);
+                vel[i][d] = vel[i][d].clamp(-vmax[d], vmax[d]);
+                pos[i][d] = (pos[i][d] + vel[i][d]).clamp(lb[d].0, lb[d].1);
+            }
+        }
+        let hps: Vec<HyperParams> = pos.iter().map(to_hp).collect();
+        evals += hps.len();
+        let scores = obj.eval_batch(&hps);
+        for i in 0..np {
+            if scores[i] < pbest_score[i] {
+                pbest_score[i] = scores[i];
+                pbest[i] = pos[i];
+                if scores[i] < gbest_score {
+                    gbest_score = scores[i];
+                    gbest = pos[i];
+                }
+            }
+        }
+    }
+
+    SearchResult { hp: to_hp(&gbest), score: gbest_score, evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::Bowl;
+
+    #[test]
+    fn converges_to_bowl_minimum() {
+        let mut obj = Bowl::new(0.5, 2.0);
+        let r = pso_search(&mut obj, Bounds::default(), PsoOptions::default());
+        assert!((r.hp.sigma2.ln() - 0.5f64.ln()).abs() < 0.1, "{:?}", r.hp);
+        assert!((r.hp.lambda2.ln() - 2.0f64.ln()).abs() < 0.1, "{:?}", r.hp);
+        assert!(r.score < 1e-2);
+        assert_eq!(r.evals, 64 * 26);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let o = PsoOptions { seed: 7, ..Default::default() };
+        let r1 = pso_search(&mut Bowl::new(1.0, 1.0), Bounds::default(), o);
+        let r2 = pso_search(&mut Bowl::new(1.0, 1.0), Bounds::default(), o);
+        assert_eq!(r1.hp, r2.hp);
+    }
+
+    #[test]
+    fn stays_within_bounds() {
+        let b = Bounds { sigma2: (0.5, 2.0), lambda2: (0.5, 2.0) };
+        let r = pso_search(&mut Bowl::new(1e-6, 1e6), b, PsoOptions::default());
+        assert!(b.contains(r.hp), "{:?}", r.hp);
+    }
+
+    #[test]
+    fn small_swarm_still_works() {
+        let o = PsoOptions { particles: 8, iterations: 60, ..Default::default() };
+        let r = pso_search(&mut Bowl::new(0.9, 1.1), Bounds::default(), o);
+        assert!(r.score < 0.05, "score {}", r.score);
+    }
+}

@@ -1,0 +1,172 @@
+//! Algorithm 1 (paper §2.2): two-step tuning when the kernel itself has a
+//! hyperparameter `theta` (RBF bandwidth, Matérn length-scale, ...).
+//!
+//! The outer loop moves `theta` — each move costs a fresh Gram matrix and
+//! eigendecomposition, O(N^3) — while the inner loop tunes `(sigma2,
+//! lambda2)` at O(N) per iterate using the spectral identities.  The outer
+//! stage here is a golden-section search on log10(theta) (a "conventional
+//! line search on the expensive hyperparameter", as the paper puts it).
+
+use super::{newton_refine, Bounds, NewtonOptions, Objective};
+use crate::spectral::HyperParams;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TwoStepOptions {
+    /// log10 bounds for theta.
+    pub theta_range: (f64, f64),
+    /// Outer golden-section iterations (each costs O(N^3)).
+    pub outer_iters: usize,
+    /// Inner (sigma2, lambda2) bounds.
+    pub bounds: Bounds,
+    /// Inner coarse-grid resolution before Newton refinement.
+    pub inner_grid: usize,
+    pub newton: NewtonOptions,
+}
+
+impl Default for TwoStepOptions {
+    fn default() -> Self {
+        TwoStepOptions {
+            theta_range: (1e-2, 1e2),
+            outer_iters: 20,
+            bounds: Bounds::default(),
+            inner_grid: 9,
+            newton: NewtonOptions::default(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TwoStepResult {
+    pub theta: f64,
+    pub hp: HyperParams,
+    pub score: f64,
+    /// Number of O(N^3) eigendecompositions spent (outer evaluations).
+    pub outer_evals: usize,
+    /// Total O(N) inner evaluations across all outer points.
+    pub inner_evals: usize,
+}
+
+/// Inner solve: coarse grid + Newton on a fresh objective.
+fn inner_tune<O: Objective>(obj: &mut O, opt: &TwoStepOptions) -> (HyperParams, f64, usize) {
+    let coarse = super::grid_search(obj, opt.bounds, opt.inner_grid, 64);
+    let refined = newton_refine(obj, coarse.hp, opt.bounds, opt.newton);
+    (refined.hp, refined.score, coarse.evals + refined.evals)
+}
+
+/// Run Algorithm 1.  `make_objective(theta)` pays the O(N^3) overhead
+/// (Gram + eigendecomposition at that kernel hyperparameter) and returns
+/// the O(N) objective for the inner loop.
+pub fn two_step_tune<O, F>(mut make_objective: F, opt: TwoStepOptions) -> TwoStepResult
+where
+    O: Objective,
+    F: FnMut(f64) -> O,
+{
+    let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
+    let (mut lo, mut hi) = (opt.theta_range.0.log10(), opt.theta_range.1.log10());
+    assert!(lo < hi, "theta range must be increasing");
+
+    let mut outer_evals = 0usize;
+    let mut inner_evals = 0usize;
+    let mut best = TwoStepResult {
+        theta: f64::NAN,
+        hp: HyperParams::new(1.0, 1.0),
+        score: f64::INFINITY,
+        outer_evals: 0,
+        inner_evals: 0,
+    };
+
+    // profile of theta -> best inner score
+    let mut eval_theta = |logt: f64, outer: &mut usize, inner: &mut usize, best: &mut TwoStepResult| -> f64 {
+        let theta = 10f64.powf(logt);
+        let mut obj = make_objective(theta);
+        *outer += 1;
+        let (hp, score, ev) = inner_tune(&mut obj, &opt);
+        *inner += ev;
+        if score < best.score {
+            best.score = score;
+            best.hp = hp;
+            best.theta = theta;
+        }
+        score
+    };
+
+    let mut x1 = hi - inv_phi * (hi - lo);
+    let mut x2 = lo + inv_phi * (hi - lo);
+    let mut f1 = eval_theta(x1, &mut outer_evals, &mut inner_evals, &mut best);
+    let mut f2 = eval_theta(x2, &mut outer_evals, &mut inner_evals, &mut best);
+
+    for _ in 0..opt.outer_iters.saturating_sub(2) {
+        if f1 < f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - inv_phi * (hi - lo);
+            f1 = eval_theta(x1, &mut outer_evals, &mut inner_evals, &mut best);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + inv_phi * (hi - lo);
+            f2 = eval_theta(x2, &mut outer_evals, &mut inner_evals, &mut best);
+        }
+        if hi - lo < 1e-4 {
+            break;
+        }
+    }
+
+    best.outer_evals = outer_evals;
+    best.inner_evals = inner_evals;
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::Bowl;
+
+    /// Synthetic coupled objective: inner bowl whose depth depends on
+    /// theta, with a known best theta at 2.0.
+    struct ThetaBowl {
+        bowl: Bowl,
+        depth: f64,
+    }
+
+    impl Objective for ThetaBowl {
+        fn eval(&mut self, hp: HyperParams) -> f64 {
+            self.bowl.eval(hp) + self.depth
+        }
+        fn eval_full(&mut self, hp: HyperParams) -> crate::spectral::Evaluation {
+            let mut ev = self.bowl.eval_full(hp);
+            ev.score += self.depth;
+            ev
+        }
+    }
+
+    #[test]
+    fn finds_outer_and_inner_optimum() {
+        let make = |theta: f64| ThetaBowl {
+            bowl: Bowl::new(0.5, 2.0),
+            depth: (theta.ln() - 2f64.ln()).powi(2),
+        };
+        let r = two_step_tune(
+            make,
+            TwoStepOptions { outer_iters: 30, ..Default::default() },
+        );
+        assert!((r.theta.ln() - 2f64.ln()).abs() < 0.02, "theta={}", r.theta);
+        assert!((r.hp.sigma2 - 0.5).abs() < 1e-3, "{:?}", r.hp);
+        assert!((r.hp.lambda2 - 2.0).abs() < 1e-3, "{:?}", r.hp);
+        assert!(r.outer_evals <= 30);
+        assert!(r.inner_evals > r.outer_evals, "inner loop should dominate");
+    }
+
+    #[test]
+    fn outer_budget_respected() {
+        let make = |theta: f64| ThetaBowl { bowl: Bowl::new(1.0, 1.0), depth: theta };
+        let r = two_step_tune(
+            make,
+            TwoStepOptions { outer_iters: 5, ..Default::default() },
+        );
+        assert!(r.outer_evals <= 5);
+        assert!(r.score.is_finite());
+    }
+}

@@ -1,0 +1,150 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, which bucket
+//! serves which dataset size, and zero-padding helpers.
+
+use crate::util::json::{self, Json};
+
+/// One compiled HLO-text artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Layer-2 entry point: score | fused | batched_score | gram |
+    /// posterior_var_diag.
+    pub entry: String,
+    /// Eigenvalue-vector bucket size.
+    pub n: usize,
+    /// Hyperparameter batch size (batched_score only).
+    pub b: usize,
+    /// Feature padding (gram only).
+    pub p: usize,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dtype: String,
+    pub b_batch: usize,
+    pub p_pad: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let v = json::parse(text)?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or("manifest: missing dtype")?
+            .to_string();
+        let b_batch = v.get("b_batch").and_then(Json::as_usize).unwrap_or(0);
+        let p_pad = v.get("p_pad").and_then(Json::as_usize).unwrap_or(0);
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing artifacts array")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactInfo {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact: missing name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact: missing file")?
+                    .to_string(),
+                entry: a
+                    .get("entry")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact: missing entry")?
+                    .to_string(),
+                n: a.get("n").and_then(Json::as_usize).unwrap_or(0),
+                b: a.get("b").and_then(Json::as_usize).unwrap_or(0),
+                p: a.get("p").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Manifest { dtype, b_batch, p_pad, artifacts })
+    }
+
+    /// Smallest artifact of `entry` whose bucket holds `n` points.
+    pub fn bucket_for(&self, entry: &str, n: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.n >= n)
+            .min_by_key(|a| a.n)
+    }
+
+    /// All bucket sizes available for an entry (ascending).
+    pub fn buckets(&self, entry: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.entry == entry).map(|a| a.n).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Zero-pad a vector to `len` (the neutrality of zero eigenvalues /
+/// projections is property-tested on both the python and rust sides).
+pub fn zero_pad(v: &[f64], len: usize) -> Vec<f64> {
+    assert!(v.len() <= len, "cannot pad {} down to {}", v.len(), len);
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(v);
+    out.resize(len, 0.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f64", "b_batch": 64, "p_pad": 32,
+      "artifacts": [
+        {"name": "score_n32", "file": "score_n32.hlo.txt", "entry": "score", "n": 32},
+        {"name": "score_n64", "file": "score_n64.hlo.txt", "entry": "score", "n": 64},
+        {"name": "batched_b64_n32", "file": "b.hlo.txt", "entry": "batched_score", "n": 32, "b": 64},
+        {"name": "gram_n32_p32", "file": "g.hlo.txt", "entry": "gram", "n": 32, "p": 32}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.b_batch, 64);
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.artifacts[2].b, 64);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.bucket_for("score", 10).unwrap().n, 32);
+        assert_eq!(m.bucket_for("score", 32).unwrap().n, 32);
+        assert_eq!(m.bucket_for("score", 33).unwrap().n, 64);
+        assert!(m.bucket_for("score", 65).is_none());
+        assert!(m.bucket_for("missing", 1).is_none());
+        assert_eq!(m.buckets("score"), vec![32, 64]);
+    }
+
+    #[test]
+    fn zero_pad_extends() {
+        assert_eq!(zero_pad(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(zero_pad(&[], 2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot pad")]
+    fn zero_pad_rejects_shrink() {
+        zero_pad(&[1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn rejects_malformed_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"dtype": "f64"}"#).is_err());
+        assert!(Manifest::parse(r#"{"dtype": "f64", "artifacts": [{"file": "x"}]}"#).is_err());
+    }
+}

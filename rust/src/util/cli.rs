@@ -1,0 +1,143 @@
+//! Minimal command-line parsing (clap is not vendored — DESIGN.md §5).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Boolean flags (no value follows).  Everything else starting with `--`
+/// is a key-value option.  Keeping this list explicit resolves the
+/// `--flag positional` ambiguity without clap-style per-command specs.
+const KNOWN_FLAGS: &[&str] = &[
+    "predict", "verbose", "quiet", "no-pjrt", "help", "evidence", "paper-score", "json",
+];
+
+/// Parsed arguments: flags, key-value options, and positionals, in the
+/// order conventions of `gpml <subcommand> [options]`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) .
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    // unknown name with no value: treat as a flag
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments (after the binary name).
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: bad float '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: bad integer '{s}'")),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 32,64,128`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim().parse().map_err(|_| format!("--{name}: bad list '{s}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["tune", "--n", "128", "--kernel=rbf", "--verbose", "data.csv"]);
+        assert_eq!(a.positional, vec!["tune", "data.csv"]);
+        assert_eq!(a.get("n"), Some("128"));
+        assert_eq!(a.get("kernel"), Some("rbf"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--x", "2.5", "--n", "42", "--sizes", "32,64,128"]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![32, 64, 128]);
+        assert_eq!(a.get_f64("missing", 7.0).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--x", "abc"]);
+        assert!(a.get_f64("x", 0.0).is_err());
+        assert!(a.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--k", "v", "--", "--not-an-option"]);
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo substrates for functionality that is normally pulled from
+//! crates.io but is unavailable in this offline image (DESIGN.md §5):
+//! deterministic RNG, JSON, CLI parsing, bench timing, property testing.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timing;

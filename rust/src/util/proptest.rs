@@ -1,0 +1,88 @@
+//! Tiny property-testing harness (proptest is not vendored — DESIGN.md §5).
+//!
+//! [`forall`] runs a property over `cases` randomly generated inputs from a
+//! seeded [`Rng`]; on failure it reports the case index and the seed that
+//! reproduces it.  No shrinking — generators here are small enough that raw
+//! counterexamples are readable.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with a
+/// reproducible seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {case_seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Relative-or-absolute closeness check (mirrors numpy.allclose semantics).
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert-style wrapper producing a useful message for [`forall`] props.
+pub fn check_close(what: &str, a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if close(a, b, rtol, atol) {
+        Ok(())
+    } else {
+        Err(format!(
+            "{what}: {a:.17e} vs {b:.17e} (|diff|={:.3e}, rtol={rtol:.1e}, atol={atol:.1e})",
+            (a - b).abs()
+        ))
+    }
+}
+
+/// Max |a-b| over two slices (convenience for vector comparisons).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_on_true_property() {
+        forall(
+            "square nonneg",
+            42,
+            100,
+            |rng| rng.normal(),
+            |x| {
+                if x * x >= 0.0 { Ok(()) } else { Err("negative square".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_panics_with_seed_on_failure() {
+        forall("always fails", 1, 10, |rng| rng.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_semantics() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!close(1.0, 1.1, 1e-9, 0.0));
+        assert!(close(0.0, 1e-15, 0.0, 1e-12));
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+    }
+}

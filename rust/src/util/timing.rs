@@ -1,0 +1,177 @@
+//! Measurement helpers for the bench harness (criterion is not vendored —
+//! DESIGN.md §5): warmup + repetition loops, trimmed statistics, and the
+//! least-squares linear fit `tau(N) = a + b N` that the paper reports for
+//! Figures 1-3.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample of per-iteration times (microseconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p10_us: f64,
+    pub p90_us: f64,
+    pub min_us: f64,
+    pub iters: usize,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+/// Returns per-iteration stats; each iteration is timed individually so the
+/// distribution (not just the mean) is available.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    stats_of(&mut samples)
+}
+
+/// Time `f` in one block of `iters` calls (lower timer overhead; use when a
+/// single call is sub-microsecond). Returns mean time per call in us.
+pub fn measure_block<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+fn stats_of(samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    Stats {
+        mean_us: samples.iter().sum::<f64>() / n as f64,
+        median_us: pct(0.5),
+        p10_us: pct(0.1),
+        p90_us: pct(0.9),
+        min_us: samples[0],
+        iters: n,
+    }
+}
+
+/// Ordinary least squares fit `y = a + b x`. Returns `(a, b, r2)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Markdown-ish aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>width$} |", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        println!("{}", line(&sep));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((b - 0.5).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_noisy_line() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let xs: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 10.0 + 2.0 * x + rng.normal()).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 10.0).abs() < 0.5, "a={a}");
+        assert!((b - 2.0).abs() < 0.01, "b={b}");
+        assert!(r2 > 0.999);
+    }
+
+    #[test]
+    fn measure_returns_positive_times() {
+        let mut acc = 0u64;
+        let st = measure(2, 10, || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert_eq!(st.iters, 10);
+        assert!(st.mean_us >= 0.0);
+        assert!(st.p10_us <= st.p90_us);
+        assert!(st.min_us <= st.median_us);
+    }
+
+    #[test]
+    fn measure_block_scales() {
+        let mut acc = 0.0f64;
+        let t = measure_block(1, 1000, || {
+            acc += 1.0;
+            std::hint::black_box(acc);
+        });
+        assert!(t >= 0.0 && t < 1000.0);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["N", "mean_us"]);
+        t.row(&["32".into(), "1.5".into()]);
+        t.row(&["8192".into(), "410.2".into()]);
+        t.print();
+    }
+}

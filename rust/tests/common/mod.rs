@@ -1,0 +1,45 @@
+#![allow(dead_code)] // shared across multiple test binaries; each uses a subset
+//! Shared helpers for integration tests: locate the artifact directory and
+//! build small eigensystems.
+
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::spectral::{EigenSystem, SpectralGp};
+
+/// Artifact dir relative to the crate root (tests run from there).
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("GPML_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Skip (return None) when artifacts have not been built.
+pub fn open_runtime() -> Option<gpml::runtime::PjrtRuntime> {
+    let dir = artifact_dir();
+    match gpml::runtime::PjrtRuntime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!(
+                "SKIP: no artifacts at {} ({e:#}); run `make artifacts` first",
+                dir.display()
+            );
+            None
+        }
+    }
+}
+
+/// A small RBF eigensystem plus the pieces needed to cross-check.
+pub fn small_system(n: usize, seed: u64) -> (SpectralGp, Vec<f64>, EigenSystem) {
+    let spec = SyntheticSpec {
+        n,
+        p: 3,
+        kernel: Kernel::Rbf { xi2: 1.5 },
+        sigma2: 0.1,
+        lambda2: 1.0,
+        seed,
+    };
+    let ds = synthetic(spec, 1);
+    let gp = SpectralGp::fit(spec.kernel, ds.x.clone()).expect("eigensolver");
+    let es = gp.eigensystem(ds.y());
+    (gp, ds.ys.into_iter().next().unwrap(), es)
+}

@@ -1,0 +1,176 @@
+//! Integration: PJRT runtime vs the pure-rust spectral evaluator over the
+//! real AOT artifacts.  Skips (with a message) if `make artifacts` has not
+//! run.
+
+mod common;
+
+use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::HyperParams;
+use gpml::util::rng::Rng;
+
+const HPS: [(f64, f64); 4] = [(0.7, 1.3), (0.05, 4.0), (3.0, 0.2), (1.0, 1.0)];
+
+#[test]
+fn score_artifact_matches_rust_evaluator() {
+    let Some(rt) = common::open_runtime() else { return };
+    for &n in &[20usize, 32, 100, 500] {
+        let (_, _, es) = common::small_system(n, n as u64);
+        for &(s, l) in &HPS {
+            let hp = HyperParams::new(s, l);
+            let want = es.score(hp);
+            let got = rt.score(&es, hp).unwrap();
+            assert!(
+                (got - want).abs() < 1e-8 * want.abs().max(1.0),
+                "n={n} hp=({s},{l}): pjrt {got} vs rust {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_artifact_matches_rust_evaluation() {
+    let Some(rt) = common::open_runtime() else { return };
+    let (_, _, es) = common::small_system(90, 7);
+    let ev = rt.evaluator(&es).unwrap();
+    for &(s, l) in &HPS {
+        let hp = HyperParams::new(s, l);
+        let got = ev.try_eval_full(hp).unwrap();
+        let want = es.evaluate(hp);
+        assert!((got.score - want.score).abs() < 1e-8 * want.score.abs().max(1.0));
+        for i in 0..2 {
+            assert!(
+                (got.jac[i] - want.jac[i]).abs() < 1e-7 * want.jac[i].abs().max(1.0),
+                "jac[{i}]: {} vs {}",
+                got.jac[i],
+                want.jac[i]
+            );
+            for j in 0..2 {
+                assert!(
+                    (got.hess[i][j] - want.hess[i][j]).abs()
+                        < 1e-6 * want.hess[i][j].abs().max(1.0),
+                    "hess[{i}][{j}]: {} vs {}",
+                    got.hess[i][j],
+                    want.hess[i][j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_artifact_matches_scalar_path() {
+    let Some(rt) = common::open_runtime() else { return };
+    let (_, _, es) = common::small_system(150, 9);
+    let ev = rt.evaluator(&es).unwrap();
+    let mut rng = Rng::new(11);
+    // more points than one batch width to exercise chunking
+    let b = ev.batch_width().unwrap_or(64);
+    let hps: Vec<HyperParams> = (0..(b + b / 2))
+        .map(|_| HyperParams::new(10f64.powf(rng.uniform_in(-2.0, 2.0)), 10f64.powf(rng.uniform_in(-2.0, 2.0))))
+        .collect();
+    let got = ev.try_eval_batch(&hps).unwrap();
+    for (hp, g) in hps.iter().zip(&got) {
+        let want = es.score(*hp);
+        assert!(
+            (g - want).abs() < 1e-8 * want.abs().max(1.0),
+            "hp={hp:?}: batched {g} vs rust {want}"
+        );
+    }
+}
+
+#[test]
+fn bucket_padding_is_neutral_across_buckets() {
+    let Some(rt) = common::open_runtime() else { return };
+    // n=33 lands in the 64-bucket; n=32 in the 32-bucket. Same data,
+    // different padding path, same rust reference.
+    for &n in &[31usize, 32, 33, 64, 65] {
+        let (_, _, es) = common::small_system(n, 100 + n as u64);
+        let hp = HyperParams::new(0.9, 1.7);
+        let got = rt.score(&es, hp).unwrap();
+        let want = es.score(hp);
+        assert!(
+            (got - want).abs() < 1e-8 * want.abs().max(1.0),
+            "n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn gram_artifact_matches_rust_kernels() {
+    let Some(rt) = common::open_runtime() else { return };
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_fn(70, 5, |_, _| rng.normal());
+    for kernel in [
+        Kernel::Rbf { xi2: 1.7 },
+        Kernel::Polynomial { degree: 3 },
+        Kernel::Linear,
+    ] {
+        let got = rt.gram(&x, kernel).unwrap();
+        let want = gpml::kernelfn::gram(kernel, &x);
+        assert!(
+            got.max_abs_diff(&want) < 1e-9,
+            "{kernel:?}: max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn gram_artifact_rejects_oversized_features() {
+    let Some(rt) = common::open_runtime() else { return };
+    let x = Matrix::zeros(16, 64); // wider than P_PAD=32
+    assert!(rt.gram(&x, Kernel::Linear).is_err());
+}
+
+#[test]
+fn pvar_artifact_matches_rust_prop24() {
+    let Some(rt) = common::open_runtime() else { return };
+    let (gp, _, es) = common::small_system(60, 13);
+    let hp = HyperParams::new(0.6, 1.8);
+    let got = rt
+        .posterior_var_diag(&gp.eigen().vectors, &es.s, hp)
+        .unwrap();
+    let want = gp.posterior_var_diag(hp);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-9 * w.abs().max(1.0), "i={i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn matern_kernel_has_no_artifact_and_errors_cleanly() {
+    let Some(rt) = common::open_runtime() else { return };
+    let x = Matrix::zeros(8, 2);
+    assert!(rt.gram(&x, Kernel::Matern32 { ell: 1.0 }).is_err());
+}
+
+#[test]
+fn manifest_covers_expected_buckets() {
+    let Some(rt) = common::open_runtime() else { return };
+    let m = rt.manifest();
+    assert_eq!(m.dtype, "f64");
+    for entry in ["score", "fused", "batched_score"] {
+        let buckets = m.buckets(entry);
+        assert!(buckets.contains(&32), "{entry}: {buckets:?}");
+        assert!(buckets.contains(&8192), "{entry}: {buckets:?}");
+    }
+    assert!(!m.buckets("gram").is_empty());
+    assert!(!m.buckets("posterior_var_diag").is_empty());
+}
+
+#[test]
+fn warm_compiles_artifacts() {
+    let Some(rt) = common::open_runtime() else { return };
+    let count = rt.warm(&["score"]).unwrap();
+    assert!(count >= 9, "expected the full score ladder, got {count}");
+}
+
+#[test]
+fn dispatch_counter_increments() {
+    let Some(rt) = common::open_runtime() else { return };
+    let (_, _, es) = common::small_system(40, 17);
+    let before = rt.dispatches.get();
+    let _ = rt.score(&es, HyperParams::new(1.0, 1.0)).unwrap();
+    let _ = rt.score(&es, HyperParams::new(2.0, 1.0)).unwrap();
+    assert_eq!(rt.dispatches.get(), before + 2);
+}

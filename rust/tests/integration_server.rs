@@ -1,0 +1,81 @@
+//! Integration: the TCP coordinator server end-to-end, including the PJRT
+//! worker when artifacts are present.
+
+mod common;
+
+use gpml::coordinator::client::Client;
+use gpml::coordinator::server::Server;
+use gpml::coordinator::{Backend, Coordinator, GlobalStrategy, TuneRequest};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::util::json::Json;
+
+fn small_request(seed: u64) -> TuneRequest {
+    let ds = synthetic(SyntheticSpec { n: 40, p: 2, seed, ..Default::default() }, 1);
+    let mut req = TuneRequest::new(ds.x, ds.ys, Kernel::Rbf { xi2: 2.0 });
+    req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+    req
+}
+
+#[test]
+fn server_rust_backend_end_to_end() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    assert!(client.ping().unwrap());
+    let res = client.tune(&small_request(1)).unwrap();
+    let out = &res.get("outputs").unwrap().as_arr().unwrap()[0];
+    assert!(out.get("score").unwrap().as_f64().unwrap().is_finite());
+    assert!(out.get("sigma2").unwrap().as_f64().unwrap() > 0.0);
+    server.stop();
+}
+
+#[test]
+fn server_pjrt_backend_end_to_end() {
+    // build the coordinator on the worker thread with a PJRT runtime if
+    // artifacts exist; otherwise this degrades to rust-only and the pjrt
+    // request errors cleanly.
+    let dir = common::artifact_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
+    let server = Server::start("127.0.0.1:0", move || {
+        match gpml::runtime::PjrtRuntime::open(&dir) {
+            Ok(rt) => Coordinator::with_runtime(rt),
+            Err(_) => Coordinator::rust_only(),
+        }
+    })
+    .unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let mut req = small_request(2);
+    req.backend = Backend::Pjrt;
+    let result = client.tune(&req);
+    if have_artifacts {
+        let res = result.unwrap();
+        assert_eq!(res.get("backend").unwrap().as_str(), Some("pjrt"));
+    } else {
+        assert!(result.is_err());
+    }
+    server.stop();
+}
+
+#[test]
+fn info_reports_cache_counters() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let req = small_request(3);
+    client.tune(&req).unwrap();
+    client.tune(&req).unwrap();
+    let info = client.info().unwrap();
+    assert_eq!(info.get("cache_misses").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(info.get("cache_hits").and_then(Json::as_f64), Some(1.0));
+    server.stop();
+}
+
+#[test]
+fn multiple_sequential_clients() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    for seed in 0..3 {
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let res = client.tune(&small_request(seed)).unwrap();
+        assert_eq!(res.get("ok").unwrap().as_bool(), Some(true));
+    }
+    server.stop();
+}

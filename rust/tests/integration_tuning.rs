@@ -1,0 +1,168 @@
+//! Integration: end-to-end tuning through the coordinator, PJRT backend vs
+//! pure-rust backend, multi-output reuse, and Algorithm 1 on real GP data.
+
+mod common;
+
+use gpml::coordinator::{Backend, Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::optim::{self, two_step_tune, Bounds, TwoStepOptions};
+use gpml::spectral::{HyperParams, SpectralGp};
+
+fn request(n: usize, outputs: usize, seed: u64) -> TuneRequest {
+    let spec = SyntheticSpec {
+        n,
+        p: 3,
+        kernel: Kernel::Rbf { xi2: 2.0 },
+        sigma2: 0.1,
+        lambda2: 1.0,
+        seed,
+    };
+    let ds = synthetic(spec, outputs);
+    let mut req = TuneRequest::new(ds.x, ds.ys, spec.kernel);
+    req.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+    req
+}
+
+#[test]
+fn pjrt_and_rust_backends_agree() {
+    let Some(rt) = common::open_runtime() else { return };
+    let mut coord = Coordinator::with_runtime(rt);
+    let mut req = request(60, 1, 21);
+    req.backend = Backend::Rust;
+    let rust_res = coord.tune(&req).unwrap();
+    req.backend = Backend::Pjrt;
+    let pjrt_res = coord.tune(&req).unwrap();
+    assert!(pjrt_res.eigen_cached, "second tune over same data reuses eigen");
+    let (a, b) = (&rust_res.outputs[0], &pjrt_res.outputs[0]);
+    // same deterministic optimizer over numerically identical objectives
+    assert!(
+        (a.hp.sigma2 - b.hp.sigma2).abs() < 1e-5 * a.hp.sigma2,
+        "sigma2: rust {} vs pjrt {}",
+        a.hp.sigma2,
+        b.hp.sigma2
+    );
+    assert!(
+        (a.hp.lambda2 - b.hp.lambda2).abs() < 1e-5 * a.hp.lambda2,
+        "lambda2: rust {} vs pjrt {}",
+        a.hp.lambda2,
+        b.hp.lambda2
+    );
+    assert!((a.score - b.score).abs() < 1e-6 * a.score.abs().max(1.0));
+}
+
+#[test]
+fn tuned_hyperparams_recover_generating_scale() {
+    // With enough data, the evidence-tuned sigma2 should land near the
+    // generating noise level (order of magnitude).  The paper score is
+    // boundary-seeking by construction (see DESIGN.md), so the recovery
+    // check uses the evidence objective.
+    let mut coord = Coordinator::rust_only();
+    let mut req = request(200, 1, 33);
+    req.strategy = GlobalStrategy::Pso { particles: 32, iterations: 20 };
+    req.objective = ObjectiveKind::Evidence;
+    let res = coord.tune(&req).unwrap();
+    let hp = res.outputs[0].hp;
+    assert!(
+        hp.sigma2 > 0.01 && hp.sigma2 < 1.0,
+        "tuned sigma2 {} should be near generating 0.1",
+        hp.sigma2
+    );
+}
+
+#[test]
+fn multi_output_pjrt_tuning() {
+    let Some(rt) = common::open_runtime() else { return };
+    let mut coord = Coordinator::with_runtime(rt);
+    let mut req = request(50, 4, 55);
+    req.backend = Backend::Pjrt;
+    let res = coord.tune(&req).unwrap();
+    assert_eq!(res.outputs.len(), 4);
+    assert_eq!(coord.cache_misses, 1, "one decomposition for 4 outputs");
+    for o in &res.outputs {
+        assert!(o.score.is_finite());
+        assert!(o.hp.feasible());
+    }
+}
+
+#[test]
+fn two_step_tunes_rbf_bandwidth_on_gp_data() {
+    // Data generated with xi2 = 2.0; Algorithm 1 should find a bandwidth
+    // in the right region with a better score than a bad fixed bandwidth.
+    let spec = SyntheticSpec {
+        n: 80,
+        p: 2,
+        kernel: Kernel::Rbf { xi2: 2.0 },
+        sigma2: 0.05,
+        lambda2: 1.0,
+        seed: 77,
+    };
+    let ds = synthetic(spec, 1);
+    let y = ds.y().to_vec();
+    let x = ds.x.clone();
+
+    let result = two_step_tune(
+        |theta| {
+            let gp = SpectralGp::fit(Kernel::Rbf { xi2: theta }, x.clone()).unwrap();
+            gp.eigensystem(&y)
+        },
+        TwoStepOptions {
+            theta_range: (0.05, 50.0),
+            outer_iters: 12,
+            inner_grid: 7,
+            ..Default::default()
+        },
+    );
+    // compare against a deliberately bad bandwidth tuned the same way
+    let gp_bad = SpectralGp::fit(Kernel::Rbf { xi2: 0.05 }, x.clone()).unwrap();
+    let mut es_bad = gp_bad.eigensystem(&y);
+    let bad = optim::grid_search(&mut es_bad, Bounds::default(), 9, 64);
+    let bad_refined = optim::newton_refine(&mut es_bad, bad.hp, Bounds::default(), Default::default());
+    assert!(
+        result.score <= bad_refined.score + 1e-9,
+        "two-step score {} should beat fixed-bad-bandwidth {}",
+        result.score,
+        bad_refined.score
+    );
+    assert!(result.theta > 0.05 && result.theta < 50.0);
+    assert_eq!(result.outer_evals, 12);
+}
+
+#[test]
+fn prediction_quality_after_tuning() {
+    // Full pipeline: tune on train, predict on held-out test, beat the
+    // predict-the-mean baseline by a wide margin.
+    let spec = SyntheticSpec {
+        n: 150,
+        p: 2,
+        kernel: Kernel::Rbf { xi2: 2.0 },
+        sigma2: 0.01,
+        lambda2: 1.0,
+        seed: 99,
+    };
+    let ds = synthetic(spec, 1);
+    let mut rng = gpml::util::rng::Rng::new(5);
+    let (train, test) = ds.split(0.8, &mut rng);
+
+    let mut coord = Coordinator::rust_only();
+    let mut req = TuneRequest::new(train.x.clone(), train.ys.clone(), spec.kernel);
+    req.strategy = GlobalStrategy::Pso { particles: 32, iterations: 20 };
+    req.objective = ObjectiveKind::Evidence;
+    let res = coord.tune(&req).unwrap();
+    let hp = HyperParams::new(res.outputs[0].hp.sigma2, res.outputs[0].hp.lambda2);
+
+    let gp = SpectralGp::fit(spec.kernel, train.x.clone()).unwrap();
+    let pred = gp.predict_mean(&test.x, train.y(), hp);
+    let rmse = gpml::data::rmse(&pred, test.y());
+    let ymean = test.y().iter().sum::<f64>() / test.n() as f64;
+    let base: Vec<f64> = vec![ymean; test.n()];
+    let base_rmse = gpml::data::rmse(&base, test.y());
+    assert!(
+        rmse < 0.5 * base_rmse,
+        "GP rmse {rmse} should easily beat mean-baseline {base_rmse}"
+    );
+    // predictive variance should be positive and finite
+    for v in gp.predict_var(&test.x, hp) {
+        assert!(v.is_finite() && v > 0.0);
+    }
+}
