@@ -12,11 +12,17 @@
 //! - **Layer 1/2 (build time, python)** — pallas kernels + JAX entry
 //!   points AOT-lowered to HLO-text artifacts in `artifacts/`.
 //! - **Layer 3 (this crate)** — the [`runtime`] loads the artifacts via
-//!   PJRT, the [`coordinator`] batches tuning work over them, and the
-//!   pure-rust [`spectral`] evaluator mirrors the same identities for the
-//!   scalar fast path.  [`naive`] (O(N^3)) and [`sparse`] (O(N m^2)) are
-//!   the paper's comparison baselines; [`optim`] implements §1.1's
-//!   global+local strategy and §2.2's Algorithm 1.
+//!   PJRT (behind the `pjrt` cargo feature; a plain checkout compiles the
+//!   always-available stub), the [`coordinator`] batches tuning work over
+//!   them, and the pure-rust [`spectral`] evaluator mirrors the same
+//!   identities for the scalar fast path.  [`naive`] (O(N^3)) and
+//!   [`sparse`] (O(N m^2)) are the paper's comparison baselines; [`optim`]
+//!   implements §1.1's global+local strategy and §2.2's Algorithm 1.
+//! - **Cross-cutting** — [`verify`] is the differential-verification
+//!   harness (DESIGN.md §4): it cross-checks `spectral` against `naive`
+//!   and against finite differences over randomized kernels and
+//!   hyperparameter grids, and gates every future refactor through
+//!   `rust/tests/verify_differential.rs`.
 //!
 //! ## Quickstart
 //!
@@ -35,6 +41,19 @@
 //! println!("sigma2={:.4} lambda2={:.4}", tuned.hp.sigma2, tuned.hp.lambda2);
 //! # Ok(()) }
 //! ```
+//!
+//! To confirm the identities on your own machine (the paper's exactness
+//! claim, Props. 2.1-2.3):
+//!
+//! ```
+//! let report = gpml::verify::random_triples_suite(5, 42);
+//! assert!(report.ok(), "{}", report.summary());
+//! ```
+
+// Dense index-heavy numerical kernels: these style lints fight the
+// textbook (i, j, k) transcriptions without making them clearer.
+#![allow(clippy::needless_range_loop, clippy::many_single_char_names)]
+#![allow(clippy::needless_lifetimes)]
 
 pub mod coordinator;
 pub mod data;
@@ -46,5 +65,6 @@ pub mod runtime;
 pub mod sparse;
 pub mod spectral;
 pub mod util;
+pub mod verify;
 
 pub use spectral::{EigenSystem, Evaluation, HyperParams, SpectralGp};

@@ -1,311 +1,35 @@
-//! PJRT runtime: load the AOT HLO-text artifacts and execute them on the
-//! CPU PJRT client — Python never runs here (DESIGN.md).
+//! PJRT runtime layer: load the AOT HLO-text artifacts and execute them on
+//! the CPU PJRT client — Python never runs here (DESIGN.md §2).
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
-//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile` ->
-//! `execute`.  Compiled executables are cached per artifact; the
-//! [`PjrtEvaluator`] additionally pre-stages the padded eigensystem as
-//! device buffers so each score evaluation only uploads the (tiny)
-//! hyperparameter literal.
+//! The artifact manifest ([`artifact`]) is plain rust and always compiles.
+//! The runtime itself has two implementations selected by the `pjrt`
+//! cargo feature:
+//!
+//! - `pjrt.rs` (feature **on**): the real client.  Pattern follows
+//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
+//!   `XlaComputation::from_proto` -> `client.compile` -> `execute`, with
+//!   per-artifact executable caching and pre-staged device buffers.
+//!   Requires the `xla` crate, which is not vendored in the offline image
+//!   (DESIGN.md §5) — enabling the feature without it will not build.
+//! - `stub.rs` (feature **off**, the default): the same public API where
+//!   [`PjrtRuntime::open`] always fails, so the coordinator, benches and
+//!   examples compile unchanged and degrade to the pure-rust evaluator.
 
 pub mod artifact;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtEvaluator, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtEvaluator, PjrtRuntime};
+
 pub use artifact::{zero_pad, ArtifactInfo, Manifest};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::kernelfn::Kernel;
-use crate::linalg::Matrix;
-use crate::optim::Objective;
-use crate::spectral::{EigenSystem, Evaluation, HyperParams};
-
-/// Lazily-compiling artifact runtime over the CPU PJRT client.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    /// Executions performed (for perf accounting).
-    pub dispatches: std::cell::Cell<usize>,
-}
-
-impl PjrtRuntime {
-    /// Open an artifact directory (must contain `manifest.json`).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
-            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
-        })?;
-        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime {
-            client,
-            dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            dispatches: std::cell::Cell::new(0),
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Fetch (compiling on first use) the executable for an artifact.
-    fn executable(&self, info: &ArtifactInfo) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&info.name) {
-            return Ok(exe.clone());
-        }
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.cache.borrow_mut().insert(info.name.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Force-compile every artifact of the given entries (warm start).
-    pub fn warm(&self, entries: &[&str]) -> Result<usize> {
-        let mut count = 0;
-        let infos: Vec<ArtifactInfo> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| entries.contains(&a.entry.as_str()))
-            .cloned()
-            .collect();
-        for info in infos {
-            self.executable(&info)?;
-            count += 1;
-        }
-        Ok(count)
-    }
-
-    fn run(&self, info: &ArtifactInfo, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self.executable(info)?;
-        self.dispatches.set(self.dispatches.get() + 1);
-        let out = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(out.to_tuple1()?)
-    }
-
-    fn run_buffers(&self, info: &ArtifactInfo, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
-        let exe = self.executable(info)?;
-        self.dispatches.set(self.dispatches.get() + 1);
-        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
-        Ok(out.to_tuple1()?)
-    }
-
-    /// Stage a host vector on device.
-    fn stage(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(v, &[v.len()], None)?)
-    }
-
-    fn stage_scalar(&self, v: f64) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
-    }
-
-    /// One-shot score evaluation (unstaged; prefer [`PjrtEvaluator`] in
-    /// loops). Eq. (19) through the `score_n*` artifact.
-    pub fn score(&self, es: &EigenSystem, hp: HyperParams) -> Result<f64> {
-        let info = self
-            .manifest
-            .bucket_for("score", es.s.len())
-            .ok_or_else(|| anyhow!("no score bucket >= {}", es.s.len()))?
-            .clone();
-        let out = self.run(
-            &info,
-            &[
-                xla::Literal::vec1(&zero_pad(&es.s, info.n)),
-                xla::Literal::vec1(&zero_pad(&es.y2t, info.n)),
-                xla::Literal::vec1(&[hp.sigma2, hp.lambda2]),
-                xla::Literal::scalar(es.n as f64),
-                xla::Literal::scalar(es.yy),
-            ],
-        )?;
-        Ok(out.to_vec::<f64>()?[0])
-    }
-
-    /// Build a Gram matrix through the `gram_n*` artifact (kernel families
-    /// with an artifact encoding only). Output is the exact N x N block.
-    pub fn gram(&self, x: &Matrix, kernel: Kernel) -> Result<Matrix> {
-        let code = kernel
-            .artifact_code()
-            .ok_or_else(|| anyhow!("kernel {kernel:?} has no gram artifact"))?;
-        let n = x.rows();
-        let info = self
-            .manifest
-            .bucket_for("gram", n)
-            .ok_or_else(|| anyhow!("no gram bucket >= {n}"))?
-            .clone();
-        if x.cols() > info.p {
-            return Err(anyhow!(
-                "feature dim {} exceeds artifact padding {}",
-                x.cols(),
-                info.p
-            ));
-        }
-        // zero-pad rows and feature columns
-        let mut flat = vec![0.0; info.n * info.p];
-        for i in 0..n {
-            flat[i * info.p..i * info.p + x.cols()].copy_from_slice(x.row(i));
-        }
-        let xpad = xla::Literal::vec1(&flat).reshape(&[info.n as i64, info.p as i64])?;
-        let out = self.run(&info, &[xpad, xla::Literal::vec1(&code)])?;
-        let full = out.to_vec::<f64>()?;
-        Ok(Matrix::from_fn(n, n, |i, j| full[i * info.n + j]))
-    }
-
-    /// Prop. 2.4 posterior-variance diagonal through the `pvar_n*`
-    /// artifact.  `u` is the eigenvector matrix, `s` the eigenvalues.
-    pub fn posterior_var_diag(&self, u: &Matrix, s: &[f64], hp: HyperParams) -> Result<Vec<f64>> {
-        let n = s.len();
-        let info = self
-            .manifest
-            .bucket_for("posterior_var_diag", n)
-            .ok_or_else(|| anyhow!("no pvar bucket >= {n}"))?
-            .clone();
-        let mut flat = vec![0.0; info.n * info.n];
-        for i in 0..n {
-            flat[i * info.n..i * info.n + n].copy_from_slice(u.row(i));
-        }
-        let upad = xla::Literal::vec1(&flat).reshape(&[info.n as i64, info.n as i64])?;
-        let out = self.run(
-            &info,
-            &[
-                upad,
-                xla::Literal::vec1(&zero_pad(s, info.n)),
-                xla::Literal::vec1(&[hp.sigma2, hp.lambda2]),
-            ],
-        )?;
-        Ok(out.to_vec::<f64>()?[..n].to_vec())
-    }
-
-    /// Build a staged evaluator for repeated evaluations over one
-    /// eigensystem (the tuning hot path).
-    pub fn evaluator(&self, es: &EigenSystem) -> Result<PjrtEvaluator<'_>> {
-        let score_info = self
-            .manifest
-            .bucket_for("score", es.s.len())
-            .ok_or_else(|| anyhow!("no score bucket >= {}", es.s.len()))?
-            .clone();
-        let fused_info = self
-            .manifest
-            .bucket_for("fused", es.s.len())
-            .ok_or_else(|| anyhow!("no fused bucket >= {}", es.s.len()))?
-            .clone();
-        let batched_info = self.manifest.bucket_for("batched_score", es.s.len()).cloned();
-        let n_bucket = score_info.n;
-        let s_pad = zero_pad(&es.s, n_bucket);
-        let y2_pad = zero_pad(&es.y2t, n_bucket);
-        Ok(PjrtEvaluator {
-            rt: self,
-            score_info,
-            fused_info,
-            batched_info,
-            s_buf: self.stage(&s_pad)?,
-            y2_buf: self.stage(&y2_pad)?,
-            n_buf: self.stage_scalar(es.n as f64)?,
-            yy_buf: self.stage_scalar(es.yy)?,
-        })
-    }
-}
-
-/// Staged per-eigensystem evaluator: eigenvalues / projections / closure
-/// scalars live on device; each call uploads only the hyperparameters.
-/// Implements [`Objective`], so every optimizer in [`crate::optim`] can
-/// run against the AOT artifacts directly.
-pub struct PjrtEvaluator<'r> {
-    rt: &'r PjrtRuntime,
-    score_info: ArtifactInfo,
-    fused_info: ArtifactInfo,
-    batched_info: Option<ArtifactInfo>,
-    s_buf: xla::PjRtBuffer,
-    y2_buf: xla::PjRtBuffer,
-    n_buf: xla::PjRtBuffer,
-    yy_buf: xla::PjRtBuffer,
-}
-
-impl<'r> PjrtEvaluator<'r> {
-    /// Batch width of the batched-score artifact (the global-search
-    /// wavefront size), if available.
-    pub fn batch_width(&self) -> Option<usize> {
-        self.batched_info.as_ref().map(|i| i.b)
-    }
-
-    /// Bucket the eigensystem was padded to.
-    pub fn bucket(&self) -> usize {
-        self.score_info.n
-    }
-
-    pub fn try_eval(&self, hp: HyperParams) -> Result<f64> {
-        let hp_buf = self.rt.stage(&[hp.sigma2, hp.lambda2])?;
-        let out = self.rt.run_buffers(
-            &self.score_info,
-            &[&self.s_buf, &self.y2_buf, &hp_buf, &self.n_buf, &self.yy_buf],
-        )?;
-        Ok(out.to_vec::<f64>()?[0])
-    }
-
-    pub fn try_eval_full(&self, hp: HyperParams) -> Result<Evaluation> {
-        let hp_buf = self.rt.stage(&[hp.sigma2, hp.lambda2])?;
-        let out = self.rt.run_buffers(
-            &self.fused_info,
-            &[&self.s_buf, &self.y2_buf, &hp_buf, &self.n_buf, &self.yy_buf],
-        )?;
-        let v = out.to_vec::<f64>()?;
-        Ok(EigenSystem::evaluation_from_fused(&v))
-    }
-
-    /// Evaluate up to `b` points in one dispatch through the
-    /// `batched_b*_n*` artifact; larger slices are chunked.
-    pub fn try_eval_batch(&self, hps: &[HyperParams]) -> Result<Vec<f64>> {
-        let Some(info) = &self.batched_info else {
-            // no batched artifact for this bucket: scalar fallback
-            return hps.iter().map(|&h| self.try_eval(h)).collect();
-        };
-        let b = info.b;
-        let mut out = Vec::with_capacity(hps.len());
-        for chunk in hps.chunks(b) {
-            // pad the batch with copies of the first point
-            let mut flat = Vec::with_capacity(b * 2);
-            for hp in chunk {
-                flat.push(hp.sigma2);
-                flat.push(hp.lambda2);
-            }
-            for _ in chunk.len()..b {
-                flat.push(chunk[0].sigma2);
-                flat.push(chunk[0].lambda2);
-            }
-            let hps_buf = self.rt.client.buffer_from_host_buffer(&flat, &[b, 2], None)?;
-            let res = self.rt.run_buffers(
-                info,
-                &[&self.s_buf, &self.y2_buf, &hps_buf, &self.n_buf, &self.yy_buf],
-            )?;
-            let v = res.to_vec::<f64>()?;
-            out.extend_from_slice(&v[..chunk.len()]);
-        }
-        Ok(out)
-    }
-}
-
-impl<'r> Objective for PjrtEvaluator<'r> {
-    fn eval(&mut self, hp: HyperParams) -> f64 {
-        self.try_eval(hp).expect("PJRT score dispatch failed")
-    }
-    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
-        self.try_eval_batch(hps).expect("PJRT batched dispatch failed")
-    }
-    fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
-        self.try_eval_full(hp).expect("PJRT fused dispatch failed")
-    }
-}
+use std::path::PathBuf;
 
 /// Default artifact directory: `$GPML_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {

@@ -1,0 +1,118 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the default in the offline image — DESIGN.md §5).
+//!
+//! [`PjrtRuntime::open`] always fails, and both types are uninhabited
+//! (they carry an [`Infallible`] field), so no value can ever exist and
+//! every other method is provably unreachable: callers — the coordinator,
+//! benches, examples and integration tests — compile unchanged and
+//! degrade to the pure-rust spectral evaluator at runtime.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernelfn::Kernel;
+use crate::linalg::Matrix;
+use crate::optim::Objective;
+use crate::runtime::Manifest;
+use crate::spectral::{EigenSystem, Evaluation, HyperParams};
+
+const STUB: &str = "PjrtRuntime stub is uninhabited (pjrt feature disabled)";
+
+/// Uninhabited stand-in for the artifact runtime.
+pub struct PjrtRuntime {
+    #[allow(dead_code)] // uninhabits the type; never read
+    never: Infallible,
+    /// Executions performed (API parity with the real runtime).
+    pub dispatches: std::cell::Cell<usize>,
+}
+
+impl PjrtRuntime {
+    /// Always fails: the build has no PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!(
+            "PJRT runtime unavailable: gpml was built without the `pjrt` feature \
+             (artifact dir {}); rebuild with `--features pjrt` and a vendored `xla` crate",
+            dir.as_ref().display()
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        unreachable!("{STUB}")
+    }
+
+    pub fn warm(&self, _entries: &[&str]) -> Result<usize> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn score(&self, _es: &EigenSystem, _hp: HyperParams) -> Result<f64> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn gram(&self, _x: &Matrix, _kernel: Kernel) -> Result<Matrix> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn posterior_var_diag(&self, _u: &Matrix, _s: &[f64], _hp: HyperParams) -> Result<Vec<f64>> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn evaluator(&self, _es: &EigenSystem) -> Result<PjrtEvaluator<'_>> {
+        unreachable!("{STUB}")
+    }
+}
+
+/// Uninhabited stand-in for the staged evaluator.
+pub struct PjrtEvaluator<'r> {
+    #[allow(dead_code)] // uninhabits the type; never read
+    never: Infallible,
+    _rt: std::marker::PhantomData<&'r PjrtRuntime>,
+}
+
+impl<'r> PjrtEvaluator<'r> {
+    pub fn batch_width(&self) -> Option<usize> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn bucket(&self) -> usize {
+        unreachable!("{STUB}")
+    }
+
+    pub fn try_eval(&self, _hp: HyperParams) -> Result<f64> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn try_eval_full(&self, _hp: HyperParams) -> Result<Evaluation> {
+        unreachable!("{STUB}")
+    }
+
+    pub fn try_eval_batch(&self, _hps: &[HyperParams]) -> Result<Vec<f64>> {
+        unreachable!("{STUB}")
+    }
+}
+
+impl<'r> Objective for PjrtEvaluator<'r> {
+    fn eval(&mut self, _hp: HyperParams) -> f64 {
+        unreachable!("{STUB}")
+    }
+    fn eval_batch(&mut self, _hps: &[HyperParams]) -> Vec<f64> {
+        unreachable!("{STUB}")
+    }
+    fn eval_full(&mut self, _hp: HyperParams) -> Evaluation {
+        unreachable!("{STUB}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::PjrtRuntime;
+
+    #[test]
+    fn open_reports_missing_feature() {
+        let err = PjrtRuntime::open("artifacts").unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("pjrt"), "{text}");
+        assert!(text.contains("artifacts"), "{text}");
+    }
+}

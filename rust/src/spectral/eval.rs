@@ -36,6 +36,145 @@ pub struct Evaluation {
     pub hess: [[f64; 2]; 2],
 }
 
+/// Powers of the hyperparameters shared by the derivative closed forms
+/// (computed once per evaluation, not per eigenvalue).
+#[derive(Clone, Copy)]
+struct HpPowers {
+    sigma2: f64,
+    lambda2: f64,
+    /// 1 / sigma2^2
+    inv_s4: f64,
+    /// 1 / sigma2^3
+    inv_s6: f64,
+}
+
+impl HpPowers {
+    #[inline]
+    fn new(hp: HyperParams) -> Self {
+        let HyperParams { sigma2, lambda2 } = hp;
+        let inv_s2 = 1.0 / sigma2;
+        let inv_s4 = inv_s2 * inv_s2;
+        HpPowers { sigma2, lambda2, inv_s4, inv_s6: inv_s4 * inv_s2 }
+    }
+}
+
+/// Per-eigenvalue first-derivative terms (eqs. 22-25).
+#[derive(Clone, Copy)]
+struct FirstOrder {
+    dlogd_ds: f64,
+    dlogd_dl: f64,
+    dg_ds: f64,
+    dg_dl: f64,
+}
+
+/// One shared transcription of eqs. (22)-(25), used verbatim by both
+/// [`EigenSystem::grad`] and [`EigenSystem::evaluate`] so the two paths
+/// cannot drift apart structurally (the seed carried two hand-expanded
+/// variants whose roundings diverged under cancellation).
+///
+/// The powers of `sigma^2` and `lambda^2 s` are folded into the bounded
+/// ratios `u = sigma2/(ab)` and `v = lambda2 s/(ab)` so no intermediate
+/// overflows before the result does: the seed's expanded
+/// `(sigma^8 - 2 lambda^4 s^2 sigma^4)/sigma^4` form hit `inf` (NaN
+/// after the subtraction) from sigma2 ~ 1e77 even though constraint (13)
+/// only requires sigma2 > 0.  With the `u`/`v` forms the closed forms
+/// stay finite wherever their true values are representable in f64
+/// (the hard limits are the genuine `4/sigma^4`, `8/sigma^6` terms).
+#[inline(always)]
+fn first_order(p: &HpPowers, s: f64, inv_a: f64, inv_b: f64) -> FirstOrder {
+    let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
+    let iab = inv_a * inv_b;
+    let u = p.sigma2 * iab;
+    let v = p.lambda2 * s * iab;
+    FirstOrder {
+        dlogd_ds: inv_b - inv_a,
+        dlogd_dl: s * u,
+        dg_ds: 2.0 * v * v - u * u - 4.0 * p.inv_s4,
+        dg_dl: s * (ia2 - 4.0 * ib2),
+    }
+}
+
+/// Per-eigenvalue second-derivative terms (eqs. 30-35).
+#[derive(Clone, Copy)]
+struct SecondOrder {
+    d2logd_ss: f64,
+    d2logd_sl: f64,
+    d2logd_ll: f64,
+    d2g_ss: f64,
+    d2g_sl: f64,
+    d2g_ll: f64,
+}
+
+/// Eqs. (30)-(35) in the bounded-ratio form of [`first_order`]:
+/// `sigma^12 ia^3 ib^3 == u^3`, `lambda^6 s^3 ia^3 ib^3 == v^3`, so the
+/// seed's `sigma^12` intermediate (overflowed from sigma2 ~ 1e51) never
+/// materializes.
+#[inline(always)]
+fn second_order(p: &HpPowers, s: f64, inv_a: f64, inv_b: f64) -> SecondOrder {
+    let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
+    let (ia3, ib3) = (ia2 * inv_a, ib2 * inv_b);
+    let iab = inv_a * inv_b;
+    let u = p.sigma2 * iab;
+    let v = p.lambda2 * s * iab;
+    let s2 = s * s;
+    SecondOrder {
+        d2logd_ss: ia2 - ib2,
+        d2logd_sl: s * (ia2 - 2.0 * ib2),
+        d2logd_ll: s2 * (ia2 - 4.0 * ib2),
+        d2g_ss: 8.0 * p.inv_s6 + 2.0 * (u * u * u) - 12.0 * v * v * (v + u),
+        d2g_sl: s * (8.0 * ib3 - 2.0 * ia3),
+        d2g_ll: s2 * (16.0 * ib3 - 2.0 * ia3),
+    }
+}
+
+/// Rounding-magnitude counterpart of [`first_order`]: every difference
+/// replaced by the sum of its constituents' absolute values.  `dg_dl`,
+/// for example, is `s (1/a^2 - 4/b^2)` whose two parts agree to
+/// O(sigma2 / lambda2 s) near the sigma2 -> 0 boundary — the rounding
+/// noise of an evaluation scales with the *uncancelled* parts, which is
+/// what [`EigenSystem::evaluate_magnitudes`] must accumulate.
+#[inline(always)]
+fn first_order_mag(p: &HpPowers, s: f64, inv_a: f64, inv_b: f64) -> FirstOrder {
+    // rank-deficient spectra carry numerically-negative eigenvalues; a
+    // magnitude must not inherit their sign (nor the sign of inv_a /
+    // inv_b, which can flip when lambda2 |s| exceeds sigma2)
+    let s = s.abs();
+    let (inv_a, inv_b) = (inv_a.abs(), inv_b.abs());
+    let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
+    let iab = inv_a * inv_b;
+    let u = p.sigma2 * iab;
+    let v = p.lambda2 * s * iab;
+    FirstOrder {
+        dlogd_ds: inv_b + inv_a,
+        dlogd_dl: s * u,
+        dg_ds: 2.0 * v * v + u * u + 4.0 * p.inv_s4,
+        dg_dl: s * (ia2 + 4.0 * ib2),
+    }
+}
+
+/// Rounding-magnitude counterpart of [`second_order`] (see
+/// [`first_order_mag`]).
+#[inline(always)]
+fn second_order_mag(p: &HpPowers, s: f64, inv_a: f64, inv_b: f64) -> SecondOrder {
+    // see first_order_mag
+    let s = s.abs();
+    let (inv_a, inv_b) = (inv_a.abs(), inv_b.abs());
+    let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
+    let (ia3, ib3) = (ia2 * inv_a, ib2 * inv_b);
+    let iab = inv_a * inv_b;
+    let u = p.sigma2 * iab;
+    let v = p.lambda2 * s * iab;
+    let s2 = s * s;
+    SecondOrder {
+        d2logd_ss: ia2 + ib2,
+        d2logd_sl: s * (ia2 + 2.0 * ib2),
+        d2logd_ll: s2 * (ia2 + 4.0 * ib2),
+        d2g_ss: 8.0 * p.inv_s6 + 2.0 * (u * u * u) + 12.0 * v * v * (v + u),
+        d2g_sl: s * (8.0 * ib3 + 2.0 * ia3),
+        d2g_ll: s2 * (16.0 * ib3 + 2.0 * ia3),
+    }
+}
+
 /// The O(N) state the paper's identities need: eigenvalues, squared
 /// projected targets, true N, and y'y.  This is the *entire* per-dataset
 /// memory footprint after the O(N^3) overhead (paper §2.1: O(N) storage).
@@ -104,28 +243,29 @@ impl EigenSystem {
     }
 
     /// Proposition 2.2 — eqs. (20)-(25). O(N).
-    /// (Two reciprocals per element; see the perf note on [`evaluate`].)
+    ///
+    /// Per-element closed forms come from the [`first_order`] helper that
+    /// [`evaluate`](Self::evaluate) also uses, and the accumulation order
+    /// matches its fused loop, so the two Jacobian paths agree to machine
+    /// precision (property-tested, including across chunk boundaries).
     pub fn grad(&self, hp: HyperParams) -> [f64; 2] {
-        let HyperParams { sigma2, lambda2 } = hp;
-        let s4 = sigma2 * sigma2;
-        let inv_s4 = 1.0 / s4;
-        let l2 = lambda2 * lambda2;
+        let p = HpPowers::new(hp);
+        // same `n * (1/sigma2)` form as `evaluate` (an `n / sigma2`
+        // division here would differ in the last ulp and break the
+        // machine-precision agreement between the two paths)
+        let inv_s2 = 1.0 / p.sigma2;
         let (mut gs, mut gl) = (0.0, 0.0);
         for (&s, &y2) in self.s.iter().zip(&self.y2t) {
-            let ls = lambda2 * s;
-            let a = sigma2 + ls;
-            let b = sigma2 + ls + ls;
+            let ls = p.lambda2 * s;
+            let a = p.sigma2 + ls;
+            let b = p.sigma2 + ls + ls;
             let inv_a = 1.0 / a;
             let inv_b = 1.0 / b;
-            let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
-            let dlogd_ds = inv_b - inv_a;
-            let dlogd_dl = s * sigma2 * inv_a * inv_b;
-            let dg_ds = -4.0 * inv_s4 - (s4 * s4 - 2.0 * l2 * s * s * s4) * inv_s4 * ia2 * ib2;
-            let dg_dl = s * (ia2 - 4.0 * ib2);
-            gs += dlogd_ds + y2 * dg_ds;
-            gl += dlogd_dl + y2 * dg_dl;
+            let fo = first_order(&p, s, inv_a, inv_b);
+            gs += fo.dlogd_ds + y2 * fo.dg_ds;
+            gl += fo.dlogd_dl + y2 * fo.dg_dl;
         }
-        [self.n as f64 / sigma2 + 4.0 * self.yy * inv_s4 + gs, gl]
+        [self.n as f64 * inv_s2 + 4.0 * self.yy * p.inv_s4 + gs, gl]
     }
 
     /// Propositions 2.1-2.3 in one pass. O(N).
@@ -136,64 +276,91 @@ impl EigenSystem {
     /// non-negative powers of them, and `sum ln d_i` uses the same
     /// chunked-product trick as [`score`].
     pub fn evaluate(&self, hp: HyperParams) -> Evaluation {
-        let HyperParams { sigma2, lambda2 } = hp;
-        let s4 = sigma2 * sigma2;
-        let s6 = s4 * sigma2;
-        let (inv_s2, inv_s4, inv_s6) = (1.0 / sigma2, 1.0 / s4, 1.0 / s6);
+        let p = HpPowers::new(hp);
+        let inv_s2 = 1.0 / p.sigma2;
         let nf = self.n as f64;
-        let l2 = lambda2 * lambda2;
         let (mut c0, mut c1, mut c2, mut c3, mut c4, mut c5) = (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
         let mut log_acc = 0.0;
         let mut prod_d = 1.0f64;
         for (chunk_s, chunk_y2) in self.s.chunks(512).zip(self.y2t.chunks(512)) {
             for (&s, &y2) in chunk_s.iter().zip(chunk_y2) {
-                let ls = lambda2 * s;
-                let a = sigma2 + ls;
-                let b = sigma2 + ls + ls;
+                let ls = p.lambda2 * s;
+                let a = p.sigma2 + ls;
+                let b = p.sigma2 + ls + ls;
                 // two independent divisions pipeline better than the
                 // 1/(ab) trick (measured; EXPERIMENTS.md §Perf)
                 let inv_a = 1.0 / a;
                 let inv_b = 1.0 / b;
-                let (ia2, ib2) = (inv_a * inv_a, inv_b * inv_b);
-                let (ia3, ib3) = (ia2 * inv_a, ib2 * inv_b);
-                let s2 = s * s;
 
                 // score terms: d = b/a in (1,2]; g = (b^2+4a^2)/(sigma2 a b)
                 prod_d *= b * inv_a;
                 c0 += y2 * ((b * b + 4.0 * a * a) * inv_a * inv_b);
 
-                // first derivatives (eqs. 22-25)
-                let dlogd_ds = inv_b - inv_a;
-                let dlogd_dl = s * sigma2 * inv_a * inv_b;
-                let dg_ds = -4.0 * inv_s4 - (s4 * s4 - 2.0 * l2 * s2 * s4) * inv_s4 * ia2 * ib2;
-                let dg_dl = s * ia2 - 4.0 * s * ib2;
-                c1 += dlogd_ds + y2 * dg_ds;
-                c2 += dlogd_dl + y2 * dg_dl;
+                // first derivatives (eqs. 22-25): the same helper `grad`
+                // uses, so the fused and standalone Jacobians cannot
+                // diverge structurally.
+                let fo = first_order(&p, s, inv_a, inv_b);
+                c1 += fo.dlogd_ds + y2 * fo.dg_ds;
+                c2 += fo.dlogd_dl + y2 * fo.dg_dl;
 
                 // second derivatives (eqs. 30-35)
-                let d2logd_ss = ia2 - ib2;
-                let d2logd_sl = s * (ia2 - 2.0 * ib2);
-                let d2logd_ll = s2 * (ia2 - 4.0 * ib2);
-                let d2g_ss = 8.0 * inv_s6
-                    - (12.0 * l2 * lambda2 * s2 * s * s6 + 12.0 * l2 * s2 * s4 * s4
-                        - 2.0 * s6 * s6)
-                        * inv_s6
-                        * ia3
-                        * ib3;
-                let d2g_sl = s * (8.0 * ib3 - 2.0 * ia3);
-                let d2g_ll = s2 * (16.0 * ib3 - 2.0 * ia3);
-                c3 += d2logd_ss + y2 * d2g_ss;
-                c4 += d2logd_sl + y2 * d2g_sl;
-                c5 += d2logd_ll + y2 * d2g_ll;
+                let so = second_order(&p, s, inv_a, inv_b);
+                c3 += so.d2logd_ss + y2 * so.d2g_ss;
+                c4 += so.d2logd_sl + y2 * so.d2g_sl;
+                c5 += so.d2logd_ll + y2 * so.d2g_ll;
             }
             log_acc += prod_d.ln();
             prod_d = 1.0;
         }
-        let score = nf * sigma2.ln() + log_acc + c0 * inv_s2 - 4.0 * self.yy * inv_s2;
-        let j_s = nf * inv_s2 + 4.0 * self.yy * inv_s4 + c1;
+        let score = nf * p.sigma2.ln() + log_acc + c0 * inv_s2 - 4.0 * self.yy * inv_s2;
+        let j_s = nf * inv_s2 + 4.0 * self.yy * p.inv_s4 + c1;
         let j_l = c2;
-        let h_ss = -nf * inv_s4 - 8.0 * self.yy * inv_s6 + c3;
+        let h_ss = -nf * p.inv_s4 - 8.0 * self.yy * p.inv_s6 + c3;
         Evaluation { score, jac: [j_s, j_l], hess: [[h_ss, c4], [c4, c5]] }
+    }
+
+    /// The cancellation noise floor of [`evaluate`](Self::evaluate): the
+    /// same sums with every summand — including the `4 y'y / sigma^2`
+    /// family of closure constants — replaced by the sum of its
+    /// *constituent* magnitudes (differences like `1/a^2 - 4/b^2` count
+    /// as `1/a^2 + 4/b^2`; see [`first_order_mag`]).
+    ///
+    /// The output is *not* a derivative.  It is the magnitude each
+    /// quantity's rounding error scales with: the score and dL/dsigma2
+    /// subtract O(y'y/sigma^2) terms that cancel almost exactly near the
+    /// sigma2 -> 0 boundary, so a relative comparison of two evaluators
+    /// must be anchored to these magnitudes rather than to the (much
+    /// smaller) final values.  Used by [`crate::verify`].
+    pub fn evaluate_magnitudes(&self, hp: HyperParams) -> Evaluation {
+        let p = HpPowers::new(hp);
+        let inv_s2 = 1.0 / p.sigma2;
+        let nf = self.n as f64;
+        let (mut c0, mut c1, mut c2, mut c3, mut c4, mut c5) = (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        let mut log_acc = 0.0;
+        for (&s, &y2) in self.s.iter().zip(&self.y2t) {
+            let ls = p.lambda2 * s;
+            let a = p.sigma2 + ls;
+            let b = p.sigma2 + ls + ls;
+            let inv_a = 1.0 / a;
+            let inv_b = 1.0 / b;
+            log_acc += (b * inv_a).ln().abs();
+            c0 += y2 * ((b * b + 4.0 * a * a) * inv_a * inv_b);
+            let fo = first_order_mag(&p, s, inv_a, inv_b);
+            c1 += fo.dlogd_ds + y2 * fo.dg_ds;
+            c2 += fo.dlogd_dl + y2 * fo.dg_dl;
+            let so = second_order_mag(&p, s, inv_a, inv_b);
+            c3 += so.d2logd_ss + y2 * so.d2g_ss;
+            c4 += so.d2logd_sl + y2 * so.d2g_sl;
+            c5 += so.d2logd_ll + y2 * so.d2g_ll;
+        }
+        Evaluation {
+            score: nf * p.sigma2.ln().abs() + log_acc + c0 * inv_s2 + 4.0 * self.yy * inv_s2,
+            jac: [nf * inv_s2 + 4.0 * self.yy * p.inv_s4 + c1, c2],
+            hess: [
+                [nf * p.inv_s4 + 8.0 * self.yy * p.inv_s6 + c3, c4],
+                [c4, c5],
+            ],
+        }
     }
 
     /// Merge the six raw kernel sums (the PJRT `fused` artifact output is
@@ -498,6 +665,96 @@ mod tests {
         let raw = padded.evidence(hp);
         let corrected = raw - 10.0 * hp.sigma2.ln();
         assert!((corrected - es.evidence(hp)).abs() < 1e-10);
+    }
+
+    /// ulp distance between two finite f64s (0 == bitwise identical).
+    fn ulp_distance(a: f64, b: f64) -> u64 {
+        let to_ordered = |x: f64| {
+            let bits = x.to_bits() as i64;
+            if bits < 0 {
+                i64::MIN.wrapping_sub(bits)
+            } else {
+                bits
+            }
+        };
+        to_ordered(a).abs_diff(to_ordered(b))
+    }
+
+    #[test]
+    fn grad_and_evaluate_jacobians_agree_to_machine_precision() {
+        // `grad` and `evaluate` share the `first_order` helper and the
+        // same accumulation order, so their Jacobians must agree to a few
+        // ulps even under cancellation-heavy hyperparameters and across
+        // the 512-element chunk boundary.  (The seed carried two
+        // hand-expanded variants that drifted ~1e-10 relative apart.)
+        forall(
+            "evaluate jac == grad (ulps)",
+            71,
+            20,
+            |r| {
+                let n = [5, 511, 512, 513, 1500][r.below(5)];
+                let es = sample_system(r, n);
+                let hp = HyperParams::new(
+                    10f64.powf(r.uniform_in(-3.0, 3.0)),
+                    10f64.powf(r.uniform_in(-3.0, 3.0)),
+                );
+                (es, hp)
+            },
+            |(es, hp)| {
+                let ev = es.evaluate(*hp);
+                let g = es.grad(*hp);
+                for i in 0..2 {
+                    let d = ulp_distance(ev.jac[i], g[i]);
+                    if d > 4 {
+                        return Err(format!(
+                            "jac[{i}]: {:.17e} vs {:.17e} ({d} ulps apart)",
+                            ev.jac[i], g[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn derivatives_finite_for_extreme_but_feasible_hyperparams() {
+        // Regression for the seed's sigma^8 (grad) and sigma^12 (Hessian)
+        // intermediates, which overflowed to inf — NaN after the
+        // subtraction — for sigma2 >~ 1e77 / 1e51 respectively, even
+        // though constraint (13) allows any sigma2 > 0.  The bounded
+        // u/v rewrites stay finite wherever the true values (and the
+        // score's b^2 chunk trick, good to sigma2/lambda2*s ~ 1e154)
+        // are representable in f64.
+        let mut rng = crate::util::rng::Rng::new(90);
+        let es = sample_system(&mut rng, 32);
+        for &s2 in &[1e-100, 1e-30, 1e-6, 1.0, 1e40, 1e80, 1e100, 1e150] {
+            for &l2 in &[1e-30, 1.0, 1e30] {
+                let hp = HyperParams::new(s2, l2);
+                assert!(hp.feasible());
+                let g = es.grad(hp);
+                assert!(
+                    g[0].is_finite() && g[1].is_finite(),
+                    "grad not finite at sigma2={s2:e} lambda2={l2:e}: {g:?}"
+                );
+                let ev = es.evaluate(hp);
+                assert!(ev.score.is_finite(), "score at sigma2={s2:e} lambda2={l2:e}");
+                for i in 0..2 {
+                    assert!(
+                        ev.jac[i].is_finite(),
+                        "jac[{i}] at sigma2={s2:e} lambda2={l2:e}: {:?}",
+                        ev.jac
+                    );
+                    for j in 0..2 {
+                        assert!(
+                            ev.hess[i][j].is_finite(),
+                            "hess[{i}][{j}] at sigma2={s2:e} lambda2={l2:e}: {:?}",
+                            ev.hess
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Centered finite-difference oracles with relative steps and explicit
+//! error bounds.
+//!
+//! Every derivative here is taken with respect to a strictly positive
+//! hyperparameter, so steps are *relative* (`h = eps^(1/3) x`) — an
+//! absolute step would either vanish against large `x` or cross the
+//! feasibility boundary (13) for small `x`.
+//!
+//! The [`FdEstimate::err`] bound matters as much as the value: near the
+//! `sigma2 -> 0` boundary the score's rounding noise scales with the
+//! *cancellation magnitude* `~ 4 y'y / sigma2`
+//! ([`EigenSystem::evaluate_magnitudes`]), not with the score itself, and
+//! a differential check that ignores this either rejects correct code or
+//! silently tests nothing.  Callers pass that magnitude in; the bound
+//! combines the roundoff term `eps * mag / h` with an `O(h^2)` truncation
+//! scale.
+//!
+//! [`EigenSystem::evaluate_magnitudes`]: crate::spectral::EigenSystem::evaluate_magnitudes
+
+use crate::spectral::HyperParams;
+
+/// A derivative estimate plus a conservative bound on its own error.
+#[derive(Clone, Copy, Debug)]
+pub struct FdEstimate {
+    pub value: f64,
+    /// Conservative bound on `|value - true derivative|`.
+    pub err: f64,
+}
+
+/// Central difference `df/dx` at `x > 0` with step `h = eps^(1/3) x`.
+///
+/// `mag` is the rounding magnitude of `f` evaluations (pass `|f(x)|` for
+/// well-conditioned objectives, or the cancellation magnitude for sums
+/// with cancelling terms).
+pub fn central<F: Fn(f64) -> f64>(f: F, x: f64, mag: f64) -> FdEstimate {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let h = f64::EPSILON.cbrt() * x;
+    let xp = x + h;
+    let xm = x - h;
+    let fp = f(xp);
+    let fm = f(xm);
+    let width = xp - xm; // exact in f64; may differ from 2h in the last ulp
+    let value = (fp - fm) / width;
+    let round_mag = mag.max(fp.abs()).max(fm.abs());
+    let trunc_scale = value.abs().max(round_mag / x);
+    let err = 2.0 * f64::EPSILON * round_mag / width
+        + 10.0 * f64::EPSILON.powf(2.0 / 3.0) * trunc_scale;
+    FdEstimate { value, err }
+}
+
+/// Gradient of a scalar objective over `(sigma2, lambda2)`.
+/// `mag` is the rounding magnitude of `f` (see [`central`]).
+pub fn grad_of<F: Fn(HyperParams) -> f64>(f: F, hp: HyperParams, mag: f64) -> [FdEstimate; 2] {
+    [
+        central(|s2| f(HyperParams::new(s2, hp.lambda2)), hp.sigma2, mag),
+        central(|l2| f(HyperParams::new(hp.sigma2, l2)), hp.lambda2, mag),
+    ]
+}
+
+/// Jacobian of a 2-vector function (e.g. a closed-form gradient) over
+/// `(sigma2, lambda2)`: `out[i][j] = d g_j / d theta_i` with `theta_0 =
+/// sigma2`, `theta_1 = lambda2`.  For `g = grad L` this is the Hessian
+/// estimate, where `out[0][1]` and `out[1][0]` independently approximate
+/// the mixed partial.  `mags[j]` is the rounding magnitude of `g_j`.
+pub fn jac_of<G: Fn(HyperParams) -> [f64; 2]>(
+    g: G,
+    hp: HyperParams,
+    mags: [f64; 2],
+) -> [[FdEstimate; 2]; 2] {
+    let component = |axis: usize, j: usize| -> FdEstimate {
+        let f = |t: f64| {
+            let p = match axis {
+                0 => HyperParams::new(t, hp.lambda2),
+                _ => HyperParams::new(hp.sigma2, t),
+            };
+            g(p)[j]
+        };
+        let x = if axis == 0 { hp.sigma2 } else { hp.lambda2 };
+        central(f, x, mags[j])
+    };
+    [
+        [component(0, 0), component(0, 1)],
+        [component(1, 0), component(1, 1)],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn central_recovers_polynomial_derivative() {
+        // f(x) = x^3 - 2x, f'(2) = 10
+        let est = central(|x| x * x * x - 2.0 * x, 2.0, 4.0);
+        assert!((est.value - 10.0).abs() < 1e-8, "{est:?}");
+        assert!((est.value - 10.0).abs() <= est.err, "error bound too tight: {est:?}");
+    }
+
+    #[test]
+    fn central_error_bound_honest_on_log() {
+        for &x in &[1e-8, 1e-3, 1.0, 1e5] {
+            let est = central(|t| t.ln(), x, x.ln().abs().max(1.0));
+            let truth = 1.0 / x;
+            assert!(
+                (est.value - truth).abs() <= est.err.max(1e-9 * truth.abs()),
+                "x={x}: {est:?} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_of_matches_known_gradient() {
+        // f = sigma2^2 * lambda2, df/ds2 = 2 s2 l2, df/dl2 = s2^2
+        let hp = HyperParams::new(1.5, 0.7);
+        let g = grad_of(|h| h.sigma2 * h.sigma2 * h.lambda2, hp, 2.0);
+        assert!((g[0].value - 2.0 * 1.5 * 0.7).abs() < 1e-7, "{:?}", g[0]);
+        assert!((g[1].value - 1.5 * 1.5).abs() < 1e-7, "{:?}", g[1]);
+    }
+
+    #[test]
+    fn jac_of_mixed_partials_symmetric() {
+        // g = grad of f = s2^2 l2 + s2 l2^2 (exact closed form)
+        let g = |h: HyperParams| {
+            [
+                2.0 * h.sigma2 * h.lambda2 + h.lambda2 * h.lambda2,
+                h.sigma2 * h.sigma2 + 2.0 * h.sigma2 * h.lambda2,
+            ]
+        };
+        let hp = HyperParams::new(0.8, 1.3);
+        let m = jac_of(g, hp, [3.0, 3.0]);
+        // true mixed partial: 2 s2 + 2 l2
+        let truth = 2.0 * hp.sigma2 + 2.0 * hp.lambda2;
+        assert!((m[0][1].value - truth).abs() < 1e-6, "{:?}", m[0][1]);
+        assert!((m[1][0].value - truth).abs() < 1e-6, "{:?}", m[1][0]);
+        assert!((m[0][1].value - m[1][0].value).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,599 @@
+//! Differential-verification subsystem (DESIGN.md §4) — the permanent
+//! regression gate for the paper's Propositions 2.1–2.3.
+//!
+//! The paper's entire contribution is an *exactness* claim: after one
+//! O(N^3) eigendecomposition, the O(N) spectral forms of the score
+//! (eq. 19), Jacobian (eqs. 20–25) and Hessian (eqs. 26–35) equal the
+//! naive O(N^3) quantities — not approximately, identically.  This module
+//! turns that claim into an executable contract, cross-checking over
+//! randomized kernels, targets and hyperparameter grids:
+//!
+//! - [`check_against_naive`] — spectral score/Jacobian vs the dense
+//!   [`NaiveEvaluator`] (eq. 15 Cholesky form *and* the eq. 16 rewrite).
+//! - [`check_against_fd`] — closed-form Jacobian vs finite differences of
+//!   the score; closed-form Hessian vs finite differences of the
+//!   gradient, including both mixed partials.
+//! - [`check_hessian_against_naive_fd`] — spectral Hessian vs finite
+//!   differences of the *naive* trace-identity gradient, closing the loop
+//!   through the O(N^3) path.
+//! - [`check_internal`] — the fused [`EigenSystem::evaluate`] pass vs the
+//!   standalone `score`/`grad` paths (machine-precision agreement; they
+//!   share per-element helpers) and Hessian symmetry.
+//!
+//! ## Tolerance model
+//!
+//! Near the constraint-(13) boundary `sigma2 -> 0+` the score subtracts
+//! `O(y'y/sigma2)` terms that cancel almost exactly, so "relative error"
+//! must be anchored to the *cancellation magnitude*
+//! ([`EigenSystem::evaluate_magnitudes`]), and the dense baseline's own
+//! backward error grows with `kappa(K + (sigma2/lambda2) I)`.  Every
+//! tolerance here is therefore `rtol * |value| + O(N eps) * magnitude`,
+//! plus — for dense comparisons — `O(eps kappa) * |value|` and an
+//! eigen-representation term `O(eps s_max)` propagated through the
+//! per-eigenvalue sensitivities (binding for rank-deficient kernels,
+//! where the two paths see different numerical null spaces).  Tight
+//! (1e-7 relative) on the well-conditioned interior, honestly widened
+//! where f64 itself loses the digits.  Suite grids include the
+//! near-boundary region down to `sigma2 = 1e-8`.
+//!
+//! Every future perf refactor of `spectral`, `naive` or `linalg` is gated
+//! on [`differential_suite`] / [`random_triples_suite`] through
+//! `rust/tests/verify_differential.rs` (wired into `cargo test`).
+
+pub mod fd;
+
+use crate::kernelfn::{self, Kernel};
+use crate::linalg::{Matrix, SymEigen};
+use crate::naive::NaiveEvaluator;
+use crate::spectral::{EigenSystem, Evaluation, HyperParams};
+use crate::util::rng::Rng;
+
+/// One failed check: a quantity whose two computations disagree beyond
+/// tolerance (or came out non-finite).
+#[derive(Clone, Debug)]
+pub struct Discrepancy {
+    pub quantity: String,
+    pub context: String,
+    pub got: f64,
+    pub want: f64,
+    pub tolerance: f64,
+    /// |got - want| / max(|got|, |want|).
+    pub rel_err: f64,
+}
+
+/// Outcome of a verification run: counters plus every discrepancy found.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub cases: usize,
+    pub checks: usize,
+    pub discrepancies: Vec<Discrepancy>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.discrepancies.is_empty()
+    }
+
+    pub fn merge(&mut self, other: VerifyReport) {
+        self.cases += other.cases;
+        self.checks += other.checks;
+        self.discrepancies.extend(other.discrepancies);
+    }
+
+    /// Human-readable digest (counts plus the first discrepancies).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} cases, {} checks, {} discrepancies",
+            self.cases,
+            self.checks,
+            self.discrepancies.len()
+        );
+        for d in self.discrepancies.iter().take(10) {
+            s.push_str(&format!(
+                "\n  [{}] {}: got {:.17e} want {:.17e} (|diff| {:.3e} > tol {:.3e}, rel {:.3e})",
+                d.context,
+                d.quantity,
+                d.got,
+                d.want,
+                (d.got - d.want).abs(),
+                d.tolerance,
+                d.rel_err
+            ));
+        }
+        if self.discrepancies.len() > 10 {
+            s.push_str(&format!("\n  ... and {} more", self.discrepancies.len() - 10));
+        }
+        s
+    }
+
+    /// Record one comparison.  Non-finite values always fail.
+    fn check(&mut self, ctx: &str, quantity: &str, got: f64, want: f64, tolerance: f64) {
+        self.checks += 1;
+        let diff = (got - want).abs();
+        let pass = got.is_finite() && want.is_finite() && diff <= tolerance;
+        if !pass {
+            self.discrepancies.push(Discrepancy {
+                quantity: quantity.to_string(),
+                context: ctx.to_string(),
+                got,
+                want,
+                tolerance,
+                rel_err: diff / got.abs().max(want.abs()).max(f64::MIN_POSITIVE),
+            });
+        }
+    }
+}
+
+/// Summation noise floor: `O(N eps)` times the cancellation magnitude of
+/// the quantity (see the module docs).  `.abs()` guards against a
+/// degenerate magnitude going negative outside the evaluator's domain
+/// (e.g. `lambda2 |s_noise| > sigma2` flipping `a` negative) — a
+/// tolerance must never be negative.
+fn noise_floor(n: usize, magnitude: f64) -> f64 {
+    32.0 * (n.max(8) as f64) * f64::EPSILON * magnitude.abs()
+}
+
+/// Condition number proxy of the dense path's factorizations:
+/// `kappa(K + (sigma2/lambda2) I) ~ 1 + s_max lambda2 / sigma2`.
+fn dense_condition(es: &EigenSystem, hp: HyperParams) -> f64 {
+    let s_max = es.s.last().copied().unwrap_or(0.0).max(0.0);
+    1.0 + s_max * hp.lambda2 / hp.sigma2
+}
+
+/// Noise from the two paths seeing *different* numerical representations
+/// of K: the spectral side works with eigh(K)'s eigenvalues, the dense
+/// side with K itself, and the two agree only to O(eps s_max).  That
+/// perturbation propagates through the per-eigenvalue sensitivities
+/// `dq/ds_i` — dominated by the null modes, where they reduce to the
+/// next-derivative-level magnitudes below (rank-deficient kernels such
+/// as linear/polynomial make this the binding term).
+struct EigenReprNoise {
+    score: f64,
+    jac: [f64; 2],
+}
+
+fn eigen_repr_noise(es: &EigenSystem, hp: HyperParams, mags: &Evaluation) -> EigenReprNoise {
+    let s_max = es.s.last().copied().unwrap_or(0.0).max(0.0);
+    let c = 64.0 * f64::EPSILON * s_max;
+    EigenReprNoise {
+        score: c * hp.lambda2 * mags.jac[0].abs(),
+        jac: [
+            c * hp.lambda2 * mags.hess[0][0].abs(),
+            c * (mags.jac[0].abs() + hp.lambda2 * mags.hess[0][1].abs()),
+        ],
+    }
+}
+
+/// Tolerance for a closed-form vs dense-O(N^3) comparison.
+fn naive_tolerance(
+    es: &EigenSystem,
+    hp: HyperParams,
+    rtol: f64,
+    scale: f64,
+    mag: f64,
+    repr_noise: f64,
+) -> f64 {
+    rtol * scale
+        + noise_floor(es.n, mag)
+        + 8.0 * f64::EPSILON * dense_condition(es, hp) * scale
+        + repr_noise
+}
+
+/// Fused-pass vs standalone-path consistency plus Hessian symmetry.
+///
+/// `grad` and `evaluate` share one per-element transcription and one
+/// accumulation order, so their Jacobians agree to the summation noise
+/// floor (in practice: bit-identically); the score paths differ only in
+/// the reciprocal rewrite and stay within the same floor.
+pub fn check_internal(es: &EigenSystem, hp: HyperParams, ctx: &str, report: &mut VerifyReport) {
+    let ev = es.evaluate(hp);
+    let mags = es.evaluate_magnitudes(hp);
+    let sc = es.score(hp);
+    let g = es.grad(hp);
+    report.check(ctx, "evaluate.score vs score()", ev.score, sc, noise_floor(es.n, mags.score));
+    for i in 0..2 {
+        let name = ["evaluate.jac[0] vs grad()[0]", "evaluate.jac[1] vs grad()[1]"][i];
+        report.check(ctx, name, ev.jac[i], g[i], noise_floor(es.n, mags.jac[i]));
+    }
+    report.check(ctx, "hess symmetry (stored)", ev.hess[0][1], ev.hess[1][0], 0.0);
+}
+
+/// Spectral O(N) score/Jacobian vs the dense O(N^3) evaluator — the
+/// paper's central exactness claim (Props. 2.1–2.2).
+pub fn check_against_naive(
+    es: &EigenSystem,
+    naive: &NaiveEvaluator,
+    hp: HyperParams,
+    rtol: f64,
+    ctx: &str,
+    report: &mut VerifyReport,
+) {
+    let mags = es.evaluate_magnitudes(hp);
+    let repr = eigen_repr_noise(es, hp, &mags);
+    let sc = es.score(hp);
+    let g = es.grad(hp);
+
+    let naive_sc = naive.score(hp);
+    let scale = naive_sc.abs().max(sc.abs());
+    report.check(
+        ctx,
+        "score: naive eq.15 vs spectral eq.19",
+        naive_sc,
+        sc,
+        naive_tolerance(es, hp, rtol, scale, mags.score, repr.score),
+    );
+
+    let (naive_sc16, ng) = naive.score_grad(hp);
+    report.check(
+        ctx,
+        "score: naive eq.16 vs spectral eq.19",
+        naive_sc16,
+        sc,
+        naive_tolerance(es, hp, rtol, naive_sc16.abs().max(sc.abs()), mags.score, repr.score),
+    );
+    report.check(
+        ctx,
+        "dL/dsigma2: naive trace vs spectral eq.20",
+        ng[0],
+        g[0],
+        naive_tolerance(es, hp, rtol, ng[0].abs().max(g[0].abs()), mags.jac[0], repr.jac[0]),
+    );
+    report.check(
+        ctx,
+        "dL/dlambda2: naive trace vs spectral eq.21",
+        ng[1],
+        g[1],
+        naive_tolerance(es, hp, rtol, ng[1].abs().max(g[1].abs()), mags.jac[1], repr.jac[1]),
+    );
+}
+
+/// Closed-form Jacobian vs central differences of the score, and
+/// closed-form Hessian vs central differences of the gradient (both mixed
+/// partials independently), with fd error bounds folded into tolerances.
+pub fn check_against_fd(
+    es: &EigenSystem,
+    hp: HyperParams,
+    rtol: f64,
+    ctx: &str,
+    report: &mut VerifyReport,
+) {
+    let mags = es.evaluate_magnitudes(hp);
+    // The fd oracle's roundoff bound is anchored to N * magnitude: the
+    // worst-case rounding error of an N-term sum is (N-1) eps Sum|t_i|
+    // (the standard recursive-summation bound), and the observed error
+    // of the cancellation-heavy sums here comes within ~6% of it — this
+    // is a near-sharp bound, not slack.
+    let nf = es.n as f64;
+    let g = es.grad(hp);
+    let fd_g = fd::grad_of(|h| es.score(h), hp, nf * mags.score);
+    for (i, name) in ["dL/dsigma2 vs fd(score)", "dL/dlambda2 vs fd(score)"].iter().enumerate() {
+        let tol = rtol * g[i].abs().max(fd_g[i].value.abs())
+            + 8.0 * fd_g[i].err
+            + noise_floor(es.n, mags.jac[i]);
+        report.check(ctx, name, g[i], fd_g[i].value, tol);
+    }
+
+    let ev = es.evaluate(hp);
+    let fd_h = fd::jac_of(|h| es.grad(h), hp, [nf * mags.jac[0], nf * mags.jac[1]]);
+    // fd_h[i][j] approximates d g_j / d theta_i; Hessian H[i][j] = d g_j / d theta_i.
+    let pairs = [
+        (0usize, 0usize, "d2L/dsigma2^2 vs fd(grad)", mags.hess[0][0]),
+        (0, 1, "d2L/dsigma2 dlambda2 vs fd(grad)", mags.hess[0][1]),
+        (1, 0, "d2L/dlambda2 dsigma2 vs fd(grad)", mags.hess[1][0]),
+        (1, 1, "d2L/dlambda2^2 vs fd(grad)", mags.hess[1][1]),
+    ];
+    for (i, j, name, mag) in pairs {
+        let est = fd_h[i][j];
+        let tol = rtol * ev.hess[i][j].abs().max(est.value.abs())
+            + 8.0 * est.err
+            + noise_floor(es.n, mag);
+        report.check(ctx, name, ev.hess[i][j], est.value, tol);
+    }
+    // the two independent mixed-partial estimates must agree with each other
+    let (a, b) = (fd_h[0][1], fd_h[1][0]);
+    report.check(
+        ctx,
+        "fd mixed-partial symmetry",
+        a.value,
+        b.value,
+        rtol * a.value.abs().max(b.value.abs()) + 8.0 * (a.err + b.err),
+    );
+}
+
+/// Spectral Hessian vs central differences of the *naive* trace-identity
+/// gradient: the only check that ties eqs. 26–35 back to the O(N^3) path.
+/// The naive gradient's own `O(eps kappa)` backward error is amplified by
+/// `1/h`, so this is meaningful only on well-conditioned hyperparameters
+/// (the suites restrict to `sigma2 >= 1e-2`, `sigma2/lambda2 >= 1e-3`).
+pub fn check_hessian_against_naive_fd(
+    es: &EigenSystem,
+    naive: &NaiveEvaluator,
+    hp: HyperParams,
+    rtol: f64,
+    ctx: &str,
+    report: &mut VerifyReport,
+) {
+    let ev = es.evaluate(hp);
+    let mags = es.evaluate_magnitudes(hp);
+    let repr = eigen_repr_noise(es, hp, &mags);
+    let nf = es.n as f64;
+    let fd_h = fd::jac_of(
+        |h| naive.score_grad(h).1,
+        hp,
+        [nf * mags.jac[0], nf * mags.jac[1]],
+    );
+    let kappa = dense_condition(es, hp);
+    let step = f64::EPSILON.cbrt();
+    let pairs = [
+        (0usize, 0usize, "d2L/dsigma2^2 vs fd(naive grad)", hp.sigma2),
+        (0, 1, "d2L/dsigma2 dlambda2 vs fd(naive grad)", hp.sigma2),
+        (1, 0, "d2L/dlambda2 dsigma2 vs fd(naive grad)", hp.lambda2),
+        (1, 1, "d2L/dlambda2^2 vs fd(naive grad)", hp.lambda2),
+    ];
+    for (i, j, name, theta) in pairs {
+        let est = fd_h[i][j];
+        // extra noise: the dense gradient's backward error (conditioning
+        // plus eigen-representation mismatch) amplified over the step
+        let dense_noise =
+            (8.0 * f64::EPSILON * kappa * nf * mags.jac[j] + repr.jac[j]) / (step * theta);
+        let tol = rtol * ev.hess[i][j].abs().max(est.value.abs())
+            + 8.0 * est.err
+            + dense_noise
+            + noise_floor(es.n, mags.hess[i][j]);
+        report.check(ctx, name, ev.hess[i][j], est.value, tol);
+    }
+}
+
+/// Configuration for [`differential_suite`].
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    /// Dataset sizes (the O(N^3) baseline is evaluated at each).
+    pub sizes: Vec<usize>,
+    /// Independent (x, y) draws per size and kernel.
+    pub datasets_per_size: usize,
+    pub kernels: Vec<Kernel>,
+    /// sigma2 grid; spans eq. (13)'s feasible region including the
+    /// near-boundary sigma2 -> 0+ points (fd/internal checks run on all
+    /// of it; the dense cross-check is conditioning-gated, see below).
+    pub sigma2_grid: Vec<f64>,
+    pub lambda2_grid: Vec<f64>,
+    /// Base relative tolerance of every comparison (default 1e-7).
+    pub rtol: f64,
+    pub seed: u64,
+    /// Dense O(N^3) cross-checks require `sigma2/lambda2` (the ridge the
+    /// dense path factorizes with) at or above this floor — below it the
+    /// baseline itself, not the identities, loses the digits.
+    pub naive_conditioning_floor: f64,
+    /// Hessian-vs-fd(naive grad) checks run only for N up to this size.
+    pub hess_naive_fd_max_n: usize,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            sizes: vec![8, 32, 128],
+            datasets_per_size: 2,
+            kernels: vec![Kernel::Rbf { xi2: 1.5 }, Kernel::Matern32 { ell: 0.8 }],
+            sigma2_grid: vec![1e-8, 1e-6, 1e-4, 1e-2, 0.3, 1.0, 10.0, 1e3],
+            lambda2_grid: vec![1e-2, 0.3, 1.0, 10.0],
+            rtol: 1e-7,
+            seed: 0x5eed_0001,
+            naive_conditioning_floor: 1e-6,
+            hess_naive_fd_max_n: 32,
+        }
+    }
+}
+
+/// Run the full differential grid: every (size, dataset, kernel,
+/// hyperparameter) combination through all applicable checks.
+pub fn differential_suite(cfg: &SuiteConfig) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    let mut rng = Rng::new(cfg.seed);
+    for &n in &cfg.sizes {
+        for dataset in 0..cfg.datasets_per_size {
+            for &kernel in &cfg.kernels {
+                let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+                let y = rng.normal_vec(n);
+                let k = kernelfn::gram(kernel, &x);
+                let eigen = match SymEigen::new(&k) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        report.check(
+                            &format!("N={n} kernel={kernel:?} dataset={dataset}"),
+                            &format!("eigendecomposition ({e})"),
+                            f64::NAN,
+                            0.0,
+                            0.0,
+                        );
+                        continue;
+                    }
+                };
+                let es = EigenSystem::new(&eigen, &y);
+                let naive = NaiveEvaluator::new(k, y.clone());
+                for &s2 in &cfg.sigma2_grid {
+                    for &l2 in &cfg.lambda2_grid {
+                        let hp = HyperParams::new(s2, l2);
+                        let ctx = format!(
+                            "N={n} kernel={kernel:?} dataset={dataset} hp=({s2:.1e},{l2:.1e})"
+                        );
+                        report.cases += 1;
+                        check_internal(&es, hp, &ctx, &mut report);
+                        check_against_fd(&es, hp, cfg.rtol, &ctx, &mut report);
+                        if s2 / l2 >= cfg.naive_conditioning_floor {
+                            check_against_naive(&es, &naive, hp, cfg.rtol, &ctx, &mut report);
+                            if n <= cfg.hess_naive_fd_max_n && s2 >= 1e-2 && s2 / l2 >= 1e-3 {
+                                check_hessian_against_naive_fd(
+                                    &es, &naive, hp, cfg.rtol, &ctx, &mut report,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Property-style sweep: `count` random (kernel, y, hyperparameter)
+/// triples, each cross-checked naive vs spectral, against finite
+/// differences, and for Hessian symmetry.
+///
+/// ```
+/// let report = gpml::verify::random_triples_suite(3, 7);
+/// assert!(report.ok(), "{}", report.summary());
+/// ```
+pub fn random_triples_suite(count: usize, seed: u64) -> VerifyReport {
+    let kernels = [
+        Kernel::Rbf { xi2: 1.0 },
+        Kernel::Rbf { xi2: 2.5 },
+        Kernel::Matern32 { ell: 0.7 },
+        Kernel::Matern52 { ell: 1.2 },
+        Kernel::Polynomial { degree: 2 },
+        Kernel::Linear,
+    ];
+    let mut report = VerifyReport::default();
+    let mut rng = Rng::new(seed);
+    let rtol = 1e-7;
+    for i in 0..count {
+        let n = 8 + rng.below(41); // 8..=48
+        let p = 1 + rng.below(4);
+        let kernel = kernels[rng.below(kernels.len())];
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+        let k = kernelfn::gram(kernel, &x);
+        let eigen = match SymEigen::new(&k) {
+            Ok(e) => e,
+            Err(e) => {
+                report.check(
+                    &format!("triple {i}: N={n} P={p} kernel={kernel:?}"),
+                    &format!("eigendecomposition ({e})"),
+                    f64::NAN,
+                    0.0,
+                    0.0,
+                );
+                continue;
+            }
+        };
+        let es = EigenSystem::new(&eigen, &y);
+        let naive = NaiveEvaluator::new(k, y.clone());
+        // log-uniform hyperparameters, floored so the dense baseline's
+        // ridge sigma2/lambda2 stays within its conditioning range
+        let l2 = 10f64.powf(rng.uniform_in(-2.0, 2.0));
+        let s2 = 10f64.powf(rng.uniform_in(-5.0, 3.0)).max(1e-6 * l2);
+        let hp = HyperParams::new(s2, l2);
+        let ctx =
+            format!("triple {i}: N={n} P={p} kernel={kernel:?} hp=({s2:.2e},{l2:.2e})");
+        report.cases += 1;
+        check_internal(&es, hp, &ctx, &mut report);
+        check_against_naive(&es, &naive, hp, rtol, &ctx, &mut report);
+        check_against_fd(&es, hp, rtol, &ctx, &mut report);
+        if n <= 32 && s2 >= 1e-2 && s2 / l2 >= 1e-3 {
+            check_hessian_against_naive_fd(&es, &naive, hp, rtol, &ctx, &mut report);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pair(n: usize, seed: u64) -> (EigenSystem, NaiveEvaluator) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+        let k = kernelfn::gram(Kernel::Rbf { xi2: 1.5 }, &x);
+        let eigen = SymEigen::new(&k).unwrap();
+        let es = EigenSystem::new(&eigen, &y);
+        (es, NaiveEvaluator::new(k, y))
+    }
+
+    #[test]
+    fn clean_system_produces_clean_report() {
+        let (es, naive) = small_pair(20, 1);
+        let mut report = VerifyReport::default();
+        for hp in [HyperParams::new(0.5, 1.0), HyperParams::new(2.0, 0.3)] {
+            check_internal(&es, hp, "t", &mut report);
+            check_against_naive(&es, &naive, hp, 1e-7, "t", &mut report);
+            check_against_fd(&es, hp, 1e-7, "t", &mut report);
+            check_hessian_against_naive_fd(&es, &naive, hp, 1e-7, "t", &mut report);
+        }
+        assert!(report.ok(), "{}", report.summary());
+        assert!(report.checks >= 30);
+    }
+
+    #[test]
+    fn harness_detects_a_planted_identity_bug() {
+        // Corrupt one squared projection by 0.1% — the kind of silent
+        // transcription error the subsystem exists to catch.
+        let (es, naive) = small_pair(20, 2);
+        let mut broken = es.clone();
+        broken.y2t[10] *= 1.001;
+        let mut report = VerifyReport::default();
+        let hp = HyperParams::new(0.5, 1.0);
+        check_against_naive(&broken, &naive, hp, 1e-7, "planted", &mut report);
+        assert!(!report.ok(), "planted bug went undetected");
+    }
+
+    #[test]
+    fn harness_detects_a_planted_constant_term_bug() {
+        // Corrupt the y'y closure scalar: shifts score and dL/dsigma2
+        // but not dL/dlambda2 — exactly the `- 4 y'y / sigma2` term the
+        // ISSUE calls out.
+        let (es, naive) = small_pair(16, 3);
+        let mut broken = es.clone();
+        broken.yy *= 1.0 + 1e-5;
+        let mut report = VerifyReport::default();
+        let hp = HyperParams::new(0.3, 1.0);
+        check_against_naive(&broken, &naive, hp, 1e-7, "planted", &mut report);
+        assert!(
+            report.discrepancies.iter().any(|d| d.quantity.contains("score")),
+            "{}",
+            report.summary()
+        );
+    }
+
+    #[test]
+    fn report_summary_lists_discrepancies() {
+        let mut report = VerifyReport::default();
+        report.check("ctx", "thing", 1.0, 2.0, 1e-9);
+        assert!(!report.ok());
+        let s = report.summary();
+        assert!(s.contains("thing") && s.contains("ctx"), "{s}");
+        assert_eq!(report.checks, 1);
+    }
+
+    #[test]
+    fn non_finite_values_always_fail() {
+        let mut report = VerifyReport::default();
+        report.check("ctx", "nan", f64::NAN, f64::NAN, f64::INFINITY);
+        report.check("ctx", "inf", f64::INFINITY, f64::INFINITY, f64::INFINITY);
+        assert_eq!(report.discrepancies.len(), 2);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = VerifyReport::default();
+        a.check("c", "q", 1.0, 1.0, 1.0);
+        let mut b = VerifyReport::default();
+        b.check("c", "q", 1.0, 5.0, 1e-12);
+        b.cases = 1;
+        a.merge(b);
+        assert_eq!(a.checks, 2);
+        assert_eq!(a.cases, 1);
+        assert!(!a.ok());
+    }
+
+    #[test]
+    fn tiny_differential_suite_is_clean() {
+        let cfg = SuiteConfig {
+            sizes: vec![8, 16],
+            datasets_per_size: 1,
+            ..Default::default()
+        };
+        let report = differential_suite(&cfg);
+        assert!(report.ok(), "{}", report.summary());
+        assert!(report.cases > 0 && report.checks > report.cases);
+    }
+}

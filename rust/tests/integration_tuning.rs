@@ -87,8 +87,15 @@ fn multi_output_pjrt_tuning() {
 
 #[test]
 fn two_step_tunes_rbf_bandwidth_on_gp_data() {
-    // Data generated with xi2 = 2.0; Algorithm 1 should find a bandwidth
-    // in the right region with a better score than a bad fixed bandwidth.
+    // Data generated with xi2 = 2.0; Algorithm 1's best probed bandwidth
+    // must beat a bad fixed bandwidth tuned the same way.  The bad
+    // bandwidth sits at the *upper* edge (xi2 = 50): under the paper's
+    // eq. 19 objective the theta-profile is boundary-seeking toward
+    // small bandwidths (K -> I gives a flat spectrum, the sigma2 -> 0
+    // pathology of DESIGN.md reappears along theta), so the lower edge
+    // is — counterintuitively — near-optimal for this objective and
+    // differs from the golden-section probes only at noise level, which
+    // made the original lower-edge comparison a coin flip.
     let spec = SyntheticSpec {
         n: 80,
         p: 2,
@@ -113,8 +120,9 @@ fn two_step_tunes_rbf_bandwidth_on_gp_data() {
             ..Default::default()
         },
     );
-    // compare against a deliberately bad bandwidth tuned the same way
-    let gp_bad = SpectralGp::fit(Kernel::Rbf { xi2: 0.05 }, x.clone()).unwrap();
+    // compare against the deliberately bad upper-edge bandwidth tuned
+    // the same way (see the comment above for why not the lower edge)
+    let gp_bad = SpectralGp::fit(Kernel::Rbf { xi2: 50.0 }, x.clone()).unwrap();
     let mut es_bad = gp_bad.eigensystem(&y);
     let bad = optim::grid_search(&mut es_bad, Bounds::default(), 9, 64);
     let bad_refined = optim::newton_refine(&mut es_bad, bad.hp, Bounds::default(), Default::default());

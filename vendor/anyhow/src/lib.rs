@@ -1,0 +1,188 @@
+//! Offline shim for the `anyhow` error crate (DESIGN.md §5: no crates.io
+//! access in this image).  Implements the subset the repo uses with the
+//! same semantics:
+//!
+//! - [`Error`]: an opaque error value built from any message or any
+//!   `std::error::Error`, carrying a context chain.
+//! - [`Result<T>`]: alias for `Result<T, Error>`.
+//! - [`anyhow!`]: construct an [`Error`] from a format string or value.
+//! - [`Context`]: `.context(..)` / `.with_context(|| ..)` on results.
+//! - `Display` shows the outermost context; the `{:#}` alternate form
+//!   shows the whole chain down to the root cause, matching the upstream
+//!   crate's formatting contract that `main.rs` and the examples rely on.
+//!
+//! Like upstream, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on
+//! `io::Error`, eigensolver errors, etc.) coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: root-cause message plus a context chain
+/// (innermost-first storage; displayed outermost-first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+
+    /// Context layers plus root cause, outermost first (for tests/logs).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // "{:#}": the full chain, `outer: inner: root`.
+            for (i, layer) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{layer}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain().next().unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirrors upstream: message, then a caused-by list.
+        let mut layers = self.chain();
+        write!(f, "{}", layers.next().unwrap_or(""))?;
+        let rest: Vec<&str> = layers.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, layer) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // Flatten the source chain into the root message so nothing is
+        // lost even though we do not retain the boxed error.
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg, context: Vec::new() }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on any result whose error
+/// converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with captures), a format
+/// string plus arguments, or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let what = "thing";
+        let b: Error = anyhow!("missing {what}");
+        assert_eq!(b.to_string(), "missing thing");
+        let c: Error = anyhow!("{} of {}", 2, 3);
+        assert_eq!(c.to_string(), "2 of 3");
+        let d: Error = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn io_fail() -> Result<()> {
+            std::fs::read_to_string("/definitely/not/a/real/path/gpml")?;
+            Ok(())
+        }
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chain_and_alternate_format() {
+        let base: Result<()> = Err(anyhow!("root cause"));
+        let err = base
+            .context("inner op")
+            .with_context(|| format!("outer op {}", 7))
+            .unwrap_err();
+        assert_eq!(err.to_string(), "outer op 7");
+        assert_eq!(format!("{err:#}"), "outer op 7: inner op: root cause");
+        assert_eq!(err.root_cause(), "root cause");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn result_termination_compatible() {
+        // fn main() -> anyhow::Result<()> requires Error: Debug; exercise
+        // the Debug impl on a bare error.
+        let e: Error = anyhow!("boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}
