@@ -9,7 +9,9 @@
 //! than paying an O(N^3) decomposition per sweep point.
 
 use gpml::spectral::EigenSystem;
+use gpml::util::json::Json;
 use gpml::util::rng::Rng;
+use gpml::util::timing::{linear_fit, Stats};
 
 /// The paper's sweep: N = 32 .. 8192 on a log2 scale.
 pub const PAPER_SWEEP: [usize; 9] = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
@@ -57,4 +59,65 @@ pub fn print_fit(label: &str, ns: &[f64], us: &[f64], paper: &str) {
     let (a, b, r2) = gpml::util::timing::linear_fit(ns, us);
     println!("\nfit {label}: tau(N) = {a:.2} + {b:.5} N  [us]  (R^2 = {r2:.4})");
     println!("paper (MATLAB R2010a, Core2 Q9550): {paper}");
+}
+
+/// One measured series of a bench sweep: a label and per-N stats
+/// (parallel to the sweep's `ns`).
+pub struct Series<'a> {
+    pub label: &'a str,
+    pub stats: &'a [Stats],
+}
+
+/// JSON for one series: one `Stats::to_json` object per sweep point
+/// (median/p10/p90/mean/min us and the sample count backing them) plus
+/// the `tau(N) = a + b N` least-squares fit over the medians.
+fn series_json(ns: &[usize], s: &Series) -> Json {
+    let nsf: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    let med: Vec<f64> = s.stats.iter().map(|st| st.median_us).collect();
+    let (a, b, r2) = linear_fit(&nsf, &med);
+    Json::obj(vec![
+        ("per_n", Json::Arr(s.stats.iter().map(|st| st.to_json()).collect())),
+        ("median_us", Json::arr_f64(&med)),
+        (
+            "fit",
+            Json::obj(vec![
+                ("a_us", Json::Num(a)),
+                ("b_us_per_n", Json::Num(b)),
+                ("r2", Json::Num(r2)),
+            ]),
+        ),
+    ])
+}
+
+/// Machine-readable bench record: the N sweep, the pool width the bench
+/// ran with, and every measured series with its linear fit.  Extra
+/// bench-specific fields ride along via `extra`.
+pub fn bench_json(bench: &str, ns: &[usize], series: &[Series], extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("bench", Json::str(bench)),
+        ("threads", Json::Num(gpml::util::threadpool::num_threads() as f64)),
+        ("ns", Json::arr_f64(&ns.iter().map(|&n| n as f64).collect::<Vec<_>>())),
+        (
+            "series",
+            Json::Obj(
+                series
+                    .iter()
+                    .map(|s| (s.label.to_string(), series_json(ns, s)))
+                    .collect(),
+            ),
+        ),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Write `BENCH_<name>.json` next to the stdout tables (the bench's
+/// working directory — the workspace root under `cargo bench`) so the
+/// perf trajectory is tracked across PRs.
+pub fn write_bench_json(bench: &str, payload: &Json) {
+    let path = format!("BENCH_{bench}.json");
+    match std::fs::write(&path, format!("{payload}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -3,13 +3,15 @@
 //! Paper result: tau_L(N) ~= 42.26 + 0.05 N [us] — a flat dispatch
 //! overhead plus ~0.05 us per eigenvalue.  We report the same series for
 //! (a) the pure-rust O(N) evaluator and (b) the PJRT score artifact with
-//! staged buffers, and fit tau(N) = a + b N to each.
+//! staged buffers, and fit tau(N) = a + b N to each.  Alongside the
+//! stdout table the run writes `BENCH_fig1_score.json` (sweep, medians,
+//! percentiles, fit, pool width) for the cross-PR perf trajectory.
 
 mod bench_common;
 
 use bench_common::*;
 use gpml::spectral::HyperParams;
-use gpml::util::timing::{measure_block, Table};
+use gpml::util::timing::{measure_block_stats, Stats, Table};
 
 fn main() {
     println!("== Figure 1: score evaluation time vs N ==");
@@ -18,27 +20,31 @@ fn main() {
 
     let mut table = Table::new(&["N", "rust us/eval", "pjrt us/eval"]);
     let (mut ns, mut rust_us, mut pjrt_us) = (vec![], vec![], vec![]);
+    let (mut rust_stats, mut pjrt_stats): (Vec<Stats>, Vec<Stats>) = (vec![], vec![]);
 
     for &n in &PAPER_SWEEP {
         let es = synthetic_eigensystem(n, n as u64);
-        let t_rust = measure_block(50, rust_iters(n), || {
+        let st_rust = measure_block_stats(50, rust_iters(n), 7, || {
             std::hint::black_box(es.score(hp));
         });
-        let t_pjrt = rt.as_ref().map(|rt| {
+        let t_rust = st_rust.median_us;
+        let st_pjrt = rt.as_ref().map(|rt| {
             let ev = rt.evaluator(&es).expect("evaluator");
-            measure_block(20, pjrt_iters(n), || {
+            measure_block_stats(20, pjrt_iters(n), 3, || {
                 std::hint::black_box(ev.try_eval(hp).expect("pjrt eval"));
             })
         });
         ns.push(n as f64);
         rust_us.push(t_rust);
-        if let Some(t) = t_pjrt {
-            pjrt_us.push(t);
+        rust_stats.push(st_rust);
+        if let Some(st) = &st_pjrt {
+            pjrt_us.push(st.median_us);
+            pjrt_stats.push(st.clone());
         }
         table.row(&[
             n.to_string(),
             format!("{t_rust:.2}"),
-            t_pjrt.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+            st_pjrt.map(|st| format!("{:.2}", st.median_us)).unwrap_or_else(|| "-".into()),
         ]);
     }
     table.print();
@@ -47,6 +53,14 @@ fn main() {
     if pjrt_us.len() == ns.len() {
         print_fit("pjrt", &ns, &pjrt_us, "tau_L(N) ~= 42.26 + 0.05 N [us]");
     }
+
+    let mut series = vec![Series { label: "rust", stats: &rust_stats }];
+    if pjrt_stats.len() == PAPER_SWEEP.len() {
+        series.push(Series { label: "pjrt", stats: &pjrt_stats });
+    }
+    let payload = bench_json("fig1_score", &PAPER_SWEEP, &series, vec![]);
+    write_bench_json("fig1_score", &payload);
+
     // eq. 45 checkpoint: at N ~= 8000 the paper reports ~440 us per global
     // iteration (score only)
     if let Some(last) = rust_us.last() {

@@ -5,13 +5,15 @@
 //! series times `EigenSystem::grad`; there is deliberately no
 //! Jacobian-only PJRT artifact (the fused artifact returns
 //! score+Jacobian+Hessian in one dispatch — see fig3), so the PJRT column
-//! here reports that fused dispatch as an upper bound.
+//! here reports that fused dispatch as an upper bound.  Alongside the
+//! stdout table the run writes `BENCH_fig2_jacobian.json` for the
+//! cross-PR perf trajectory.
 
 mod bench_common;
 
 use bench_common::*;
 use gpml::spectral::HyperParams;
-use gpml::util::timing::{measure_block, Table};
+use gpml::util::timing::{measure_block_stats, Stats, Table};
 
 fn main() {
     println!("== Figure 2: Jacobian evaluation time vs N ==");
@@ -20,20 +22,25 @@ fn main() {
 
     let mut table = Table::new(&["N", "rust us/eval", "pjrt(fused) us/eval"]);
     let (mut ns, mut rust_us) = (vec![], vec![]);
+    let mut rust_stats: Vec<Stats> = vec![];
+    let mut score_stats: Vec<Stats> = vec![];
 
     for &n in &PAPER_SWEEP {
         let es = synthetic_eigensystem(n, 10 + n as u64);
-        let t_rust = measure_block(50, rust_iters(n), || {
+        let st_rust = measure_block_stats(50, rust_iters(n), 7, || {
             std::hint::black_box(es.grad(hp));
         });
+        let t_rust = st_rust.median_us;
         let t_pjrt = rt.as_ref().map(|rt| {
             let ev = rt.evaluator(&es).expect("evaluator");
-            measure_block(20, pjrt_iters(n), || {
+            measure_block_stats(20, pjrt_iters(n), 3, || {
                 std::hint::black_box(ev.try_eval_full(hp).expect("pjrt fused"));
             })
+            .median_us
         });
         ns.push(n as f64);
         rust_us.push(t_rust);
+        rust_stats.push(st_rust);
         table.row(&[
             n.to_string(),
             format!("{t_rust:.2}"),
@@ -49,9 +56,12 @@ fn main() {
         .iter()
         .map(|&n| {
             let es = synthetic_eigensystem(n, n as u64);
-            measure_block(50, rust_iters(n), || {
+            let st = measure_block_stats(50, rust_iters(n), 7, || {
                 std::hint::black_box(es.score(hp));
-            })
+            });
+            let t = st.median_us;
+            score_stats.push(st);
+            t
         })
         .collect();
     let (_, b_score, _) = gpml::util::timing::linear_fit(&ns, &score_us);
@@ -60,4 +70,18 @@ fn main() {
         "\nslope ratio jacobian/score: measured {:.2} (paper: 0.086/0.05 = 1.72)",
         b_jac / b_score
     );
+
+    let payload = bench_json(
+        "fig2_jacobian",
+        &PAPER_SWEEP,
+        &[
+            Series { label: "rust_jacobian", stats: &rust_stats },
+            Series { label: "rust_score", stats: &score_stats },
+        ],
+        vec![(
+            "slope_ratio_jacobian_over_score",
+            gpml::util::json::Json::Num(b_jac / b_score),
+        )],
+    );
+    write_bench_json("fig2_jacobian", &payload);
 }

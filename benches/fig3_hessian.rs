@@ -6,13 +6,15 @@
 //! fused evaluation (score + Jacobian + Hessian, six accumulators — the
 //! form a Newton step actually consumes); we expect a single linear
 //! regime with slope ~3x the score slope and report whether any kink
-//! appears.
+//! appears.  Alongside the stdout table the run writes
+//! `BENCH_fig3_hessian.json` for the cross-PR perf trajectory.
 
 mod bench_common;
 
 use bench_common::*;
 use gpml::spectral::HyperParams;
-use gpml::util::timing::{linear_fit, measure_block, Table};
+use gpml::util::json::Json;
+use gpml::util::timing::{linear_fit, measure_block_stats, Stats, Table};
 
 fn main() {
     println!("== Figure 3: Hessian (fused) evaluation time vs N ==");
@@ -21,27 +23,31 @@ fn main() {
 
     let mut table = Table::new(&["N", "rust us/eval", "pjrt us/eval"]);
     let (mut ns, mut rust_us, mut pjrt_us) = (vec![], vec![], vec![]);
+    let (mut rust_stats, mut pjrt_stats): (Vec<Stats>, Vec<Stats>) = (vec![], vec![]);
 
     for &n in &PAPER_SWEEP {
         let es = synthetic_eigensystem(n, 20 + n as u64);
-        let t_rust = measure_block(50, rust_iters(n), || {
+        let st_rust = measure_block_stats(50, rust_iters(n), 7, || {
             std::hint::black_box(es.evaluate(hp));
         });
-        let t_pjrt = rt.as_ref().map(|rt| {
+        let t_rust = st_rust.median_us;
+        let st_pjrt = rt.as_ref().map(|rt| {
             let ev = rt.evaluator(&es).expect("evaluator");
-            measure_block(20, pjrt_iters(n), || {
+            measure_block_stats(20, pjrt_iters(n), 3, || {
                 std::hint::black_box(ev.try_eval_full(hp).expect("pjrt fused"));
             })
         });
         ns.push(n as f64);
         rust_us.push(t_rust);
-        if let Some(t) = t_pjrt {
-            pjrt_us.push(t);
+        rust_stats.push(st_rust);
+        if let Some(st) = &st_pjrt {
+            pjrt_us.push(st.median_us);
+            pjrt_stats.push(st.clone());
         }
         table.row(&[
             n.to_string(),
             format!("{t_rust:.2}"),
-            t_pjrt.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+            st_pjrt.map(|st| format!("{:.2}", st.median_us)).unwrap_or_else(|| "-".into()),
         ]);
     }
     table.print();
@@ -57,6 +63,7 @@ fn main() {
     // slope change (paper saw ~10x drop; we expect ~none)
     let lo: Vec<usize> = (0..ns.len()).filter(|&i| ns[i] <= 1024.0).collect();
     let hi: Vec<usize> = (0..ns.len()).filter(|&i| ns[i] >= 1024.0).collect();
+    let mut extra: Vec<(&str, Json)> = vec![];
     if lo.len() >= 3 && hi.len() >= 3 {
         let (a1, b1, _) = linear_fit(
             &lo.iter().map(|&i| ns[i]).collect::<Vec<_>>(),
@@ -71,7 +78,24 @@ fn main() {
             "slope ratio across the paper's kink: {:.2} (paper saw 0.13/1.39 = 0.09; MATLAB artifact)",
             b2 / b1
         );
+        extra.push((
+            "piecewise",
+            Json::obj(vec![
+                ("lo_a_us", Json::Num(a1)),
+                ("lo_b_us_per_n", Json::Num(b1)),
+                ("hi_a_us", Json::Num(a2)),
+                ("hi_b_us_per_n", Json::Num(b2)),
+                ("slope_ratio", Json::Num(b2 / b1)),
+            ]),
+        ));
     }
+
+    let mut series = vec![Series { label: "rust_fused", stats: &rust_stats }];
+    if pjrt_stats.len() == PAPER_SWEEP.len() {
+        series.push(Series { label: "pjrt_fused", stats: &pjrt_stats });
+    }
+    let payload = bench_json("fig3_hessian", &PAPER_SWEEP, &series, extra);
+    write_bench_json("fig3_hessian", &payload);
 
     // eq. 44 checkpoint: paper's local step at N=8000 is ~3.56 ms
     if let Some(last) = rust_us.last() {

@@ -1,0 +1,144 @@
+//! Setup overhead: the one-time O(N^3) cost the paper amortizes —
+//! `gram` (Gram construction) and `SymEigen::new` (eigendecomposition) —
+//! timed separately across the sweep, serial (`threads = 1`) vs pooled
+//! (the process default width), as the before/after evidence for the
+//! scoped-pool substrate (DESIGN.md §6).
+//!
+//! Writes `BENCH_setup.json` next to the stdout table.
+//!
+//! Options (after `cargo bench --bench setup_overhead --`):
+//!   --sizes 128,256,512,1024,2048   sweep override
+//!   --max-n 512                     cap the sweep (CI smoke uses this)
+//!   --iters 3                       timed repetitions per point
+
+mod bench_common;
+
+use bench_common::*;
+use gpml::kernelfn::{gram, Kernel};
+use gpml::linalg::{Matrix, SymEigen};
+use gpml::util::cli::Args;
+use gpml::util::json::Json;
+use gpml::util::rng::Rng;
+use gpml::util::threadpool;
+use gpml::util::timing::{measure, Stats, Table};
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let default_sizes = [128usize, 256, 512, 1024, 2048];
+    let mut sizes = args.get_usize_list("sizes", &default_sizes).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.get_usize("max-n", usize::MAX) {
+        Ok(cap) => sizes.retain(|&n| n <= cap),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if sizes.is_empty() {
+        eprintln!("empty sweep after --sizes/--max-n filtering");
+        std::process::exit(2);
+    }
+    let iters = args.get_usize("iters", 0).unwrap_or(0);
+
+    let pooled = threadpool::num_threads();
+    println!("== setup overhead: gram + SymEigen::new, serial vs pooled ({pooled} threads) ==");
+    if pooled < 2 {
+        println!("(pool width is 1 — set GPML_THREADS or run on a multi-core host for a contrast)");
+    }
+
+    let mut table = Table::new(&[
+        "N",
+        "gram 1T ms",
+        "gram pooled ms",
+        "eigen 1T ms",
+        "eigen pooled ms",
+        "setup speedup",
+    ]);
+    let (mut g1, mut gp, mut e1, mut ep): (Vec<Stats>, Vec<Stats>, Vec<Stats>, Vec<Stats>) =
+        (vec![], vec![], vec![], vec![]);
+
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
+        let reps = if iters > 0 {
+            iters
+        } else if n <= 512 {
+            5
+        } else if n <= 1024 {
+            3
+        } else {
+            2
+        };
+        let kern = Kernel::Rbf { xi2: 1.5 };
+        let k = gram(kern, &x);
+
+        let st_g1 = threadpool::with_threads(1, || {
+            measure(0, reps, || {
+                std::hint::black_box(gram(kern, &x));
+            })
+        });
+        let st_gp = measure(0, reps, || {
+            std::hint::black_box(gram(kern, &x));
+        });
+        let st_e1 = threadpool::with_threads(1, || {
+            measure(0, reps, || {
+                std::hint::black_box(SymEigen::new(&k).expect("eigensolver"));
+            })
+        });
+        let st_ep = measure(0, reps, || {
+            std::hint::black_box(SymEigen::new(&k).expect("eigensolver"));
+        });
+
+        let setup_1t = st_g1.median_us + st_e1.median_us;
+        let setup_p = st_gp.median_us + st_ep.median_us;
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", st_g1.median_us / 1e3),
+            format!("{:.1}", st_gp.median_us / 1e3),
+            format!("{:.1}", st_e1.median_us / 1e3),
+            format!("{:.1}", st_ep.median_us / 1e3),
+            format!("{:.2}x", setup_1t / setup_p),
+        ]);
+        g1.push(st_g1);
+        gp.push(st_gp);
+        e1.push(st_e1);
+        ep.push(st_ep);
+    }
+    table.print();
+
+    let last = sizes.len() - 1;
+    let gram_speedup = g1[last].median_us / gp[last].median_us;
+    let eigen_speedup = e1[last].median_us / ep[last].median_us;
+    let setup_speedup =
+        (g1[last].median_us + e1[last].median_us) / (gp[last].median_us + ep[last].median_us);
+    println!(
+        "\n@ N={}: gram {gram_speedup:.2}x, eigen {eigen_speedup:.2}x, gram+eigen {setup_speedup:.2}x ({pooled} threads vs 1)",
+        sizes[last]
+    );
+
+    let payload = bench_json(
+        "setup",
+        &sizes,
+        &[
+            Series { label: "gram_serial", stats: &g1 },
+            Series { label: "gram_pooled", stats: &gp },
+            Series { label: "eigen_serial", stats: &e1 },
+            Series { label: "eigen_pooled", stats: &ep },
+        ],
+        vec![
+            ("threads_pooled", Json::Num(pooled as f64)),
+            (
+                "speedup_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(sizes[last] as f64)),
+                    ("gram", Json::Num(gram_speedup)),
+                    ("eigen", Json::Num(eigen_speedup)),
+                    ("setup", Json::Num(setup_speedup)),
+                ]),
+            ),
+        ],
+    );
+    write_bench_json("setup", &payload);
+}

@@ -17,6 +17,7 @@ use gpml::linalg::{Matrix, SymEigen};
 use gpml::naive::NaiveEvaluator;
 use gpml::optim::{self, Bounds, PsoOptions};
 use gpml::spectral::{EigenSystem, HyperParams};
+use gpml::util::json::Json;
 use gpml::util::rng::Rng;
 use gpml::util::timing::{measure_block, Table};
 
@@ -24,6 +25,9 @@ fn main() {
     println!("== §2.1: tuning speed-up naive vs spectral ==");
     let hp = HyperParams::new(0.7, 1.3);
     let k_stars = [10usize, 100, 300, 1000];
+    let sweep = [128usize, 256, 512, 1024];
+    let (mut naive_s, mut eigen_s, mut spec_us) = (vec![], vec![], vec![]);
+    let mut ratio_rows: Vec<Json> = vec![];
 
     let mut table = Table::new(&[
         "N",
@@ -36,7 +40,7 @@ fn main() {
         "ratio k*=1000",
     ]);
 
-    for &n in &[128usize, 256, 512, 1024] {
+    for &n in &sweep {
         let mut rng = Rng::new(n as u64);
         let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
         let y = rng.normal_vec(n);
@@ -63,6 +67,15 @@ fn main() {
         });
         let t_spec = t_spec_us * 1e-6;
 
+        naive_s.push(t_naive);
+        eigen_s.push(t_eigen);
+        spec_us.push(t_spec_us);
+        ratio_rows.push(Json::arr_f64(
+            &k_stars
+                .iter()
+                .map(|&k| (k as f64 * t_naive) / (t_eigen + k as f64 * t_spec))
+                .collect::<Vec<_>>(),
+        ));
         let ratios: Vec<String> = k_stars
             .iter()
             .map(|&k| {
@@ -115,4 +128,32 @@ fn main() {
         t_naive * k_star as f64,
         (t_naive * k_star as f64) / (t_eigen + t_tune)
     );
+
+    // machine-readable trajectory record (single-shot timings, so this
+    // payload is hand-assembled rather than going through bench_json's
+    // Stats series)
+    let payload = Json::obj(vec![
+        ("bench", Json::str("speedup")),
+        ("threads", Json::Num(gpml::util::threadpool::num_threads() as f64)),
+        ("ns", Json::arr_f64(&sweep.iter().map(|&n| n as f64).collect::<Vec<_>>())),
+        ("k_stars", Json::arr_f64(&k_stars.iter().map(|&k| k as f64).collect::<Vec<_>>())),
+        ("naive_s_per_eval", Json::arr_f64(&naive_s)),
+        ("eigen_s", Json::arr_f64(&eigen_s)),
+        ("spectral_us_per_eval", Json::arr_f64(&spec_us)),
+        ("ratio_by_kstar", Json::Arr(ratio_rows)),
+        (
+            "actual_tune",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("k_star", Json::Num(k_star as f64)),
+                ("tune_s", Json::Num(t_tune)),
+                ("eigen_s", Json::Num(t_eigen)),
+                (
+                    "end_to_end_speedup",
+                    Json::Num((t_naive * k_star as f64) / (t_eigen + t_tune)),
+                ),
+            ]),
+        ),
+    ]);
+    write_bench_json("speedup", &payload);
 }

@@ -73,6 +73,10 @@ pub struct TuneRequest {
     pub backend: Backend,
     pub objective: ObjectiveKind,
     pub seed: u64,
+    /// Pool width for this job's O(N^3) setup and search wavefronts
+    /// (DESIGN.md §6): 0 = process default (`--threads` /
+    /// `GPML_THREADS` / auto), 1 = exact serial.
+    pub threads: usize,
 }
 
 impl TuneRequest {
@@ -86,6 +90,7 @@ impl TuneRequest {
             backend: Backend::Rust,
             objective: ObjectiveKind::default(),
             seed: 42,
+            threads: 0,
         }
     }
 }
@@ -188,7 +193,12 @@ impl Coordinator {
             }
             b => b,
         };
+        // pin this job's pool width for the gram/eigendecomposition and
+        // every wavefront issued below (0 = process default)
+        crate::util::threadpool::with_threads(req.threads, || self.tune_with_backend(req, backend))
+    }
 
+    fn tune_with_backend(&mut self, req: &TuneRequest, backend: Backend) -> Result<TuneResult> {
         // --- O(N^3) overhead: Gram + eigendecomposition, cached ---
         let key = fingerprint(&req.x, req.kernel);
         let t0 = Instant::now();

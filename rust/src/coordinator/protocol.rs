@@ -92,6 +92,9 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             if let Some(seed) = v.get("seed").and_then(Json::as_f64) {
                 req.seed = seed as u64;
             }
+            if let Some(threads) = v.get("threads").and_then(Json::as_usize) {
+                req.threads = threads;
+            }
             Ok(Request::Tune(Box::new(req)))
         }
         other => Err(format!("unknown op {other:?}")),
@@ -171,6 +174,7 @@ pub fn tune_request_json(req: &TuneRequest) -> String {
             }),
         ),
         ("seed", Json::Num(req.seed as f64)),
+        ("threads", Json::Num(req.threads as f64)),
     ];
     match req.strategy {
         GlobalStrategy::Grid { points_per_axis } => {

@@ -8,6 +8,12 @@
 //! tests.
 
 use crate::linalg::Matrix;
+use crate::util::threadpool;
+
+/// Minimum kernel evaluations a pool worker must have before `gram` /
+/// `cross_gram` fan out (an RBF eval is ~20 ns; this keeps the spawn
+/// cost well under 1% of each worker's share).
+const PAR_GRAIN_EVALS: usize = 4096;
 
 /// A positive-definite kernel function `K(x, y)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -90,23 +96,60 @@ fn dist(x: &[f64], y: &[f64]) -> f64 {
 }
 
 /// Full Gram matrix `K[i, j] = K(x_i, x_j)` (eq. 3); exploits symmetry.
+///
+/// Row-block parallel (DESIGN.md §6): phase 1 fills each row's upper
+/// triangle `j >= i` (workers own disjoint rows; the dynamic cursor in
+/// `par_for` balances the triangular row costs), phase 2 mirrors the
+/// strict upper triangle down (row `i` writes `j < i` reading `(j, i)`,
+/// which phase 2 never writes).  Per-element arithmetic is unchanged, so
+/// output is bit-identical across thread counts.
 pub fn gram(kernel: Kernel, x: &Matrix) -> Matrix {
     let n = x.rows();
     let mut k = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in i..n {
-            let v = kernel.eval(x.row(i), x.row(j));
-            k[(i, j)] = v;
-            k[(j, i)] = v;
-        }
+    if n == 0 {
+        return k;
     }
+    let grain = (PAR_GRAIN_EVALS / n).max(1);
+    let shared = threadpool::SharedMut::new(k.data_mut());
+    threadpool::par_for(n, grain, |i| {
+        // Safety: phase-1 worker `i` writes only row `i`.
+        let row = unsafe { shared.slice_mut(i * n, (i + 1) * n) };
+        let xi = x.row(i);
+        for (j, slot) in row.iter_mut().enumerate().skip(i) {
+            *slot = kernel.eval(xi, x.row(j));
+        }
+    });
+    threadpool::par_for(n, grain, |i| {
+        // Safety: phase-2 worker `i` writes `(i, j)` strictly below the
+        // diagonal and reads `(j, i)` strictly above it — the write and
+        // read sets are disjoint across all workers.
+        for j in 0..i {
+            unsafe { shared.write(i * n + j, shared.read(j * n + i)) };
+        }
+    });
     k
 }
 
 /// Cross-Gram `K[i, j] = K(a_i, b_j)` for prediction (`k_x~` rows, eq. 4).
+/// Row-block parallel like [`gram`] (disjoint output rows).
 pub fn cross_gram(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "feature dims differ");
-    Matrix::from_fn(a.rows(), b.rows(), |i, j| kernel.eval(a.row(i), b.row(j)))
+    let (m, n) = (a.rows(), b.rows());
+    let mut k = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return k;
+    }
+    let rows_per_chunk = (PAR_GRAIN_EVALS / n).max(1);
+    threadpool::par_chunks_mut(k.data_mut(), rows_per_chunk * n, |ci, chunk| {
+        let i0 = ci * rows_per_chunk;
+        for (r, row) in chunk.chunks_mut(n).enumerate() {
+            let ai = a.row(i0 + r);
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = kernel.eval(ai, b.row(j));
+            }
+        }
+    });
+    k
 }
 
 /// Parse `--kernel` CLI syntax: `rbf:1.5`, `poly:3`, `linear`,

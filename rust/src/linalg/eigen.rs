@@ -11,6 +11,15 @@
 //! orthogonal `U` whose *columns* are eigenvectors, `K = U diag(s) U'`.
 
 use super::matrix::Matrix;
+use crate::util::threadpool::{self, div_ceil, SharedMut};
+
+/// Minimum per-worker work (multiply-add units) before a tred2/tql2
+/// sweep fans out through the pool — below this the per-step scope
+/// spawn (~30 us at 4 workers) beats the win, and `par_for`'s plan
+/// collapses to the exact serial loop.  2^16 madds ≈ 30 us: fan-out
+/// starts around step size i ≈ 256, which keeps total spawn overhead
+/// under ~3% of the O(N^3) work at N = 2048.
+const PAR_GRAIN: usize = 1 << 16;
 
 /// Eigendecomposition `A = U diag(s) U'` of a symmetric matrix.
 #[derive(Clone, Debug)]
@@ -79,6 +88,15 @@ impl SymEigen {
 /// Householder reduction to tridiagonal form, accumulating the transform.
 /// On exit `z` holds the orthogonal matrix, `d` the diagonal, `e[1..]` the
 /// sub-diagonal. (Port of EISPACK tred2 as given in Numerical Recipes §11.2.)
+///
+/// Both O(N^3) phases fan out through the scoped pool (DESIGN.md §6):
+/// the reduction's symmetric-matvec and rank-2-update sweeps are
+/// parallel over their disjoint target rows (bit-identical across
+/// thread counts — the per-element arithmetic is the serial one), and
+/// the transform accumulation splits its row-streaming sum into
+/// per-worker partials reduced in block order (the one pooled site
+/// whose FP association differs from serial, by O(eps); gated by the
+/// differential-verification suite).
 fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
     for i in (1..n).rev() {
@@ -93,34 +111,65 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     z[(i, k)] /= scale;
                     h += z[(i, k)] * z[(i, k)];
                 }
-                let mut f = z[(i, l)];
+                let f = z[(i, l)];
                 let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
                 e[i] = scale * g;
                 h -= f * g;
                 z[(i, l)] = f - g;
-                f = 0.0;
+                // Row i (the Householder vector, scaled) is read-only for
+                // the rest of this step; a copy keeps the borrows simple.
+                let zi: Vec<f64> = z.row(i)[..=l].to_vec();
+                let grain = (PAR_GRAIN / i).max(1);
+                {
+                    // e[j] = (A v)_j / h over the leading (l+1) x (l+1)
+                    // symmetric block (stored in the lower triangle), and
+                    // z[(j, i)] = v_j / h.  Worker j writes only e[j] and
+                    // the column-i slot of row j; it reads row j's lower
+                    // triangle and column j below the diagonal, none of
+                    // which is written here.
+                    let zs = SharedMut::new(z.data_mut());
+                    let es = SharedMut::new(e);
+                    threadpool::par_for(l + 1, grain, |j| unsafe {
+                        zs.write(j * n + i, zi[j] / h);
+                        let mut g = 0.0;
+                        let zrow_j = zs.slice_ref(j * n, j * n + j + 1);
+                        for k in 0..=j {
+                            g += zrow_j[k] * zi[k];
+                        }
+                        for k in (j + 1)..=l {
+                            g += zs.read(k * n + j) * zi[k];
+                        }
+                        es.write(j, g / h);
+                    });
+                }
+                // f = v' A v / h, accumulated in the serial j order
+                let mut f = 0.0;
                 for j in 0..=l {
-                    z[(j, i)] = z[(i, j)] / h;
-                    let mut g = 0.0;
-                    for k in 0..=j {
-                        g += z[(j, k)] * z[(i, k)];
-                    }
-                    for k in (j + 1)..=l {
-                        g += z[(k, j)] * z[(i, k)];
-                    }
-                    e[j] = g / h;
-                    f += e[j] * z[(i, j)];
+                    f += e[j] * zi[j];
                 }
                 let hh = f / (h + h);
-                for j in 0..=l {
-                    let f = z[(i, j)];
-                    let g = e[j] - hh * f;
-                    e[j] = g;
-                    for k in 0..=j {
-                        let delta = f * e[k] + g * z[(i, k)];
-                        z[(j, k)] -= delta;
-                    }
+                for (ej, &zij) in e[..=l].iter_mut().zip(&zi) {
+                    *ej -= hh * zij;
                 }
+                // Rank-2 update of the leading block: row j gets
+                // z[(j, k)] -= v_j e[k] + e_j v_k for k <= j.  Rows are
+                // disjoint chunks; e and zi are read-only by now.
+                let rows_per_chunk = (PAR_GRAIN / i).max(1);
+                let (lower, _rest) = z.data_mut().split_at_mut(i * n);
+                let e_ro: &[f64] = e;
+                threadpool::par_chunks_mut(lower, rows_per_chunk * n, |ci, chunk| {
+                    let j0 = ci * rows_per_chunk;
+                    for (r, row) in chunk.chunks_mut(n).enumerate() {
+                        let j = j0 + r;
+                        let fj = zi[j];
+                        let gj = e_ro[j];
+                        for (zjk, (&ek, &zik)) in
+                            row[..=j].iter_mut().zip(e_ro[..=j].iter().zip(&zi))
+                        {
+                            *zjk -= fj * ek + gj * zik;
+                        }
+                    }
+                });
             }
         } else {
             e[i] = z[(i, l)];
@@ -137,27 +186,64 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let mut gbuf = vec![0.0f64; n];
     for i in 0..n {
         if d[i] != 0.0 {
-            for gj in gbuf[..i].iter_mut() {
-                *gj = 0.0;
-            }
-            for k in 0..i {
-                let vik = z[(i, k)];
-                if vik != 0.0 {
-                    let row = &z.data()[k * n..k * n + i];
-                    for (gj, &zkj) in gbuf[..i].iter_mut().zip(row) {
-                        *gj += vik * zkj;
+            let zi: Vec<f64> = z.row(i)[..i].to_vec();
+            let grain_rows = (PAR_GRAIN / i.max(1)).max(1);
+            let workers = threadpool::plan_workers(i, grain_rows);
+            if workers <= 1 {
+                // the pre-pool serial sweep, bit for bit
+                for gj in gbuf[..i].iter_mut() {
+                    *gj = 0.0;
+                }
+                for k in 0..i {
+                    let vik = zi[k];
+                    if vik != 0.0 {
+                        let row = &z.data()[k * n..k * n + i];
+                        for (gj, &zkj) in gbuf[..i].iter_mut().zip(row) {
+                            *gj += vik * zkj;
+                        }
+                    }
+                }
+            } else {
+                // contiguous k-blocks accumulate private partials (each
+                // block row-streams exactly like the serial sweep), then
+                // a serial block-order reduction
+                let kb = div_ceil(i, workers);
+                let mut partials = vec![0.0f64; workers * i];
+                let zd = z.data();
+                threadpool::par_chunks_mut(&mut partials, i, |b, part| {
+                    let k0 = b * kb;
+                    let k1 = (k0 + kb).min(i);
+                    for k in k0..k1 {
+                        let vik = zi[k];
+                        if vik != 0.0 {
+                            let row = &zd[k * n..k * n + i];
+                            for (gj, &zkj) in part.iter_mut().zip(row) {
+                                *gj += vik * zkj;
+                            }
+                        }
+                    }
+                });
+                for gj in gbuf[..i].iter_mut() {
+                    *gj = 0.0;
+                }
+                for b in 0..workers {
+                    for (gj, &p) in gbuf[..i].iter_mut().zip(&partials[b * i..b * i + i]) {
+                        *gj += p;
                     }
                 }
             }
-            for k in 0..i {
-                let zki = z[(k, i)];
-                if zki != 0.0 {
-                    let row = &mut z.data_mut()[k * n..k * n + i];
-                    for (zkj, &gj) in row.iter_mut().zip(&gbuf[..i]) {
-                        *zkj -= gj * zki;
+            // rank-1 update over disjoint row chunks
+            let gb: &[f64] = &gbuf;
+            threadpool::par_chunks_mut(&mut z.data_mut()[..i * n], grain_rows * n, |_, chunk| {
+                for row in chunk.chunks_mut(n) {
+                    let zki = row[i];
+                    if zki != 0.0 {
+                        for (zkj, &gj) in row[..i].iter_mut().zip(&gb[..i]) {
+                            *zkj -= gj * zki;
+                        }
                     }
                 }
-            }
+            });
         }
         d[i] = z[(i, i)];
         z[(i, i)] = 1.0;
@@ -177,6 +263,14 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
 /// run on a transposed copy (`zt`, one eigenvector per contiguous row) and
 /// the result is transposed back — two O(N^2) copies buy cache-linear
 /// O(N^3) inner loops (~8x at N=1024).
+///
+/// Parallelism (DESIGN.md §6): the scalar (d, e, s, c) recurrence never
+/// reads `zt`, so each QL sweep records its rotation sequence and applies
+/// it afterwards, column-chunked across the pool — every element of `zt`
+/// sees the identical rotation order and arithmetic, so the result is
+/// bit-identical to the serial interleaved application at any thread
+/// count.  The documented cache-linear layout is preserved: workers walk
+/// contiguous column segments of the two affected rows per rotation.
 fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergence> {
     let n = d.len();
     if n == 1 {
@@ -205,6 +299,8 @@ fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergenc
         .fold(0.0f64, f64::max)
         .max(f64::MIN_POSITIVE);
 
+    // rotation sequence of one QL sweep, recorded then batch-applied
+    let mut rots: Vec<(f64, f64)> = Vec::with_capacity(n);
     for l in 0..n {
         let mut iter = 0;
         loop {
@@ -234,6 +330,7 @@ fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergenc
             let (mut s, mut c) = (1.0, 1.0);
             let mut p = 0.0;
             let mut underflow = false; // NR's `r == 0.0 && i >= l` early break
+            rots.clear();
             for i in (l..m).rev() {
                 let f = s * e[i];
                 let b = c * e[i];
@@ -252,16 +349,11 @@ fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergenc
                 p = s * r;
                 d[i + 1] = g + p;
                 g = c * r - b;
-                // accumulate eigenvectors: rotate two contiguous rows of zt
-                let (lo, hi) = zt.split_at_mut((i + 1) * n);
-                let row_i = &mut lo[i * n..(i + 1) * n];
-                let row_i1 = &mut hi[..n];
-                for (zi, zi1) in row_i.iter_mut().zip(row_i1.iter_mut()) {
-                    let f = *zi1;
-                    *zi1 = s * *zi + c * f;
-                    *zi = c * *zi - s * f;
-                }
+                // rotation t acts on zt rows (m-1-t, m-t); recorded here,
+                // applied column-chunked below
+                rots.push((s, c));
             }
+            apply_rotations(&mut zt, n, m, &rots);
             if underflow {
                 continue;
             }
@@ -293,6 +385,39 @@ fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergenc
         }
     }
     Ok(())
+}
+
+/// Apply one QL sweep's rotation sequence to `zt` (row-major, one
+/// eigenvector per row): rotation `t` mixes rows `m - 1 - t` and
+/// `m - t`.  Columns are independent, so workers own disjoint column
+/// ranges and each applies the full sequence in order — identical
+/// arithmetic per element, bit-identical across thread counts.
+fn apply_rotations(zt: &mut [f64], n: usize, m: usize, rots: &[(f64, f64)]) {
+    if rots.is_empty() {
+        return;
+    }
+    // per-column cost is rots.len() rotations; size chunks so one chunk
+    // clears the spawn threshold, which also collapses short deflated
+    // sweeps to the serial path
+    let cols_per_chunk = div_ceil(PAR_GRAIN, rots.len()).min(n).max(1);
+    let shared = SharedMut::new(zt);
+    threadpool::par_for(div_ceil(n, cols_per_chunk), 1, |ci| {
+        let c0 = ci * cols_per_chunk;
+        let c1 = (c0 + cols_per_chunk).min(n);
+        for (t, &(s, c)) in rots.iter().enumerate() {
+            let ri = (m - 1 - t) * n;
+            let ri1 = ri + n;
+            for col in c0..c1 {
+                // Safety: this worker owns columns [c0, c1) of every row.
+                unsafe {
+                    let zi = shared.read(ri + col);
+                    let f = shared.read(ri1 + col);
+                    shared.write(ri1 + col, s * zi + c * f);
+                    shared.write(ri + col, c * zi - s * f);
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]

@@ -2,13 +2,29 @@
 //!
 //! A cache-blocked ikj-order GEMM with a small unrolled inner loop — not
 //! MKL, but within a small factor of peak for the N <= 8192 sizes the
-//! naive-baseline benches need, and entirely self-contained.
+//! naive-baseline benches need, and entirely self-contained.  All three
+//! entry points drive disjoint output stripes through the scoped pool
+//! (DESIGN.md §6); the per-element accumulation order never depends on
+//! the thread count, so results are bit-identical serial vs pooled.
 
 use super::matrix::Matrix;
+use crate::util::threadpool::{self, div_ceil};
 
 /// Cache block edge (in elements). 64x64 f64 tiles = 32 KiB per operand
 /// pair, sized for L1/L2 residency.
 const BLOCK: usize = 64;
+
+/// Minimum multiply-add count per pool worker before a GEMM fans out
+/// (thread spawn is ~10 us; 2^20 flops is ~0.3 ms of work).
+const PAR_GRAIN_FLOPS: usize = 1 << 20;
+
+/// Stripe height (rows of C per pool chunk): at least one cache block,
+/// scaled up until a stripe carries `PAR_GRAIN_FLOPS` work so small
+/// problems collapse to the serial path inside `par_chunks_mut`.
+fn stripe_rows(k: usize, n: usize) -> usize {
+    let per_row = (k * n).max(1);
+    BLOCK * div_ceil(PAR_GRAIN_FLOPS, BLOCK * per_row).max(1)
+}
 
 /// `C = A * B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -19,23 +35,36 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C += A * B` over an existing (zeroed or accumulating) output.
+/// `C += A * B` over an existing (zeroed or accumulating) output,
+/// parallel over i-stripes of C.
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(c.rows(), m);
     assert_eq!(c.cols(), n);
+    if m == 0 || n == 0 {
+        return;
+    }
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
+    let rows = stripe_rows(k, n);
+    threadpool::par_chunks_mut(c.data_mut(), rows * n, |si, cstripe| {
+        matmul_stripe(ad, bd, cstripe, si * rows, k, n);
+    });
+}
+
+/// The blocked ikj kernel over C rows `[i0, i0 + cstripe.len()/n)`.
+fn matmul_stripe(ad: &[f64], bd: &[f64], cstripe: &mut [f64], i0: usize, k: usize, n: usize) {
+    let rows = cstripe.len() / n;
+    for b0 in (0..rows).step_by(BLOCK) {
+        let b1 = (b0 + BLOCK).min(rows);
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for j0 in (0..n).step_by(BLOCK) {
                 let j1 = (j0 + BLOCK).min(n);
-                for i in i0..i1 {
+                for r in b0..b1 {
+                    let i = i0 + r;
                     let arow = &ad[i * k..(i + 1) * k];
-                    let crow = &mut cd[i * n..(i + 1) * n];
+                    let crow = &mut cstripe[r * n..(r + 1) * n];
                     for kk in k0..k1 {
                         let aik = arow[kk];
                         if aik == 0.0 {
@@ -62,39 +91,114 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
-/// `A * B'` without materializing the transpose.
+/// `A * B'` without materializing the transpose — blocked over (j, k)
+/// tiles with a four-accumulator unrolled dot kernel (parity with
+/// `matmul`'s treatment), parallel over i-stripes of C.
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_bt dimension mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
     let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            cd[i * n + j] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+    let rows = stripe_rows(k, n);
+    threadpool::par_chunks_mut(c.data_mut(), rows * n, |si, cstripe| {
+        let i0 = si * rows;
+        let srows = cstripe.len() / n;
+        // (j0, k0) tiles keep a BLOCK x BLOCK window of B rows hot while
+        // the stripe's A rows stream over it.
+        for j0 in (0..n).step_by(BLOCK) {
+            let j1 = (j0 + BLOCK).min(n);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for r in 0..srows {
+                    let aseg = &ad[(i0 + r) * k + k0..(i0 + r) * k + k1];
+                    let crow = &mut cstripe[r * n..(r + 1) * n];
+                    for j in j0..j1 {
+                        let bseg = &bd[j * k + k0..j * k + k1];
+                        crow[j] += dot_unrolled(aseg, bseg);
+                    }
+                }
+            }
         }
-    }
+    });
     c
 }
 
-/// `A' * A` (Gram of columns), exploiting symmetry.
+/// Four-accumulator unrolled dot product (the inner kernel `matmul_bt`
+/// and `ata` share).
+#[inline]
+fn dot_unrolled(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let len = x.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= len {
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < len {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// `A' * A` (Gram of columns), exploiting symmetry — row-streaming
+/// rank-1 accumulation with an unrolled-by-4 inner axpy (parity with
+/// `matmul`), parallel over column blocks of C (each worker streams all
+/// of A but owns a disjoint set of output columns, so the per-element
+/// accumulation order over rows is unchanged).
 pub fn ata(a: &Matrix) -> Matrix {
     let (m, n) = (a.rows(), a.cols());
     let mut c = Matrix::zeros(n, n);
-    for r in 0..m {
-        let row = a.row(r);
-        for i in 0..n {
-            let ri = row[i];
-            if ri == 0.0 {
-                continue;
+    if n == 0 {
+        return c;
+    }
+    // column block sized so each worker's share (m rows x block columns)
+    // clears the spawn threshold
+    let bcols = div_ceil(PAR_GRAIN_FLOPS, m.max(1)).max(BLOCK).min(n);
+    let nblocks = div_ceil(n, bcols);
+    let ad = a.data();
+    {
+        let shared = threadpool::SharedMut::new(c.data_mut());
+        threadpool::par_for(nblocks, 1, |bi| {
+            let c0 = bi * bcols;
+            let c1 = (c0 + bcols).min(n);
+            for r in 0..m {
+                let row = &ad[r * n..(r + 1) * n];
+                for i in 0..c1 {
+                    let ri = row[i];
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let j0 = i.max(c0);
+                    // Safety: this worker owns columns [c0, c1) of C's
+                    // upper triangle; writes from other workers land in
+                    // disjoint columns.
+                    let crow = unsafe { shared.slice_mut(i * n + j0, i * n + c1) };
+                    let rseg = &row[j0..c1];
+                    let (mut j, end) = (0usize, rseg.len());
+                    while j + 4 <= end {
+                        crow[j] += ri * rseg[j];
+                        crow[j + 1] += ri * rseg[j + 1];
+                        crow[j + 2] += ri * rseg[j + 2];
+                        crow[j + 3] += ri * rseg[j + 3];
+                        j += 4;
+                    }
+                    while j < end {
+                        crow[j] += ri * rseg[j];
+                        j += 1;
+                    }
+                }
             }
-            for j in i..n {
-                c[(i, j)] += ri * row[j];
-            }
-        }
+        });
     }
     for i in 0..n {
         for j in 0..i {

@@ -5,10 +5,18 @@
 
 use super::gemm;
 use super::matrix::Matrix;
+use crate::util::threadpool;
 
 /// Below this edge the O(N^3) blocked GEMM wins (crossover measured in
 /// `benches/prop24_variance.rs`).
 const BASE: usize = 128;
+
+/// Above this edge a recursion level fans its seven products out through
+/// the scoped pool (DESIGN.md §6).  Below it the sequential recursion is
+/// used: nested levels already run inside pool workers, where `par_map`
+/// degenerates to the inline serial loop, so only the outermost level
+/// pays any coordination cost.
+const PAR_EDGE: usize = 256;
 
 /// `A * B` via Strassen's algorithm.
 pub fn strassen(a: &Matrix, b: &Matrix) -> Matrix {
@@ -35,7 +43,11 @@ fn pad(a: &Matrix, r: usize, c: usize) -> Matrix {
     out
 }
 
-/// Square power-of-two recursion.
+/// Square power-of-two recursion.  The seven quadrant products are
+/// independent; above `PAR_EDGE` they fan out through the pool (each
+/// product recursing sequentially inside its worker — nested `par_map`
+/// calls run inline).  The combination arithmetic is identical either
+/// way, so the result does not depend on the thread count.
 fn strassen_sq(a: &Matrix, b: &Matrix) -> Matrix {
     let n = a.rows();
     if n <= BASE {
@@ -45,13 +57,23 @@ fn strassen_sq(a: &Matrix, b: &Matrix) -> Matrix {
     let (a11, a12, a21, a22) = split(a, h);
     let (b11, b12, b21, b22) = split(b, h);
 
-    let m1 = strassen_sq(&a11.add(&a22), &b11.add(&b22));
-    let m2 = strassen_sq(&a21.add(&a22), &b11);
-    let m3 = strassen_sq(&a11, &b12.sub(&b22));
-    let m4 = strassen_sq(&a22, &b21.sub(&b11));
-    let m5 = strassen_sq(&a11.add(&a12), &b22);
-    let m6 = strassen_sq(&a21.sub(&a11), &b11.add(&b12));
-    let m7 = strassen_sq(&a12.sub(&a22), &b21.add(&b22));
+    // grain 7 below the edge forces one worker, i.e. the in-order serial
+    // loop through the same code path
+    let grain = if n > PAR_EDGE { 1 } else { 7 };
+    let product_ids: [usize; 7] = [0, 1, 2, 3, 4, 5, 6];
+    let products = threadpool::par_map(&product_ids, grain, |&p| match p {
+        0 => strassen_sq(&a11.add(&a22), &b11.add(&b22)),
+        1 => strassen_sq(&a21.add(&a22), &b11),
+        2 => strassen_sq(&a11, &b12.sub(&b22)),
+        3 => strassen_sq(&a22, &b21.sub(&b11)),
+        4 => strassen_sq(&a11.add(&a12), &b22),
+        5 => strassen_sq(&a21.sub(&a11), &b11.add(&b12)),
+        _ => strassen_sq(&a12.sub(&a22), &b21.add(&b22)),
+    });
+    let [m1, m2, m3, m4, m5, m6, m7] = match <[Matrix; 7]>::try_from(products) {
+        Ok(ms) => ms,
+        Err(_) => unreachable!("strassen always produces 7 products"),
+    };
 
     let c11 = m1.add(&m4).sub(&m5).add(&m7);
     let c12 = m3.add(&m5);

@@ -20,7 +20,7 @@ gpml — Efficient Marginal Likelihood Computation for GP Regression (Schirru et
 USAGE:
   gpml tune   --data <csv> [--kernel rbf:2.0] [--backend rust|pjrt]
               [--strategy pso|grid] [--particles 64] [--iterations 25] [--grid 17]
-              [--evidence] [--predict]
+              [--evidence] [--predict] [--threads N]
                                       tune (sigma2, lambda2) per y* column;
                                       --evidence swaps the paper's eq. 19 score
                                       for the classical GP evidence
@@ -32,6 +32,10 @@ USAGE:
                                       submit a tuning job to a server
   gpml info   [--artifacts <dir>]     list compiled artifacts and buckets
   gpml help                           this text
+
+  --threads N (any command) sets the scoped-pool width for the O(N^3)
+  setup and search wavefronts (DESIGN.md §6); 1 = exact serial, default =
+  GPML_THREADS or all cores.
 ";
 
 fn main() {
@@ -42,6 +46,16 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // pool width for every parallel substrate in this process
+    // (DESIGN.md §6); per-request widths can still override via the
+    // coordinator protocol's "threads" field
+    match args.get_usize("threads", 0) {
+        Ok(t) => gpml::util::threadpool::set_threads(t),
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "tune" => cmd_tune(&args),
@@ -91,6 +105,9 @@ fn load_request(args: &Args) -> Result<TuneRequest> {
     req.backend = backend;
     req.strategy = strategy;
     req.seed = seed;
+    // carried in the request so `gpml client` jobs pin the width on the
+    // server side too
+    req.threads = args.get_usize("threads", 0).map_err(|e| anyhow!(e))?;
     if args.flag("evidence") {
         req.objective = ObjectiveKind::Evidence;
     }

@@ -17,6 +17,19 @@ pub use pso::{pso_search, PsoOptions};
 pub use two_step::{two_step_tune, TwoStepOptions, TwoStepResult};
 
 use crate::spectral::{Evaluation, HyperParams};
+use crate::util::threadpool;
+
+/// Grain for global-search wavefronts on the pure-rust path: one score
+/// is O(N) flops, so claims of `WAVEFRONT_GRAIN_FLOPS / N` evaluations
+/// keep each pool worker busy for well over the ~10 us spawn cost
+/// (2^16 element-visits is tens of microseconds of transcendental-heavy
+/// score work), and small (batch x N) problems collapse to the serial
+/// loop.
+const WAVEFRONT_GRAIN_FLOPS: usize = 1 << 16;
+
+fn wavefront_grain(n: usize) -> usize {
+    (WAVEFRONT_GRAIN_FLOPS / n.max(1)).max(1)
+}
 
 /// Something that can score hyperparameter pairs. `&mut self` so
 /// implementations may cache, batch, or count.
@@ -39,6 +52,14 @@ impl Objective for crate::spectral::EigenSystem {
     fn eval(&mut self, hp: HyperParams) -> f64 {
         self.score(hp)
     }
+    /// Grid/PSO wavefronts fan out across the pool on the pure-rust path
+    /// (the batched PJRT objective amortizes the same batch into one
+    /// dispatch instead).  Each slot is an independent O(N) score, so the
+    /// output is bit-identical to the scalar loop at any thread count.
+    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
+        let es: &crate::spectral::EigenSystem = self;
+        threadpool::par_map(hps, wavefront_grain(es.s.len()), |&hp| es.score(hp))
+    }
     fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
         self.evaluate(hp)
     }
@@ -52,6 +73,11 @@ pub struct EvidenceObjective(pub crate::spectral::EigenSystem);
 impl Objective for EvidenceObjective {
     fn eval(&mut self, hp: HyperParams) -> f64 {
         self.0.evidence(hp)
+    }
+    /// Parallel wavefront like the paper-score objective above.
+    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
+        let es = &self.0;
+        threadpool::par_map(hps, wavefront_grain(es.s.len()), |&hp| es.evidence(hp))
     }
     fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
         self.0.evidence_evaluate(hp)

@@ -1,9 +1,11 @@
 //! In-repo substrates for functionality that is normally pulled from
 //! crates.io but is unavailable in this offline image (DESIGN.md §5):
-//! deterministic RNG, JSON, CLI parsing, bench timing, property testing.
+//! deterministic RNG, JSON, CLI parsing, bench timing, property testing,
+//! and the scoped thread pool (DESIGN.md §6).
 
 pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod threadpool;
 pub mod timing;

@@ -1,0 +1,473 @@
+//! Scoped work pool — the repo's parallel execution substrate (rayon is
+//! not vendored; DESIGN.md §5/§6).
+//!
+//! Every super-linear hot path (Gram construction, GEMM, the `tred2` /
+//! `tql2` eigensolver sweeps, Strassen quadrants, global-search
+//! wavefronts) fans out through the three primitives here:
+//!
+//! - [`par_for`] — dynamic chunked index loop (load-balanced via an
+//!   atomic cursor);
+//! - [`par_chunks_mut`] — disjoint `&mut` chunks of one slice;
+//! - [`par_map`] — map a slice to an owned result vector.
+//!
+//! Workers are spawned per call on [`std::thread::scope`], so closures
+//! borrow freely from the caller's stack and panics propagate when the
+//! scope joins (a panicking worker aborts the whole call, exactly like
+//! the serial loop would).  There is deliberately no persistent worker
+//! state: thread spawn is ~10 µs on Linux, negligible against the ≥ ~1 ms
+//! work items the grain thresholds admit, and it keeps the pool
+//! re-entrant and fork-safe.
+//!
+//! ## Thread-count resolution
+//!
+//! Highest priority first:
+//! 1. a thread-local override installed by [`with_threads`] (tests,
+//!    per-request plumbing);
+//! 2. the process-wide value from [`set_threads`] (`--threads` CLI flag);
+//! 3. the `GPML_THREADS` environment variable (read once);
+//! 4. `std::thread::available_parallelism()`.
+//!
+//! `1` means *exact serial fallback*: the primitives run the identical
+//! in-order loop on the calling thread — same code path, same FP
+//! arithmetic, bit-identical output.
+//!
+//! ## Determinism policy
+//!
+//! All call sites partition *writes* disjointly (rows, column blocks,
+//! stripes) and keep the per-element arithmetic identical to the serial
+//! loop, so results are bit-identical across thread counts, with one
+//! exception: block-local partial reductions (e.g. the `tred2`
+//! accumulation sweep) re-associate a sum across worker blocks and may
+//! differ from serial by O(eps) — the differential-verification suite
+//! (DESIGN.md §4) gates those sites.
+//!
+//! ## Nesting
+//!
+//! A `par_*` call from inside a pool worker runs serially inline (an
+//! `IN_POOL` thread-local guards against exponential spawn storms), so
+//! nested parallel structures — Strassen quadrants whose base-case GEMM
+//! is itself parallel — cost nothing extra and cannot deadlock.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide override from `--threads` (0 = unset → env/auto).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override from [`with_threads`] (0 = unset).
+    static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+    /// Set while this thread is executing inside a pool worker.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// `ceil(a / b)` (usize::div_ceil needs rustc 1.73; MSRV here is 1.66).
+/// Public: the pooled call sites in linalg/kernelfn share it.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Hardware parallelism, cached (the benign double-init race recomputes
+/// the same value).
+fn hardware_threads() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHE.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    CACHE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// `GPML_THREADS` / `available_parallelism` default, cached after the
+/// first resolution.
+fn default_threads() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHE.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = match std::env::var("GPML_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => hardware_threads(),
+    };
+    CACHE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// The worker count a `par_*` call issued right now would use.
+///
+/// Every source (per-request override, `--threads`, `GPML_THREADS`) is
+/// clamped to 8x the hardware parallelism: widths are attacker- or
+/// typo-reachable (the coordinator protocol carries one per request),
+/// and an unclamped width would spawn that many OS threads per `par_*`
+/// call — `std::thread::scope` panics if a spawn fails.  Modest
+/// oversubscription stays allowed for experiments.
+pub fn num_threads() -> usize {
+    let cap = 8 * hardware_threads();
+    let local = LOCAL_THREADS.with(Cell::get);
+    if local != 0 {
+        return local.min(cap);
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global != 0 {
+        return global.min(cap);
+    }
+    default_threads().min(cap)
+}
+
+/// Install a process-wide thread count (the `--threads` CLI flag);
+/// `0` restores env/auto resolution.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with the calling thread's pool width pinned to `n` (`0` =
+/// no-op passthrough).  Scoped and re-entrant: used by tests to compare
+/// serial vs pooled output in one process, and by the coordinator to
+/// honor a per-request thread count.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    // drop guard so a panicking `f` still restores the previous width
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_THREADS.with(|c| c.replace(n)));
+    f()
+}
+
+/// True while executing inside a pool worker (nested `par_*` calls run
+/// serially inline).
+pub fn in_pool() -> bool {
+    IN_POOL.with(Cell::get)
+}
+
+/// Worker count a call over `items` units would use when spawning is
+/// only worthwhile if each worker gets at least `grain` units: small
+/// inputs (and nested calls) collapse to 1, the exact serial path.
+/// Public so block-reduction call sites (per-worker partial sums) can
+/// size their scratch buffers with the same policy `par_for` applies.
+pub fn plan_workers(items: usize, grain: usize) -> usize {
+    if items == 0 || in_pool() {
+        return 1;
+    }
+    num_threads().min(div_ceil(items, grain.max(1)))
+}
+
+/// Parallel `for i in 0..items { f(i) }`.
+///
+/// `grain` is both the scheduling quantum (workers claim `grain` indices
+/// at a time off an atomic cursor — dynamic, so triangular workloads
+/// like Gram rows balance) and the minimum per-worker work unit below
+/// which the call degenerates to the serial in-order loop.  `f` must be
+/// safe to call concurrently for distinct `i`.
+pub fn par_for<F: Fn(usize) + Sync>(items: usize, grain: usize, f: F) {
+    let workers = plan_workers(items, grain);
+    if workers <= 1 {
+        for i in 0..items {
+            f(i);
+        }
+        return;
+    }
+    let grain = grain.max(1);
+    let cursor = AtomicUsize::new(0);
+    let run = |f: &F| loop {
+        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+        if start >= items {
+            break;
+        }
+        for i in start..(start + grain).min(items) {
+            f(i);
+        }
+    };
+    // Drop guard, not a trailing store: a panicking worker unwinds
+    // through here and the calling thread must not stay marked in-pool.
+    struct PoolGuard(bool);
+    impl Drop for PoolGuard {
+        fn drop(&mut self) {
+            IN_POOL.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = PoolGuard(IN_POOL.with(|c| c.replace(true)));
+    std::thread::scope(|s| {
+        for _ in 1..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                run(&f);
+            });
+        }
+        run(&f); // the calling thread is worker 0
+    });
+}
+
+/// Parallel iteration over disjoint `chunk_len`-sized chunks of `data`;
+/// `f(chunk_index, chunk)` — `chunk_index * chunk_len` is the chunk's
+/// base offset.  One chunk is the scheduling grain.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    let chunk_len = chunk_len.max(1);
+    let len = data.len();
+    let shared = SharedMut::new(data);
+    par_for(div_ceil(len, chunk_len), 1, |ci| {
+        let start = ci * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // Safety: chunk ranges are disjoint across `ci`.
+        f(ci, unsafe { shared.slice_mut(start, end) });
+    });
+}
+
+/// Parallel `items.iter().map(f).collect()`, preserving order.  `grain`
+/// as in [`par_for`].
+pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(
+    items: &[T],
+    grain: usize,
+    f: F,
+) -> Vec<R> {
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    {
+        let shared = SharedMut::new(&mut out[..]);
+        // Safety: each index is written by exactly one worker.
+        par_for(items.len(), grain, |i| unsafe {
+            *shared.get_mut(i) = Some(f(&items[i]));
+        });
+    }
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+/// Shared-mutable view of a slice for writes that are disjoint by
+/// construction but not expressible as `split_at_mut` (interleaved
+/// column ranges, scattered rows).  Every access is `unsafe`; the caller
+/// contracts that no index is written by two workers concurrently and
+/// nothing written by one worker is read by another before the scope
+/// joins.
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lifetime: PhantomData<&'a mut [T]>,
+}
+
+// Safety: SharedMut only hands out raw access under the documented
+// disjointness contract; T: Send suffices because values never move
+// between threads, they are only written in place.
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedMut { ptr: slice.as_mut_ptr(), len: slice.len(), _lifetime: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// `i < len`, and no other worker accesses index `i` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// # Safety
+    /// `start <= end <= len`, and no other worker accesses
+    /// `[start, end)` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+
+    /// Raw read without materializing a reference (so it may target
+    /// elements adjacent to another worker's write range).
+    ///
+    /// # Safety
+    /// `i < len`, and no worker writes index `i` concurrently.
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        std::ptr::read(self.ptr.add(i))
+    }
+
+    /// Raw write without materializing a reference.
+    ///
+    /// # Safety
+    /// `i < len`, and no other worker reads or writes index `i`
+    /// concurrently.
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        std::ptr::write(self.ptr.add(i), value);
+    }
+
+    /// Shared view of `[start, end)` for reads.
+    ///
+    /// # Safety
+    /// `start <= end <= len`, and no worker writes inside `[start, end)`
+    /// concurrently.
+    pub unsafe fn slice_ref(&self, start: usize, end: usize) -> &[T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_empty_input() {
+        par_for(0, 1, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_for_single_item() {
+        let hits = AtomicUsize::new(0);
+        par_for(1, 1, |i| {
+            assert_eq!(i, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn par_for_covers_every_index_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            with_threads(threads, || {
+                let n = 1037;
+                let mask = AtomicU64::new(0);
+                let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                par_for(n, 1, |i| {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                    mask.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(mask.load(Ordering::Relaxed), n as u64);
+                assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+            });
+        }
+    }
+
+    #[test]
+    fn par_for_grain_collapses_small_inputs_to_serial() {
+        // 8 items at grain 16 -> one worker -> runs on the calling thread
+        let caller = std::thread::current().id();
+        par_for(8, 16, |_| {
+            assert_eq!(std::thread::current().id(), caller);
+        });
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        with_threads(4, || {
+            let xs: Vec<usize> = (0..513).collect();
+            let ys = par_map(&xs, 1, |&x| x * 2 + 1);
+            assert_eq!(ys, xs.iter().map(|&x| x * 2 + 1).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_chunks() {
+        with_threads(4, || {
+            let mut data = vec![0.0f64; 1000];
+            par_chunks_mut(&mut data, 64, |ci, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (ci * 64 + k) as f64;
+                }
+            });
+            for (i, x) in data.iter().enumerate() {
+                assert_eq!(*x, i as f64);
+            }
+        });
+    }
+
+    #[test]
+    fn nested_par_for_runs_serially_inline() {
+        with_threads(4, || {
+            let total = AtomicUsize::new(0);
+            par_for(8, 1, |_| {
+                assert!(in_pool());
+                // nested call must not spawn (and must still cover all
+                // indices)
+                let inner = AtomicUsize::new(0);
+                par_for(100, 1, |_| {
+                    inner.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(inner.load(Ordering::Relaxed), 100);
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 8);
+            assert!(!in_pool());
+        });
+    }
+
+    #[test]
+    fn panic_in_worker_propagates() {
+        let result = std::panic::catch_unwind(|| {
+            with_threads(4, || {
+                par_for(64, 1, |i| {
+                    if i == 17 {
+                        panic!("worker panic");
+                    }
+                });
+            })
+        });
+        assert!(result.is_err());
+        // the pool must be reusable after a panicked call
+        assert!(!in_pool());
+        let ok = AtomicUsize::new(0);
+        par_for(4, 1, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn absurd_widths_are_clamped() {
+        // the coordinator protocol carries a per-request width, so a
+        // hostile or typoed value must not translate into an OS thread
+        // spawn storm
+        with_threads(1_000_000, || {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            assert!(num_threads() <= 8 * hw, "width {} escaped the clamp", num_threads());
+        });
+    }
+
+    #[test]
+    fn with_threads_restores_previous_width() {
+        let outer = num_threads();
+        with_threads(3, || {
+            assert_eq!(num_threads(), 3);
+            with_threads(1, || assert_eq!(num_threads(), 1));
+            assert_eq!(num_threads(), 3);
+        });
+        assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn serial_width_runs_in_order_on_calling_thread() {
+        with_threads(1, || {
+            let caller = std::thread::current().id();
+            let seen = std::sync::Mutex::new(Vec::new());
+            // grain 1, 1 thread: must visit 0..n in order, no spawns
+            par_for(50, 1, |i| {
+                assert_eq!(std::thread::current().id(), caller);
+                seen.lock().unwrap().push(i);
+            });
+            assert_eq!(*seen.lock().unwrap(), (0..50).collect::<Vec<_>>());
+        });
+    }
+}

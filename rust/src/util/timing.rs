@@ -16,6 +16,22 @@ pub struct Stats {
     pub iters: usize,
 }
 
+impl Stats {
+    /// JSON object for the machine-readable bench trajectory
+    /// (`BENCH_<name>.json`; written via the in-repo `util::json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("mean_us", Json::Num(self.mean_us)),
+            ("median_us", Json::Num(self.median_us)),
+            ("p10_us", Json::Num(self.p10_us)),
+            ("p90_us", Json::Num(self.p90_us)),
+            ("min_us", Json::Num(self.min_us)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
 /// Time `f` for `iters` iterations after `warmup` unmeasured ones.
 /// Returns per-iteration stats; each iteration is timed individually so the
 /// distribution (not just the mean) is available.
@@ -43,6 +59,26 @@ pub fn measure_block<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
         f();
     }
     t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+}
+
+/// Repeat [`measure_block`] `reps` times and return the distribution of
+/// the block means: per-iteration percentiles are meaningless when one
+/// call is sub-microsecond, but the bench JSON wants a spread.
+///
+/// Note the `Stats::iters` semantics: it is always the number of timed
+/// samples behind the percentiles — individual iterations for
+/// [`measure`], block *means* (each averaging `iters` calls) here.
+pub fn measure_block_stats<F: FnMut()>(
+    warmup: usize,
+    iters: usize,
+    reps: usize,
+    mut f: F,
+) -> Stats {
+    let mut samples: Vec<f64> = Vec::with_capacity(reps.max(1));
+    for r in 0..reps.max(1) {
+        samples.push(measure_block(if r == 0 { warmup } else { 0 }, iters, &mut f));
+    }
+    stats_of(&mut samples)
 }
 
 fn stats_of(samples: &mut [f64]) -> Stats {
@@ -165,6 +201,23 @@ mod tests {
             std::hint::black_box(acc);
         });
         assert!(t >= 0.0 && t < 1000.0);
+    }
+
+    #[test]
+    fn block_stats_distribution_and_json() {
+        let mut acc = 0.0f64;
+        let st = measure_block_stats(1, 100, 5, || {
+            acc += 1.0;
+            std::hint::black_box(acc);
+        });
+        assert_eq!(st.iters, 5);
+        assert!(st.p10_us <= st.p90_us);
+        assert!(st.min_us <= st.median_us);
+        let j = st.to_json();
+        assert!(j.get("median_us").and_then(|v| v.as_f64()).is_some());
+        assert_eq!(j.get("iters").and_then(|v| v.as_usize()), Some(5));
+        // round-trips through the in-repo parser
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

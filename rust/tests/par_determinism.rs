@@ -1,0 +1,235 @@
+//! Pool correctness and determinism gates (ISSUE 2 satellite): width 1
+//! must run the identical pre-pool serial arithmetic, and pooled runs
+//! must agree with serial — bit-identical wherever the write partition
+//! keeps per-element arithmetic fixed (gram, GEMM, Strassen, tql2,
+//! wavefronts), and within 1e-12 where a block reduction re-associates
+//! a sum (the tred2 transform accumulation).
+//!
+//! Thread widths are pinned per test via `threadpool::with_threads`,
+//! which is thread-local, so these tests are safe under the parallel
+//! libtest runner and independent of the ambient GPML_THREADS value.
+
+use gpml::kernelfn::{cross_gram, gram, Kernel};
+use gpml::linalg::{gemm, strassen, Matrix, SymEigen};
+use gpml::optim::{self, Bounds, Objective};
+use gpml::spectral::{EigenSystem, HyperParams};
+use gpml::util::rng::Rng;
+use gpml::util::threadpool::with_threads;
+use gpml::verify::{differential_suite, SuiteConfig};
+
+fn random(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+    Matrix::from_fn(m, n, |_, _| rng.normal())
+}
+
+/// N large enough that every pooled site actually fans out at width 4
+/// (the grain thresholds collapse smaller problems to serial).
+const N_PAR: usize = 200;
+
+#[test]
+fn gram_width1_is_bitwise_the_prepool_loop_and_pooled_matches() {
+    let mut rng = Rng::new(11);
+    let x = random(&mut rng, N_PAR, 4);
+    let kern = Kernel::Rbf { xi2: 1.5 };
+    // the seed's pre-pool serial loop, verbatim
+    let mut want = Matrix::zeros(N_PAR, N_PAR);
+    for i in 0..N_PAR {
+        for j in i..N_PAR {
+            let v = kern.eval(x.row(i), x.row(j));
+            want[(i, j)] = v;
+            want[(j, i)] = v;
+        }
+    }
+    let serial = with_threads(1, || gram(kern, &x));
+    assert!(serial == want, "width-1 gram must be bit-identical to the pre-pool loop");
+    let pooled = with_threads(4, || gram(kern, &x));
+    assert!(pooled == serial, "pooled gram must be bit-identical to serial");
+}
+
+#[test]
+fn cross_gram_bitwise_across_widths() {
+    let mut rng = Rng::new(12);
+    let a = random(&mut rng, 150, 3);
+    let b = random(&mut rng, 170, 3);
+    let kern = Kernel::Matern52 { ell: 0.8 };
+    let want = Matrix::from_fn(a.rows(), b.rows(), |i, j| kern.eval(a.row(i), b.row(j)));
+    let serial = with_threads(1, || cross_gram(kern, &a, &b));
+    assert!(serial == want, "width-1 cross_gram must match the pre-pool from_fn loop");
+    let pooled = with_threads(4, || cross_gram(kern, &a, &b));
+    assert!(pooled == serial);
+}
+
+#[test]
+fn matmul_width1_is_bitwise_the_prepool_blocked_loop() {
+    // the seed's pre-pool blocked ikj GEMM, verbatim (BLOCK = 64)
+    fn prepool_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        const BLOCK: usize = 64;
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Matrix::zeros(m, n);
+        let ad = a.data();
+        let bd = b.data();
+        let cd = c.data_mut();
+        for i0 in (0..m).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(m);
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                for j0 in (0..n).step_by(BLOCK) {
+                    let j1 = (j0 + BLOCK).min(n);
+                    for i in i0..i1 {
+                        let arow = &ad[i * k..(i + 1) * k];
+                        let crow = &mut cd[i * n..(i + 1) * n];
+                        for kk in k0..k1 {
+                            let aik = arow[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = &bd[kk * n..(kk + 1) * n];
+                            let (mut j, end) = (j0, j1);
+                            while j + 4 <= end {
+                                crow[j] += aik * brow[j];
+                                crow[j + 1] += aik * brow[j + 1];
+                                crow[j + 2] += aik * brow[j + 2];
+                                crow[j + 3] += aik * brow[j + 3];
+                                j += 4;
+                            }
+                            while j < end {
+                                crow[j] += aik * brow[j];
+                                j += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+    let mut rng = Rng::new(13);
+    let a = random(&mut rng, N_PAR, N_PAR);
+    let b = random(&mut rng, N_PAR, N_PAR);
+    let want = prepool_matmul(&a, &b);
+    let serial = with_threads(1, || gemm::matmul(&a, &b));
+    assert!(serial == want, "width-1 matmul must be bit-identical to the pre-pool loop");
+    let pooled = with_threads(4, || gemm::matmul(&a, &b));
+    assert!(pooled == serial, "pooled matmul must be bit-identical to serial");
+}
+
+#[test]
+fn matmul_bt_and_ata_bitwise_across_widths() {
+    let mut rng = Rng::new(14);
+    let a = random(&mut rng, N_PAR, N_PAR);
+    let b = random(&mut rng, N_PAR, N_PAR);
+    let bt1 = with_threads(1, || gemm::matmul_bt(&a, &b));
+    let bt4 = with_threads(4, || gemm::matmul_bt(&a, &b));
+    assert!(bt1 == bt4, "pooled matmul_bt must be bit-identical to serial");
+    // correctness against the reference product
+    assert!(bt1.max_abs_diff(&gemm::matmul(&a, &b.t())) < 1e-9);
+
+    // tall-skinny shape large enough for ata's column blocks to fan out
+    let c = random(&mut rng, 3000, 400);
+    let g1 = with_threads(1, || gemm::ata(&c));
+    let g4 = with_threads(4, || gemm::ata(&c));
+    assert!(g1 == g4, "pooled ata must be bit-identical to serial");
+    assert!(g1.max_abs_diff(&gemm::matmul(&c.t(), &c)) < 1e-8);
+}
+
+#[test]
+fn strassen_bitwise_across_widths() {
+    let mut rng = Rng::new(15);
+    // above PAR_EDGE so the top level fans its seven quadrants out
+    let n = 300;
+    let a = random(&mut rng, n, n);
+    let b = random(&mut rng, n, n);
+    let s1 = with_threads(1, || strassen::strassen(&a, &b));
+    let s4 = with_threads(4, || strassen::strassen(&a, &b));
+    assert!(s1 == s4, "pooled strassen must be bit-identical to serial");
+    assert!(s1.max_abs_diff(&gemm::matmul(&a, &b)) < 1e-8);
+}
+
+#[test]
+fn eigendecomposition_within_1e12_across_widths() {
+    let mut rng = Rng::new(16);
+    // above the eigensolver's fan-out threshold (steps i >= ~256 pool)
+    let x = random(&mut rng, 400, 3);
+    let k = gram(Kernel::Rbf { xi2: 1.5 }, &x);
+    let e1 = with_threads(1, || SymEigen::new(&k).expect("serial eigensolver"));
+    let e4 = with_threads(4, || SymEigen::new(&k).expect("pooled eigensolver"));
+    // the tridiagonal (d, e) path is bit-identical across widths; only
+    // the accumulated transform sees the block reduction, so both
+    // eigenvalues and eigenvectors must agree far inside 1e-12
+    let scale = e1.values.last().copied().unwrap_or(1.0).abs().max(1.0);
+    for (v1, v4) in e1.values.iter().zip(&e4.values) {
+        assert!(
+            (v1 - v4).abs() <= 1e-12 * scale,
+            "eigenvalue drift across widths: {v1} vs {v4}"
+        );
+    }
+    assert!(
+        e1.vectors.max_abs_diff(&e4.vectors) <= 1e-12,
+        "eigenvector drift {} across widths",
+        e1.vectors.max_abs_diff(&e4.vectors)
+    );
+    // and the pooled decomposition still reconstructs the input
+    assert!(e4.reconstruct().max_abs_diff(&k) < 1e-8);
+}
+
+#[test]
+fn wavefront_eval_batch_bitwise_across_widths() {
+    // synthetic O(N) state large enough for the wavefront grain to fan out
+    let n = 2048;
+    let mut rng = Rng::new(17);
+    let s: Vec<f64> = (0..n).map(|i| (n - i) as f64 * rng.uniform_in(0.5, 1.0)).collect();
+    let yt: Vec<f64> = rng.normal_vec(n);
+    let yy = yt.iter().map(|v| v * v).sum();
+    let es = EigenSystem::from_parts(
+        s.iter().rev().copied().collect(),
+        yt.iter().map(|v| v * v).collect(),
+        n,
+        yy,
+    );
+    let hps: Vec<HyperParams> = (0..64)
+        .map(|i| HyperParams::new(0.1 + 0.05 * i as f64, 0.5 + 0.02 * i as f64))
+        .collect();
+    let mut es1 = es.clone();
+    let mut es4 = es.clone();
+    let serial = with_threads(1, || es1.eval_batch(&hps));
+    let pooled = with_threads(4, || es4.eval_batch(&hps));
+    assert_eq!(serial, pooled, "wavefront scores must be bit-identical across widths");
+    // scalar loop is the ground truth for the batch
+    let scalar: Vec<f64> = hps.iter().map(|&hp| es.score(hp)).collect();
+    assert_eq!(serial, scalar);
+}
+
+#[test]
+fn grid_search_result_bitwise_across_widths() {
+    let n = 2048;
+    let mut rng = Rng::new(18);
+    let s: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 10.0)).collect();
+    let mut sorted = s.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let yt: Vec<f64> = rng.normal_vec(n);
+    let yy = yt.iter().map(|v| v * v).sum();
+    let es = EigenSystem::from_parts(sorted, yt.iter().map(|v| v * v).collect(), n, yy);
+    let mut es1 = es.clone();
+    let mut es4 = es.clone();
+    let r1 = with_threads(1, || optim::grid_search(&mut es1, Bounds::default(), 17, 64));
+    let r4 = with_threads(4, || optim::grid_search(&mut es4, Bounds::default(), 17, 64));
+    assert_eq!(r1.hp, r4.hp);
+    assert_eq!(r1.score, r4.score);
+    assert_eq!(r1.evals, r4.evals);
+}
+
+#[test]
+fn verify_differential_suite_passes_under_the_pool() {
+    // DESIGN.md §4's gate, executed with the pool engaged: the spectral
+    // identities must survive the pooled gram/eigen/GEMM paths.
+    let cfg = SuiteConfig {
+        sizes: vec![8, 32, 128],
+        datasets_per_size: 1,
+        ..Default::default()
+    };
+    let pooled = with_threads(4, || differential_suite(&cfg));
+    assert!(pooled.ok(), "{}", pooled.summary());
+    let serial = with_threads(1, || differential_suite(&cfg));
+    assert!(serial.ok(), "{}", serial.summary());
+    assert_eq!(serial.cases, pooled.cases);
+    assert_eq!(serial.checks, pooled.checks);
+}
