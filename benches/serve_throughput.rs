@@ -1,0 +1,236 @@
+//! Serving throughput: cold-vs-warm request latency through the real TCP
+//! server, demonstrating that the session cache turns the paper's
+//! `O(N^3) + k*·O(N)` amortization into steady-state serving behavior.
+//!
+//! Measured per sweep point, over the wire (parse + dispatch included):
+//!
+//! - `tune_cold`    — inline tune of a never-seen dataset (pays the full
+//!                    Gram + eigendecomposition before tuning);
+//! - `tune_warm`    — identical tune against an existing session (zero
+//!                    setup work, O(N) per iterate);
+//! - `create_warm`  — `create_session` cache hit (fingerprint + lookup);
+//! - `evaluate_warm`— one score/Jacobian/Hessian evaluation (pure O(N),
+//!                    the smallest servable unit of work).
+//!
+//! Also reports a multi-client paragraph: 4 concurrent connections
+//! hammering warm sessions, as requests/second.
+//!
+//! Writes `BENCH_serve.json` next to the stdout table.
+//!
+//! Options (after `cargo bench --bench serve_throughput --`):
+//!   --sizes 64,128,256,512   sweep override
+//!   --max-n 256              cap the sweep (CI smoke uses this)
+//!   --iters 3                timed repetitions per point
+
+mod bench_common;
+
+use bench_common::{bench_json, write_bench_json, Series};
+use gpml::coordinator::client::Client;
+use gpml::coordinator::protocol::EvaluateRequest;
+use gpml::coordinator::server::Server;
+use gpml::coordinator::session::SessionTuneRequest;
+use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::spectral::HyperParams;
+use gpml::util::cli::Args;
+use gpml::util::json::Json;
+use gpml::util::timing::{measure, Stats, Table};
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn dataset(n: usize, seed: u64) -> (gpml::linalg::Matrix, Vec<Vec<f64>>) {
+    let ds = synthetic(SyntheticSpec { n, p: 4, seed, ..Default::default() }, 1);
+    (ds.x, ds.ys)
+}
+
+fn tune_request(x: gpml::linalg::Matrix, ys: Vec<Vec<f64>>) -> TuneRequest {
+    let mut req = TuneRequest::new(x, ys, KERNEL);
+    req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+    req.objective = ObjectiveKind::Evidence;
+    req
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let default_sizes = [64usize, 128, 256, 512];
+    let mut sizes = args.get_usize_list("sizes", &default_sizes).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.get_usize("max-n", usize::MAX) {
+        Ok(cap) => sizes.retain(|&n| n <= cap),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if sizes.is_empty() {
+        eprintln!("empty sweep after --sizes/--max-n filtering");
+        std::process::exit(2);
+    }
+    let iters = args.get_usize("iters", 3).unwrap_or(3).max(1);
+
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).expect("bind");
+    let addr = server.addr.to_string();
+    println!(
+        "== serve throughput: cold vs warm request latency ({} pool workers) ==",
+        server.workers()
+    );
+
+    let mut table = Table::new(&[
+        "N",
+        "tune cold ms",
+        "tune warm ms",
+        "create warm us",
+        "evaluate us",
+        "cold/warm",
+    ]);
+    type Sweep = Vec<Stats>;
+    let (mut cold, mut warm, mut create, mut eval): (Sweep, Sweep, Sweep, Sweep) =
+        (vec![], vec![], vec![], vec![]);
+
+    for &n in &sizes {
+        let mut client = Client::connect(&addr).expect("connect");
+
+        // cold tunes: a fresh dataset every repetition, so each request
+        // pays the full O(N^3) setup.  Datasets are generated outside the
+        // timed closure (synthetic GP sampling is itself super-linear).
+        let cold_reqs: Vec<TuneRequest> = (0..iters)
+            .map(|i| {
+                let (x, ys) = dataset(n, 1_000 * n as u64 + i as u64);
+                tune_request(x, ys)
+            })
+            .collect();
+        let mut cold_i = 0;
+        let st_cold = measure(0, iters, || {
+            client.tune(&cold_reqs[cold_i]).expect("cold tune");
+            cold_i += 1;
+        });
+
+        // one pinned session for the warm series
+        let (x, ys) = dataset(n, 7);
+        let id = client.create_session(&x, KERNEL).expect("create");
+        let mut sreq = SessionTuneRequest::new(id, ys.clone());
+        sreq.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+        sreq.objective = ObjectiveKind::Evidence;
+        let st_warm = measure(1, iters, || {
+            client.tune_session(&sreq).expect("warm tune");
+        });
+
+        let st_create = measure(1, iters, || {
+            client.create_session(&x, KERNEL).expect("warm create");
+        });
+
+        let ereq = EvaluateRequest {
+            session_id: id,
+            y: ys[0].clone(),
+            hp: HyperParams::new(0.1, 1.0),
+            objective: ObjectiveKind::Evidence,
+        };
+        let st_eval = measure(1, iters.max(10), || {
+            client.evaluate(&ereq).expect("evaluate");
+        });
+
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", st_cold.median_us / 1e3),
+            format!("{:.2}", st_warm.median_us / 1e3),
+            format!("{:.0}", st_create.median_us),
+            format!("{:.0}", st_eval.median_us),
+            format!("{:.1}x", st_cold.median_us / st_warm.median_us),
+        ]);
+        cold.push(st_cold);
+        warm.push(st_warm);
+        create.push(st_create);
+        eval.push(st_eval);
+    }
+    table.print();
+
+    let last = sizes.len() - 1;
+    let amortization = cold[last].median_us / warm[last].median_us;
+    println!(
+        "\n@ N={}: warm tune {amortization:.1}x faster than cold (the paper's amortized bound)",
+        sizes[last]
+    );
+
+    // multi-client paragraph: 4 connections hammering warm sessions.
+    // Both datasets' sessions are created (warm) before the clock starts,
+    // so the measured window contains only warm evaluations.
+    let n = sizes[last];
+    let clients = 4usize;
+    let per_client = 20usize;
+    {
+        let mut warmup_client = Client::connect(&addr).expect("connect");
+        for c in 0..2u64 {
+            let (x, _) = dataset(n, 7 + c * 13);
+            warmup_client.create_session(&x, KERNEL).expect("pre-create");
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let (x, ys) = dataset(n, 7 + (c % 2) as u64 * 13);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let id = client.create_session(&x, KERNEL).expect("create");
+                let ereq = EvaluateRequest {
+                    session_id: id,
+                    y: ys[0].clone(),
+                    hp: HyperParams::new(0.1, 1.0),
+                    objective: ObjectiveKind::Evidence,
+                };
+                for _ in 0..per_client {
+                    client.evaluate(&ereq).expect("evaluate");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let rps = (clients * per_client) as f64 / elapsed;
+    println!(
+        "{clients} clients x {per_client} warm evaluations @ N={n}: {rps:.0} req/s ({:.2}s total)",
+        elapsed
+    );
+
+    let stats = server.session_stats();
+    println!(
+        "session cache: {} setups / {} hits / {} misses / {} evictions",
+        stats.setups, stats.hits, stats.misses, stats.evictions
+    );
+
+    let payload = bench_json(
+        "serve",
+        &sizes,
+        &[
+            Series { label: "tune_cold", stats: &cold },
+            Series { label: "tune_warm", stats: &warm },
+            Series { label: "create_warm", stats: &create },
+            Series { label: "evaluate_warm", stats: &eval },
+        ],
+        vec![
+            ("workers", Json::Num(server.workers() as f64)),
+            (
+                "amortization_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(sizes[last] as f64)),
+                    ("cold_over_warm", Json::Num(amortization)),
+                ]),
+            ),
+            (
+                "warm_throughput",
+                Json::obj(vec![
+                    ("n", Json::Num(n as f64)),
+                    ("clients", Json::Num(clients as f64)),
+                    ("requests_per_second", Json::Num(rps)),
+                ]),
+            ),
+        ],
+    );
+    write_bench_json("serve", &payload);
+    server.stop();
+}

@@ -1,54 +1,99 @@
-//! Serving demo: start the coordinator server in-process, submit tuning
-//! jobs from several client connections (including a repeated job that
-//! hits the eigen-cache and a multi-output job), and print the responses.
+//! Serving demo: start the coordinator server in-process and walk the
+//! session workflow — create a session (the one-time O(N^3) setup),
+//! run warm tunes / evaluations / predictions against it in O(N),
+//! contrast with a cold inline tune, and print the cache statistics.
 //!
 //! Run: `cargo run --release --example serve_client`
 
 use gpml::coordinator::client::Client;
+use gpml::coordinator::protocol::{EvaluateRequest, PredictRequest};
 use gpml::coordinator::server::Server;
+use gpml::coordinator::session::SessionTuneRequest;
 use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
 use gpml::data::{synthetic, SyntheticSpec};
 use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::HyperParams;
 use gpml::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     println!("== coordinator serving demo ==");
-    // ephemeral port; the worker thread owns the (non-Send) coordinator
+    // ephemeral port; pure-rust jobs run on the worker pool, PJRT jobs
+    // (if artifacts exist) on the serial coordinator worker
     let server = Server::start("127.0.0.1:0", Coordinator::auto)?;
-    println!("server listening on {}", server.addr);
+    println!("server listening on {} ({} pool workers)", server.addr, server.workers());
 
     let mut client = Client::connect(&server.addr.to_string())?;
     println!("ping -> {}", client.ping()?);
 
-    // job 1: single output
-    let spec = SyntheticSpec { n: 128, p: 4, sigma2: 0.1, lambda2: 1.0, seed: 3, ..Default::default() };
+    // --- session workflow: pay the setup once, serve O(N) forever ---
+    let spec =
+        SyntheticSpec { n: 128, p: 4, sigma2: 0.1, lambda2: 1.0, seed: 3, ..Default::default() };
     let ds = synthetic(spec, 1);
-    let mut req = TuneRequest::new(ds.x.clone(), ds.ys.clone(), Kernel::Rbf { xi2: 2.0 });
-    req.strategy = GlobalStrategy::Pso { particles: 32, iterations: 15 };
-    req.objective = ObjectiveKind::Evidence;
-    let res = client.tune(&req)?;
-    print_result("job 1 (fresh dataset)", &res);
+    let kernel = Kernel::Rbf { xi2: 2.0 };
 
-    // job 2: identical dataset -> eigen-cache hit on the server
-    let res2 = client.tune(&req)?;
-    print_result("job 2 (same dataset, cache hit expected)", &res2);
-
-    // job 3: multi-output over a second connection
-    let ds3 = synthetic(spec, 3);
-    let mut req3 = TuneRequest::new(ds3.x, ds3.ys, Kernel::Rbf { xi2: 2.0 });
-    req3.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
-    let mut client2 = Client::connect(&server.addr.to_string())?;
-    let res3 = client2.tune(&req3)?;
-    print_result("job 3 (3 outputs, new connection)", &res3);
-
-    let info = client.info()?;
+    let created = client.create_session_full(&ds.x, kernel, 0)?;
+    let id = created.get("session_id").and_then(Json::as_f64).unwrap() as u64;
     println!(
-        "\nserver info: pjrt={} cache_hits={} cache_misses={}",
-        info.get("pjrt").and_then(Json::as_bool).unwrap_or(false),
-        info.get("cache_hits").and_then(Json::as_f64).unwrap_or(-1.0),
-        info.get("cache_misses").and_then(Json::as_f64).unwrap_or(-1.0),
+        "\ncreate_session: id={id} cached={} setup={:.3}s ({} bytes pinned)",
+        created.get("cached").and_then(Json::as_bool).unwrap_or(false),
+        created.get("gram_seconds").and_then(Json::as_f64).unwrap_or(0.0)
+            + created.get("eigen_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+        created.get("bytes").and_then(Json::as_f64).unwrap_or(0.0),
     );
 
+    // warm tunes: zero gram/eigen work on the server
+    let mut sreq = SessionTuneRequest::new(id, ds.ys.clone());
+    sreq.strategy = GlobalStrategy::Pso { particles: 32, iterations: 15 };
+    sreq.objective = ObjectiveKind::Evidence;
+    for round in 1..=2 {
+        let res = client.tune_session(&sreq)?;
+        print_result(&format!("warm tune #{round} (session {id})"), &res);
+    }
+
+    // O(N) score/Jacobian/Hessian at a point (e.g. for an external optimizer)
+    let ev = client.evaluate(&EvaluateRequest {
+        session_id: id,
+        y: ds.ys[0].clone(),
+        hp: HyperParams::new(0.1, 1.0),
+        objective: ObjectiveKind::Evidence,
+    })?;
+    println!(
+        "\nevaluate @ (0.1, 1.0): score={:.4} jac={}",
+        ev.get("score").and_then(Json::as_f64).unwrap_or(f64::NAN),
+        ev.get("jac").unwrap(),
+    );
+
+    // posterior prediction at new inputs, with Prop. 2.4 variances
+    let xnew = Matrix::from_fn(3, 4, |i, j| (i as f64 - 1.0) * 0.3 + j as f64 * 0.1);
+    let pr = client.predict(&PredictRequest {
+        session_id: id,
+        y: ds.ys[0].clone(),
+        xnew,
+        hp: HyperParams::new(0.1, 1.0),
+    })?;
+    println!("predict: mean={} var={}", pr.get("mean").unwrap(), pr.get("var").unwrap());
+
+    // --- contrast: a cold inline tune of a *different* dataset ---
+    let ds2 = synthetic(SyntheticSpec { seed: 99, ..spec }, 3);
+    let mut req = TuneRequest::new(ds2.x, ds2.ys, kernel);
+    req.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+    let mut client2 = Client::connect(&server.addr.to_string())?;
+    let res = client2.tune(&req)?;
+    print_result("cold inline tune (3 outputs, new connection)", &res);
+
+    let stats = client.stats()?;
+    println!(
+        "\ncache stats: sessions={} setups={} hits={} misses={} evictions={} ({} bytes)",
+        stats.get("sessions").and_then(Json::as_f64).unwrap_or(-1.0),
+        stats.get("setups").and_then(Json::as_f64).unwrap_or(-1.0),
+        stats.get("hits").and_then(Json::as_f64).unwrap_or(-1.0),
+        stats.get("misses").and_then(Json::as_f64).unwrap_or(-1.0),
+        stats.get("evictions").and_then(Json::as_f64).unwrap_or(-1.0),
+        stats.get("bytes").and_then(Json::as_f64).unwrap_or(-1.0),
+    );
+
+    client.drop_session(id)?;
     server.stop();
     println!("server stopped; demo OK");
     Ok(())

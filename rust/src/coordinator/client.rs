@@ -1,11 +1,19 @@
 //! Blocking client for the coordinator's newline-JSON protocol.
+//!
+//! One method per wire op (`docs/PROTOCOL.md`); the session workflow is
+//! `create_session` -> repeated `tune_session` / `evaluate` / `predict`
+//! (all O(N) on the server) -> optional `drop_session`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{protocol, TuneRequest};
+use crate::coordinator::protocol::{self, EvaluateRequest, PredictRequest};
+use crate::coordinator::session::SessionTuneRequest;
+use crate::coordinator::TuneRequest;
+use crate::kernelfn::Kernel;
+use crate::linalg::Matrix;
 use crate::util::json::{self, Json};
 
 /// One connection to a running coordinator server.
@@ -42,13 +50,66 @@ impl Client {
         self.raw(r#"{"op":"info"}"#)
     }
 
-    /// Submit a tuning job and return the parsed response (check `ok`).
-    pub fn tune(&mut self, req: &TuneRequest) -> Result<Json> {
-        let v = self.raw(&protocol::tune_request_json(req))?;
+    /// Send a line and require an `"ok": true` response.
+    fn checked(&mut self, line: &str) -> Result<Json> {
+        let v = self.raw(line)?;
         if v.get("ok").and_then(Json::as_bool) != Some(true) {
             let msg = v.get("error").and_then(Json::as_str).unwrap_or("unknown error");
             return Err(anyhow!("server error: {msg}"));
         }
         Ok(v)
+    }
+
+    /// Submit an inline tuning job and return the parsed response.
+    pub fn tune(&mut self, req: &TuneRequest) -> Result<Json> {
+        self.checked(&protocol::tune_request_json(req))
+    }
+
+    /// Create (or look up) the server-side session for a dataset; the
+    /// server pays the O(N^3) setup at most once per fingerprint.
+    /// Returns the session id to reference in subsequent requests.
+    pub fn create_session(&mut self, x: &Matrix, kernel: Kernel) -> Result<u64> {
+        let v = self.checked(&protocol::create_session_json(x, kernel, 0))?;
+        v.get("session_id")
+            .and_then(Json::as_f64)
+            .map(|id| id as u64)
+            .ok_or_else(|| anyhow!("malformed create_session response"))
+    }
+
+    /// Full create-session response (id, `cached`, setup timings, bytes).
+    pub fn create_session_full(
+        &mut self,
+        x: &Matrix,
+        kernel: Kernel,
+        threads: usize,
+    ) -> Result<Json> {
+        self.checked(&protocol::create_session_json(x, kernel, threads))
+    }
+
+    /// Submit a tuning job against an existing session — O(N) per
+    /// iterate on the server, zero setup work.
+    pub fn tune_session(&mut self, req: &SessionTuneRequest) -> Result<Json> {
+        self.checked(&protocol::session_tune_json(req))
+    }
+
+    /// Score/Jacobian/Hessian at one hyperparameter point (O(N)).
+    pub fn evaluate(&mut self, req: &EvaluateRequest) -> Result<Json> {
+        self.checked(&protocol::evaluate_json(req))
+    }
+
+    /// Posterior predictive mean + variance at new inputs.
+    pub fn predict(&mut self, req: &PredictRequest) -> Result<Json> {
+        self.checked(&protocol::predict_json(req))
+    }
+
+    /// Drop a session; returns whether it existed.
+    pub fn drop_session(&mut self, session_id: u64) -> Result<bool> {
+        let v = self.checked(&protocol::drop_session_json(session_id))?;
+        Ok(v.get("dropped").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// Session-cache statistics (hit/miss/eviction/setup counters).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.checked(r#"{"op":"stats"}"#)
     }
 }

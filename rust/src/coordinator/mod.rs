@@ -1,20 +1,47 @@
 //! Tuning coordinator — the Layer-3 service around the paper's identities.
 //!
 //! Responsibilities:
-//! - **Eigen-cache**: the O(N^3) decomposition is keyed by a fingerprint
-//!   of (inputs, kernel) and reused across tuning jobs; an M-output job
-//!   pays it once (paper §2.1's multi-output advantage).
+//! - **Session cache** ([`session`]): the O(N^3) setup (Gram +
+//!   eigendecomposition) is keyed by a fingerprint of (inputs, kernel)
+//!   and reused across served requests in an LRU store with a byte
+//!   budget, so steady-state request cost matches the paper's O(N)
+//!   bound.  Clients create sessions explicitly (`create_session`) or
+//!   implicitly (an inline `tune` fingerprints its dataset).
 //! - **Backend routing**: global search goes through the PJRT
 //!   batched-score artifact (one dispatch per swarm generation); Newton
 //!   refinement uses the fused artifact or the pure-rust evaluator.
-//! - **Serving**: a threaded TCP server (`server.rs`) feeds jobs through
-//!   an mpsc channel to the single worker that owns the (non-`Send`) PJRT
-//!   client; responses return on per-job channels. (tokio is not vendored
-//!   in this image — DESIGN.md §5.)
+//! - **Serving**: a threaded TCP server (`server.rs`).  Pure-rust jobs
+//!   fan out across a worker pool sharing the session store; PJRT jobs
+//!   run on a dedicated serial worker that owns the (non-`Send`) PJRT
+//!   client.  (tokio is not vendored in this image — DESIGN.md §5.)
+//!
+//! The wire protocol is documented in `docs/PROTOCOL.md`.
+//!
+//! # Examples
+//!
+//! In-process tuning through the [`Coordinator`] (the library-level entry
+//! point; the server wraps the same logic):
+//!
+//! ```
+//! use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
+//! use gpml::data::{synthetic, SyntheticSpec};
+//!
+//! let ds = synthetic(SyntheticSpec { n: 24, p: 2, seed: 1, ..Default::default() }, 1);
+//! let mut req = TuneRequest::new(ds.x, ds.ys, SyntheticSpec::default().kernel);
+//! req.strategy = GlobalStrategy::Grid { points_per_axis: 5 };
+//! req.objective = ObjectiveKind::Evidence;
+//!
+//! let mut coord = Coordinator::rust_only();
+//! let first = coord.tune(&req).unwrap();
+//! let second = coord.tune(&req).unwrap(); // same dataset: setup is cached
+//! assert!(!first.eigen_cached);
+//! assert!(second.eigen_cached);
+//! ```
 
 pub mod client;
 pub mod protocol;
 pub mod server;
+pub mod session;
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -239,15 +266,15 @@ impl Coordinator {
                 // (its per-iterate cost is the same O(N))
                 (Some(rt), Backend::Pjrt, ObjectiveKind::PaperScore) => {
                     let mut ev = rt.evaluator(&es)?;
-                    tune_one(&mut ev, req)
+                    tune_one(&mut ev, req.bounds, req.strategy, req.seed)
                 }
                 (_, _, ObjectiveKind::Evidence) => {
                     let mut ev = optim::EvidenceObjective(es.clone());
-                    tune_one(&mut ev, req)
+                    tune_one(&mut ev, req.bounds, req.strategy, req.seed)
                 }
                 _ => {
                     let mut ev = es.clone();
-                    tune_one(&mut ev, req)
+                    tune_one(&mut ev, req.bounds, req.strategy, req.seed)
                 }
             };
             outputs.push(out);
@@ -276,19 +303,26 @@ impl Coordinator {
     }
 }
 
-/// Global stage + Newton refinement over any objective.
-fn tune_one<O: Objective>(obj: &mut O, req: &TuneRequest) -> OutputResult {
-    let global = match req.strategy {
+/// Global stage + Newton refinement over any objective.  Shared by the
+/// coordinator's backend paths and the session subsystem (`session.rs`),
+/// so cached-eigenbasis tuning is the *same* computation as a cold tune.
+pub(crate) fn tune_one<O: Objective>(
+    obj: &mut O,
+    bounds: Bounds,
+    strategy: GlobalStrategy,
+    seed: u64,
+) -> OutputResult {
+    let global = match strategy {
         GlobalStrategy::Grid { points_per_axis } => {
-            optim::grid_search(obj, req.bounds, points_per_axis, 64)
+            optim::grid_search(obj, bounds, points_per_axis, 64)
         }
         GlobalStrategy::Pso { particles, iterations } => optim::pso_search(
             obj,
-            req.bounds,
-            PsoOptions { particles, iterations, seed: req.seed, ..Default::default() },
+            bounds,
+            PsoOptions { particles, iterations, seed, ..Default::default() },
         ),
     };
-    let refined = optim::newton_refine(obj, global.hp, req.bounds, NewtonOptions::default());
+    let refined = optim::newton_refine(obj, global.hp, bounds, NewtonOptions::default());
     // Newton should never regress below the global stage's best
     let (hp, score) = if refined.score <= global.score {
         (refined.hp, refined.score)

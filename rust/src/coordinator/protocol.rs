@@ -1,19 +1,32 @@
 //! Wire protocol: newline-delimited JSON over TCP.
 //!
-//! Requests:
+//! The complete request/response reference (every op, field defaults,
+//! and error shapes) lives in `docs/PROTOCOL.md`.  Summary:
+//!
 //! ```json
 //! {"op": "ping"}
 //! {"op": "info"}
+//! {"op": "stats"}
 //! {"op": "tune", "x": [[...], ...], "ys": [[...], ...],
 //!  "kernel": "rbf:2.0", "backend": "rust"|"pjrt",
 //!  "strategy": "pso"|"grid", "particles": 64, "iterations": 25,
-//!  "grid": 17, "seed": 42}
+//!  "grid": 17, "seed": 42, "threads": 0}
+//! {"op": "tune", "session_id": 1, "ys": [[...], ...], ...}
+//! {"op": "create_session", "x": [[...], ...], "kernel": "rbf:2.0"}
+//! {"op": "drop_session", "session_id": 1}
+//! {"op": "evaluate", "session_id": 1, "y": [...],
+//!  "sigma2": 0.1, "lambda2": 1.0, "objective": "paper"|"evidence"}
+//! {"op": "predict", "session_id": 1, "y": [...], "xnew": [[...], ...],
+//!  "sigma2": 0.1, "lambda2": 1.0}
+//! {"op": "shutdown"}
 //! ```
 //! Responses: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
 
+use crate::coordinator::session::{SessionTuneRequest, StoreStats};
 use crate::coordinator::{Backend, GlobalStrategy, ObjectiveKind, TuneRequest, TuneResult};
-use crate::kernelfn;
+use crate::kernelfn::{self, Kernel};
 use crate::linalg::Matrix;
+use crate::spectral::{Evaluation, HyperParams};
 use crate::util::json::{self, Json};
 
 /// Parsed request operations.
@@ -21,24 +34,52 @@ use crate::util::json::{self, Json};
 pub enum Request {
     Ping,
     Info,
+    /// Session-cache statistics (`session::StoreStats` + worker count).
+    Stats,
+    /// Inline tune: the dataset rides in the request (and is implicitly
+    /// fingerprinted into the session cache on the rust path).
     Tune(Box<TuneRequest>),
+    /// Session tune: O(N) against an existing session's eigenbasis.
+    TuneSession(Box<SessionTuneRequest>),
+    CreateSession { x: Matrix, kernel: Kernel, threads: usize },
+    DropSession { session_id: u64 },
+    Evaluate(Box<EvaluateRequest>),
+    Predict(Box<PredictRequest>),
     Shutdown,
 }
 
-fn parse_matrix(v: &Json) -> Result<Matrix, String> {
-    let rows = v.as_arr().ok_or("x must be an array of rows")?;
+/// Score/Jacobian/Hessian at one hyperparameter point against a session.
+#[derive(Clone, Debug)]
+pub struct EvaluateRequest {
+    pub session_id: u64,
+    pub y: Vec<f64>,
+    pub hp: HyperParams,
+    pub objective: ObjectiveKind,
+}
+
+/// Posterior predictive mean + variance at new inputs against a session.
+#[derive(Clone, Debug)]
+pub struct PredictRequest {
+    pub session_id: u64,
+    pub y: Vec<f64>,
+    pub xnew: Matrix,
+    pub hp: HyperParams,
+}
+
+fn parse_matrix(v: &Json, field: &str) -> Result<Matrix, String> {
+    let rows = v.as_arr().ok_or_else(|| format!("{field} must be an array of rows"))?;
     if rows.is_empty() {
-        return Err("x is empty".into());
+        return Err(format!("{field} is empty"));
     }
-    let p = rows[0].as_arr().ok_or("x rows must be arrays")?.len();
+    let p = rows[0].as_arr().ok_or_else(|| format!("{field} rows must be arrays"))?.len();
     let mut data = Vec::with_capacity(rows.len() * p);
     for (i, r) in rows.iter().enumerate() {
-        let r = r.as_arr().ok_or("x rows must be arrays")?;
+        let r = r.as_arr().ok_or_else(|| format!("{field} rows must be arrays"))?;
         if r.len() != p {
-            return Err(format!("row {i} has {} cols, expected {p}", r.len()));
+            return Err(format!("{field} row {i} has {} cols, expected {p}", r.len()));
         }
         for c in r {
-            data.push(c.as_f64().ok_or("x entries must be numbers")?);
+            data.push(c.as_f64().ok_or_else(|| format!("{field} entries must be numbers"))?);
         }
     }
     Ok(Matrix::from_vec(rows.len(), p, data))
@@ -52,23 +93,79 @@ fn parse_vec(v: &Json) -> Result<Vec<f64>, String> {
         .collect()
 }
 
+fn parse_ys(v: &Json) -> Result<Vec<Vec<f64>>, String> {
+    v.get("ys")
+        .ok_or("missing ys")?
+        .as_arr()
+        .ok_or("ys must be an array")?
+        .iter()
+        .map(parse_vec)
+        .collect()
+}
+
+fn parse_session_id(v: &Json) -> Result<u64, String> {
+    match v.get("session_id").and_then(Json::as_f64) {
+        // reject rather than truncate: a fractional or negative id would
+        // silently alias a *different* live session (ids are small
+        // sequential integers)
+        Some(x) if x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 => Ok(x as u64),
+        Some(x) => Err(format!("session_id must be a non-negative integer, got {x}")),
+        None => Err("missing session_id".to_string()),
+    }
+}
+
+fn parse_objective(v: &Json) -> ObjectiveKind {
+    match v.get("objective").and_then(Json::as_str) {
+        Some("evidence") => ObjectiveKind::Evidence,
+        _ => ObjectiveKind::PaperScore,
+    }
+}
+
+fn parse_strategy(v: &Json) -> GlobalStrategy {
+    match v.get("strategy").and_then(Json::as_str) {
+        Some("grid") => GlobalStrategy::Grid {
+            points_per_axis: v.get("grid").and_then(Json::as_usize).unwrap_or(17),
+        },
+        _ => GlobalStrategy::Pso {
+            particles: v.get("particles").and_then(Json::as_usize).unwrap_or(64),
+            iterations: v.get("iterations").and_then(Json::as_usize).unwrap_or(25),
+        },
+    }
+}
+
+fn parse_hp(v: &Json) -> Result<HyperParams, String> {
+    let sigma2 = v.get("sigma2").and_then(Json::as_f64).ok_or("missing sigma2")?;
+    let lambda2 = v.get("lambda2").and_then(Json::as_f64).ok_or("missing lambda2")?;
+    let hp = HyperParams::new(sigma2, lambda2);
+    if !hp.feasible() {
+        return Err("sigma2 and lambda2 must be positive and finite".into());
+    }
+    Ok(hp)
+}
+
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let v = json::parse(line)?;
     match v.get("op").and_then(Json::as_str) {
         Some("ping") => Ok(Request::Ping),
         Some("info") => Ok(Request::Info),
+        Some("stats") => Ok(Request::Stats),
         Some("shutdown") => Ok(Request::Shutdown),
+        Some("tune") if v.get("session_id").is_some() => {
+            let mut req = SessionTuneRequest::new(parse_session_id(&v)?, parse_ys(&v)?);
+            req.objective = parse_objective(&v);
+            req.strategy = parse_strategy(&v);
+            if let Some(seed) = v.get("seed").and_then(Json::as_f64) {
+                req.seed = seed as u64;
+            }
+            if let Some(threads) = v.get("threads").and_then(Json::as_usize) {
+                req.threads = threads;
+            }
+            Ok(Request::TuneSession(Box::new(req)))
+        }
         Some("tune") => {
-            let x = parse_matrix(v.get("x").ok_or("missing x")?)?;
-            let ys_json = v.get("ys").ok_or("missing ys")?;
-            let ys: Result<Vec<Vec<f64>>, String> = ys_json
-                .as_arr()
-                .ok_or("ys must be an array")?
-                .iter()
-                .map(parse_vec)
-                .collect();
-            let ys = ys?;
+            let x = parse_matrix(v.get("x").ok_or("missing x")?, "x")?;
+            let ys = parse_ys(&v)?;
             let kernel =
                 kernelfn::parse_kernel(v.get("kernel").and_then(Json::as_str).unwrap_or("rbf:1.0"))?;
             let mut req = TuneRequest::new(x, ys, kernel);
@@ -76,19 +173,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 Some("pjrt") => Backend::Pjrt,
                 _ => Backend::Rust,
             };
-            req.objective = match v.get("objective").and_then(Json::as_str) {
-                Some("evidence") => ObjectiveKind::Evidence,
-                _ => ObjectiveKind::PaperScore,
-            };
-            req.strategy = match v.get("strategy").and_then(Json::as_str) {
-                Some("grid") => GlobalStrategy::Grid {
-                    points_per_axis: v.get("grid").and_then(Json::as_usize).unwrap_or(17),
-                },
-                _ => GlobalStrategy::Pso {
-                    particles: v.get("particles").and_then(Json::as_usize).unwrap_or(64),
-                    iterations: v.get("iterations").and_then(Json::as_usize).unwrap_or(25),
-                },
-            };
+            req.objective = parse_objective(&v);
+            req.strategy = parse_strategy(&v);
             if let Some(seed) = v.get("seed").and_then(Json::as_f64) {
                 req.seed = seed as u64;
             }
@@ -97,12 +183,38 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             Ok(Request::Tune(Box::new(req)))
         }
+        Some("create_session") => {
+            let x = parse_matrix(v.get("x").ok_or("missing x")?, "x")?;
+            let kernel =
+                kernelfn::parse_kernel(v.get("kernel").and_then(Json::as_str).unwrap_or("rbf:1.0"))?;
+            let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
+            Ok(Request::CreateSession { x, kernel, threads })
+        }
+        Some("drop_session") => Ok(Request::DropSession { session_id: parse_session_id(&v)? }),
+        Some("evaluate") => {
+            let req = EvaluateRequest {
+                session_id: parse_session_id(&v)?,
+                y: parse_vec(v.get("y").ok_or("missing y")?)?,
+                hp: parse_hp(&v)?,
+                objective: parse_objective(&v),
+            };
+            Ok(Request::Evaluate(Box::new(req)))
+        }
+        Some("predict") => {
+            let req = PredictRequest {
+                session_id: parse_session_id(&v)?,
+                y: parse_vec(v.get("y").ok_or("missing y")?)?,
+                xnew: parse_matrix(v.get("xnew").ok_or("missing xnew")?, "xnew")?,
+                hp: parse_hp(&v)?,
+            };
+            Ok(Request::Predict(Box::new(req)))
+        }
         other => Err(format!("unknown op {other:?}")),
     }
 }
 
-/// Serialize a tune result.
-pub fn tune_response(res: &TuneResult) -> String {
+/// The shared body of a tune response (inline and session variants).
+fn tune_response_fields(res: &TuneResult) -> Vec<(&'static str, Json)> {
     let outputs: Vec<Json> = res
         .outputs
         .iter()
@@ -117,7 +229,7 @@ pub fn tune_response(res: &TuneResult) -> String {
             ])
         })
         .collect();
-    Json::obj(vec![
+    vec![
         ("ok", Json::Bool(true)),
         ("outputs", Json::Arr(outputs)),
         ("eigen_cached", Json::Bool(res.eigen_cached)),
@@ -131,6 +243,83 @@ pub fn tune_response(res: &TuneResult) -> String {
                 Backend::Pjrt => "pjrt",
             }),
         ),
+    ]
+}
+
+/// Serialize a tune result.
+pub fn tune_response(res: &TuneResult) -> String {
+    Json::obj(tune_response_fields(res)).to_string()
+}
+
+/// Serialize a session-tune result (same shape plus `session_id`).
+pub fn session_tune_response(res: &TuneResult, session_id: u64) -> String {
+    let mut fields = tune_response_fields(res);
+    fields.push(("session_id", Json::Num(session_id as f64)));
+    Json::obj(fields).to_string()
+}
+
+/// Serialize a `create_session` result.
+pub fn create_session_response(
+    sess: &crate::coordinator::session::Session,
+    cached: bool,
+) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session_id", Json::Num(sess.id as f64)),
+        ("n", Json::Num(sess.gp.n() as f64)),
+        ("p", Json::Num(sess.gp.x().cols() as f64)),
+        ("cached", Json::Bool(cached)),
+        ("bytes", Json::Num(sess.bytes as f64)),
+        ("gram_seconds", Json::Num(if cached { 0.0 } else { sess.gram_seconds })),
+        ("eigen_seconds", Json::Num(if cached { 0.0 } else { sess.eigen_seconds })),
+    ])
+    .to_string()
+}
+
+/// Serialize a `drop_session` result.
+pub fn drop_session_response(dropped: bool) -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("dropped", Json::Bool(dropped))]).to_string()
+}
+
+/// Serialize the session-cache statistics (`stats` op).
+pub fn stats_response(s: &StoreStats, workers: usize) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sessions", Json::Num(s.sessions as f64)),
+        ("bytes", Json::Num(s.bytes as f64)),
+        ("max_sessions", Json::Num(s.max_sessions as f64)),
+        ("max_bytes", Json::Num(s.max_bytes as f64)),
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+        ("setups", Json::Num(s.setups as f64)),
+        ("workers", Json::Num(workers as f64)),
+    ])
+    .to_string()
+}
+
+/// Serialize an `evaluate` result (eq. 19/26-28 closed forms).
+pub fn evaluate_response(ev: &Evaluation, session_id: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session_id", Json::Num(session_id as f64)),
+        ("score", Json::Num(ev.score)),
+        ("jac", Json::arr_f64(&ev.jac)),
+        (
+            "hess",
+            Json::Arr(vec![Json::arr_f64(&ev.hess[0]), Json::arr_f64(&ev.hess[1])]),
+        ),
+    ])
+    .to_string()
+}
+
+/// Serialize a `predict` result.
+pub fn predict_response(mean: &[f64], var: &[f64], session_id: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session_id", Json::Num(session_id as f64)),
+        ("mean", Json::arr_f64(mean)),
+        ("var", Json::arr_f64(var)),
     ])
     .to_string()
 }
@@ -143,40 +332,24 @@ pub fn pong_response() -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string()
 }
 
-/// Serialize a tune request (client side).
-pub fn tune_request_json(req: &TuneRequest) -> String {
-    let x_rows: Vec<Json> = (0..req.x.rows()).map(|i| Json::arr_f64(req.x.row(i))).collect();
-    let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
-    let kernel = match req.kernel {
-        crate::kernelfn::Kernel::Rbf { xi2 } => format!("rbf:{xi2}"),
-        crate::kernelfn::Kernel::Polynomial { degree } => format!("poly:{degree}"),
-        crate::kernelfn::Kernel::Linear => "linear".to_string(),
-        crate::kernelfn::Kernel::Matern32 { ell } => format!("matern32:{ell}"),
-        crate::kernelfn::Kernel::Matern52 { ell } => format!("matern52:{ell}"),
-    };
-    let mut fields = vec![
-        ("op", Json::str("tune")),
-        ("x", Json::Arr(x_rows)),
-        ("ys", Json::Arr(ys)),
-        ("kernel", Json::str(&kernel)),
-        (
-            "objective",
-            Json::str(match req.objective {
-                ObjectiveKind::PaperScore => "paper",
-                ObjectiveKind::Evidence => "evidence",
-            }),
-        ),
-        (
-            "backend",
-            Json::str(match req.backend {
-                Backend::Rust => "rust",
-                Backend::Pjrt => "pjrt",
-            }),
-        ),
-        ("seed", Json::Num(req.seed as f64)),
-        ("threads", Json::Num(req.threads as f64)),
-    ];
-    match req.strategy {
+/// The CLI encoding of a kernel (`rbf:2.0`, `poly:3`, ... — inverse of
+/// `kernelfn::parse_kernel`).
+pub fn kernel_string(kernel: Kernel) -> String {
+    match kernel {
+        Kernel::Rbf { xi2 } => format!("rbf:{xi2}"),
+        Kernel::Polynomial { degree } => format!("poly:{degree}"),
+        Kernel::Linear => "linear".to_string(),
+        Kernel::Matern32 { ell } => format!("matern32:{ell}"),
+        Kernel::Matern52 { ell } => format!("matern52:{ell}"),
+    }
+}
+
+fn matrix_json(x: &Matrix) -> Json {
+    Json::Arr((0..x.rows()).map(|i| Json::arr_f64(x.row(i))).collect())
+}
+
+fn strategy_fields(strategy: GlobalStrategy, fields: &mut Vec<(&'static str, Json)>) {
+    match strategy {
         GlobalStrategy::Grid { points_per_axis } => {
             fields.push(("strategy", Json::str("grid")));
             fields.push(("grid", Json::Num(points_per_axis as f64)));
@@ -187,7 +360,97 @@ pub fn tune_request_json(req: &TuneRequest) -> String {
             fields.push(("iterations", Json::Num(iterations as f64)));
         }
     }
+}
+
+fn objective_str(objective: ObjectiveKind) -> &'static str {
+    match objective {
+        ObjectiveKind::PaperScore => "paper",
+        ObjectiveKind::Evidence => "evidence",
+    }
+}
+
+/// Serialize a tune request (client side).
+pub fn tune_request_json(req: &TuneRequest) -> String {
+    let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
+    let mut fields = vec![
+        ("op", Json::str("tune")),
+        ("x", matrix_json(&req.x)),
+        ("ys", Json::Arr(ys)),
+        ("kernel", Json::str(&kernel_string(req.kernel))),
+        ("objective", Json::str(objective_str(req.objective))),
+        (
+            "backend",
+            Json::str(match req.backend {
+                Backend::Rust => "rust",
+                Backend::Pjrt => "pjrt",
+            }),
+        ),
+        ("seed", Json::Num(req.seed as f64)),
+        ("threads", Json::Num(req.threads as f64)),
+    ];
+    strategy_fields(req.strategy, &mut fields);
     Json::obj(fields).to_string()
+}
+
+/// Serialize a session-tune request (client side).
+pub fn session_tune_json(req: &SessionTuneRequest) -> String {
+    let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
+    let mut fields = vec![
+        ("op", Json::str("tune")),
+        ("session_id", Json::Num(req.session_id as f64)),
+        ("ys", Json::Arr(ys)),
+        ("objective", Json::str(objective_str(req.objective))),
+        ("seed", Json::Num(req.seed as f64)),
+        ("threads", Json::Num(req.threads as f64)),
+    ];
+    strategy_fields(req.strategy, &mut fields);
+    Json::obj(fields).to_string()
+}
+
+/// Serialize a `create_session` request (client side).
+pub fn create_session_json(x: &Matrix, kernel: Kernel, threads: usize) -> String {
+    Json::obj(vec![
+        ("op", Json::str("create_session")),
+        ("x", matrix_json(x)),
+        ("kernel", Json::str(&kernel_string(kernel))),
+        ("threads", Json::Num(threads as f64)),
+    ])
+    .to_string()
+}
+
+/// Serialize a `drop_session` request (client side).
+pub fn drop_session_json(session_id: u64) -> String {
+    Json::obj(vec![
+        ("op", Json::str("drop_session")),
+        ("session_id", Json::Num(session_id as f64)),
+    ])
+    .to_string()
+}
+
+/// Serialize an `evaluate` request (client side).
+pub fn evaluate_json(req: &EvaluateRequest) -> String {
+    Json::obj(vec![
+        ("op", Json::str("evaluate")),
+        ("session_id", Json::Num(req.session_id as f64)),
+        ("y", Json::arr_f64(&req.y)),
+        ("sigma2", Json::Num(req.hp.sigma2)),
+        ("lambda2", Json::Num(req.hp.lambda2)),
+        ("objective", Json::str(objective_str(req.objective))),
+    ])
+    .to_string()
+}
+
+/// Serialize a `predict` request (client side).
+pub fn predict_json(req: &PredictRequest) -> String {
+    Json::obj(vec![
+        ("op", Json::str("predict")),
+        ("session_id", Json::Num(req.session_id as f64)),
+        ("y", Json::arr_f64(&req.y)),
+        ("xnew", matrix_json(&req.xnew)),
+        ("sigma2", Json::Num(req.hp.sigma2)),
+        ("lambda2", Json::Num(req.hp.lambda2)),
+    ])
+    .to_string()
 }
 
 #[cfg(test)]
@@ -255,5 +518,129 @@ mod tests {
         assert!(
             parse_request(r#"{"op":"tune","x":[[1]],"ys":[[1]],"kernel":"bogus"}"#).is_err()
         );
+    }
+
+    #[test]
+    fn session_tune_roundtrip() {
+        let mut req = SessionTuneRequest::new(7, vec![vec![0.5, -0.5]]);
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 9 };
+        req.objective = ObjectiveKind::Evidence;
+        req.seed = 5;
+        req.threads = 2;
+        match parse_request(&session_tune_json(&req)).unwrap() {
+            Request::TuneSession(r) => {
+                assert_eq!(r.session_id, 7);
+                assert_eq!(r.ys[0], vec![0.5, -0.5]);
+                assert_eq!(r.strategy, GlobalStrategy::Grid { points_per_axis: 9 });
+                assert_eq!(r.objective, ObjectiveKind::Evidence);
+                assert_eq!(r.seed, 5);
+                assert_eq!(r.threads, 2);
+            }
+            other => panic!("expected session tune, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn create_drop_stats_roundtrip() {
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let line = create_session_json(&x, Kernel::Rbf { xi2: 2.0 }, 3);
+        match parse_request(&line).unwrap() {
+            Request::CreateSession { x, kernel, threads } => {
+                assert_eq!(x.rows(), 2);
+                assert_eq!(kernel, Kernel::Rbf { xi2: 2.0 });
+                assert_eq!(threads, 3);
+            }
+            other => panic!("expected create_session, got {other:?}"),
+        }
+        match parse_request(&drop_session_json(4)).unwrap() {
+            Request::DropSession { session_id } => assert_eq!(session_id, 4),
+            other => panic!("expected drop_session, got {other:?}"),
+        }
+        assert!(matches!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
+        assert!(parse_request(r#"{"op":"drop_session"}"#).is_err());
+        assert!(parse_request(r#"{"op":"create_session"}"#).is_err());
+    }
+
+    #[test]
+    fn non_integer_session_ids_rejected() {
+        // truncation would silently alias a different live session
+        assert!(parse_request(r#"{"op":"drop_session","session_id":1.9}"#).is_err());
+        assert!(parse_request(r#"{"op":"drop_session","session_id":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"drop_session","session_id":"1"}"#).is_err());
+        assert!(parse_request(r#"{"op":"drop_session","session_id":2}"#).is_ok());
+    }
+
+    #[test]
+    fn evaluate_predict_roundtrip() {
+        let ereq = EvaluateRequest {
+            session_id: 2,
+            y: vec![1.0, -1.0],
+            hp: HyperParams::new(0.1, 2.0),
+            objective: ObjectiveKind::Evidence,
+        };
+        match parse_request(&evaluate_json(&ereq)).unwrap() {
+            Request::Evaluate(r) => {
+                assert_eq!(r.session_id, 2);
+                assert_eq!(r.y, vec![1.0, -1.0]);
+                assert_eq!(r.hp, HyperParams::new(0.1, 2.0));
+                assert_eq!(r.objective, ObjectiveKind::Evidence);
+            }
+            other => panic!("expected evaluate, got {other:?}"),
+        }
+        let preq = PredictRequest {
+            session_id: 3,
+            y: vec![1.0, -1.0],
+            xnew: Matrix::from_vec(1, 2, vec![0.5, 0.5]),
+            hp: HyperParams::new(0.1, 2.0),
+        };
+        match parse_request(&predict_json(&preq)).unwrap() {
+            Request::Predict(r) => {
+                assert_eq!(r.session_id, 3);
+                assert_eq!(r.xnew.rows(), 1);
+            }
+            other => panic!("expected predict, got {other:?}"),
+        }
+        // infeasible hyperparameters are rejected at parse time
+        assert!(parse_request(
+            r#"{"op":"evaluate","session_id":1,"y":[1],"sigma2":-1,"lambda2":1}"#
+        )
+        .is_err());
+        // missing fields
+        assert!(parse_request(r#"{"op":"evaluate","session_id":1,"y":[1],"sigma2":1}"#).is_err());
+        assert!(parse_request(
+            r#"{"op":"predict","session_id":1,"y":[1],"sigma2":1,"lambda2":1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_shapes_parse() {
+        let v = json::parse(&stats_response(&StoreStats::default(), 4)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("workers").unwrap().as_usize(), Some(4));
+        let v = json::parse(&drop_session_response(true)).unwrap();
+        assert_eq!(v.get("dropped").unwrap().as_bool(), Some(true));
+        let ev = Evaluation { score: 1.5, jac: [0.1, 0.2], hess: [[1.0, 2.0], [2.0, 3.0]] };
+        let v = json::parse(&evaluate_response(&ev, 9)).unwrap();
+        assert_eq!(v.get("score").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("session_id").unwrap().as_usize(), Some(9));
+        let hess = v.get("hess").unwrap().as_arr().unwrap();
+        assert_eq!(hess[1].as_arr().unwrap()[0].as_f64(), Some(2.0));
+        let v = json::parse(&predict_response(&[1.0], &[0.5], 9)).unwrap();
+        assert_eq!(v.get("mean").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("var").unwrap().as_arr().unwrap()[0].as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn kernel_string_roundtrips_every_family() {
+        for k in [
+            Kernel::Rbf { xi2: 1.5 },
+            Kernel::Polynomial { degree: 3 },
+            Kernel::Linear,
+            Kernel::Matern32 { ell: 0.5 },
+            Kernel::Matern52 { ell: 2.0 },
+        ] {
+            assert_eq!(kernelfn::parse_kernel(&kernel_string(k)).unwrap(), k);
+        }
     }
 }

@@ -1,16 +1,27 @@
 //! Threaded TCP server: acceptor threads parse newline-JSON requests and
-//! forward them over an mpsc channel to the single worker thread that owns
-//! the [`Coordinator`] (the PJRT client is not `Send`); responses travel
-//! back on per-job channels.
+//! route them to one of two executors (DESIGN.md §7):
+//!
+//! - a **worker pool** (`--workers`) sharing the [`SessionStore`], for
+//!   everything pure-rust — session ops, inline tunes, `evaluate`,
+//!   `predict`, `stats`.  The spectral setup is `Send + Sync` behind an
+//!   `Arc`, so concurrent clients on different (or the same) sessions
+//!   execute in parallel;
+//! - a **serial coordinator worker** that owns the [`Coordinator`] (the
+//!   PJRT client is not `Send`), for `backend:"pjrt"` tunes and `info`.
+//!   Without the `pjrt` feature this thread only answers `info`.
+//!
+//! Responses travel back on per-job channels.  (tokio is not vendored in
+//! this image — DESIGN.md §5.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 
-use crate::coordinator::{protocol, Coordinator};
+use crate::coordinator::session::{self, SessionStore, StoreStats};
+use crate::coordinator::{protocol, Backend, Coordinator};
 use crate::util::json::Json;
 
 /// A job in flight: the parsed request and the channel to answer on.
@@ -19,45 +30,148 @@ enum Job {
     Stop,
 }
 
+/// Server configuration: pool width and session-cache budgets.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Worker threads for the pure-rust executor; 0 = auto (the host's
+    /// available parallelism, capped at 8).  Each request may still fan
+    /// its own O(N^3)/wavefront work across the scoped pool (§6), so the
+    /// total thread budget is `workers x pool width` at the extreme.
+    pub workers: usize,
+    /// Session-cache entry budget.
+    pub max_sessions: usize,
+    /// Session-cache byte budget (setup memory, not request payloads).
+    pub max_bytes: usize,
+}
+
+impl ServerOptions {
+    /// Default byte budget: 1 GiB of cached setups.
+    pub const DEFAULT_MAX_BYTES: usize = 1 << 30;
+    /// Default entry budget.
+    pub const DEFAULT_MAX_SESSIONS: usize = 64;
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 0,
+            max_sessions: Self::DEFAULT_MAX_SESSIONS,
+            max_bytes: Self::DEFAULT_MAX_BYTES,
+        }
+    }
+}
+
+fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+    }
+}
+
+/// Handles to both executors, shared by every connection thread.
+struct Queues {
+    coord: Sender<Job>,
+    pool: Sender<Job>,
+    workers: usize,
+}
+
+impl Queues {
+    /// Stop both executors (idempotent: extra stops are drained or lost
+    /// harmlessly once the workers exit).
+    fn stop_all(&self) {
+        let _ = self.coord.send(Job::Stop);
+        for _ in 0..self.workers {
+            let _ = self.pool.send(Job::Stop);
+        }
+    }
+}
+
 /// Server handle: the bound address and a way to stop the loop.
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop_tx: Sender<Job>,
+    queues: Arc<Queues>,
     stopping: Arc<AtomicBool>,
     accept_handle: Option<thread::JoinHandle<()>>,
-    worker_handle: Option<thread::JoinHandle<()>>,
+    coord_handle: Option<thread::JoinHandle<()>>,
+    pool_handles: Vec<thread::JoinHandle<()>>,
+    store: Arc<SessionStore>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
-    /// the acceptor + worker threads.  `make_coordinator` runs *on the
-    /// worker thread* (the coordinator is not `Send`).
+    /// Bind `addr` with default [`ServerOptions`].  `make_coordinator`
+    /// runs *on the coordinator worker thread* (the coordinator is not
+    /// `Send`).
     pub fn start<F>(addr: &str, make_coordinator: F) -> std::io::Result<Server>
+    where
+        F: FnOnce() -> Coordinator + Send + 'static,
+    {
+        Server::start_with(addr, ServerOptions::default(), make_coordinator)
+    }
+
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and start
+    /// the acceptor, the worker pool, and the coordinator worker.
+    pub fn start_with<F>(
+        addr: &str,
+        opts: ServerOptions,
+        make_coordinator: F,
+    ) -> std::io::Result<Server>
     where
         F: FnOnce() -> Coordinator + Send + 'static,
     {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+        let workers = resolve_workers(opts.workers);
+        let store = Arc::new(SessionStore::new(opts.max_sessions, opts.max_bytes));
 
-        // worker: owns the coordinator, executes jobs serially
-        let worker_handle = thread::spawn(move || {
+        // coordinator worker: owns the (non-Send) coordinator; executes
+        // pjrt-backend tunes serially and answers `info`
+        let (coord_tx, coord_rx): (Sender<Job>, Receiver<Job>) = channel();
+        let coord_store = store.clone();
+        let coord_handle = thread::spawn(move || {
             let mut coord = make_coordinator();
-            while let Ok(job) = rx.recv() {
+            while let Ok(job) = coord_rx.recv() {
                 match job {
                     Job::Stop => break,
                     Job::Handle(req, reply) => {
-                        let response = dispatch(&mut coord, req);
+                        let response = dispatch_coord(&mut coord, &coord_store, workers, req);
                         let _ = reply.send(response);
                     }
                 }
             }
         });
 
+        // worker pool: all pure-rust work, shared session store.  The
+        // receiver is guarded by a mutex; a worker holds it only while
+        // blocked in recv, never while executing a job.
+        let (pool_tx, pool_rx): (Sender<Job>, Receiver<Job>) = channel();
+        let pool_rx = Arc::new(Mutex::new(pool_rx));
+        let pool_handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let rx = pool_rx.clone();
+                let store = store.clone();
+                thread::spawn(move || loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break,
+                    };
+                    match job {
+                        Job::Stop => break,
+                        Job::Handle(req, reply) => {
+                            let response = dispatch_pool(&store, workers, req);
+                            let _ = reply.send(response);
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let queues = Arc::new(Queues { coord: coord_tx, pool: pool_tx, workers });
+
         // acceptor: one thread per connection; exits when `stopping` is
         // set (stop() pokes it with a dummy connection to unblock accept)
         let stopping = Arc::new(AtomicBool::new(false));
-        let tx_accept = tx.clone();
+        let accept_queues = queues.clone();
         let stop_flag = stopping.clone();
         let accept_handle = thread::spawn(move || {
             for stream in listener.incoming() {
@@ -65,26 +179,46 @@ impl Server {
                     break;
                 }
                 let Ok(stream) = stream else { break };
-                let tx = tx_accept.clone();
+                let queues = accept_queues.clone();
                 thread::spawn(move || {
-                    let _ = handle_connection(stream, tx);
+                    let _ = handle_connection(stream, queues);
                 });
             }
         });
 
         Ok(Server {
             addr: local,
-            stop_tx: tx,
+            queues,
             stopping,
             accept_handle: Some(accept_handle),
-            worker_handle: Some(worker_handle),
+            coord_handle: Some(coord_handle),
+            pool_handles,
+            store,
         })
     }
 
-    /// Stop the worker and the acceptor, joining both threads.
+    /// The resolved worker-pool width.
+    pub fn workers(&self) -> usize {
+        self.queues.workers
+    }
+
+    /// The shared session store (tests assert on its counters directly).
+    pub fn store(&self) -> &Arc<SessionStore> {
+        &self.store
+    }
+
+    /// Point-in-time session-cache statistics.
+    pub fn session_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Stop every executor and the acceptor, joining all threads.
     pub fn stop(mut self) {
-        let _ = self.stop_tx.send(Job::Stop);
-        if let Some(h) = self.worker_handle.take() {
+        self.queues.stop_all();
+        if let Some(h) = self.coord_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.pool_handles.drain(..) {
             let _ = h.join();
         }
         // the acceptor blocks in accept(); raise the flag, then poke it
@@ -96,25 +230,112 @@ impl Server {
     }
 }
 
-fn dispatch(coord: &mut Coordinator, req: protocol::Request) -> String {
+/// Does this request need the serial coordinator worker?
+fn needs_coordinator(req: &protocol::Request) -> bool {
     match req {
-        protocol::Request::Ping => protocol::pong_response(),
-        protocol::Request::Shutdown => protocol::pong_response(),
-        protocol::Request::Info => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("pjrt", Json::Bool(coord.has_runtime())),
-            ("cache_hits", Json::Num(coord.cache_hits as f64)),
-            ("cache_misses", Json::Num(coord.cache_misses as f64)),
-        ])
-        .to_string(),
+        protocol::Request::Tune(r) => r.backend == Backend::Pjrt,
+        protocol::Request::Info => true,
+        _ => false,
+    }
+}
+
+/// Coordinator-worker dispatch: pjrt tunes + `info`; anything else that
+/// lands here (defensively) runs the pool logic against the shared store.
+fn dispatch_coord(
+    coord: &mut Coordinator,
+    store: &SessionStore,
+    workers: usize,
+    req: protocol::Request,
+) -> String {
+    match req {
+        protocol::Request::Info => {
+            let s = store.stats();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pjrt", Json::Bool(coord.has_runtime())),
+                ("workers", Json::Num(workers as f64)),
+                ("sessions", Json::Num(s.sessions as f64)),
+                // fingerprint-cache traffic: pool (session store) plus the
+                // coordinator's own pjrt-path eigen-cache
+                ("cache_hits", Json::Num((s.hits + coord.cache_hits as u64) as f64)),
+                ("cache_misses", Json::Num((s.misses + coord.cache_misses as u64) as f64)),
+            ])
+            .to_string()
+        }
         protocol::Request::Tune(req) => match coord.tune(&req) {
             Ok(res) => protocol::tune_response(&res),
             Err(e) => protocol::error_response(&format!("{e:#}")),
         },
+        other => dispatch_pool(store, workers, other),
     }
 }
 
-fn handle_connection(stream: TcpStream, jobs: Sender<Job>) -> std::io::Result<()> {
+/// Pool dispatch: everything pure-rust against the shared session store.
+fn dispatch_pool(store: &SessionStore, workers: usize, req: protocol::Request) -> String {
+    match req {
+        protocol::Request::Ping | protocol::Request::Shutdown => protocol::pong_response(),
+        protocol::Request::Stats => protocol::stats_response(&store.stats(), workers),
+        protocol::Request::CreateSession { x, kernel, threads } => {
+            match crate::util::threadpool::with_threads(threads, || store.create(kernel, x)) {
+                Ok((sess, cached)) => protocol::create_session_response(&sess, cached),
+                Err(e) => protocol::error_response(&format!("{e:#}")),
+            }
+        }
+        protocol::Request::DropSession { session_id } => {
+            protocol::drop_session_response(store.drop_session(session_id))
+        }
+        protocol::Request::Tune(req) => match session::tune_via_store(store, &req) {
+            Ok(res) => protocol::tune_response(&res),
+            Err(e) => protocol::error_response(&format!("{e:#}")),
+        },
+        protocol::Request::TuneSession(req) => match session::tune_session(store, &req) {
+            Ok(res) => protocol::session_tune_response(&res, req.session_id),
+            Err(e) => protocol::error_response(&format!("{e:#}")),
+        },
+        protocol::Request::Evaluate(req) => match store.get(req.session_id) {
+            None => protocol::error_response(&format!("unknown session {}", req.session_id)),
+            Some(sess) => {
+                if req.y.len() != sess.gp.n() {
+                    return protocol::error_response(&format!(
+                        "y: length {} != N {}",
+                        req.y.len(),
+                        sess.gp.n()
+                    ));
+                }
+                let es = sess.gp.eigensystem(&req.y);
+                let ev = match req.objective {
+                    crate::coordinator::ObjectiveKind::Evidence => es.evidence_evaluate(req.hp),
+                    crate::coordinator::ObjectiveKind::PaperScore => es.evaluate(req.hp),
+                };
+                protocol::evaluate_response(&ev, req.session_id)
+            }
+        },
+        protocol::Request::Predict(req) => match store.get(req.session_id) {
+            None => protocol::error_response(&format!("unknown session {}", req.session_id)),
+            Some(sess) => {
+                if req.y.len() != sess.gp.n() {
+                    return protocol::error_response(&format!(
+                        "y: length {} != N {}",
+                        req.y.len(),
+                        sess.gp.n()
+                    ));
+                }
+                if req.xnew.cols() != sess.gp.x().cols() {
+                    return protocol::error_response(&format!(
+                        "xnew: {} cols != P {}",
+                        req.xnew.cols(),
+                        sess.gp.x().cols()
+                    ));
+                }
+                let (mean, var) = sess.gp.predict(&req.xnew, &req.y, req.hp);
+                protocol::predict_response(&mean, &var, req.session_id)
+            }
+        },
+        protocol::Request::Info => protocol::error_response("info runs on the coordinator worker"),
+    }
+}
+
+fn handle_connection(stream: TcpStream, queues: Arc<Queues>) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -133,14 +354,15 @@ fn handle_connection(stream: TcpStream, jobs: Sender<Job>) -> std::io::Result<()
             Err(e) => protocol::error_response(&e),
             Ok(protocol::Request::Shutdown) => {
                 // acknowledged; the CLI layer decides whether to exit
-                let _ = jobs.send(Job::Stop);
+                queues.stop_all();
                 writer.write_all(protocol::pong_response().as_bytes())?;
                 writer.write_all(b"\n")?;
                 return Ok(());
             }
             Ok(req) => {
                 let (reply_tx, reply_rx) = channel();
-                if jobs.send(Job::Handle(req, reply_tx)).is_err() {
+                let queue = if needs_coordinator(&req) { &queues.coord } else { &queues.pool };
+                if queue.send(Job::Handle(req, reply_tx)).is_err() {
                     protocol::error_response("worker stopped")
                 } else {
                     reply_rx
@@ -185,9 +407,10 @@ mod tests {
         for o in outs {
             assert!(o.get("sigma2").unwrap().as_f64().unwrap() > 0.0);
         }
-        // second identical request hits the eigen cache
+        // second identical request hits the (implicit) session cache
         let res2 = client.tune(&req).unwrap();
         assert_eq!(res2.get("eigen_cached").unwrap().as_bool(), Some(true));
+        assert_eq!(server.session_stats().setups, 1);
         server.stop();
     }
 
@@ -201,7 +424,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_clients_are_serialized_safely() {
+    fn concurrent_clients_execute_safely() {
         let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
         let addr = server.addr.to_string();
         let handles: Vec<_> = (0..4)
@@ -224,6 +447,17 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        server.stop();
+    }
+
+    #[test]
+    fn explicit_worker_count_is_honored() {
+        let opts = ServerOptions { workers: 2, ..Default::default() };
+        let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+        assert_eq!(server.workers(), 2);
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("workers").unwrap().as_usize(), Some(2));
         server.stop();
     }
 }

@@ -1,0 +1,519 @@
+//! Session cache: pay the O(N^3) setup once per dataset, serve every
+//! subsequent request in O(N) (DESIGN.md §7).
+//!
+//! The paper's value proposition is `O(N^3) + k*·O(N)` versus
+//! `k*·O(N^3)` — which only materializes in a *server* if the setup
+//! survives across requests.  [`SessionStore`] is that survival
+//! mechanism: a thread-safe LRU cache of fitted [`SpectralGp`] setups
+//! keyed by a fingerprint of (inputs, kernel), bounded by both an entry
+//! count and a byte budget, shared by every worker in the server's pool.
+//!
+//! Three properties the tests pin down:
+//!
+//! - **Single-flight setup**: concurrent requests for the same dataset
+//!   compute the Gram + eigendecomposition exactly once; latecomers
+//!   block on a condvar until the first computation publishes.  The
+//!   `setups` counter therefore counts O(N^3) work *performed*, not
+//!   requests served.
+//! - **Numerical identity**: a warm (cached-eigenbasis) tune is the same
+//!   computation as a cold one — both run [`EigenSystem`] tuning against
+//!   the decomposition produced by the identical `gram` + `SymEigen`
+//!   calls — so responses are bitwise identical.
+//! - **Bounded memory**: eviction removes least-recently-used sessions
+//!   until both budgets hold (the newest session is always retained, so
+//!   a budget smaller than one dataset still serves, it just never
+//!   caches a second one).
+//!
+//! [`EigenSystem`]: crate::spectral::EigenSystem
+//!
+//! # Examples
+//!
+//! ```
+//! use gpml::coordinator::session::SessionStore;
+//! use gpml::data::{synthetic, SyntheticSpec};
+//!
+//! let spec = SyntheticSpec { n: 16, p: 2, seed: 9, ..Default::default() };
+//! let ds = synthetic(spec, 1);
+//! let store = SessionStore::new(8, 1 << 30);
+//!
+//! let (sess, cached) = store.create(spec.kernel, ds.x.clone()).unwrap();
+//! assert!(!cached);
+//! let (again, cached) = store.create(spec.kernel, ds.x).unwrap();
+//! assert!(cached);
+//! assert_eq!(sess.id, again.id);
+//! assert_eq!(store.stats().setups, 1); // O(N^3) paid once
+//! ```
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernelfn::{self, Kernel};
+use crate::linalg::{Matrix, SymEigen};
+use crate::spectral::SpectralGp;
+
+use super::{
+    fingerprint, tune_one, Backend, GlobalStrategy, ObjectiveKind, OutputResult, TuneRequest,
+    TuneResult,
+};
+use crate::optim::{self, Bounds};
+
+/// One cached dataset: the fitted GP handle plus bookkeeping.
+pub struct Session {
+    /// Server-assigned id; what wire requests reference.
+    pub id: u64,
+    /// FNV-1a over (inputs, kernel) — see [`fingerprint`].
+    pub fingerprint: u64,
+    /// The shared O(N^2)-memory setup (cheap-to-clone handle).
+    pub gp: SpectralGp,
+    /// Approximate heap bytes this session pins (the eviction unit).
+    pub bytes: usize,
+    /// Wall-clock the one-time setup cost, split by phase.
+    pub gram_seconds: f64,
+    pub eigen_seconds: f64,
+}
+
+/// Point-in-time cache statistics (the wire `stats` op serializes this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Live sessions.
+    pub sessions: usize,
+    /// Bytes pinned by live sessions.
+    pub bytes: usize,
+    /// Entry-count budget.
+    pub max_sessions: usize,
+    /// Byte budget.
+    pub max_bytes: usize,
+    /// Requests that found their fingerprint already cached.
+    pub hits: u64,
+    /// Requests that did not (and so triggered or awaited a setup).
+    pub misses: u64,
+    /// Sessions removed by LRU/byte-budget pressure (not explicit drops).
+    pub evictions: u64,
+    /// Gram + eigendecomposition computations actually performed — the
+    /// O(N^3) work counter the integration tests assert against.
+    pub setups: u64,
+}
+
+struct Slot {
+    sess: Arc<Session>,
+    /// Monotonic access tick; smallest = least recently used.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: HashMap<u64, Slot>,
+    by_fp: HashMap<u64, u64>,
+    /// Fingerprints whose setup is in flight (single-flight guard).
+    pending: HashSet<u64>,
+    bytes: usize,
+    tick: u64,
+    next_id: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    setups: u64,
+}
+
+/// Thread-safe LRU session cache with a byte budget.  All methods take
+/// `&self`; the store is designed to sit in an `Arc` shared by every
+/// server worker.
+pub struct SessionStore {
+    max_sessions: usize,
+    max_bytes: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl SessionStore {
+    /// `max_sessions` entries / `max_bytes` of setup memory; eviction is
+    /// LRU and runs when either budget is exceeded.
+    pub fn new(max_sessions: usize, max_bytes: usize) -> Self {
+        SessionStore {
+            max_sessions: max_sessions.max(1),
+            max_bytes,
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Get-or-create the session for (kernel, x).  Returns the session
+    /// and whether it was already cached.  The O(N^3) setup runs outside
+    /// the store lock; concurrent creates of the same dataset are
+    /// single-flighted (exactly one computes, the rest wait).
+    pub fn create(&self, kernel: Kernel, x: Matrix) -> Result<(Arc<Session>, bool)> {
+        let fp = fingerprint(&x, kernel);
+        {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                if let Some(&id) = g.by_fp.get(&fp) {
+                    g.hits += 1;
+                    g.tick += 1;
+                    let tick = g.tick;
+                    let slot = g.slots.get_mut(&id).expect("by_fp points at live slot");
+                    slot.last_used = tick;
+                    return Ok((slot.sess.clone(), true));
+                }
+                if g.pending.contains(&fp) {
+                    // another worker is computing this setup; wait for it
+                    g = self.cv.wait(g).unwrap();
+                    continue;
+                }
+                g.misses += 1;
+                g.pending.insert(fp);
+                break;
+            }
+        }
+
+        // --- O(N^3) setup, outside the lock (other sessions stay served) ---
+        let tg = Instant::now();
+        let k = kernelfn::gram(kernel, &x);
+        let gram_seconds = tg.elapsed().as_secs_f64();
+        let te = Instant::now();
+        let eigen = SymEigen::new(&k);
+        let eigen_seconds = te.elapsed().as_secs_f64();
+        drop(k);
+
+        let mut g = self.inner.lock().unwrap();
+        g.pending.remove(&fp);
+        let eigen = match eigen {
+            Ok(e) => e,
+            Err(e) => {
+                // wake waiters so they can retry (and fail) themselves
+                self.cv.notify_all();
+                return Err(anyhow!("eigensolver: {e}"));
+            }
+        };
+        g.setups += 1;
+        g.next_id += 1;
+        g.tick += 1;
+        let (id, tick) = (g.next_id, g.tick);
+        let gp = SpectralGp::from_eigen(kernel, x, eigen);
+        let bytes = gp.setup_bytes();
+        let sess =
+            Arc::new(Session { id, fingerprint: fp, gp, bytes, gram_seconds, eigen_seconds });
+        g.slots.insert(id, Slot { sess: sess.clone(), last_used: tick });
+        g.by_fp.insert(fp, id);
+        g.bytes += bytes;
+        self.evict_over_budget(&mut g, id);
+        drop(g);
+        self.cv.notify_all();
+        Ok((sess, false))
+    }
+
+    /// Evict least-recently-used sessions until both budgets hold,
+    /// never removing `keep_id` (the session being returned right now).
+    fn evict_over_budget(&self, g: &mut Inner, keep_id: u64) {
+        while g.slots.len() > self.max_sessions || g.bytes > self.max_bytes {
+            let victim = g
+                .slots
+                .iter()
+                .filter(|(&id, _)| id != keep_id)
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let slot = g.slots.remove(&id).unwrap();
+            g.by_fp.remove(&slot.sess.fingerprint);
+            g.bytes -= slot.sess.bytes;
+            g.evictions += 1;
+        }
+    }
+
+    /// Look up a live session by id, refreshing its LRU position.
+    pub fn get(&self, id: u64) -> Option<Arc<Session>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let slot = g.slots.get_mut(&id)?;
+        slot.last_used = tick;
+        Some(slot.sess.clone())
+    }
+
+    /// Explicitly drop a session; returns whether it existed.  Freed
+    /// bytes are not counted as evictions.
+    pub fn drop_session(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.slots.remove(&id) {
+            Some(slot) => {
+                g.by_fp.remove(&slot.sess.fingerprint);
+                g.bytes -= slot.sess.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let g = self.inner.lock().unwrap();
+        StoreStats {
+            sessions: g.slots.len(),
+            bytes: g.bytes,
+            max_sessions: self.max_sessions,
+            max_bytes: self.max_bytes,
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            setups: g.setups,
+        }
+    }
+}
+
+/// A tuning job against an existing session: everything a
+/// [`TuneRequest`] carries except the dataset (which the session holds).
+#[derive(Clone, Debug)]
+pub struct SessionTuneRequest {
+    pub session_id: u64,
+    pub ys: Vec<Vec<f64>>,
+    pub bounds: Bounds,
+    pub strategy: GlobalStrategy,
+    pub objective: ObjectiveKind,
+    pub seed: u64,
+    /// Pool width for this job's search wavefronts (0 = process default).
+    pub threads: usize,
+}
+
+impl SessionTuneRequest {
+    pub fn new(session_id: u64, ys: Vec<Vec<f64>>) -> Self {
+        SessionTuneRequest {
+            session_id,
+            ys,
+            bounds: Bounds::default(),
+            strategy: GlobalStrategy::default(),
+            objective: ObjectiveKind::default(),
+            seed: 42,
+            threads: 0,
+        }
+    }
+}
+
+fn validate_outputs(n: usize, ys: &[Vec<f64>]) -> Result<()> {
+    if ys.is_empty() {
+        return Err(anyhow!("no output vectors"));
+    }
+    for (i, y) in ys.iter().enumerate() {
+        if y.len() != n {
+            return Err(anyhow!("output {i}: length {} != N {}", y.len(), n));
+        }
+    }
+    Ok(())
+}
+
+/// Per-output global + Newton tuning against a fitted setup — the shared
+/// O(N)-per-iterate stage of both the cold and warm paths.
+pub(crate) fn run_outputs(
+    gp: &SpectralGp,
+    ys: &[Vec<f64>],
+    objective: ObjectiveKind,
+    bounds: Bounds,
+    strategy: GlobalStrategy,
+    seed: u64,
+) -> Vec<OutputResult> {
+    ys.iter()
+        .map(|y| {
+            let es = gp.eigensystem(y);
+            match objective {
+                ObjectiveKind::Evidence => {
+                    let mut ev = optim::EvidenceObjective(es);
+                    tune_one(&mut ev, bounds, strategy, seed)
+                }
+                ObjectiveKind::PaperScore => {
+                    let mut ev = es;
+                    tune_one(&mut ev, bounds, strategy, seed)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Execute a session-referencing tune: zero O(N^3) work by construction.
+pub fn tune_session(store: &SessionStore, req: &SessionTuneRequest) -> Result<TuneResult> {
+    let sess = store
+        .get(req.session_id)
+        .ok_or_else(|| anyhow!("unknown session {}", req.session_id))?;
+    validate_outputs(sess.gp.n(), &req.ys)?;
+    crate::util::threadpool::with_threads(req.threads, || {
+        let tt = Instant::now();
+        let outputs =
+            run_outputs(&sess.gp, &req.ys, req.objective, req.bounds, req.strategy, req.seed);
+        Ok(TuneResult {
+            outputs,
+            eigen_cached: true,
+            gram_seconds: 0.0,
+            eigen_seconds: 0.0,
+            tune_seconds: tt.elapsed().as_secs_f64(),
+            backend: Backend::Rust,
+        })
+    })
+}
+
+/// Execute an inline (dataset-carrying) tune through the store: the
+/// dataset is fingerprinted into an *implicit* session, so repeated
+/// inline tunes of the same dataset also skip the setup.  This is the
+/// pure-rust server path; PJRT-backed jobs go through [`Coordinator`].
+///
+/// [`Coordinator`]: super::Coordinator
+pub fn tune_via_store(store: &SessionStore, req: &TuneRequest) -> Result<TuneResult> {
+    if req.backend == Backend::Pjrt {
+        return Err(anyhow!("pjrt-backed jobs run on the coordinator worker, not the pool"));
+    }
+    validate_outputs(req.x.rows(), &req.ys)?;
+    crate::util::threadpool::with_threads(req.threads, || {
+        let (sess, cached) = store.create(req.kernel, req.x.clone())?;
+        let tt = Instant::now();
+        let outputs =
+            run_outputs(&sess.gp, &req.ys, req.objective, req.bounds, req.strategy, req.seed);
+        Ok(TuneResult {
+            outputs,
+            eigen_cached: cached,
+            gram_seconds: if cached { 0.0 } else { sess.gram_seconds },
+            eigen_seconds: if cached { 0.0 } else { sess.eigen_seconds },
+            tune_seconds: tt.elapsed().as_secs_f64(),
+            backend: Backend::Rust,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::data::{synthetic, SyntheticSpec};
+
+    fn dataset(n: usize, seed: u64) -> (Kernel, Matrix, Vec<Vec<f64>>) {
+        let spec = SyntheticSpec { n, p: 2, seed, ..Default::default() };
+        let ds = synthetic(spec, 1);
+        (spec.kernel, ds.x, ds.ys)
+    }
+
+    #[test]
+    fn fingerprint_reuse_returns_same_session() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, _) = dataset(20, 1);
+        let (a, cached_a) = store.create(k, x.clone()).unwrap();
+        let (b, cached_b) = store.create(k, x).unwrap();
+        assert!(!cached_a);
+        assert!(cached_b);
+        assert_eq!(a.id, b.id);
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.setups, s.sessions), (1, 1, 1, 1));
+        assert_eq!(s.bytes, a.bytes);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let store = SessionStore::new(2, usize::MAX);
+        let (k, xa, _) = dataset(16, 1);
+        let (k2, xb, _) = dataset(16, 2);
+        let (k3, xc, _) = dataset(16, 3);
+        let (a, _) = store.create(k, xa).unwrap();
+        let (b, _) = store.create(k2, xb).unwrap();
+        // touch A so B becomes the LRU victim
+        assert!(store.get(a.id).is_some());
+        let (c, _) = store.create(k3, xc).unwrap();
+        assert!(store.get(a.id).is_some());
+        assert!(store.get(b.id).is_none());
+        assert!(store.get(c.id).is_some());
+        let s = store.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.sessions, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_but_keeps_newest() {
+        let (k, xa, _) = dataset(16, 1);
+        let (_, xb, _) = dataset(16, 2);
+        // budget below a single session: the newest is still retained
+        let one = SpectralGp::fit(k, xa.clone()).unwrap().setup_bytes();
+        let store = SessionStore::new(8, one / 2);
+        let (a, _) = store.create(k, xa).unwrap();
+        assert_eq!(store.stats().sessions, 1, "newest survives an impossible budget");
+        let (b, _) = store.create(k, xb).unwrap();
+        assert!(store.get(a.id).is_none(), "old session evicted under byte pressure");
+        assert!(store.get(b.id).is_some());
+        let s = store.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= one);
+    }
+
+    #[test]
+    fn drop_session_frees_bytes_and_fingerprint() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, _) = dataset(16, 5);
+        let (a, _) = store.create(k, x.clone()).unwrap();
+        assert!(store.drop_session(a.id));
+        assert!(!store.drop_session(a.id));
+        assert_eq!(store.stats().bytes, 0);
+        // the fingerprint mapping is gone too: re-create recomputes
+        let (_, cached) = store.create(k, x).unwrap();
+        assert!(!cached);
+        assert_eq!(store.stats().setups, 2);
+    }
+
+    #[test]
+    fn concurrent_creates_single_flight_the_setup() {
+        let store = std::sync::Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(48, 7);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let store = store.clone();
+                let x = x.clone();
+                std::thread::spawn(move || store.create(k, x).unwrap().0.id)
+            })
+            .collect();
+        let ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(ids.windows(2).all(|w| w[0] == w[1]), "all threads share one session");
+        let s = store.stats();
+        assert_eq!(s.setups, 1, "the O(N^3) setup ran exactly once");
+        assert_eq!(s.misses + s.hits, 4);
+    }
+
+    #[test]
+    fn tune_via_store_matches_coordinator_bitwise() {
+        let (k, x, ys) = dataset(32, 11);
+        let mut req = TuneRequest::new(x, ys, k);
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+        req.objective = ObjectiveKind::Evidence;
+
+        let mut coord = Coordinator::rust_only();
+        let cold = coord.tune(&req).unwrap();
+
+        let store = SessionStore::new(8, usize::MAX);
+        let via_store = tune_via_store(&store, &req).unwrap();
+        let warm = tune_via_store(&store, &req).unwrap();
+        assert!(!via_store.eigen_cached);
+        assert!(warm.eigen_cached);
+
+        for (a, b) in cold.outputs.iter().zip(&via_store.outputs) {
+            assert_eq!(a.hp, b.hp);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        for (a, b) in via_store.outputs.iter().zip(&warm.outputs) {
+            assert_eq!(a.hp, b.hp);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn tune_session_rejects_bad_shapes() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, ys) = dataset(16, 3);
+        let (sess, _) = store.create(k, x).unwrap();
+        // unknown id
+        assert!(tune_session(&store, &SessionTuneRequest::new(999, ys.clone())).is_err());
+        // wrong length
+        let mut bad = ys.clone();
+        bad[0].pop();
+        assert!(tune_session(&store, &SessionTuneRequest::new(sess.id, bad)).is_err());
+        // empty
+        assert!(tune_session(&store, &SessionTuneRequest::new(sess.id, vec![])).is_err());
+        // good
+        let mut ok = SessionTuneRequest::new(sess.id, ys);
+        ok.strategy = GlobalStrategy::Grid { points_per_axis: 5 };
+        let res = tune_session(&store, &ok).unwrap();
+        assert!(res.eigen_cached);
+        assert_eq!(res.gram_seconds, 0.0);
+    }
+}

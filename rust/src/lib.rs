@@ -13,11 +13,14 @@
 //!   points AOT-lowered to HLO-text artifacts in `artifacts/`.
 //! - **Layer 3 (this crate)** — the [`runtime`] loads the artifacts via
 //!   PJRT (behind the `pjrt` cargo feature; a plain checkout compiles the
-//!   always-available stub), the [`coordinator`] batches tuning work over
-//!   them, and the pure-rust [`spectral`] evaluator mirrors the same
-//!   identities for the scalar fast path.  [`naive`] (O(N^3)) and
-//!   [`sparse`] (O(N m^2)) are the paper's comparison baselines; [`optim`]
-//!   implements §1.1's global+local strategy and §2.2's Algorithm 1.
+//!   always-available stub), the [`coordinator`] serves tuning work over
+//!   them — its session cache amortizes the O(N^3) setup across requests
+//!   and its worker pool executes concurrent pure-rust jobs (the wire
+//!   protocol is documented in `docs/PROTOCOL.md`) — and the pure-rust
+//!   [`spectral`] evaluator mirrors the same identities for the scalar
+//!   fast path.  [`naive`] (O(N^3)) and [`sparse`] (O(N m^2)) are the
+//!   paper's comparison baselines; [`optim`] implements §1.1's
+//!   global+local strategy and §2.2's Algorithm 1.
 //! - **Cross-cutting** — [`verify`] is the differential-verification
 //!   harness (DESIGN.md §4): it cross-checks `spectral` against `naive`
 //!   and against finite differences over randomized kernels and

@@ -5,8 +5,10 @@
 use anyhow::{anyhow, Result};
 
 use gpml::coordinator::{
-    client::Client, server::Server, Backend, Coordinator, GlobalStrategy, ObjectiveKind,
-    TuneRequest,
+    client::Client,
+    server::{Server, ServerOptions},
+    session::SessionTuneRequest,
+    Backend, Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest,
 };
 use gpml::data;
 use gpml::kernelfn::{self, Kernel};
@@ -26,16 +28,25 @@ USAGE:
                                       for the classical GP evidence
   gpml synth  --n 256 --p 8 [--sigma2 0.05] [--lambda2 1.0] [--outputs 1]
               [--seed 42] --out <csv> generate a synthetic GP dataset
-  gpml serve  [--addr 127.0.0.1:7070] [--no-pjrt]
-                                      run the tuning coordinator server
+  gpml serve  [--addr 127.0.0.1:7070] [--no-pjrt] [--workers N]
+              [--cache-sessions K] [--cache-bytes 1g]
+                                      run the tuning coordinator server;
+                                      sessions cache the O(N^3) setup across
+                                      requests (LRU, K entries / byte budget),
+                                      N pool workers serve pure-rust jobs
   gpml client --addr <host:port> --data <csv> [tune options]
-                                      submit a tuning job to a server
+              [--session] [--stats]   submit a tuning job to a server;
+                                      --session creates/reuses a server-side
+                                      session first (warm requests skip the
+                                      setup), --stats prints cache statistics
   gpml info   [--artifacts <dir>]     list compiled artifacts and buckets
   gpml help                           this text
 
   --threads N (any command) sets the scoped-pool width for the O(N^3)
   setup and search wavefronts (DESIGN.md §6); 1 = exact serial, default =
   GPML_THREADS or all cores.
+
+  Protocol reference: docs/PROTOCOL.md.  Quickstart: README.md.
 ";
 
 fn main() {
@@ -178,9 +189,18 @@ fn cmd_synth(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
     let no_pjrt = args.flag("no-pjrt");
+    let opts = ServerOptions {
+        workers: args.get_usize("workers", 0).map_err(|e| anyhow!(e))?,
+        max_sessions: args
+            .get_usize("cache-sessions", ServerOptions::DEFAULT_MAX_SESSIONS)
+            .map_err(|e| anyhow!(e))?,
+        max_bytes: args
+            .get_bytes("cache-bytes", ServerOptions::DEFAULT_MAX_BYTES)
+            .map_err(|e| anyhow!(e))?,
+    };
     let artifacts: std::path::PathBuf =
         args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir);
-    let server = Server::start(&addr, move || {
+    let server = Server::start_with(&addr, opts, move || {
         if no_pjrt {
             Coordinator::rust_only()
         } else {
@@ -197,7 +217,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     })?;
     println!("gpml coordinator listening on {}", server.addr);
-    println!("protocol: newline-delimited JSON; ops: ping | info | tune | shutdown");
+    println!(
+        "workers: {} | session cache: {} entries / {} bytes",
+        server.workers(),
+        opts.max_sessions,
+        opts.max_bytes
+    );
+    println!(
+        "protocol: newline-delimited JSON (docs/PROTOCOL.md); ops: ping | info | stats | tune \
+         | create_session | drop_session | evaluate | predict | shutdown"
+    );
     // block forever: the acceptor thread owns the listener
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -206,8 +235,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr <host:port> is required"))?;
-    let req = load_request(args)?;
     let mut client = Client::connect(addr)?;
+    if args.flag("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    let req = load_request(args)?;
+    if args.flag("session") {
+        if req.backend == Backend::Pjrt {
+            return Err(anyhow!(
+                "--session runs on the server's pure-rust session path; drop --backend pjrt"
+            ));
+        }
+        // explicit session: the server pays the setup at most once per
+        // dataset; repeated invocations of this command are warm
+        let created = client.create_session_full(&req.x, req.kernel, req.threads)?;
+        eprintln!("session: {created}");
+        let id = created
+            .get("session_id")
+            .and_then(gpml::util::json::Json::as_f64)
+            .ok_or_else(|| anyhow!("malformed create_session response"))?
+            as u64;
+        let mut sreq = SessionTuneRequest::new(id, req.ys.clone());
+        sreq.strategy = req.strategy;
+        sreq.objective = req.objective;
+        sreq.seed = req.seed;
+        sreq.threads = req.threads;
+        println!("{}", client.tune_session(&sreq)?);
+        return Ok(());
+    }
     let res = client.tune(&req)?;
     println!("{res}");
     Ok(())

@@ -3,6 +3,32 @@
 //! through the [`Objective`] trait so the same algorithms run against the
 //! pure-rust spectral evaluator, the PJRT artifacts, the naive O(N^3)
 //! baseline, or the sparse approximation.
+//!
+//! # Examples
+//!
+//! The two-stage strategy over an [`EigenSystem`] objective (here built
+//! from a synthetic spectrum; [`SpectralGp::eigensystem`] produces the
+//! same state from real data):
+//!
+//! ```
+//! use gpml::optim::{self, Bounds, NewtonOptions};
+//! use gpml::spectral::EigenSystem;
+//!
+//! // 8 eigenvalues, squared projected targets, N, y'y
+//! let s = vec![8.0, 4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625];
+//! let y2t = vec![1.0; 8];
+//! let mut es = EigenSystem::from_parts(s, y2t, 8, 8.0);
+//!
+//! let bounds = Bounds::default();
+//! let coarse = optim::grid_search(&mut es, bounds, 9, 64);
+//! let refined = optim::newton_refine(&mut es, coarse.hp, bounds, NewtonOptions::default());
+//! // keep whichever stage won (Newton can wander on hard surfaces)
+//! let best = if refined.score <= coarse.score { refined.hp } else { coarse.hp };
+//! assert!(bounds.contains(best));
+//! ```
+//!
+//! [`EigenSystem`]: crate::spectral::EigenSystem
+//! [`SpectralGp::eigensystem`]: crate::spectral::SpectralGp::eigensystem
 
 pub mod grid;
 pub mod neldermead;

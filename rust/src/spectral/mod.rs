@@ -6,19 +6,55 @@
 //! evaluations ([`EigenSystem`]), posterior moments, Prop. 2.4 variance —
 //! is O(N) or O(N^2).  Multi-output datasets share the decomposition
 //! (paper §2.1: "the eigendecomposition need only be computed once").
+//!
+//! A `SpectralGp` is a cheap-to-clone *handle*: the O(N^2) setup (inputs
+//! + eigendecomposition) lives behind an [`std::sync::Arc`], so the
+//! coordinator's session cache and its worker pool can hand the same
+//! fitted state to many concurrent requests without copying it
+//! (DESIGN.md §7).
+//!
+//! # Examples
+//!
+//! ```
+//! use gpml::kernelfn::Kernel;
+//! use gpml::spectral::{HyperParams, SpectralGp};
+//!
+//! let ds = gpml::data::synthetic(
+//!     gpml::data::SyntheticSpec { n: 24, p: 2, seed: 7, ..Default::default() }, 1);
+//! let gp = SpectralGp::fit(Kernel::Rbf { xi2: 2.0 }, ds.x.clone()).unwrap();
+//!
+//! // O(N) tuning state; clones of `gp` share the same decomposition.
+//! let es = gp.eigensystem(ds.y());
+//! assert!(es.score(HyperParams::new(0.1, 1.0)).is_finite());
+//!
+//! let mu = gp.posterior_mean_train(ds.y(), HyperParams::new(0.1, 1.0));
+//! assert_eq!(mu.len(), gp.n());
+//! ```
 
 pub mod eval;
 
 pub use eval::{EigenSystem, Evaluation, HyperParams};
 
+use std::sync::Arc;
+
 use crate::kernelfn::{self, Kernel};
 use crate::linalg::{strassen, Matrix, SymEigen};
 
-/// A fitted spectral GP: kernel + training inputs + eigendecomposition.
-pub struct SpectralGp {
-    kernel: Kernel,
+/// The shared one-time setup: training inputs + eigendecomposition.
+struct Setup {
     x: Matrix,
     eigen: SymEigen,
+}
+
+/// A fitted spectral GP: kernel + training inputs + eigendecomposition.
+///
+/// Cloning is O(1) (an `Arc` bump): every clone reads the same
+/// setup, which is what lets the coordinator serve many concurrent
+/// requests against one cached decomposition.
+#[derive(Clone)]
+pub struct SpectralGp {
+    kernel: Kernel,
+    setup: Arc<Setup>,
 }
 
 impl SpectralGp {
@@ -27,7 +63,7 @@ impl SpectralGp {
     pub fn fit(kernel: Kernel, x: Matrix) -> Result<Self, crate::linalg::eigen::NoConvergence> {
         let k = kernelfn::gram(kernel, &x);
         let eigen = SymEigen::new(&k)?;
-        Ok(SpectralGp { kernel, x, eigen })
+        Ok(SpectralGp::from_eigen(kernel, x, eigen))
     }
 
     /// Build from a precomputed Gram matrix (e.g. the PJRT gram artifact).
@@ -37,20 +73,33 @@ impl SpectralGp {
         k: &Matrix,
     ) -> Result<Self, crate::linalg::eigen::NoConvergence> {
         let eigen = SymEigen::new(k)?;
-        Ok(SpectralGp { kernel, x, eigen })
+        Ok(SpectralGp::from_eigen(kernel, x, eigen))
+    }
+
+    /// Wrap an already-computed eigendecomposition (used by the session
+    /// cache, which times the gram and eigen phases separately).
+    pub fn from_eigen(kernel: Kernel, x: Matrix, eigen: SymEigen) -> Self {
+        SpectralGp { kernel, setup: Arc::new(Setup { x, eigen }) }
     }
 
     pub fn n(&self) -> usize {
-        self.x.rows()
+        self.setup.x.rows()
     }
     pub fn kernel(&self) -> Kernel {
         self.kernel
     }
     pub fn eigen(&self) -> &SymEigen {
-        &self.eigen
+        &self.setup.eigen
     }
     pub fn x(&self) -> &Matrix {
-        &self.x
+        &self.setup.x
+    }
+
+    /// Approximate heap footprint of the shared setup in bytes (inputs +
+    /// eigenvectors + eigenvalues) — the session cache's accounting unit.
+    pub fn setup_bytes(&self) -> usize {
+        let n = self.n();
+        (self.setup.x.data().len() + n * n + n) * std::mem::size_of::<f64>()
     }
 
     /// O(N) tuning state for one output vector. For an M-output dataset
@@ -58,47 +107,62 @@ impl SpectralGp {
     /// multi-output advantage of §2.1.
     pub fn eigensystem(&self, y: &[f64]) -> EigenSystem {
         assert_eq!(y.len(), self.n(), "target length != training size");
-        EigenSystem::new(&self.eigen, y)
+        EigenSystem::new(&self.setup.eigen, y)
     }
 
     /// Posterior mean of the coefficient vector:
     /// `mu_c = (K + sigma2/lambda2 I)^{-1} y = U (S + r I)^{-1} U' y` (eq. 8).
     pub fn posterior_mean_coef(&self, y: &[f64], hp: HyperParams) -> Vec<f64> {
         let r = hp.sigma2 / hp.lambda2;
-        let mut yt = self.eigen.project(y);
-        for (v, &s) in yt.iter_mut().zip(&self.eigen.values) {
+        let mut yt = self.setup.eigen.project(y);
+        for (v, &s) in yt.iter_mut().zip(&self.setup.eigen.values) {
             *v /= s + r;
         }
-        self.eigen.back_project(&yt)
+        self.setup.eigen.back_project(&yt)
     }
 
     /// Training-point posterior predictive mean `mu_y = K mu_c` (eq. 10),
     /// computed in the eigenbasis in O(N^2).
     pub fn posterior_mean_train(&self, y: &[f64], hp: HyperParams) -> Vec<f64> {
         let r = hp.sigma2 / hp.lambda2;
-        let mut yt = self.eigen.project(y);
-        for (v, &s) in yt.iter_mut().zip(&self.eigen.values) {
+        let mut yt = self.setup.eigen.project(y);
+        for (v, &s) in yt.iter_mut().zip(&self.setup.eigen.values) {
             *v *= s / (s + r);
         }
-        self.eigen.back_project(&yt)
+        self.setup.eigen.back_project(&yt)
     }
 
     /// Predictive mean at new inputs: `k_x~ mu_c` (eq. 4).
     pub fn predict_mean(&self, xnew: &Matrix, y: &[f64], hp: HyperParams) -> Vec<f64> {
         let mu_c = self.posterior_mean_coef(y, hp);
-        let kx = kernelfn::cross_gram(self.kernel, xnew, &self.x);
+        let kx = kernelfn::cross_gram(self.kernel, xnew, &self.setup.x);
         kx.matvec(&mu_c)
     }
 
     /// Predictive variance at new inputs:
     /// `k_x~ Sigma_c k_x~' + sigma2` with `Sigma_c = U Q U'` (Prop. 2.4).
     pub fn predict_var(&self, xnew: &Matrix, hp: HyperParams) -> Vec<f64> {
+        let kx = kernelfn::cross_gram(self.kernel, xnew, &self.setup.x);
+        self.var_from_cross_gram(&kx, hp)
+    }
+
+    /// Predictive mean *and* variance at new inputs, sharing one
+    /// cross-Gram computation — the serving layer's `predict` op (the
+    /// kernel evaluations dominate, so computing `k_x~` once halves the
+    /// request cost versus `predict_mean` + `predict_var`).
+    pub fn predict(&self, xnew: &Matrix, y: &[f64], hp: HyperParams) -> (Vec<f64>, Vec<f64>) {
+        let kx = kernelfn::cross_gram(self.kernel, xnew, &self.setup.x);
+        let mean = kx.matvec(&self.posterior_mean_coef(y, hp));
+        let var = self.var_from_cross_gram(&kx, hp);
+        (mean, var)
+    }
+
+    fn var_from_cross_gram(&self, kx: &Matrix, hp: HyperParams) -> Vec<f64> {
         let q = self.posterior_var_coeffs(hp);
-        let kx = kernelfn::cross_gram(self.kernel, xnew, &self.x);
         // v = U' k_x~'; var = sum_j q_j v_j^2 + sigma2
-        (0..xnew.rows())
+        (0..kx.rows())
             .map(|i| {
-                let v = self.eigen.project(kx.row(i));
+                let v = self.setup.eigen.project(kx.row(i));
                 v.iter().zip(&q).map(|(vj, qj)| vj * vj * qj).sum::<f64>() + hp.sigma2
             })
             .collect()
@@ -107,7 +171,7 @@ impl SpectralGp {
     /// Prop. 2.4: the diagonal of `Sigma_c` in O(N) per element.
     pub fn posterior_var_diag(&self, hp: HyperParams) -> Vec<f64> {
         let q = self.posterior_var_coeffs(hp);
-        let u = &self.eigen.vectors;
+        let u = &self.setup.eigen.vectors;
         (0..self.n())
             .map(|i| u.row(i).iter().zip(&q).map(|(uij, qj)| uij * uij * qj).sum())
             .collect()
@@ -117,7 +181,7 @@ impl SpectralGp {
     /// (O(N^2.807) instead of two O(N^3) inversions of eq. 36).
     pub fn posterior_var_full(&self, hp: HyperParams) -> Matrix {
         let q = self.posterior_var_coeffs(hp);
-        let u = &self.eigen.vectors;
+        let u = &self.setup.eigen.vectors;
         let n = self.n();
         // (U Q) then Strassen (U Q) U'
         let mut uq = u.clone();
@@ -130,7 +194,7 @@ impl SpectralGp {
     }
 
     fn posterior_var_coeffs(&self, hp: HyperParams) -> Vec<f64> {
-        self.eigen
+        self.setup.eigen
             .values
             .iter()
             .map(|&s| {
@@ -242,6 +306,19 @@ mod tests {
         }
         // symmetry
         assert!(full.max_abs_diff(&full.t()) < 1e-9);
+    }
+
+    #[test]
+    fn combined_predict_matches_separate_paths() {
+        let (gp, y) = setup(25, 10);
+        let hp = HyperParams::new(0.3, 1.2);
+        let mut rng = Rng::new(11);
+        let xnew = Matrix::from_fn(8, 3, |_, _| rng.normal());
+        let (mean, var) = gp.predict(&xnew, &y, hp);
+        let mean2 = gp.predict_mean(&xnew, &y, hp);
+        let var2 = gp.predict_var(&xnew, hp);
+        assert_eq!(mean, mean2);
+        assert_eq!(var, var2);
     }
 
     #[test]

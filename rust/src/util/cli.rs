@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 /// is a key-value option.  Keeping this list explicit resolves the
 /// `--flag positional` ambiguity without clap-style per-command specs.
 const KNOWN_FLAGS: &[&str] = &[
-    "predict", "verbose", "quiet", "no-pjrt", "help", "evidence", "paper-score", "json",
+    "predict", "verbose", "quiet", "no-pjrt", "help", "evidence", "paper-score", "json", "stats",
+    "session",
 ];
 
 /// Parsed arguments: flags, key-value options, and positionals, in the
@@ -82,6 +83,16 @@ impl Args {
         }
     }
 
+    /// Byte-size option with an optional binary-unit suffix:
+    /// `--cache-bytes 1048576`, `512k`, `256m`, `2g` (also `kb`/`mb`/`gb`;
+    /// fractional values like `1.5g` are allowed).
+    pub fn get_bytes(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => parse_bytes(s).ok_or_else(|| format!("--{name}: bad size '{s}'")),
+        }
+    }
+
     /// Comma-separated usize list, e.g. `--sizes 32,64,128`.
     pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(name) {
@@ -92,6 +103,24 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+/// Parse a byte size: a plain number of bytes, or a number with a binary
+/// `k`/`m`/`g` suffix (optionally followed by `b`), case-insensitive.
+pub fn parse_bytes(s: &str) -> Option<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let t = t.strip_suffix('b').unwrap_or(&t);
+    let (digits, mult) = match t.chars().last()? {
+        'k' => (&t[..t.len() - 1], 1usize << 10),
+        'm' => (&t[..t.len() - 1], 1 << 20),
+        'g' => (&t[..t.len() - 1], 1 << 30),
+        _ => (t, 1),
+    };
+    let v: f64 = digits.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64) as usize)
 }
 
 #[cfg(test)]
@@ -139,5 +168,23 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = parse(&["--verbose"]);
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(parse_bytes("1048576"), Some(1 << 20));
+        assert_eq!(parse_bytes("512k"), Some(512 << 10));
+        assert_eq!(parse_bytes("256M"), Some(256 << 20));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes("2GB"), Some(2 << 30));
+        assert_eq!(parse_bytes("1.5g"), Some(3 << 29));
+        assert_eq!(parse_bytes("0"), Some(0));
+        assert_eq!(parse_bytes("nope"), None);
+        assert_eq!(parse_bytes("-1k"), None);
+        assert_eq!(parse_bytes(""), None);
+        let a = parse(&["--cache-bytes", "64m"]);
+        assert_eq!(a.get_bytes("cache-bytes", 0).unwrap(), 64 << 20);
+        assert_eq!(a.get_bytes("missing", 7).unwrap(), 7);
+        assert!(parse(&["--cache-bytes", "x"]).get_bytes("cache-bytes", 0).is_err());
     }
 }

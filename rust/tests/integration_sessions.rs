@@ -1,0 +1,232 @@
+//! Integration: the session subsystem end-to-end over TCP — warm requests
+//! perform zero O(N^3) work (asserted via the setup counter), eviction
+//! respects the byte budget, and cached responses are bitwise identical
+//! to cold ones.
+
+use gpml::coordinator::client::Client;
+use gpml::coordinator::protocol::{EvaluateRequest, PredictRequest};
+use gpml::coordinator::server::{Server, ServerOptions};
+use gpml::coordinator::session::SessionTuneRequest;
+use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::HyperParams;
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn dataset(n: usize, seed: u64) -> (Matrix, Vec<Vec<f64>>) {
+    let ds = synthetic(SyntheticSpec { n, p: 2, seed, ..Default::default() }, 1);
+    (ds.x, ds.ys)
+}
+
+fn grid_tune(id: u64, ys: Vec<Vec<f64>>) -> SessionTuneRequest {
+    let mut req = SessionTuneRequest::new(id, ys);
+    req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+    req.objective = ObjectiveKind::Evidence;
+    req
+}
+
+#[test]
+fn session_lifecycle_zero_setup_on_warm_requests() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (x, ys) = dataset(40, 1);
+
+    let created = client.create_session_full(&x, KERNEL, 0).unwrap();
+    assert_eq!(created.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(created.get("n").unwrap().as_usize(), Some(40));
+    let id = created.get("session_id").unwrap().as_f64().unwrap() as u64;
+
+    // warm tune #1 and #2: the setup counter must not move
+    let r1 = client.tune_session(&grid_tune(id, ys.clone())).unwrap();
+    assert_eq!(r1.get("eigen_cached").unwrap().as_bool(), Some(true));
+    assert_eq!(r1.get("gram_seconds").unwrap().as_f64(), Some(0.0));
+    let r2 = client.tune_session(&grid_tune(id, ys.clone())).unwrap();
+    assert_eq!(
+        r1.get("outputs").unwrap().to_string(),
+        r2.get("outputs").unwrap().to_string(),
+        "identical warm requests give identical responses"
+    );
+    let stats = server.session_stats();
+    assert_eq!(stats.setups, 1, "warm tunes performed zero gram/eigen work");
+
+    // evaluate: O(N) closed forms against the cached eigenbasis
+    let ev = client
+        .evaluate(&EvaluateRequest {
+            session_id: id,
+            y: ys[0].clone(),
+            hp: HyperParams::new(0.1, 1.0),
+            objective: ObjectiveKind::Evidence,
+        })
+        .unwrap();
+    assert!(ev.get("score").unwrap().as_f64().unwrap().is_finite());
+    assert_eq!(ev.get("jac").unwrap().as_arr().unwrap().len(), 2);
+
+    // predict at new inputs
+    let xnew = Matrix::from_fn(5, 2, |i, j| (i + j) as f64 * 0.1);
+    let pr = client
+        .predict(&PredictRequest {
+            session_id: id,
+            y: ys[0].clone(),
+            xnew,
+            hp: HyperParams::new(0.1, 1.0),
+        })
+        .unwrap();
+    assert_eq!(pr.get("mean").unwrap().as_arr().unwrap().len(), 5);
+    for v in pr.get("var").unwrap().as_arr().unwrap() {
+        assert!(v.as_f64().unwrap() >= 0.1 - 1e-12, "variance below noise floor");
+    }
+    assert_eq!(server.session_stats().setups, 1, "evaluate/predict are setup-free");
+
+    // drop, then referencing the id is a clean error
+    assert!(client.drop_session(id).unwrap());
+    assert!(!client.drop_session(id).unwrap());
+    let err = client.tune_session(&grid_tune(id, ys)).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+    server.stop();
+}
+
+#[test]
+fn cold_and_warm_paths_bitwise_identical() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (x, ys) = dataset(32, 9);
+    let mut inline = TuneRequest::new(x.clone(), ys.clone(), KERNEL);
+    inline.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+    inline.objective = ObjectiveKind::Evidence;
+
+    // cold: the inline tune pays the setup (and implicitly creates the
+    // session for this fingerprint)
+    let cold = client.tune(&inline).unwrap();
+    assert_eq!(cold.get("eigen_cached").unwrap().as_bool(), Some(false));
+
+    // the explicit create now hits the implicit session
+    let created = client.create_session_full(&x, KERNEL, 0).unwrap();
+    assert_eq!(created.get("cached").unwrap().as_bool(), Some(true));
+    let id = created.get("session_id").unwrap().as_f64().unwrap() as u64;
+
+    // warm session tune and warm inline tune: all three output blocks
+    // must serialize identically
+    let warm_session = client.tune_session(&grid_tune(id, ys)).unwrap();
+    let warm_inline = client.tune(&inline).unwrap();
+    let cold_outputs = cold.get("outputs").unwrap().to_string();
+    assert_eq!(cold_outputs, warm_session.get("outputs").unwrap().to_string());
+    assert_eq!(cold_outputs, warm_inline.get("outputs").unwrap().to_string());
+    assert_eq!(server.session_stats().setups, 1);
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_mixed_sessions_share_setups() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+
+    // pre-create 3 sessions (3 setups)
+    let datasets: Vec<_> = (0..3).map(|s| dataset(30, 100 + s)).collect();
+    let mut setup_client = Client::connect(&addr).unwrap();
+    let ids: Vec<u64> =
+        datasets.iter().map(|(x, _)| setup_client.create_session(x, KERNEL).unwrap()).collect();
+
+    // 6 clients hammer the 3 sessions concurrently with mixed ops
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            let id = ids[i % 3];
+            let (_, ys) = datasets[i % 3].clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for _ in 0..2 {
+                    let res = client.tune_session(&grid_tune(id, ys.clone())).unwrap();
+                    assert_eq!(res.get("ok").unwrap().as_bool(), Some(true));
+                }
+                let ev = client
+                    .evaluate(&EvaluateRequest {
+                        session_id: id,
+                        y: ys[0].clone(),
+                        hp: HyperParams::new(0.5, 1.0),
+                        objective: ObjectiveKind::PaperScore,
+                    })
+                    .unwrap();
+                assert!(ev.get("score").unwrap().as_f64().unwrap().is_finite());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = server.session_stats();
+    assert_eq!(stats.setups, 3, "every request after creation hit the cached setups");
+    assert_eq!(stats.sessions, 3);
+    server.stop();
+}
+
+#[test]
+fn racing_creates_of_one_dataset_compute_once() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+    let (x, _) = dataset(48, 77);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                client.create_session(&x, KERNEL).unwrap()
+            })
+        })
+        .collect();
+    let ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(ids.windows(2).all(|w| w[0] == w[1]), "one session for all racers: {ids:?}");
+    assert_eq!(server.session_stats().setups, 1, "single-flight setup under a create race");
+    server.stop();
+}
+
+#[test]
+fn eviction_under_small_byte_budget() {
+    // budget sized to hold exactly one n=32 session
+    let one = gpml::spectral::SpectralGp::fit(KERNEL, dataset(32, 1).0).unwrap().setup_bytes();
+    let opts = ServerOptions { max_bytes: one + one / 2, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    let (xa, ys_a) = dataset(32, 1);
+    let (xb, _) = dataset(32, 2);
+    let a = client.create_session(&xa, KERNEL).unwrap();
+    let b = client.create_session(&xb, KERNEL).unwrap();
+    assert_ne!(a, b);
+
+    let stats = server.session_stats();
+    assert_eq!(stats.evictions, 1, "creating B evicted A under the byte budget");
+    assert_eq!(stats.sessions, 1);
+    assert!(stats.bytes <= opts.max_bytes);
+
+    // the evicted session errors cleanly...
+    let err = client.tune_session(&grid_tune(a, ys_a.clone())).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+    // ...and re-creating it recomputes (the cache cannot hold both)
+    let a2 = client.create_session(&xa, KERNEL).unwrap();
+    assert!(client.tune_session(&grid_tune(a2, ys_a)).is_ok());
+    assert_eq!(server.session_stats().setups, 3);
+
+    // wire-level stats agree with the server-side snapshot
+    let wire = client.stats().unwrap();
+    assert_eq!(wire.get("setups").unwrap().as_usize(), Some(3));
+    assert_eq!(wire.get("evictions").unwrap().as_usize(), Some(2));
+    server.stop();
+}
+
+#[test]
+fn stats_op_reports_budgets_and_counters() {
+    let opts = ServerOptions { workers: 3, max_sessions: 5, max_bytes: 1 << 20 };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let v = client.stats().unwrap();
+    assert_eq!(v.get("workers").unwrap().as_usize(), Some(3));
+    assert_eq!(v.get("max_sessions").unwrap().as_usize(), Some(5));
+    assert_eq!(v.get("max_bytes").unwrap().as_usize(), Some(1 << 20));
+    assert_eq!(v.get("sessions").unwrap().as_usize(), Some(0));
+    assert_eq!(v.get("bytes").unwrap().as_usize(), Some(0));
+    server.stop();
+}
