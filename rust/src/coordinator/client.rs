@@ -2,7 +2,8 @@
 //!
 //! One method per wire op (`docs/PROTOCOL.md`); the session workflow is
 //! `create_session` -> repeated `tune_session` / `evaluate` / `predict`
-//! (all O(N) on the server) -> optional `drop_session`.
+//! (all O(N) on the server), with `update_session` appending streaming
+//! observations in place -> optional `drop_session`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -100,6 +101,21 @@ impl Client {
     /// Posterior predictive mean + variance at new inputs.
     pub fn predict(&mut self, req: &PredictRequest) -> Result<Json> {
         self.checked(&protocol::predict_json(req))
+    }
+
+    /// Append observations to a server-side session (streaming update):
+    /// the server refreshes the cached eigendecomposition by rank-one
+    /// corrections (full refit past its fallback policy) and evolves the
+    /// session fingerprint to the grown dataset.  Subsequent requests
+    /// must send length-N' outputs (`n` in the response).  `threads`
+    /// pins the server-side pool width for this refresh (0 = default).
+    pub fn update_session(
+        &mut self,
+        session_id: u64,
+        x_new: &Matrix,
+        threads: usize,
+    ) -> Result<Json> {
+        self.checked(&protocol::update_session_json(session_id, x_new, threads))
     }
 
     /// Drop a session; returns whether it existed.

@@ -13,6 +13,7 @@
 //!  "grid": 17, "seed": 42, "threads": 0}
 //! {"op": "tune", "session_id": 1, "ys": [[...], ...], ...}
 //! {"op": "create_session", "x": [[...], ...], "kernel": "rbf:2.0"}
+//! {"op": "update_session", "session_id": 1, "x_new": [[...], ...]}
 //! {"op": "drop_session", "session_id": 1}
 //! {"op": "evaluate", "session_id": 1, "y": [...],
 //!  "sigma2": 0.1, "lambda2": 1.0, "objective": "paper"|"evidence"}
@@ -42,6 +43,9 @@ pub enum Request {
     /// Session tune: O(N) against an existing session's eigenbasis.
     TuneSession(Box<SessionTuneRequest>),
     CreateSession { x: Matrix, kernel: Kernel, threads: usize },
+    /// Streaming append: grow a session's dataset by rank-one spectral
+    /// refresh (full refit past the fallback policy) — DESIGN.md §8.
+    UpdateSession { session_id: u64, x_new: Matrix, threads: usize },
     DropSession { session_id: u64 },
     Evaluate(Box<EvaluateRequest>),
     Predict(Box<PredictRequest>),
@@ -190,6 +194,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
             Ok(Request::CreateSession { x, kernel, threads })
         }
+        Some("update_session") => {
+            let x_new = parse_matrix(v.get("x_new").ok_or("missing x_new")?, "x_new")?;
+            let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
+            Ok(Request::UpdateSession { session_id: parse_session_id(&v)?, x_new, threads })
+        }
         Some("drop_session") => Ok(Request::DropSession { session_id: parse_session_id(&v)? }),
         Some("evaluate") => {
             let req = EvaluateRequest {
@@ -276,6 +285,27 @@ pub fn create_session_response(
     .to_string()
 }
 
+/// Serialize an `update_session` result.  `incremental` says whether the
+/// append was served by rank-one corrections (`refit_reason` is present
+/// exactly when it was not); `updates_applied` is the session's rank-one
+/// correction count since its last full fit.
+pub fn update_session_response(res: &crate::coordinator::session::UpdateResult) -> String {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("session_id", Json::Num(res.sess.id as f64)),
+        ("n", Json::Num(res.sess.gp.n() as f64)),
+        ("p", Json::Num(res.sess.gp.x().cols() as f64)),
+        ("bytes", Json::Num(res.sess.bytes as f64)),
+        ("incremental", Json::Bool(res.incremental)),
+        ("updates_applied", Json::Num(res.sess.gp.updates() as f64)),
+        ("update_seconds", Json::Num(res.update_seconds)),
+    ];
+    if let Some(reason) = res.refit_reason {
+        fields.push(("refit_reason", Json::str(reason)));
+    }
+    Json::obj(fields).to_string()
+}
+
 /// Serialize a `drop_session` result.
 pub fn drop_session_response(dropped: bool) -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("dropped", Json::Bool(dropped))]).to_string()
@@ -293,6 +323,7 @@ pub fn stats_response(s: &StoreStats, workers: usize) -> String {
         ("misses", Json::Num(s.misses as f64)),
         ("evictions", Json::Num(s.evictions as f64)),
         ("setups", Json::Num(s.setups as f64)),
+        ("updates", Json::Num(s.updates as f64)),
         ("workers", Json::Num(workers as f64)),
     ])
     .to_string()
@@ -413,6 +444,17 @@ pub fn create_session_json(x: &Matrix, kernel: Kernel, threads: usize) -> String
         ("op", Json::str("create_session")),
         ("x", matrix_json(x)),
         ("kernel", Json::str(&kernel_string(kernel))),
+        ("threads", Json::Num(threads as f64)),
+    ])
+    .to_string()
+}
+
+/// Serialize an `update_session` request (client side).
+pub fn update_session_json(session_id: u64, x_new: &Matrix, threads: usize) -> String {
+    Json::obj(vec![
+        ("op", Json::str("update_session")),
+        ("session_id", Json::Num(session_id as f64)),
+        ("x_new", matrix_json(x_new)),
         ("threads", Json::Num(threads as f64)),
     ])
     .to_string()
@@ -559,6 +601,35 @@ mod tests {
         assert!(matches!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats));
         assert!(parse_request(r#"{"op":"drop_session"}"#).is_err());
         assert!(parse_request(r#"{"op":"create_session"}"#).is_err());
+    }
+
+    #[test]
+    fn update_session_roundtrip() {
+        let x_new = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        match parse_request(&update_session_json(9, &x_new, 2)).unwrap() {
+            Request::UpdateSession { session_id, x_new, threads } => {
+                assert_eq!(session_id, 9);
+                assert_eq!(x_new.rows(), 2);
+                assert_eq!(x_new.cols(), 3);
+                assert_eq!(x_new[(1, 2)], 6.0);
+                assert_eq!(threads, 2);
+            }
+            other => panic!("expected update_session, got {other:?}"),
+        }
+        // missing pieces are rejected
+        assert!(parse_request(r#"{"op":"update_session","session_id":1}"#).is_err());
+        assert!(parse_request(r#"{"op":"update_session","x_new":[[1]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"update_session","session_id":1,"x_new":[]}"#).is_err());
+        assert!(
+            parse_request(r#"{"op":"update_session","session_id":1.5,"x_new":[[1]]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn stats_response_includes_updates_counter() {
+        let s = StoreStats { updates: 7, ..Default::default() };
+        let v = json::parse(&stats_response(&s, 2)).unwrap();
+        assert_eq!(v.get("updates").unwrap().as_usize(), Some(7));
     }
 
     #[test]

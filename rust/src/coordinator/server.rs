@@ -281,6 +281,15 @@ fn dispatch_pool(store: &SessionStore, workers: usize, req: protocol::Request) -
                 Err(e) => protocol::error_response(&format!("{e:#}")),
             }
         }
+        protocol::Request::UpdateSession { session_id, x_new, threads } => {
+            let res = crate::util::threadpool::with_threads(threads, || {
+                store.update(session_id, &x_new)
+            });
+            match res {
+                Ok(res) => protocol::update_session_response(&res),
+                Err(e) => protocol::error_response(&format!("{e:#}")),
+            }
+        }
         protocol::Request::DropSession { session_id } => {
             protocol::drop_session_response(store.drop_session(session_id))
         }

@@ -52,7 +52,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kernelfn::{self, Kernel};
 use crate::linalg::{Matrix, SymEigen};
-use crate::spectral::SpectralGp;
+use crate::spectral::{ExtendOutcome, SpectralGp};
 
 use super::{
     fingerprint, tune_one, Backend, GlobalStrategy, ObjectiveKind, OutputResult, TuneRequest,
@@ -95,6 +95,9 @@ pub struct StoreStats {
     /// Gram + eigendecomposition computations actually performed — the
     /// O(N^3) work counter the integration tests assert against.
     pub setups: u64,
+    /// Streaming `update_session` requests served (incremental *and*
+    /// fallback-refit; a fallback additionally bumps `setups`).
+    pub updates: u64,
 }
 
 struct Slot {
@@ -109,6 +112,9 @@ struct Inner {
     by_fp: HashMap<u64, u64>,
     /// Fingerprints whose setup is in flight (single-flight guard).
     pending: HashSet<u64>,
+    /// Session ids whose streaming update is in flight (updates to one
+    /// session serialize; other sessions stay served).
+    updating: HashSet<u64>,
     bytes: usize,
     tick: u64,
     next_id: u64,
@@ -116,6 +122,31 @@ struct Inner {
     misses: u64,
     evictions: u64,
     setups: u64,
+    updates: u64,
+}
+
+impl Inner {
+    /// The fingerprint index's single invariant, both ends: an entry
+    /// always points at a live slot, and on collisions (a streaming
+    /// update evolving into — or a create racing onto — a fingerprint
+    /// another live session already owns) **first-come keeps the
+    /// index**.  The loser stays reachable by id until LRU reclaims it.
+    ///
+    /// Point `fp` at `id` unless another session already owns it.
+    fn claim_fp(&mut self, fp: u64, id: u64) {
+        let occupied_by_other = matches!(self.by_fp.get(&fp), Some(&other) if other != id);
+        if !occupied_by_other {
+            self.by_fp.insert(fp, id);
+        }
+    }
+
+    /// Remove `fp`'s index entry only if `id` owns it (a collision loser
+    /// going away must not take the survivor's entry with it).
+    fn release_fp(&mut self, fp: u64, id: u64) {
+        if self.by_fp.get(&fp) == Some(&id) {
+            self.by_fp.remove(&fp);
+        }
+    }
 }
 
 /// Thread-safe LRU session cache with a byte budget.  All methods take
@@ -196,7 +227,9 @@ impl SessionStore {
         let sess =
             Arc::new(Session { id, fingerprint: fp, gp, bytes, gram_seconds, eigen_seconds });
         g.slots.insert(id, Slot { sess: sess.clone(), last_used: tick });
-        g.by_fp.insert(fp, id);
+        // while this setup ran outside the lock, a streaming update may
+        // have *evolved* another session to this same fingerprint
+        g.claim_fp(fp, id);
         g.bytes += bytes;
         self.evict_over_budget(&mut g, id);
         drop(g);
@@ -216,7 +249,7 @@ impl SessionStore {
                 .map(|(&id, _)| id);
             let Some(id) = victim else { break };
             let slot = g.slots.remove(&id).unwrap();
-            g.by_fp.remove(&slot.sess.fingerprint);
+            g.release_fp(slot.sess.fingerprint, id);
             g.bytes -= slot.sess.bytes;
             g.evictions += 1;
         }
@@ -232,13 +265,104 @@ impl SessionStore {
         Some(slot.sess.clone())
     }
 
+    /// Append observations to a live session — the streaming op
+    /// (DESIGN.md §8).  The session keeps its id but its **fingerprint
+    /// evolves** to the fingerprint of the grown dataset, so a later
+    /// `create_session` with the full (base + appended) inputs is a cache
+    /// hit on this same session.  Byte accounting follows the grown
+    /// setup (and may evict *other* sessions to restore the budget).
+    ///
+    /// The O(N^2..N^3) work runs outside the store lock; concurrent
+    /// updates to the same id serialize on a per-id in-flight set (each
+    /// sees the previous update's result), while other sessions stay
+    /// served.  A session dropped or evicted mid-update reports
+    /// `unknown session` rather than resurrecting the entry.
+    pub fn update(&self, id: u64, x_new: &Matrix) -> Result<UpdateResult> {
+        let gp = {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                let Some(slot) = g.slots.get(&id) else {
+                    return Err(anyhow!("unknown session {id}"));
+                };
+                let gp = slot.sess.gp.clone();
+                if g.updating.contains(&id) {
+                    g = self.cv.wait(g).unwrap();
+                    continue;
+                }
+                g.updating.insert(id);
+                break gp;
+            }
+        };
+
+        // --- the update work, outside the lock ---
+        let work = (|| -> Result<(SpectralGp, ExtendOutcome, f64)> {
+            if x_new.rows() == 0 {
+                return Err(anyhow!("x_new is empty"));
+            }
+            if x_new.cols() != gp.x().cols() {
+                return Err(anyhow!("x_new: {} cols != P {}", x_new.cols(), gp.x().cols()));
+            }
+            let t0 = Instant::now();
+            let (new_gp, outcome) = gp.extend(x_new).map_err(|e| anyhow!("eigensolver: {e}"))?;
+            Ok((new_gp, outcome, t0.elapsed().as_secs_f64()))
+        })();
+
+        let mut g = self.inner.lock().unwrap();
+        g.updating.remove(&id);
+        let (new_gp, outcome, update_seconds) = match work {
+            Ok(v) => v,
+            Err(e) => {
+                drop(g);
+                self.cv.notify_all();
+                return Err(e);
+            }
+        };
+        // the session may have been dropped/evicted while we worked
+        let Some(old) = g.slots.get(&id) else {
+            drop(g);
+            self.cv.notify_all();
+            return Err(anyhow!("unknown session {id}"));
+        };
+        let old_sess = old.sess.clone();
+        g.updates += 1;
+        let refit_reason = match outcome {
+            ExtendOutcome::Incremental => None,
+            ExtendOutcome::Refit(reason) => {
+                g.setups += 1; // the fallback performed real O(N^3) work
+                Some(reason.as_str())
+            }
+        };
+        let fp = fingerprint(new_gp.x(), new_gp.kernel());
+        let bytes = new_gp.setup_bytes();
+        let sess = Arc::new(Session {
+            id,
+            fingerprint: fp,
+            gp: new_gp,
+            bytes,
+            gram_seconds: old_sess.gram_seconds,
+            eigen_seconds: old_sess.eigen_seconds,
+        });
+        // evolve the fingerprint index (collision policy: see the
+        // `Inner` helpers) and the byte ledger
+        g.release_fp(old_sess.fingerprint, id);
+        g.claim_fp(fp, id);
+        g.bytes = g.bytes - old_sess.bytes + bytes;
+        g.tick += 1;
+        let tick = g.tick;
+        g.slots.insert(id, Slot { sess: sess.clone(), last_used: tick });
+        self.evict_over_budget(&mut g, id);
+        drop(g);
+        self.cv.notify_all();
+        Ok(UpdateResult { sess, incremental: refit_reason.is_none(), refit_reason, update_seconds })
+    }
+
     /// Explicitly drop a session; returns whether it existed.  Freed
     /// bytes are not counted as evictions.
     pub fn drop_session(&self, id: u64) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.slots.remove(&id) {
             Some(slot) => {
-                g.by_fp.remove(&slot.sess.fingerprint);
+                g.release_fp(slot.sess.fingerprint, id);
                 g.bytes -= slot.sess.bytes;
                 true
             }
@@ -257,8 +381,21 @@ impl SessionStore {
             misses: g.misses,
             evictions: g.evictions,
             setups: g.setups,
+            updates: g.updates,
         }
     }
+}
+
+/// Outcome of a [`SessionStore::update`]: the replaced session handle
+/// plus how the append was served (the wire response serializes this).
+pub struct UpdateResult {
+    pub sess: Arc<Session>,
+    /// True when rank-one corrections served the append (zero O(N^3)).
+    pub incremental: bool,
+    /// The fallback reason when the policy forced a full refit.
+    pub refit_reason: Option<&'static str>,
+    /// Wall-clock of the extend (incremental or refit).
+    pub update_seconds: f64,
 }
 
 /// A tuning job against an existing session: everything a
@@ -494,6 +631,138 @@ mod tests {
             assert_eq!(a.hp, b.hp);
             assert_eq!(a.score.to_bits(), b.score.to_bits());
         }
+    }
+
+    #[test]
+    fn update_grows_session_and_evolves_fingerprint() {
+        let store = SessionStore::new(8, usize::MAX);
+        let mut rng = crate::util::rng::Rng::new(51);
+        let full = Matrix::from_fn(20, 2, |_, _| rng.normal());
+        let base = full.top_left(16, 2);
+        let extra = Matrix::from_fn(4, 2, |i, j| full[(16 + i, j)]);
+        let k = Kernel::Rbf { xi2: 2.0 };
+
+        let (sess, _) = store.create(k, base).unwrap();
+        let before_bytes = store.stats().bytes;
+        let res = store.update(sess.id, &extra).unwrap();
+        assert!(res.incremental);
+        assert_eq!(res.sess.gp.n(), 20);
+        assert_eq!(res.sess.id, sess.id);
+        let s = store.stats();
+        assert_eq!(s.updates, 1);
+        assert_eq!(s.setups, 1, "incremental update performed no O(N^3) setup");
+        assert!(s.bytes > before_bytes, "byte ledger follows the grown setup");
+        assert_eq!(s.bytes, res.sess.bytes);
+
+        // fingerprint evolution: creating the *full* dataset now hits the
+        // updated session
+        let (again, cached) = store.create(k, full).unwrap();
+        assert!(cached);
+        assert_eq!(again.id, sess.id);
+        // and the old (pre-append) fingerprint is gone: re-creating the
+        // base dataset computes a fresh setup
+        let (fresh, cached) = store.create(k, res.sess.gp.x().top_left(16, 2)).unwrap();
+        assert!(!cached);
+        assert_ne!(fresh.id, sess.id);
+    }
+
+    #[test]
+    fn colliding_fingerprint_evolution_keeps_index_consistent() {
+        // two sessions stream the *same* data: the second update's
+        // evolved fingerprint collides with the first's — the index must
+        // keep exactly one live owner, and dropping either session must
+        // not corrupt the survivor's entry
+        let store = SessionStore::new(8, usize::MAX);
+        let mut rng = crate::util::rng::Rng::new(61);
+        let full = Matrix::from_fn(18, 2, |_, _| rng.normal());
+        let base = full.top_left(14, 2);
+        let extra = Matrix::from_fn(4, 2, |i, j| full[(14 + i, j)]);
+        let k = Kernel::Rbf { xi2: 2.0 };
+
+        let (a, _) = store.create(k, base.clone()).unwrap();
+        store.update(a.id, &extra).unwrap();
+        // second streamer: base fp is free again (A's evolved), so this
+        // is a fresh session...
+        let (b, cached_b) = store.create(k, base).unwrap();
+        assert!(!cached_b);
+        assert_ne!(b.id, a.id);
+        // ...whose update collides with A's evolved fingerprint
+        let res_b = store.update(b.id, &extra).unwrap();
+        assert_eq!(res_b.sess.gp.n(), 18);
+
+        // the full dataset resolves to the first owner (first-come keeps)
+        let (hit, cached) = store.create(k, full.clone()).unwrap();
+        assert!(cached);
+        assert_eq!(hit.id, a.id);
+        // B stays reachable by id even though it lost the index race
+        assert!(store.get(b.id).is_some());
+
+        // dropping the loser must not remove the survivor's entry
+        assert!(store.drop_session(b.id));
+        let (hit, cached) = store.create(k, full.clone()).unwrap();
+        assert!(cached);
+        assert_eq!(hit.id, a.id);
+
+        // dropping the owner finally frees the fingerprint
+        assert!(store.drop_session(a.id));
+        let (_, cached) = store.create(k, full).unwrap();
+        assert!(!cached);
+    }
+
+    #[test]
+    fn update_falls_back_past_budget_and_counts_a_setup() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, _) = dataset(16, 31);
+        let (sess, _) = store.create(k, x).unwrap();
+        let mut rng = crate::util::rng::Rng::new(52);
+        // the default policy allows 64 rank-one corrections = 32 appended
+        // rows; a 40-row batch must fall back to a refit
+        let big = Matrix::from_fn(40, 2, |_, _| rng.normal());
+        let res = store.update(sess.id, &big).unwrap();
+        assert!(!res.incremental);
+        assert_eq!(res.refit_reason, Some("update-budget"));
+        assert_eq!(res.sess.gp.n(), 56);
+        let s = store.stats();
+        assert_eq!(s.updates, 1);
+        assert_eq!(s.setups, 2, "the fallback refit is counted as O(N^3) work");
+    }
+
+    #[test]
+    fn update_rejects_unknown_and_bad_shapes() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, _) = dataset(12, 33);
+        let (sess, _) = store.create(k, x).unwrap();
+        let good = Matrix::from_fn(1, 2, |_, _| 0.5);
+        assert!(store.update(999, &good).is_err());
+        assert!(store.update(sess.id, &Matrix::zeros(0, 2)).is_err());
+        let wrong_p = Matrix::from_fn(1, 3, |_, _| 0.5);
+        let err = store.update(sess.id, &wrong_p).unwrap_err();
+        assert!(err.to_string().contains("cols"), "{err}");
+        // failures leave the session serviceable
+        assert!(store.update(sess.id, &good).is_ok());
+        assert_eq!(store.stats().updates, 1);
+    }
+
+    #[test]
+    fn concurrent_updates_to_one_session_serialize() {
+        let store = std::sync::Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(16, 35);
+        let (sess, _) = store.create(k, x).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let store = store.clone();
+                let id = sess.id;
+                std::thread::spawn(move || {
+                    let row = Matrix::from_fn(1, 2, |_, j| (i * 2 + j) as f64 * 0.3);
+                    store.update(id, &row).unwrap().sess.gp.n()
+                })
+            })
+            .collect();
+        let mut seen: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![17, 18, 19, 20], "each update saw the previous one's result");
+        assert_eq!(store.get(sess.id).unwrap().gp.n(), 20);
+        assert_eq!(store.stats().updates, 4);
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! Dense linear-algebra substrate, implemented from scratch (no external
 //! linalg crates in this image): row-major [`Matrix`], blocked GEMM,
 //! Cholesky (naive-baseline engine), the symmetric eigensolver (the
-//! paper's O(N^3) overhead), and Strassen multiplication (Prop. 2.4).
+//! paper's O(N^3) overhead), rank-one eigendecomposition updates (the
+//! streaming path, DESIGN.md §8), and Strassen multiplication (Prop. 2.4).
 
 pub mod chol;
 pub mod eigen;
 pub mod gemm;
 pub mod matrix;
+pub mod rankone;
 pub mod strassen;
 
 pub use chol::{CholError, Cholesky};
 pub use eigen::SymEigen;
 pub use gemm::{matmul, matmul_bt};
 pub use matrix::{axpy, dot, norm2, Matrix};
+pub use rankone::{ortho_drift, rank_one_update};
 pub use strassen::strassen;

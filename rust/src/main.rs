@@ -35,10 +35,18 @@ USAGE:
                                       requests (LRU, K entries / byte budget),
                                       N pool workers serve pure-rust jobs
   gpml client --addr <host:port> --data <csv> [tune options]
-              [--session] [--stats]   submit a tuning job to a server;
+              [--session] [--append <csv>] [--stats]
+                                      submit a tuning job to a server;
                                       --session creates/reuses a server-side
                                       session first (warm requests skip the
-                                      setup), --stats prints cache statistics
+                                      setup), --append streams extra
+                                      observations into the session via
+                                      update_session (rank-one refresh)
+                                      before tuning, --stats prints cache
+                                      statistics (incl. the updates counter)
+  gpml bench-gate --current <BENCH_x.json> --baseline <json> [--tolerance 1.25]
+                                      CI perf gate: fail if any series'
+                                      median regresses past tolerance
   gpml info   [--artifacts <dir>]     list compiled artifacts and buckets
   gpml help                           this text
 
@@ -73,6 +81,7 @@ fn main() {
         "synth" => cmd_synth(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -225,7 +234,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: newline-delimited JSON (docs/PROTOCOL.md); ops: ping | info | stats | tune \
-         | create_session | drop_session | evaluate | predict | shutdown"
+         | create_session | update_session | drop_session | evaluate | predict | shutdown"
     );
     // block forever: the acceptor thread owns the listener
     loop {
@@ -241,6 +250,9 @@ fn cmd_client(args: &Args) -> Result<()> {
         return Ok(());
     }
     let req = load_request(args)?;
+    if args.get("append").is_some() && !args.flag("session") {
+        return Err(anyhow!("--append streams into a server-side session; add --session"));
+    }
     if args.flag("session") {
         if req.backend == Backend::Pjrt {
             return Err(anyhow!(
@@ -256,7 +268,32 @@ fn cmd_client(args: &Args) -> Result<()> {
             .and_then(gpml::util::json::Json::as_f64)
             .ok_or_else(|| anyhow!("malformed create_session response"))?
             as u64;
-        let mut sreq = SessionTuneRequest::new(id, req.ys.clone());
+        let mut ys = req.ys.clone();
+        if let Some(path) = args.get("append") {
+            // streaming append: grow the session by rank-one refresh,
+            // then tune against the concatenated outputs
+            let extra = data::read_csv(path).map_err(|e| anyhow!(e))?;
+            if extra.x.cols() != req.x.cols() {
+                return Err(anyhow!(
+                    "--append {path}: {} feature cols != {}",
+                    extra.x.cols(),
+                    req.x.cols()
+                ));
+            }
+            if extra.ys.len() != ys.len() {
+                return Err(anyhow!(
+                    "--append {path}: {} output cols != {}",
+                    extra.ys.len(),
+                    ys.len()
+                ));
+            }
+            let updated = client.update_session(id, &extra.x, req.threads)?;
+            eprintln!("update: {updated}");
+            for (y, extra_y) in ys.iter_mut().zip(&extra.ys) {
+                y.extend_from_slice(extra_y);
+            }
+        }
+        let mut sreq = SessionTuneRequest::new(id, ys);
         sreq.strategy = req.strategy;
         sreq.objective = req.objective;
         sreq.seed = req.seed;
@@ -267,6 +304,38 @@ fn cmd_client(args: &Args) -> Result<()> {
     let res = client.tune(&req)?;
     println!("{res}");
     Ok(())
+}
+
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let current_path =
+        args.get("current").ok_or_else(|| anyhow!("--current <BENCH_x.json> is required"))?;
+    let baseline_path =
+        args.get("baseline").ok_or_else(|| anyhow!("--baseline <json> is required"))?;
+    let tolerance = args.get_f64("tolerance", 1.25).map_err(|e| anyhow!(e))?;
+    let read = |path: &str| -> Result<gpml::util::json::Json> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+        gpml::util::json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+    };
+    let current = read(current_path)?;
+    let baseline = read(baseline_path)?;
+    if let Some(note) = baseline.get("note").and_then(gpml::util::json::Json::as_str) {
+        println!("baseline note: {note}");
+    }
+    println!("gate: {current_path} vs {baseline_path} (tolerance {tolerance}x)\n");
+    let report =
+        gpml::util::benchgate::compare(&current, &baseline, tolerance).map_err(|e| anyhow!(e))?;
+    print!("{}", report.summary());
+    if report.ok() {
+        println!("\nbench-gate: OK — {} comparisons within {tolerance}x", report.rows.len());
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "bench-gate: {} regression(s), {} missing series (tolerance {tolerance}x); \
+             if intentional, re-baseline benches/baselines/ or apply the bench-override PR label",
+            report.regressions().len(),
+            report.missing.len()
+        ))
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -2,29 +2,30 @@
 //! the CPU PJRT client — Python never runs here (DESIGN.md §2).
 //!
 //! The artifact manifest ([`artifact`]) is plain rust and always compiles.
-//! The runtime itself has two implementations selected by the `pjrt`
-//! cargo feature:
+//! The runtime itself has two implementations selected by cargo features:
 //!
-//! - `pjrt.rs` (feature **on**): the real client.  Pattern follows
-//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
-//!   `XlaComputation::from_proto` -> `client.compile` -> `execute`, with
-//!   per-artifact executable caching and pre-staged device buffers.
+//! - `pjrt.rs` (`pjrt` **and** `pjrt-xla` on): the real client.  Pattern
+//!   follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//!   -> `XlaComputation::from_proto` -> `client.compile` -> `execute`,
+//!   with per-artifact executable caching and pre-staged device buffers.
 //!   Requires the `xla` crate, which is not vendored in the offline image
-//!   (DESIGN.md §5) — enabling the feature without it will not build.
-//! - `stub.rs` (feature **off**, the default): the same public API where
-//!   [`PjrtRuntime::open`] always fails, so the coordinator, benches and
-//!   examples compile unchanged and degrade to the pure-rust evaluator.
+//!   (DESIGN.md §5) — enabling `pjrt-xla` without it will not build.
+//! - `stub.rs` (otherwise — including `--features pjrt` alone, the
+//!   stub-only build CI's feature-matrix job compiles): the same public
+//!   API where [`PjrtRuntime::open`] always fails, so the coordinator,
+//!   benches and examples compile unchanged and degrade to the pure-rust
+//!   evaluator.
 
 pub mod artifact;
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "pjrt-xla"))]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "pjrt-xla"))]
 pub use pjrt::{PjrtEvaluator, PjrtRuntime};
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "pjrt-xla")))]
 mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "pjrt-xla")))]
 pub use stub::{PjrtEvaluator, PjrtRuntime};
 
 pub use artifact::{zero_pad, ArtifactInfo, Manifest};

@@ -1,5 +1,7 @@
-//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
-//! feature is off (the default in the offline image — DESIGN.md §5).
+//! API-compatible stand-in for the PJRT runtime, compiled unless both the
+//! `pjrt` and `pjrt-xla` features are on (the default in the offline
+//! image — DESIGN.md §5; `--features pjrt` alone is the stub-only build
+//! CI's feature-matrix job exercises).
 //!
 //! [`PjrtRuntime::open`] always fails, and both types are uninhabited
 //! (they carry an [`Infallible`] field), so no value can ever exist and
@@ -32,8 +34,8 @@ impl PjrtRuntime {
     /// Always fails: the build has no PJRT client.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         Err(anyhow!(
-            "PJRT runtime unavailable: gpml was built without the `pjrt` feature \
-             (artifact dir {}); rebuild with `--features pjrt` and a vendored `xla` crate",
+            "PJRT runtime unavailable: gpml was built without the real pjrt client \
+             (artifact dir {}); rebuild with `--features pjrt-xla` and a vendored `xla` crate",
             dir.as_ref().display()
         ))
     }

@@ -38,12 +38,63 @@ pub use eval::{EigenSystem, Evaluation, HyperParams};
 use std::sync::Arc;
 
 use crate::kernelfn::{self, Kernel};
-use crate::linalg::{strassen, Matrix, SymEigen};
+use crate::linalg::{rankone, strassen, Matrix, SymEigen};
 
 /// The shared one-time setup: training inputs + eigendecomposition.
 struct Setup {
     x: Matrix,
     eigen: SymEigen,
+    /// Rank-one corrections applied since the last full fit (two per
+    /// appended observation) — the streaming-update budget counter
+    /// (DESIGN.md §8).
+    updates: usize,
+}
+
+/// Fallback policy for the streaming [`SpectralGp::extend`] path: when
+/// either limit is crossed the append is served by a full O(N^3) refit
+/// instead of rank-one corrections (DESIGN.md §8).
+#[derive(Clone, Copy, Debug)]
+pub struct ExtendPolicy {
+    /// Maximum rank-one corrections since the last full fit (each
+    /// appended observation costs two).  Bounds the accumulated
+    /// O(eps * ||K||) per-update error.
+    pub max_updates: usize,
+    /// Maximum tolerated [`rankone::ortho_drift`] of the updated
+    /// eigenbasis — the conditioning estimate.
+    pub ortho_tol: f64,
+}
+
+impl Default for ExtendPolicy {
+    fn default() -> Self {
+        ExtendPolicy { max_updates: 64, ortho_tol: 1e-8 }
+    }
+}
+
+/// How an [`SpectralGp::extend`] call was served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExtendOutcome {
+    /// Rank-one corrections only — no O(N^3) work.
+    Incremental,
+    /// The policy forced a full refit.
+    Refit(RefitReason),
+}
+
+/// Why an extend fell back to a full refit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefitReason {
+    /// `updates + 2m` would exceed [`ExtendPolicy::max_updates`].
+    UpdateBudget,
+    /// The updated eigenbasis drifted past [`ExtendPolicy::ortho_tol`].
+    Conditioning,
+}
+
+impl RefitReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RefitReason::UpdateBudget => "update-budget",
+            RefitReason::Conditioning => "conditioning",
+        }
+    }
 }
 
 /// A fitted spectral GP: kernel + training inputs + eigendecomposition.
@@ -79,7 +130,89 @@ impl SpectralGp {
     /// Wrap an already-computed eigendecomposition (used by the session
     /// cache, which times the gram and eigen phases separately).
     pub fn from_eigen(kernel: Kernel, x: Matrix, eigen: SymEigen) -> Self {
-        SpectralGp { kernel, setup: Arc::new(Setup { x, eigen }) }
+        SpectralGp { kernel, setup: Arc::new(Setup { x, eigen, updates: 0 }) }
+    }
+
+    /// Append observations with the default [`ExtendPolicy`].
+    pub fn extend(
+        &self,
+        x_new: &Matrix,
+    ) -> Result<(SpectralGp, ExtendOutcome), crate::linalg::eigen::NoConvergence> {
+        self.extend_with(x_new, ExtendPolicy::default())
+    }
+
+    /// Append the rows of `x_new` to the training inputs and refresh the
+    /// eigendecomposition *incrementally*: each appended observation
+    /// borders the Gram matrix —
+    /// `K' = [[K, c], [c', kappa]] = diag(K, kappa) + e v' + v e'`
+    /// with `v = [c; 0]` — and the bordering splits into exactly two
+    /// symmetric rank-one corrections
+    /// `e v' + v e' = p p' - m m'`, `p = (v + e)/sqrt(2)`,
+    /// `m = (v - e)/sqrt(2)`, each applied by
+    /// [`rankone::rank_one_update`] in O(N^2 + N k^2) instead of the
+    /// O(N^3) refit (DESIGN.md §8).
+    ///
+    /// Falls back to a full refit (and resets the update budget) when the
+    /// policy's update budget or conditioning estimate is crossed; the
+    /// outcome reports which path served the append.  The returned handle
+    /// is a fresh `Arc` — existing clones keep serving the old setup.
+    pub fn extend_with(
+        &self,
+        x_new: &Matrix,
+        policy: ExtendPolicy,
+    ) -> Result<(SpectralGp, ExtendOutcome), crate::linalg::eigen::NoConvergence> {
+        assert_eq!(x_new.cols(), self.setup.x.cols(), "appended rows: feature dim mismatch");
+        let m = x_new.rows();
+        if m == 0 {
+            return Ok((self.clone(), ExtendOutcome::Incremental));
+        }
+        let p_dim = self.setup.x.cols();
+        let full_x = {
+            let mut data = self.setup.x.data().to_vec();
+            data.extend_from_slice(x_new.data());
+            Matrix::from_vec(self.n() + m, p_dim, data)
+        };
+        if self.setup.updates + 2 * m > policy.max_updates {
+            let gp = SpectralGp::fit(self.kernel, full_x)?;
+            return Ok((gp, ExtendOutcome::Refit(RefitReason::UpdateBudget)));
+        }
+
+        let mut eigen = self.setup.eigen.clone();
+        for t in 0..m {
+            let n_cur = self.n() + t;
+            let new_row = full_x.row(n_cur);
+            // cross-kernel column against everything accepted so far
+            let cur_x = full_x.top_left(n_cur, p_dim);
+            let row_mat = Matrix::from_vec(1, p_dim, new_row.to_vec());
+            let c = kernelfn::cross_gram(self.kernel, &cur_x, &row_mat);
+            let kappa = self.kernel.eval(new_row, new_row);
+
+            let embedded = embed_bordered(&eigen, kappa);
+            let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2;
+            let mut p_vec = vec![0.0f64; n_cur + 1];
+            let mut m_vec = vec![0.0f64; n_cur + 1];
+            for i in 0..n_cur {
+                let ci = c[(i, 0)] * inv_sqrt2;
+                p_vec[i] = ci;
+                m_vec[i] = ci;
+            }
+            p_vec[n_cur] = inv_sqrt2;
+            m_vec[n_cur] = -inv_sqrt2;
+            let plus = rankone::rank_one_update(&embedded, &p_vec, 1.0);
+            eigen = rankone::rank_one_update(&plus, &m_vec, -1.0);
+        }
+
+        if rankone::ortho_drift(&eigen, 8) > policy.ortho_tol {
+            let gp = SpectralGp::fit(self.kernel, full_x)?;
+            return Ok((gp, ExtendOutcome::Refit(RefitReason::Conditioning)));
+        }
+        let setup = Setup { x: full_x, eigen, updates: self.setup.updates + 2 * m };
+        Ok((SpectralGp { kernel: self.kernel, setup: Arc::new(setup) }, ExtendOutcome::Incremental))
+    }
+
+    /// Rank-one corrections applied since the last full fit.
+    pub fn updates(&self) -> usize {
+        self.setup.updates
     }
 
     pub fn n(&self) -> usize {
@@ -206,6 +339,28 @@ impl SpectralGp {
             })
             .collect()
     }
+}
+
+/// Eigendecomposition of `diag(K, kappa)` from the decomposition of `K`:
+/// the appended coordinate is its own eigenpair (`e_{n}`, `kappa`),
+/// spliced into the ascending order.  This is the exact starting point of
+/// the bordering identity in [`SpectralGp::extend_with`].
+fn embed_bordered(eigen: &SymEigen, kappa: f64) -> SymEigen {
+    let n = eigen.values.len();
+    let pos = eigen.values.partition_point(|&s| s < kappa);
+    let mut values = Vec::with_capacity(n + 1);
+    values.extend_from_slice(&eigen.values[..pos]);
+    values.push(kappa);
+    values.extend_from_slice(&eigen.values[pos..]);
+    let mut vectors = Matrix::zeros(n + 1, n + 1);
+    for i in 0..n {
+        for j in 0..n {
+            let col = if j < pos { j } else { j + 1 };
+            vectors[(i, col)] = eigen.vectors[(i, j)];
+        }
+    }
+    vectors[(n, pos)] = 1.0;
+    SymEigen { values, vectors }
 }
 
 #[cfg(test)]
@@ -342,6 +497,55 @@ mod tests {
         assert_eq!(es1.s, es2.s); // same spectrum object content
         assert!(es1.score(HyperParams::new(1.0, 1.0)).is_finite());
         assert!(es2.score(HyperParams::new(1.0, 1.0)).is_finite());
+    }
+
+    #[test]
+    fn extend_matches_full_refit_spectrally() {
+        let mut rng = Rng::new(21);
+        let x_full = Matrix::from_fn(28, 3, |_, _| rng.normal());
+        let x_base = x_full.top_left(24, 3);
+        let x_new = Matrix::from_fn(4, 3, |i, j| x_full[(24 + i, j)]);
+        let kernel = Kernel::Rbf { xi2: 1.5 };
+        let base = SpectralGp::fit(kernel, x_base).unwrap();
+        let (ext, outcome) = base.extend(&x_new).unwrap();
+        assert_eq!(outcome, ExtendOutcome::Incremental);
+        assert_eq!(ext.n(), 28);
+        assert_eq!(ext.updates(), 8);
+        // the updated decomposition reconstructs the bordered Gram matrix
+        let k_full = kernelfn::gram(kernel, &x_full);
+        let err = ext.eigen().reconstruct().max_abs_diff(&k_full);
+        assert!(err < 1e-9 * (1.0 + k_full.fro_norm()), "reconstruction {err}");
+        // and the base handle is untouched (fresh Arc)
+        assert_eq!(base.n(), 24);
+        assert_eq!(base.updates(), 0);
+    }
+
+    #[test]
+    fn extend_falls_back_on_update_budget() {
+        let mut rng = Rng::new(22);
+        let x = Matrix::from_fn(16, 2, |_, _| rng.normal());
+        let x_new = Matrix::from_fn(3, 2, |_, _| rng.normal());
+        let gp = SpectralGp::fit(Kernel::Rbf { xi2: 1.0 }, x).unwrap();
+        let policy = ExtendPolicy { max_updates: 4, ..Default::default() };
+        // 3 appends = 6 updates > 4: full refit
+        let (refit, outcome) = gp.extend_with(&x_new, policy).unwrap();
+        assert_eq!(outcome, ExtendOutcome::Refit(RefitReason::UpdateBudget));
+        assert_eq!(refit.n(), 19);
+        assert_eq!(refit.updates(), 0, "refit resets the budget");
+        // 2 appends = 4 updates <= 4: incremental
+        let two = Matrix::from_fn(2, 2, |i, j| x_new[(i, j)]);
+        let (inc, outcome) = gp.extend_with(&two, policy).unwrap();
+        assert_eq!(outcome, ExtendOutcome::Incremental);
+        assert_eq!(inc.updates(), 4);
+    }
+
+    #[test]
+    fn extend_empty_append_is_identity() {
+        let (gp, _) = setup(10, 30);
+        let none = Matrix::zeros(0, 3);
+        let (same, outcome) = gp.extend(&none).unwrap();
+        assert_eq!(outcome, ExtendOutcome::Incremental);
+        assert_eq!(same.n(), 10);
     }
 
     #[test]

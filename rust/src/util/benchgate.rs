@@ -1,0 +1,237 @@
+//! Bench-regression gate: compare a freshly-written `BENCH_<name>.json`
+//! against a committed baseline and flag median-latency regressions —
+//! the check behind `gpml bench-gate` and CI's `bench-gate` job.
+//!
+//! The comparison is deliberately narrow: for every series the baseline
+//! names, match sweep points by `N` and compare `median_us` values; a
+//! point regresses when `current > baseline * tolerance`.  Sweep points
+//! the current run did not produce are skipped (CI runs reduced sweeps),
+//! but a series with **no** comparable point — or missing entirely —
+//! fails the gate, so a bench cannot silently shrink out of coverage.
+//!
+//! Baselines live in `benches/baselines/`; re-baseline by replacing them
+//! with the `BENCH_*.json` artifacts of a representative CI run.  The
+//! optional top-level `"note"` string in a baseline is echoed by the CLI
+//! (used to mark bootstrap envelopes).
+
+use crate::util::json::Json;
+
+/// One compared sweep point.
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    pub series: String,
+    pub n: f64,
+    pub baseline_us: f64,
+    pub current_us: f64,
+    /// `current / baseline`; > tolerance means regressed.
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Full comparison outcome.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    pub tolerance: f64,
+    pub rows: Vec<GateRow>,
+    /// Baseline series with no comparable point in the current run.
+    pub missing: Vec<String>,
+}
+
+impl GateReport {
+    /// True when every compared point is within tolerance and no series
+    /// went missing.
+    pub fn ok(&self) -> bool {
+        self.missing.is_empty() && self.rows.iter().all(|r| !r.regressed)
+    }
+
+    pub fn regressions(&self) -> Vec<&GateRow> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// Human-readable comparison table + verdict lines.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:>8} {:>14} {:>14} {:>8}  verdict\n",
+            "series", "N", "baseline us", "current us", "ratio"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<24} {:>8} {:>14.1} {:>14.1} {:>7.2}x  {}\n",
+                r.series,
+                r.n,
+                r.baseline_us,
+                r.current_us,
+                r.ratio,
+                if r.regressed { "REGRESSED" } else { "ok" }
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("{m:<24} -- no comparable point in the current run: FAIL\n"));
+        }
+        out
+    }
+}
+
+fn f64_arr(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| format!("{what} entries must be numbers")))
+        .collect()
+}
+
+/// Per-series `(n, median_us)` pairs of one bench record.  Accepts the
+/// `bench_common::bench_json` shape: top-level `ns` plus
+/// `series.<label>.median_us` (parallel arrays).
+fn series_points(doc: &Json, label: &str, what: &str) -> Result<Option<Vec<(f64, f64)>>, String> {
+    let ns = f64_arr(doc.get("ns").ok_or_else(|| format!("{what}: missing ns"))?, "ns")?;
+    let Some(series) = doc.get("series").and_then(|s| s.get(label)) else {
+        return Ok(None);
+    };
+    let med = f64_arr(
+        series.get("median_us").ok_or_else(|| format!("{what}: series {label} missing median_us"))?,
+        "median_us",
+    )?;
+    if med.len() != ns.len() {
+        return Err(format!("{what}: series {label} has {} medians for {} ns", med.len(), ns.len()));
+    }
+    Ok(Some(ns.into_iter().zip(med).collect()))
+}
+
+/// Compare a current bench record against a baseline record.
+/// `tolerance` is the allowed `current / baseline` median ratio (1.25 =
+/// fail past +25%).
+pub fn compare(current: &Json, baseline: &Json, tolerance: f64) -> Result<GateReport, String> {
+    if !(tolerance.is_finite() && tolerance > 0.0) {
+        return Err(format!("bad tolerance {tolerance}"));
+    }
+    let labels: Vec<String> = baseline
+        .get("series")
+        .and_then(Json::as_obj)
+        .ok_or("baseline: missing series object")?
+        .keys()
+        .cloned()
+        .collect();
+    if labels.is_empty() {
+        return Err("baseline names no series".into());
+    }
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for label in labels {
+        let base = series_points(baseline, &label, "baseline")?
+            .ok_or_else(|| format!("baseline: series {label} vanished mid-parse"))?;
+        let cur = match series_points(current, &label, "current")? {
+            Some(points) => points,
+            None => {
+                missing.push(label);
+                continue;
+            }
+        };
+        let mut matched = 0usize;
+        for &(n, baseline_us) in &base {
+            // sweep Ns are small integers serialized exactly: match by value
+            let Some(&(_, current_us)) = cur.iter().find(|(cn, _)| *cn == n) else {
+                continue; // reduced sweep: point not produced, skip
+            };
+            matched += 1;
+            let ratio = current_us / baseline_us;
+            rows.push(GateRow {
+                series: label.clone(),
+                n,
+                baseline_us,
+                current_us,
+                ratio,
+                regressed: ratio > tolerance,
+            });
+        }
+        if matched == 0 {
+            missing.push(label);
+        }
+    }
+    Ok(GateReport { tolerance, rows, missing })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(ns: &[f64], series: Vec<(&str, Vec<f64>)>) -> Json {
+        Json::obj(vec![
+            ("ns", Json::arr_f64(ns)),
+            (
+                "series",
+                Json::Obj(
+                    series
+                        .into_iter()
+                        .map(|(label, med)| {
+                            (
+                                label.to_string(),
+                                Json::obj(vec![("median_us", Json::arr_f64(&med))]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let baseline = record(&[64.0, 128.0], vec![("a", vec![100.0, 200.0])]);
+        let current = record(&[64.0, 128.0], vec![("a", vec![110.0, 240.0])]);
+        let rep = compare(&current, &baseline, 1.25).unwrap();
+        assert!(rep.ok(), "{}", rep.summary());
+        assert_eq!(rep.rows.len(), 2);
+    }
+
+    #[test]
+    fn regression_past_tolerance_fails() {
+        let baseline = record(&[64.0], vec![("a", vec![100.0])]);
+        let current = record(&[64.0], vec![("a", vec![126.0])]);
+        let rep = compare(&current, &baseline, 1.25).unwrap();
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions().len(), 1);
+        assert!(rep.summary().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn faster_is_always_fine() {
+        let baseline = record(&[64.0], vec![("a", vec![100.0])]);
+        let current = record(&[64.0], vec![("a", vec![10.0])]);
+        assert!(compare(&current, &baseline, 1.25).unwrap().ok());
+    }
+
+    #[test]
+    fn missing_series_fails() {
+        let baseline = record(&[64.0], vec![("a", vec![100.0]), ("b", vec![50.0])]);
+        let current = record(&[64.0], vec![("a", vec![100.0])]);
+        let rep = compare(&current, &baseline, 1.25).unwrap();
+        assert!(!rep.ok());
+        assert_eq!(rep.missing, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn reduced_sweep_skips_but_requires_overlap() {
+        // current ran only N=64 of a {64, 512} baseline: 512 skipped
+        let baseline = record(&[64.0, 512.0], vec![("a", vec![100.0, 800.0])]);
+        let current = record(&[64.0], vec![("a", vec![90.0])]);
+        let rep = compare(&current, &baseline, 1.25).unwrap();
+        assert!(rep.ok());
+        assert_eq!(rep.rows.len(), 1);
+        // zero overlap is a failure, not a silent pass
+        let disjoint = record(&[32.0], vec![("a", vec![90.0])]);
+        let rep = compare(&disjoint, &baseline, 1.25).unwrap();
+        assert!(!rep.ok());
+        assert_eq!(rep.missing, vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        let good = record(&[64.0], vec![("a", vec![100.0])]);
+        assert!(compare(&good, &Json::obj(vec![]), 1.25).is_err());
+        assert!(compare(&good, &good, 0.0).is_err());
+        let bad_len = record(&[64.0, 128.0], vec![("a", vec![100.0])]);
+        assert!(compare(&good, &bad_len, 1.25).is_err());
+    }
+}

@@ -1,8 +1,10 @@
 //! In-repo substrates for functionality that is normally pulled from
 //! crates.io but is unavailable in this offline image (DESIGN.md §5):
-//! deterministic RNG, JSON, CLI parsing, bench timing, property testing,
-//! and the scoped thread pool (DESIGN.md §6).
+//! deterministic RNG, JSON, CLI parsing, bench timing, the
+//! bench-regression gate, property testing, and the scoped thread pool
+//! (DESIGN.md §6).
 
+pub mod benchgate;
 pub mod cli;
 pub mod json;
 pub mod proptest;

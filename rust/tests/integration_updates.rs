@@ -1,0 +1,213 @@
+//! Integration: the streaming `update_session` op end-to-end over TCP —
+//! fingerprint evolution, byte-ledger growth, the `updates` stats
+//! counter, shape/liveness errors, and update-then-evaluate agreeing
+//! with a cold session of the full dataset.
+
+use gpml::coordinator::client::Client;
+use gpml::coordinator::protocol::EvaluateRequest;
+use gpml::coordinator::server::{Server, ServerOptions};
+use gpml::coordinator::session::SessionTuneRequest;
+use gpml::coordinator::{Coordinator, GlobalStrategy, ObjectiveKind};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::HyperParams;
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+/// Full dataset split into a served base and a streamed tail.
+fn streamed(n: usize, m: usize, seed: u64) -> (Matrix, Matrix, Matrix, Vec<f64>) {
+    let spec = SyntheticSpec { n: n + m, p: 2, seed, kernel: KERNEL, ..Default::default() };
+    let ds = synthetic(spec, 1);
+    let base = ds.x.top_left(n, 2);
+    let extra = Matrix::from_fn(m, 2, |i, j| ds.x[(n + i, j)]);
+    (ds.x, base, extra, ds.ys[0].clone())
+}
+
+#[test]
+fn update_lifecycle_over_the_wire() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (full_x, base, extra, y_full) = streamed(24, 2, 1);
+
+    let id = client.create_session(&base, KERNEL).unwrap();
+    let res = client.update_session(id, &extra, 0).unwrap();
+    assert_eq!(res.get("session_id").unwrap().as_usize(), Some(id as usize));
+    assert_eq!(res.get("n").unwrap().as_usize(), Some(26));
+    assert_eq!(res.get("incremental").unwrap().as_bool(), Some(true));
+    assert_eq!(res.get("updates_applied").unwrap().as_usize(), Some(4));
+    assert!(res.get("refit_reason").is_none());
+    assert!(res.get("update_seconds").unwrap().as_f64().unwrap() >= 0.0);
+
+    // the old y length is now rejected with the grown N in the message
+    let err = client
+        .evaluate(&EvaluateRequest {
+            session_id: id,
+            y: y_full[..24].to_vec(),
+            hp: HyperParams::new(0.1, 1.0),
+            objective: ObjectiveKind::Evidence,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("26"), "{err}");
+
+    // full-length outputs evaluate fine
+    let ev = client
+        .evaluate(&EvaluateRequest {
+            session_id: id,
+            y: y_full.clone(),
+            hp: HyperParams::new(0.1, 1.0),
+            objective: ObjectiveKind::Evidence,
+        })
+        .unwrap();
+    assert!(ev.get("score").unwrap().as_f64().unwrap().is_finite());
+
+    // fingerprint evolution: creating the full dataset hits the grown
+    // session (same id, no new setup)
+    let created = client.create_session_full(&full_x, KERNEL, 0).unwrap();
+    assert_eq!(created.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(created.get("session_id").unwrap().as_usize(), Some(id as usize));
+
+    // observability: exactly one setup, one update
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("setups").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("updates").unwrap().as_usize(), Some(1));
+    server.stop();
+}
+
+#[test]
+fn update_then_tune_matches_cold_session_of_full_dataset() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (full_x, base, extra, y_full) = streamed(32, 3, 7);
+
+    // streamed session
+    let warm_id = client.create_session(&base, KERNEL).unwrap();
+    client.update_session(warm_id, &extra, 0).unwrap();
+
+    // cold reference on a second server (its own O(N^3) decomposition)
+    let cold_server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut cold_client = Client::connect(&cold_server.addr.to_string()).unwrap();
+    let cold_id = cold_client.create_session(&full_x, KERNEL).unwrap();
+
+    let tune = |client: &mut Client, id: u64| {
+        let mut req = SessionTuneRequest::new(id, vec![y_full.clone()]);
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 7 };
+        req.objective = ObjectiveKind::Evidence;
+        client.tune_session(&req).unwrap()
+    };
+    let warm = tune(&mut client, warm_id);
+    let cold = tune(&mut cold_client, cold_id);
+    let get = |v: &gpml::util::json::Json, key: &str| {
+        v.get("outputs").unwrap().as_arr().unwrap()[0].get(key).unwrap().as_f64().unwrap()
+    };
+    for key in ["sigma2", "lambda2", "score"] {
+        let (a, b) = (get(&warm, key), get(&cold, key));
+        let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+        // the two optimizers walk near-identical objectives; allow for a
+        // near-tie branch flipping one Newton step
+        assert!(rel < 1e-5, "{key}: streamed {a} vs cold {b}");
+    }
+    cold_server.stop();
+    server.stop();
+}
+
+#[test]
+fn update_errors_are_clean() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (_, base, extra, _) = streamed(12, 1, 9);
+
+    // unknown session
+    let err = client.update_session(404, &extra, 0).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+
+    let id = client.create_session(&base, KERNEL).unwrap();
+    // wrong feature count
+    let wrong = Matrix::from_fn(1, 3, |_, _| 0.5);
+    let err = client.update_session(id, &wrong, 0).unwrap_err();
+    assert!(err.to_string().contains("cols"), "{err}");
+    // dropped sessions are gone
+    client.drop_session(id).unwrap();
+    let err = client.update_session(id, &extra, 0).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "{err}");
+    assert_eq!(client.stats().unwrap().get("updates").unwrap().as_usize(), Some(0));
+    server.stop();
+}
+
+#[test]
+fn oversized_batch_falls_back_to_refit_on_the_wire() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let (_, base, _, _) = streamed(16, 1, 11);
+    let id = client.create_session(&base, KERNEL).unwrap();
+
+    // 40 appended rows = 80 corrections > the default budget of 64
+    let spec = SyntheticSpec { n: 40, p: 2, seed: 12, kernel: KERNEL, ..Default::default() };
+    let res = client.update_session(id, &synthetic(spec, 1).x, 0).unwrap();
+    assert_eq!(res.get("incremental").unwrap().as_bool(), Some(false));
+    assert_eq!(res.get("refit_reason").unwrap().as_str(), Some("update-budget"));
+    assert_eq!(res.get("n").unwrap().as_usize(), Some(56));
+    assert_eq!(res.get("updates_applied").unwrap().as_usize(), Some(0));
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("updates").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("setups").unwrap().as_usize(), Some(2), "fallback counted as a setup");
+    server.stop();
+}
+
+#[test]
+fn concurrent_wire_updates_serialize_per_session() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+    let (_, base, _, _) = streamed(20, 1, 13);
+    let mut setup_client = Client::connect(&addr).unwrap();
+    let id = setup_client.create_session(&base, KERNEL).unwrap();
+
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let row = Matrix::from_fn(1, 2, |_, j| (i * 2 + j) as f64 * 0.25);
+                client
+                    .update_session(id, &row, 0)
+                    .unwrap()
+                    .get("n")
+                    .unwrap()
+                    .as_usize()
+                    .unwrap()
+            })
+        })
+        .collect();
+    let mut ns: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    ns.sort_unstable();
+    assert_eq!(ns, vec![21, 22, 23, 24], "each racer saw the previous append");
+    assert_eq!(server.session_stats().updates, 4);
+    server.stop();
+}
+
+#[test]
+fn update_respects_byte_budget_for_other_sessions() {
+    // budget sized so the two base sessions fit, and so does the grown A
+    // alone — but grown A + B does not: growing A must evict B, never A
+    let one = gpml::spectral::SpectralGp::fit(KERNEL, streamed(24, 0, 1).1).unwrap().setup_bytes();
+    let opts = ServerOptions { max_bytes: 4 * one, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    let (_, base_a, extra_a, _) = streamed(24, 20, 21);
+    let (_, base_b, _, _) = streamed(24, 0, 22);
+    let a = client.create_session(&base_a, KERNEL).unwrap();
+    let b = client.create_session(&base_b, KERNEL).unwrap();
+
+    // grow A well past one budget unit (44 rows total)
+    let res = client.update_session(a, &extra_a, 0).unwrap();
+    assert_eq!(res.get("n").unwrap().as_usize(), Some(44));
+    let stats = server.session_stats();
+    assert!(stats.bytes <= opts.max_bytes, "byte budget holds after growth");
+    // A (the updated session) survives; B was the eviction victim
+    assert!(server.store().get(a).is_some());
+    assert!(server.store().get(b).is_none());
+    assert!(stats.evictions >= 1);
+    server.stop();
+}

@@ -1,0 +1,196 @@
+//! Differential gate for the streaming-update subsystem (ISSUE 4):
+//! `SpectralGp::extend`-then-evaluate must match a from-scratch refit
+//! within 1e-7 relative tolerance at N in {8, 32, 128} — for a single
+//! append, a batched append, and an append past the fallback threshold —
+//! under the scoped pool at width 1 (exact serial) and width 4.
+//!
+//! "Evaluate" here covers every downstream consumer of the
+//! decomposition: the paper score / Jacobian / Hessian closed forms
+//! (eqs. 19-28), the evidence objective, and the posterior predictive
+//! mean + variance at held-out inputs.  All of these are invariant under
+//! the eigenbasis rotations that can legitimately differ between the
+//! incremental and the cold decomposition (degenerate eigenspaces), so
+//! agreement is the right acceptance surface — eigenvector columns
+//! themselves are compared only through these functionals.
+
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::{ExtendOutcome, ExtendPolicy, HyperParams, RefitReason, SpectralGp};
+use gpml::util::rng::Rng;
+use gpml::util::threadpool::with_threads;
+
+const RTOL: f64 = 1e-7;
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+fn hp_grid() -> Vec<HyperParams> {
+    [(0.05, 0.5), (0.1, 1.0), (0.5, 2.0), (1.0, 1.0), (2.0, 0.3)]
+        .iter()
+        .map(|&(s, l)| HyperParams::new(s, l))
+        .collect()
+}
+
+/// Full-dataset inputs split into a base prefix and an appended suffix.
+fn split_dataset(n: usize, m: usize, seed: u64) -> (Matrix, Matrix, Vec<f64>) {
+    let spec = SyntheticSpec { n: n + m, p: 3, seed, kernel: KERNEL, ..Default::default() };
+    let ds = synthetic(spec, 1);
+    let base = ds.x.top_left(n, 3);
+    let extra = Matrix::from_fn(m, 3, |i, j| ds.x[(n + i, j)]);
+    (base, extra, ds.ys[0].clone())
+}
+
+/// Every spectral functional the serving layer exposes, compared at RTOL.
+fn assert_matches_refit(ext: &SpectralGp, refit: &SpectralGp, y: &[f64], ctx: &str) {
+    assert_eq!(ext.n(), refit.n(), "{ctx}: sizes differ");
+    let es_e = ext.eigensystem(y);
+    let es_r = refit.eigensystem(y);
+    for hp in hp_grid() {
+        for (tag, a, b) in [
+            ("paper", es_e.evaluate(hp), es_r.evaluate(hp)),
+            ("evidence", es_e.evidence_evaluate(hp), es_r.evidence_evaluate(hp)),
+        ] {
+            assert!(
+                rel(a.score, b.score) < RTOL,
+                "{ctx} {tag} score @ {hp:?}: {} vs {}",
+                a.score,
+                b.score
+            );
+            for i in 0..2 {
+                assert!(
+                    rel(a.jac[i], b.jac[i]) < RTOL,
+                    "{ctx} {tag} jac[{i}] @ {hp:?}: {} vs {}",
+                    a.jac[i],
+                    b.jac[i]
+                );
+                for j in 0..2 {
+                    assert!(
+                        rel(a.hess[i][j], b.hess[i][j]) < RTOL,
+                        "{ctx} {tag} hess[{i}][{j}] @ {hp:?}: {} vs {}",
+                        a.hess[i][j],
+                        b.hess[i][j]
+                    );
+                }
+            }
+        }
+    }
+    // posterior predictive at held-out inputs
+    let mut rng = Rng::new(0xFEED);
+    let xnew = Matrix::from_fn(5, 3, |_, _| rng.normal());
+    let hp = HyperParams::new(0.1, 1.0);
+    let (mean_e, var_e) = ext.predict(&xnew, y, hp);
+    let (mean_r, var_r) = refit.predict(&xnew, y, hp);
+    for i in 0..5 {
+        assert!(
+            rel(mean_e[i], mean_r[i]) < RTOL,
+            "{ctx} predict mean[{i}]: {} vs {}",
+            mean_e[i],
+            mean_r[i]
+        );
+        assert!(
+            rel(var_e[i], var_r[i]) < RTOL,
+            "{ctx} predict var[{i}]: {} vs {}",
+            var_e[i],
+            var_r[i]
+        );
+    }
+}
+
+fn run_extend_case(n: usize, m: usize, seed: u64, width: usize) {
+    with_threads(width, || {
+        let (base, extra, y) = split_dataset(n, m, seed);
+        let full_x = {
+            let mut data = base.data().to_vec();
+            data.extend_from_slice(extra.data());
+            Matrix::from_vec(n + m, 3, data)
+        };
+        let gp = SpectralGp::fit(KERNEL, base).unwrap();
+        let (ext, outcome) = gp.extend(&extra).unwrap();
+        assert_eq!(
+            outcome,
+            ExtendOutcome::Incremental,
+            "N={n} m={m}: expected the incremental path"
+        );
+        let refit = SpectralGp::fit(KERNEL, full_x).unwrap();
+        assert_matches_refit(&ext, &refit, &y, &format!("N={n} m={m} width={width}"));
+    });
+}
+
+#[test]
+fn single_append_matches_refit() {
+    for &n in &[8usize, 32, 128] {
+        for width in [1usize, 4] {
+            run_extend_case(n, 1, 100 + n as u64, width);
+        }
+    }
+}
+
+#[test]
+fn batched_append_matches_refit() {
+    for &n in &[8usize, 32, 128] {
+        for width in [1usize, 4] {
+            run_extend_case(n, 5, 200 + n as u64, width);
+        }
+    }
+}
+
+#[test]
+fn append_past_threshold_falls_back_and_matches() {
+    for &n in &[8usize, 32, 128] {
+        with_threads(4, || {
+            let m = 6;
+            let (base, extra, y) = split_dataset(n, m, 300 + n as u64);
+            let full_x = {
+                let mut data = base.data().to_vec();
+                data.extend_from_slice(extra.data());
+                Matrix::from_vec(n + m, 3, data)
+            };
+            let gp = SpectralGp::fit(KERNEL, base).unwrap();
+            // 6 appends = 12 corrections > budget of 4: full refit path
+            let policy = ExtendPolicy { max_updates: 4, ..Default::default() };
+            let (ext, outcome) = gp.extend_with(&extra, policy).unwrap();
+            assert_eq!(outcome, ExtendOutcome::Refit(RefitReason::UpdateBudget));
+            assert_eq!(ext.updates(), 0, "a refit resets the correction budget");
+            let refit = SpectralGp::fit(KERNEL, full_x).unwrap();
+            assert_matches_refit(&ext, &refit, &y, &format!("N={n} fallback"));
+        });
+    }
+}
+
+#[test]
+fn zero_ortho_tolerance_forces_conditioning_refit() {
+    let (base, extra, _) = split_dataset(16, 1, 400);
+    let gp = SpectralGp::fit(KERNEL, base).unwrap();
+    let policy = ExtendPolicy { max_updates: 1000, ortho_tol: 0.0 };
+    let (_, outcome) = gp.extend_with(&extra, policy).unwrap();
+    assert_eq!(outcome, ExtendOutcome::Refit(RefitReason::Conditioning));
+}
+
+#[test]
+fn chained_appends_stay_within_tolerance() {
+    // stream 8 observations one at a time (16 corrections, inside the
+    // default budget of 64) and gate the accumulated drift
+    with_threads(4, || {
+        let n = 32;
+        let m = 8;
+        let (base, extra, y) = split_dataset(n, m, 500);
+        let full_x = {
+            let mut data = base.data().to_vec();
+            data.extend_from_slice(extra.data());
+            Matrix::from_vec(n + m, 3, data)
+        };
+        let mut gp = SpectralGp::fit(KERNEL, base).unwrap();
+        for t in 0..m {
+            let row = Matrix::from_fn(1, 3, |_, j| extra[(t, j)]);
+            let (next, outcome) = gp.extend(&row).unwrap();
+            assert_eq!(outcome, ExtendOutcome::Incremental, "append {t}");
+            gp = next;
+        }
+        assert_eq!(gp.updates(), 2 * m);
+        let refit = SpectralGp::fit(KERNEL, full_x).unwrap();
+        assert_matches_refit(&gp, &refit, &y, "chained");
+    });
+}
