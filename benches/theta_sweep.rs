@@ -1,0 +1,240 @@
+//! Theta-plane sweep latency through the real TCP server (ISSUE 5
+//! acceptance): cold-vs-warm family-cache latency and the parallel-outer
+//! wavefront speedup.
+//!
+//! Three measured series per N:
+//!
+//! - `cold_outer_serial`   — `tune_theta` on a freshly (re)created
+//!                           session with `threads: 1`: every outer
+//!                           candidate's O(N^3) setup is built, strictly
+//!                           serially;
+//! - `cold_outer_parallel` — the identical request with `threads: 4`:
+//!                           the *same candidate set* (the wavefront is
+//!                           deterministic by construction) fanned
+//!                           across the pool.  The ratio of these two
+//!                           series is pure outer-loop parallelism —
+//!                           inside a pool worker the per-setup
+//!                           eigensolver runs inline-serial either way;
+//! - `warm`                — the identical request again on the live
+//!                           session: every probe hits the eigen-family
+//!                           cache (`setups_built: 0` asserted).
+//!
+//! All three must return **bitwise-identical** outputs (asserted on the
+//! serialized `outputs` JSON, which uses shortest-round-trip floats).
+//! Acceptance, enforced at N >= 512 on >= 4-way hardware: the parallel
+//! outer wavefront is >= 2x faster than the serial one.
+//!
+//! Writes `BENCH_theta.json` next to the stdout table.
+//!
+//! Options (after `cargo bench --bench theta_sweep --`):
+//!   --sizes 64,128,256,512   sweep override
+//!   --max-n 128              cap the sweep (CI smoke uses this)
+//!   --iters 3                timed repetitions per point
+//!   --outer 16               outer candidate budget per sweep
+
+mod bench_common;
+
+use bench_common::{bench_json, write_bench_json, Series};
+use gpml::coordinator::client::Client;
+use gpml::coordinator::server::Server;
+use gpml::coordinator::session::ThetaTuneRequest;
+use gpml::coordinator::{Coordinator, ObjectiveKind};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::optim::ThetaSearch;
+use gpml::util::cli::Args;
+use gpml::util::json::Json;
+use gpml::util::timing::{Stats, Table};
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let default_sizes = [64usize, 128, 256, 512];
+    let mut sizes = args.get_usize_list("sizes", &default_sizes).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.get_usize("max-n", usize::MAX) {
+        Ok(cap) => sizes.retain(|&n| n <= cap),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if sizes.is_empty() {
+        eprintln!("empty sweep after --sizes/--max-n filtering");
+        std::process::exit(2);
+    }
+    let iters = args.get_usize("iters", 3).unwrap_or(3).max(1);
+    let outer = args.get_usize("outer", 16).unwrap_or(16).max(8);
+
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).expect("bind");
+    let addr = server.addr.to_string();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== theta sweep: cold serial vs cold parallel-outer vs warm family cache \
+         ({} pool workers, {hw}-way hardware) ==",
+        server.workers()
+    );
+
+    let mut table = Table::new(&[
+        "N",
+        "cold t1 ms",
+        "cold t4 ms",
+        "warm ms",
+        "t1/t4",
+        "cold/warm",
+    ]);
+    type Sweep = Vec<Stats>;
+    let (mut cold_t1, mut cold_t4, mut warm): (Sweep, Sweep, Sweep) = (vec![], vec![], vec![]);
+    let (mut speedup_outer, mut speedup_warm) = (0.0f64, 0.0f64);
+
+    for &n in &sizes {
+        let mut client = Client::connect(&addr).expect("connect");
+        let spec = SyntheticSpec { n, p: 4, seed: 13, kernel: KERNEL, ..Default::default() };
+        let ds = synthetic(spec, 1);
+
+        let make_req = |id: u64, threads: usize| {
+            let mut req = ThetaTuneRequest::new(id, ds.ys.clone());
+            req.theta_range = (0.2, 20.0);
+            req.outer_iters = outer;
+            req.search = ThetaSearch::Wavefront { width: 8 };
+            req.inner_grid = 7;
+            req.objective = ObjectiveKind::Evidence;
+            req.threads = threads;
+            req
+        };
+
+        // one timed cold sweep: recreate the session (purging its family
+        // cache) outside the timed window, then time `tune_theta`
+        let cold_run = |client: &mut Client, old: &mut Option<u64>, threads: usize| {
+            if let Some(id) = old.take() {
+                client.drop_session(id).expect("drop");
+            }
+            let id = client.create_session(&ds.x, KERNEL).expect("create");
+            *old = Some(id);
+            let t0 = std::time::Instant::now();
+            let res = client.tune_theta(&make_req(id, threads)).expect("tune_theta");
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            let built = res.get("setups_built").and_then(Json::as_usize).unwrap_or(0);
+            assert!(built > 0, "cold sweep must build setups");
+            (us, res.get("outputs").unwrap().to_string())
+        };
+
+        let mut sess: Option<u64> = None;
+        let mut t1_samples = Vec::new();
+        let mut t1_outputs = String::new();
+        for _ in 0..iters {
+            let (us, outs) = cold_run(&mut client, &mut sess, 1);
+            t1_samples.push(us);
+            t1_outputs = outs;
+        }
+        let mut t4_samples = Vec::new();
+        let mut t4_outputs = String::new();
+        for _ in 0..iters {
+            let (us, outs) = cold_run(&mut client, &mut sess, 4);
+            t4_samples.push(us);
+            t4_outputs = outs;
+        }
+        assert_eq!(
+            t1_outputs, t4_outputs,
+            "serial and parallel outer sweeps must be bitwise identical"
+        );
+
+        // warm: the last cold sweep left the family populated
+        let id = sess.expect("live session");
+        let mut warm_samples = Vec::new();
+        let mut warm_outputs = String::new();
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            let res = client.tune_theta(&make_req(id, 4)).expect("warm tune_theta");
+            warm_samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            assert_eq!(
+                res.get("setups_built").and_then(Json::as_usize),
+                Some(0),
+                "warm sweep must build nothing"
+            );
+            warm_outputs = res.get("outputs").unwrap().to_string();
+        }
+        assert_eq!(
+            warm_outputs, t4_outputs,
+            "warm and cold sweeps must be bitwise identical"
+        );
+
+        let (s1, s4, sw) = (
+            Stats::from_samples(t1_samples),
+            Stats::from_samples(t4_samples),
+            Stats::from_samples(warm_samples),
+        );
+        speedup_outer = s1.median_us / s4.median_us;
+        speedup_warm = s4.median_us / sw.median_us;
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", s1.median_us / 1e3),
+            format!("{:.2}", s4.median_us / 1e3),
+            format!("{:.2}", sw.median_us / 1e3),
+            format!("{speedup_outer:.1}x"),
+            format!("{speedup_warm:.1}x"),
+        ]);
+        cold_t1.push(s1);
+        cold_t4.push(s4);
+        warm.push(sw);
+    }
+    table.print();
+
+    let last = sizes.len() - 1;
+    println!(
+        "\n@ N={}: parallel outer wavefront {speedup_outer:.1}x over serial, warm sweep \
+         {speedup_warm:.1}x over cold (acceptance floor at N=512: 2x outer speedup)",
+        sizes[last]
+    );
+    // ISSUE-5 acceptance: enforced, not just printed.  Same-machine
+    // relative ratio; skipped below 4-way hardware (no parallelism to
+    // measure) and below N=512 (CI's reduced smoke).
+    if sizes[last] >= 512 && hw >= 4 {
+        assert!(
+            speedup_outer >= 2.0,
+            "acceptance failed: parallel outer wavefront only {speedup_outer:.1}x faster \
+             than serial at N={} (floor: 2x)",
+            sizes[last]
+        );
+    }
+    let stats = server.session_stats();
+    println!(
+        "session cache: {} setups / {} theta hits / {} theta misses / {} theta entries",
+        stats.setups, stats.theta_hits, stats.theta_misses, stats.theta_entries
+    );
+
+    let payload = bench_json(
+        "theta",
+        &sizes,
+        &[
+            Series { label: "cold_outer_serial", stats: &cold_t1 },
+            Series { label: "cold_outer_parallel", stats: &cold_t4 },
+            Series { label: "warm", stats: &warm },
+        ],
+        vec![
+            ("workers", Json::Num(server.workers() as f64)),
+            ("outer_budget", Json::Num(outer as f64)),
+            ("wavefront_width", Json::Num(8.0)),
+            (
+                "parallel_outer_speedup_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(sizes[last] as f64)),
+                    ("serial_over_parallel", Json::Num(speedup_outer)),
+                ]),
+            ),
+            (
+                "warm_speedup_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(sizes[last] as f64)),
+                    ("cold_over_warm", Json::Num(speedup_warm)),
+                ]),
+            ),
+            ("warm_cold_bitwise_identical", Json::Bool(true)),
+        ],
+    );
+    write_bench_json("theta", &payload);
+    server.stop();
+}

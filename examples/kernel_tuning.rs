@@ -1,26 +1,30 @@
-//! Algorithm 1 (paper §2.2): two-step tuning of the RBF bandwidth xi2
-//! together with (sigma2, lambda2).
+//! Algorithm 1 (paper §2.2) through the theta-plane tuning engine:
+//! tune the RBF bandwidth xi2 together with (sigma2, lambda2) against a
+//! session-backed eigen-family cache (DESIGN.md §9).
 //!
-//! The outer golden-section line search moves xi2 — each move pays a fresh
-//! O(N^3) Gram + eigendecomposition — while the inner loop tunes
-//! (sigma2, lambda2) at O(N) per iterate.  The example reports how the
-//! cost splits between the two loops, which is the entire point of the
-//! algorithm.
+//! The outer stage sweeps theta as **parallel bracketing wavefronts** —
+//! each candidate's O(N^3) Gram + eigendecomposition runs concurrently
+//! on the thread pool — and every setup lands in the session's family
+//! cache, so the second sweep below is *warm*: zero eigendecompositions,
+//! bitwise-identical result.  A serial golden-section sweep runs last
+//! for comparison (it is warm too: its probes largely alias into the
+//! cached wavefront thetas or rebuild only the few it needs).
 //!
-//! Run: `cargo run --release --example kernel_tuning [-- --n 384]`
+//! Run: `cargo run --release --example kernel_tuning [-- --n 384 --threads 4]`
 
 use std::time::Instant;
 
+use gpml::coordinator::session::{tune_theta, SessionStore, ThetaTuneRequest};
 use gpml::data::{self, SyntheticSpec};
 use gpml::kernelfn::Kernel;
-use gpml::optim::{two_step_tune, EvidenceObjective, TwoStepOptions};
-use gpml::spectral::SpectralGp;
+use gpml::optim::ThetaSearch;
 use gpml::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
     let n = args.get_usize("n", 384).map_err(anyhow::Error::msg)?;
     let true_xi2 = args.get_f64("xi2", 2.0).map_err(anyhow::Error::msg)?;
+    gpml::util::threadpool::set_threads(args.get_usize("threads", 0).map_err(anyhow::Error::msg)?);
 
     let spec = SyntheticSpec {
         n,
@@ -30,61 +34,76 @@ fn main() -> anyhow::Result<()> {
         lambda2: 1.0,
         seed: 11,
     };
-    println!("== Algorithm 1: kernel hyperparameter tuning ==");
-    println!("data: N={n} P={} generated with xi2={true_xi2}, sigma2={}, lambda2={}",
-             spec.p, spec.sigma2, spec.lambda2);
+    println!("== Algorithm 1 via the theta-plane engine ==");
+    println!(
+        "data: N={n} P={} generated with xi2={true_xi2}, sigma2={}, lambda2={}",
+        spec.p, spec.sigma2, spec.lambda2
+    );
     let ds = data::synthetic(spec, 1);
-    let y = ds.y().to_vec();
-    let x = ds.x;
 
-    let mut outer_secs = Vec::new();
+    // the session holds the dataset; every theta probe is a family-cache
+    // entry keyed off it (unbounded budget: this demo asserts the warm
+    // re-sweep builds nothing, which a byte cap could defeat at large --n)
+    let store = SessionStore::new(8, usize::MAX);
+    let (sess, _) = store.create(spec.kernel, ds.x.clone())?;
+    let mut req = ThetaTuneRequest::new(sess.id, ds.ys.clone());
+    req.theta_range = (0.05, 50.0);
+    req.outer_iters = 24;
+    req.inner_grid = 9;
+    req.search = ThetaSearch::Wavefront { width: 0 };
+    req.objective = gpml::coordinator::ObjectiveKind::Evidence;
+
     let t0 = Instant::now();
-    let result = two_step_tune(
-        |theta| {
-            let t = Instant::now();
-            let gp = SpectralGp::fit(Kernel::Rbf { xi2: theta }, x.clone())
-                .expect("eigensolver convergence");
-            let es = gp.eigensystem(&y);
-            outer_secs.push(t.elapsed().as_secs_f64());
-            // evidence inner objective: interior optimum (see DESIGN.md on
-            // the eq. 19 boundary pathology)
-            EvidenceObjective(es)
-        },
-        TwoStepOptions {
-            theta_range: (0.05, 50.0),
-            outer_iters: 14,
-            inner_grid: 9,
-            ..Default::default()
-        },
-    );
-    let total = t0.elapsed().as_secs_f64();
-    let overhead: f64 = outer_secs.iter().sum();
+    let cold = tune_theta(&store, &req)?;
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let best = &cold.outputs[0];
 
-    println!("\nresult:");
-    println!("  xi2     = {:.4}   (generating value {true_xi2})", result.theta);
-    println!("  sigma2  = {:.5e} (generating value {})", result.hp.sigma2, spec.sigma2);
-    println!("  lambda2 = {:.5e} (generating value {})", result.hp.lambda2, spec.lambda2);
-    println!("  score   = {:.5}", result.score);
-    println!("\ncost split (the point of Algorithm 1):");
+    println!("\ncold wavefront sweep ({} threads):", gpml::util::threadpool::num_threads());
+    println!("  xi2     = {:.4}   (generating value {true_xi2})", best.theta);
+    println!("  sigma2  = {:.5e} (generating value {})", best.hp.sigma2, spec.sigma2);
+    println!("  lambda2 = {:.5e} (generating value {})", best.hp.lambda2, spec.lambda2);
+    println!("  score   = {:.5}", best.score);
     println!(
-        "  outer loop: {} O(N^3) eigendecompositions = {:.3} s ({:.1}% of total)",
-        result.outer_evals,
-        overhead,
-        100.0 * overhead / total
+        "  cost: {} O(N^3) setups built over {} distinct thetas, {} inner evals, {cold_secs:.3} s",
+        best.outer_evals, best.distinct_thetas, best.inner_evals
     );
+
+    // same request again: the family is warm — zero setups, identical bits
+    let t1 = Instant::now();
+    let warm = tune_theta(&store, &req)?;
+    let warm_secs = t1.elapsed().as_secs_f64();
+    let wbest = &warm.outputs[0];
+    assert_eq!(warm.setups_built, 0, "warm sweep must build nothing");
+    assert_eq!(wbest.theta.to_bits(), best.theta.to_bits());
+    assert_eq!(wbest.score.to_bits(), best.score.to_bits());
+    println!("\nwarm re-sweep: 0 setups, bitwise-identical result, {warm_secs:.3} s");
+    if warm_secs > 0.0 {
+        println!("  cold/warm = {:.1}x", cold_secs / warm_secs);
+    }
+
+    // serial golden-section over the same (now mostly warm) family
+    let mut golden_req = req.clone();
+    golden_req.search = ThetaSearch::Golden;
+    let t2 = Instant::now();
+    let golden = tune_theta(&store, &golden_req)?;
+    let gbest = &golden.outputs[0];
     println!(
-        "  inner loop: {} O(N) evaluations           = {:.3} s",
-        result.inner_evals,
-        total - overhead
+        "\ngolden-section comparison: score {:.5} (wavefront {:.5}), {} fresh setups, {:.3} s",
+        gbest.score,
+        best.score,
+        golden.setups_built,
+        t2.elapsed().as_secs_f64()
     );
+
+    let stats = store.stats();
     println!(
-        "  per inner evaluation: {:.1} us",
-        (total - overhead) * 1e6 / result.inner_evals.max(1) as f64
+        "\nfamily cache: {} entries, {} hits / {} misses / {} evictions, {} total setups",
+        stats.theta_entries, stats.theta_hits, stats.theta_misses, stats.theta_evictions,
+        stats.setups
     );
-    println!("  total: {total:.3} s");
 
     // sanity: the recovered bandwidth should be within a factor ~3 of truth
-    let ratio = result.theta / true_xi2;
+    let ratio = best.theta / true_xi2;
     if !(0.33..=3.0).contains(&ratio) {
         println!("warning: recovered xi2 off by {ratio:.2}x (small-N noise)");
     }

@@ -11,7 +11,7 @@ use std::net::TcpStream;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::protocol::{self, EvaluateRequest, PredictRequest};
-use crate::coordinator::session::SessionTuneRequest;
+use crate::coordinator::session::{SessionTuneRequest, ThetaTuneRequest};
 use crate::coordinator::TuneRequest;
 use crate::kernelfn::Kernel;
 use crate::linalg::Matrix;
@@ -91,6 +91,17 @@ impl Client {
     /// iterate on the server, zero setup work.
     pub fn tune_session(&mut self, req: &SessionTuneRequest) -> Result<Json> {
         self.checked(&protocol::session_tune_json(req))
+    }
+
+    /// Sweep the session's kernel family over a theta range (Algorithm 1
+    /// through the server's eigen-family cache): the server evaluates
+    /// outer candidates as parallel wavefronts and reuses every
+    /// previously-built `(session, theta)` decomposition, so a repeat
+    /// sweep over a warm family performs zero O(N^3) work
+    /// (`setups_built: 0` in the response) and returns bitwise-identical
+    /// results.
+    pub fn tune_theta(&mut self, req: &ThetaTuneRequest) -> Result<Json> {
+        self.checked(&protocol::theta_tune_json(req))
     }
 
     /// Score/Jacobian/Hessian at one hyperparameter point (O(N)).

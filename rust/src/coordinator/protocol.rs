@@ -12,6 +12,10 @@
 //!  "strategy": "pso"|"grid", "particles": 64, "iterations": 25,
 //!  "grid": 17, "seed": 42, "threads": 0}
 //! {"op": "tune", "session_id": 1, "ys": [[...], ...], ...}
+//! {"op": "tune_theta", "session_id": 1, "ys": [[...], ...],
+//!  "theta_min": 0.05, "theta_max": 50.0, "outer": 20,
+//!  "search": "wavefront"|"golden", "wavefront": 8, "inner_grid": 9,
+//!  "objective": "paper"|"evidence", "threads": 0}
 //! {"op": "create_session", "x": [[...], ...], "kernel": "rbf:2.0"}
 //! {"op": "update_session", "session_id": 1, "x_new": [[...], ...]}
 //! {"op": "drop_session", "session_id": 1}
@@ -23,10 +27,13 @@
 //! ```
 //! Responses: `{"ok": true, ...}` or `{"ok": false, "error": "..."}`.
 
-use crate::coordinator::session::{SessionTuneRequest, StoreStats};
+use crate::coordinator::session::{
+    SessionTuneRequest, StoreStats, ThetaTuneRequest, ThetaTuneResult,
+};
 use crate::coordinator::{Backend, GlobalStrategy, ObjectiveKind, TuneRequest, TuneResult};
 use crate::kernelfn::{self, Kernel};
 use crate::linalg::Matrix;
+use crate::optim::ThetaSearch;
 use crate::spectral::{Evaluation, HyperParams};
 use crate::util::json::{self, Json};
 
@@ -42,6 +49,9 @@ pub enum Request {
     Tune(Box<TuneRequest>),
     /// Session tune: O(N) against an existing session's eigenbasis.
     TuneSession(Box<SessionTuneRequest>),
+    /// Theta-plane tune: sweep the session's kernel family over a theta
+    /// range through the eigen-family cache (DESIGN.md §9).
+    TuneTheta(Box<ThetaTuneRequest>),
     CreateSession { x: Matrix, kernel: Kernel, threads: usize },
     /// Streaming append: grow a session's dataset by rank-one spectral
     /// refresh (full refit past the fallback policy) — DESIGN.md §8.
@@ -167,6 +177,57 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             Ok(Request::TuneSession(Box::new(req)))
         }
+        Some("tune_theta") => {
+            let mut req = ThetaTuneRequest::new(parse_session_id(&v)?, parse_ys(&v)?);
+            req.objective = parse_objective(&v);
+            let bound = |field: &str, default: f64| -> Result<f64, String> {
+                match v.get(field) {
+                    None => Ok(default),
+                    Some(x) => match x.as_f64() {
+                        Some(t) if t.is_finite() && t > 0.0 => Ok(t),
+                        _ => Err(format!("{field} must be a positive finite number")),
+                    },
+                }
+            };
+            let lo = bound("theta_min", req.theta_range.0)?;
+            let hi = bound("theta_max", req.theta_range.1)?;
+            if lo >= hi {
+                return Err(format!("theta range must be increasing, got ({lo}, {hi})"));
+            }
+            req.theta_range = (lo, hi);
+            req.search = match v.get("search").and_then(Json::as_str) {
+                None | Some("wavefront") => {
+                    let width = match v.get("wavefront") {
+                        None => 0,
+                        // strict like the sibling fields: a typo must not
+                        // silently select a different candidate set
+                        Some(w) => match w.as_f64() {
+                            Some(x) if x >= 0.0 && x.fract() == 0.0 => x as usize,
+                            _ => return Err("wavefront must be a non-negative integer".to_string()),
+                        },
+                    };
+                    ThetaSearch::Wavefront { width }
+                }
+                Some("golden") => ThetaSearch::Golden,
+                Some(other) => return Err(format!("unknown search '{other}' (golden|wavefront)")),
+            };
+            if let Some(outer) = v.get("outer") {
+                match outer.as_usize() {
+                    Some(o) if o >= 2 => req.outer_iters = o,
+                    _ => return Err("outer must be an integer >= 2".to_string()),
+                }
+            }
+            if let Some(grid) = v.get("inner_grid") {
+                match grid.as_usize() {
+                    Some(g) if g >= 2 => req.inner_grid = g,
+                    _ => return Err("inner_grid must be an integer >= 2".to_string()),
+                }
+            }
+            if let Some(threads) = v.get("threads").and_then(Json::as_usize) {
+                req.threads = threads;
+            }
+            Ok(Request::TuneTheta(Box::new(req)))
+        }
         Some("tune") => {
             let x = parse_matrix(v.get("x").ok_or("missing x")?, "x")?;
             let ys = parse_ys(&v)?;
@@ -267,6 +328,41 @@ pub fn session_tune_response(res: &TuneResult, session_id: u64) -> String {
     Json::obj(fields).to_string()
 }
 
+/// Serialize a `tune_theta` result.  Numbers use shortest-round-trip
+/// float formatting and the `outputs` array carries only
+/// **run-independent** values (result fields plus the deterministic
+/// probe counts), so a warm repeat's `outputs` is byte-identical to the
+/// cold run's — an invariant the bench and wire tests assert on the
+/// serialized string.  The run-dependent cost counters (`outer_evals`
+/// per output, `setups_built`, `tune_seconds`) ride at the top level.
+pub fn theta_tune_response(res: &ThetaTuneResult, session_id: u64) -> String {
+    let outputs: Vec<Json> = res
+        .outputs
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("theta", Json::Num(o.theta)),
+                ("sigma2", Json::Num(o.hp.sigma2)),
+                ("lambda2", Json::Num(o.hp.lambda2)),
+                ("score", Json::Num(o.score)),
+                ("distinct_thetas", Json::Num(o.distinct_thetas as f64)),
+                ("inner_evals", Json::Num(o.inner_evals as f64)),
+            ])
+        })
+        .collect();
+    let outer_evals: Vec<Json> =
+        res.outputs.iter().map(|o| Json::Num(o.outer_evals as f64)).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session_id", Json::Num(session_id as f64)),
+        ("outputs", Json::Arr(outputs)),
+        ("outer_evals", Json::Arr(outer_evals)),
+        ("setups_built", Json::Num(res.setups_built as f64)),
+        ("tune_seconds", Json::Num(res.tune_seconds)),
+    ])
+    .to_string()
+}
+
 /// Serialize a `create_session` result.
 pub fn create_session_response(
     sess: &crate::coordinator::session::Session,
@@ -324,6 +420,10 @@ pub fn stats_response(s: &StoreStats, workers: usize) -> String {
         ("evictions", Json::Num(s.evictions as f64)),
         ("setups", Json::Num(s.setups as f64)),
         ("updates", Json::Num(s.updates as f64)),
+        ("theta_entries", Json::Num(s.theta_entries as f64)),
+        ("theta_hits", Json::Num(s.theta_hits as f64)),
+        ("theta_misses", Json::Num(s.theta_misses as f64)),
+        ("theta_evictions", Json::Num(s.theta_evictions as f64)),
         ("workers", Json::Num(workers as f64)),
     ])
     .to_string()
@@ -435,6 +535,30 @@ pub fn session_tune_json(req: &SessionTuneRequest) -> String {
         ("threads", Json::Num(req.threads as f64)),
     ];
     strategy_fields(req.strategy, &mut fields);
+    Json::obj(fields).to_string()
+}
+
+/// Serialize a `tune_theta` request (client side).
+pub fn theta_tune_json(req: &ThetaTuneRequest) -> String {
+    let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
+    let mut fields = vec![
+        ("op", Json::str("tune_theta")),
+        ("session_id", Json::Num(req.session_id as f64)),
+        ("ys", Json::Arr(ys)),
+        ("theta_min", Json::Num(req.theta_range.0)),
+        ("theta_max", Json::Num(req.theta_range.1)),
+        ("outer", Json::Num(req.outer_iters as f64)),
+        ("inner_grid", Json::Num(req.inner_grid as f64)),
+        ("objective", Json::str(objective_str(req.objective))),
+        ("threads", Json::Num(req.threads as f64)),
+    ];
+    match req.search {
+        ThetaSearch::Golden => fields.push(("search", Json::str("golden"))),
+        ThetaSearch::Wavefront { width } => {
+            fields.push(("search", Json::str("wavefront")));
+            fields.push(("wavefront", Json::Num(width as f64)));
+        }
+    }
     Json::obj(fields).to_string()
 }
 
@@ -630,6 +754,111 @@ mod tests {
         let s = StoreStats { updates: 7, ..Default::default() };
         let v = json::parse(&stats_response(&s, 2)).unwrap();
         assert_eq!(v.get("updates").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn stats_response_includes_theta_counters() {
+        let s = StoreStats {
+            theta_entries: 3,
+            theta_hits: 40,
+            theta_misses: 5,
+            theta_evictions: 2,
+            ..Default::default()
+        };
+        let v = json::parse(&stats_response(&s, 1)).unwrap();
+        assert_eq!(v.get("theta_entries").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("theta_hits").unwrap().as_usize(), Some(40));
+        assert_eq!(v.get("theta_misses").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("theta_evictions").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn tune_theta_roundtrip() {
+        let mut req = ThetaTuneRequest::new(4, vec![vec![0.5, -0.5]]);
+        req.theta_range = (0.05, 50.0);
+        req.outer_iters = 16;
+        req.search = ThetaSearch::Wavefront { width: 6 };
+        req.inner_grid = 7;
+        req.objective = ObjectiveKind::Evidence;
+        req.threads = 2;
+        match parse_request(&theta_tune_json(&req)).unwrap() {
+            Request::TuneTheta(r) => {
+                assert_eq!(r.session_id, 4);
+                assert_eq!(r.ys[0], vec![0.5, -0.5]);
+                assert_eq!(r.theta_range, (0.05, 50.0));
+                assert_eq!(r.outer_iters, 16);
+                assert_eq!(r.search, ThetaSearch::Wavefront { width: 6 });
+                assert_eq!(r.inner_grid, 7);
+                assert_eq!(r.objective, ObjectiveKind::Evidence);
+                assert_eq!(r.threads, 2);
+            }
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
+        // golden roundtrips too
+        req.search = ThetaSearch::Golden;
+        match parse_request(&theta_tune_json(&req)).unwrap() {
+            Request::TuneTheta(r) => assert_eq!(r.search, ThetaSearch::Golden),
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tune_theta_defaults_and_strict_validation() {
+        // minimal request: defaults fill in
+        match parse_request(r#"{"op":"tune_theta","session_id":1,"ys":[[1,2]]}"#).unwrap() {
+            Request::TuneTheta(r) => {
+                assert_eq!(r.theta_range, (1e-2, 1e2));
+                assert_eq!(r.search, ThetaSearch::Wavefront { width: 0 });
+                assert_eq!(r.outer_iters, 20);
+            }
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
+        // error shapes: each malformed field is rejected, not defaulted
+        for bad in [
+            r#"{"op":"tune_theta","ys":[[1]]}"#,                                    // no session
+            r#"{"op":"tune_theta","session_id":1}"#,                                // no ys
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":-1}"#,      // negative
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":"x"}"#,     // non-number
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":9,"theta_max":1}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"search":"magic"}"#,    // unknown
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"outer":1}"#,           // < 2
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"inner_grid":1}"#,      // < 2
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":"abc"}"#,   // non-number
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":-3}"#,      // negative
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":3.5}"#,     // fractional
+        ] {
+            assert!(parse_request(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn theta_tune_response_shape() {
+        use crate::coordinator::session::ThetaOutput;
+        let res = ThetaTuneResult {
+            outputs: vec![ThetaOutput {
+                theta: 2.5,
+                hp: HyperParams::new(0.1, 1.5),
+                score: -4.25,
+                outer_evals: 14,
+                distinct_thetas: 16,
+                inner_evals: 900,
+            }],
+            setups_built: 14,
+            tune_seconds: 0.5,
+        };
+        let v = json::parse(&theta_tune_response(&res, 7)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("session_id").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("setups_built").unwrap().as_usize(), Some(14));
+        let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs[0].get("theta").unwrap().as_f64(), Some(2.5));
+        assert_eq!(outs[0].get("score").unwrap().as_f64(), Some(-4.25));
+        assert_eq!(outs[0].get("distinct_thetas").unwrap().as_usize(), Some(16));
+        // the run-dependent build counter lives OUTSIDE `outputs`, so
+        // warm/cold `outputs` strings can be compared byte-for-byte
+        assert!(outs[0].get("outer_evals").is_none());
+        let builds = v.get("outer_evals").unwrap().as_arr().unwrap();
+        assert_eq!(builds[0].as_usize(), Some(14));
     }
 
     #[test]

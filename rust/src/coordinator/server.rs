@@ -301,6 +301,10 @@ fn dispatch_pool(store: &SessionStore, workers: usize, req: protocol::Request) -
             Ok(res) => protocol::session_tune_response(&res, req.session_id),
             Err(e) => protocol::error_response(&format!("{e:#}")),
         },
+        protocol::Request::TuneTheta(req) => match session::tune_theta(store, &req) {
+            Ok(res) => protocol::theta_tune_response(&res, req.session_id),
+            Err(e) => protocol::error_response(&format!("{e:#}")),
+        },
         protocol::Request::Evaluate(req) => match store.get(req.session_id) {
             None => protocol::error_response(&format!("unknown session {}", req.session_id)),
             Some(sess) => {

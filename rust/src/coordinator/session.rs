@@ -45,20 +45,23 @@
 //! ```
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::kernelfn::{self, Kernel};
+use crate::kernelfn::{self, Kernel, ThetaDomain};
 use crate::linalg::{Matrix, SymEigen};
-use crate::spectral::{ExtendOutcome, SpectralGp};
+use crate::spectral::{EigenSystem, Evaluation, ExtendOutcome, HyperParams, SpectralGp};
 
 use super::{
     fingerprint, tune_one, Backend, GlobalStrategy, ObjectiveKind, OutputResult, TuneRequest,
     TuneResult,
 };
-use crate::optim::{self, Bounds};
+use crate::optim::{
+    self, theta_tune, Bounds, Objective, SetupProvider, ThetaSearch, TwoStepOptions,
+};
 
 /// One cached dataset: the fitted GP handle plus bookkeeping.
 pub struct Session {
@@ -98,11 +101,37 @@ pub struct StoreStats {
     /// Streaming `update_session` requests served (incremental *and*
     /// fallback-refit; a fallback additionally bumps `setups`).
     pub updates: u64,
+    /// Live eigen-family cache entries (per-session theta-keyed setups).
+    pub theta_entries: usize,
+    /// `theta_setup` requests served without building anything: family-
+    /// cache hits, the session's own base setup, and single-flight
+    /// waiters that woke to find the entry published.
+    pub theta_hits: u64,
+    /// `theta_setup` requests that triggered a fresh build themselves.
+    pub theta_misses: u64,
+    /// Family-cache entries removed by cache pressure: shed directly
+    /// under the byte budget, or taken along by a session evicted under
+    /// either budget.  Explicit `drop_session` and streaming-update
+    /// invalidation are not counted.
+    pub theta_evictions: u64,
 }
 
 struct Slot {
     sess: Arc<Session>,
     /// Monotonic access tick; smallest = least recently used.
+    last_used: u64,
+}
+
+/// Family-cache key: (session id, quantized-theta bit pattern).  The
+/// theta is quantized by the engine (`optim::quantize_theta`) before it
+/// reaches the store, so the bit pattern is canonical.
+type ThetaKey = (u64, u64);
+
+/// One eigen-family cache entry: the session's kernel family re-fitted
+/// at another theta (DESIGN.md §9).
+struct ThetaSlot {
+    gp: SpectralGp,
+    bytes: usize,
     last_used: u64,
 }
 
@@ -115,6 +144,10 @@ struct Inner {
     /// Session ids whose streaming update is in flight (updates to one
     /// session serialize; other sessions stay served).
     updating: HashSet<u64>,
+    /// Eigen-family cache: per-session setups at other thetas.
+    theta: HashMap<ThetaKey, ThetaSlot>,
+    /// (session, theta) builds in flight (single-flight guard).
+    theta_pending: HashSet<ThetaKey>,
     bytes: usize,
     tick: u64,
     next_id: u64,
@@ -123,6 +156,9 @@ struct Inner {
     evictions: u64,
     setups: u64,
     updates: u64,
+    theta_hits: u64,
+    theta_misses: u64,
+    theta_evictions: u64,
 }
 
 impl Inner {
@@ -145,6 +181,22 @@ impl Inner {
     fn release_fp(&mut self, fp: u64, id: u64) {
         if self.by_fp.get(&fp) == Some(&id) {
             self.by_fp.remove(&fp);
+        }
+    }
+
+    /// Remove every eigen-family entry belonging to session `id`,
+    /// returning the byte ledger.  `count_evictions` distinguishes
+    /// budget-pressure removal (counted) from explicit drops and
+    /// streaming-update invalidation (not counted, mirroring how session
+    /// drops are accounted).
+    fn purge_theta_of(&mut self, id: u64, count_evictions: bool) {
+        let keys: Vec<ThetaKey> = self.theta.keys().filter(|k| k.0 == id).copied().collect();
+        for key in keys {
+            let slot = self.theta.remove(&key).unwrap();
+            self.bytes -= slot.bytes;
+            if count_evictions {
+                self.theta_evictions += 1;
+            }
         }
     }
 }
@@ -237,10 +289,42 @@ impl SessionStore {
         Ok((sess, false))
     }
 
-    /// Evict least-recently-used sessions until both budgets hold,
-    /// never removing `keep_id` (the session being returned right now).
+    /// Evict until both budgets hold, never removing `keep_id` (the
+    /// session being returned right now) or `keep_theta` (the family
+    /// entry being returned right now).
+    ///
+    /// Under **byte** pressure, LRU eigen-family entries go first: a
+    /// family entry is derived state (one decomposition rebuilds it)
+    /// while a session is the client-visible product whose id external
+    /// callers hold.  Sessions are evicted LRU when the entry budget is
+    /// exceeded or when shedding family entries was not enough; an
+    /// evicted session takes its whole theta family with it.
     fn evict_over_budget(&self, g: &mut Inner, keep_id: u64) {
-        while g.slots.len() > self.max_sessions || g.bytes > self.max_bytes {
+        self.evict_with_keeps(g, keep_id, None);
+    }
+
+    fn evict_with_keeps(&self, g: &mut Inner, keep_id: u64, keep_theta: Option<ThetaKey>) {
+        loop {
+            let over_sessions = g.slots.len() > self.max_sessions;
+            let over_bytes = g.bytes > self.max_bytes;
+            if !over_sessions && !over_bytes {
+                break;
+            }
+            if !over_sessions {
+                // byte pressure only: shed LRU family entries first
+                let victim = g
+                    .theta
+                    .iter()
+                    .filter(|(&key, _)| Some(key) != keep_theta)
+                    .min_by_key(|(_, slot)| slot.last_used)
+                    .map(|(&key, _)| key);
+                if let Some(key) = victim {
+                    let slot = g.theta.remove(&key).unwrap();
+                    g.bytes -= slot.bytes;
+                    g.theta_evictions += 1;
+                    continue;
+                }
+            }
             let victim = g
                 .slots
                 .iter()
@@ -252,7 +336,102 @@ impl SessionStore {
             g.release_fp(slot.sess.fingerprint, id);
             g.bytes -= slot.sess.bytes;
             g.evictions += 1;
+            g.purge_theta_of(id, true);
         }
+    }
+
+    /// Get-or-build the eigendecomposed setup for session `id`'s kernel
+    /// family at (engine-quantized) `theta` — the eigen-family cache
+    /// read path (DESIGN.md §9).  Returns the setup handle and whether
+    /// this call actually built it (`false` = served from the base
+    /// session or the family cache).
+    ///
+    /// Concurrent requests for the same `(session, theta)` are
+    /// single-flighted on the store condvar, so a sweep fanned across
+    /// the pool — or two clients sweeping the same family — computes
+    /// each decomposition exactly once.  The O(N^3) build runs outside
+    /// the store lock.  If the session is dropped, evicted, or replaced
+    /// by a streaming update while the build is in flight, the setup is
+    /// still returned to the caller (the computation is valid against
+    /// the dataset it started from) but not cached.
+    pub fn theta_setup(&self, id: u64, theta: f64) -> Result<(SpectralGp, bool)> {
+        if !(theta.is_finite() && theta > 0.0) {
+            return Err(anyhow!("theta must be positive and finite, got {theta}"));
+        }
+        let key: ThetaKey = (id, theta.to_bits());
+        let base = {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                let Some(slot) = g.slots.get(&id) else {
+                    return Err(anyhow!("unknown session {id}"));
+                };
+                let base = slot.sess.gp.clone();
+                if base.kernel().with_theta(theta) == base.kernel() {
+                    // the base session *is* this theta: serve it directly
+                    g.theta_hits += 1;
+                    g.tick += 1;
+                    let tick = g.tick;
+                    g.slots.get_mut(&id).unwrap().last_used = tick;
+                    return Ok((base, false));
+                }
+                if let Some(ts) = g.theta.get(&key) {
+                    let gp = ts.gp.clone();
+                    g.theta_hits += 1;
+                    g.tick += 1;
+                    let tick = g.tick;
+                    g.theta.get_mut(&key).unwrap().last_used = tick;
+                    // an active sweep keeps its session warm too
+                    g.slots.get_mut(&id).unwrap().last_used = tick;
+                    return Ok((gp, false));
+                }
+                if g.theta_pending.contains(&key) {
+                    g = self.cv.wait(g).unwrap();
+                    continue;
+                }
+                g.theta_misses += 1;
+                g.theta_pending.insert(key);
+                break base;
+            }
+        };
+
+        // --- O(N^3) family build, outside the lock ---
+        let kernel = base.kernel().with_theta(theta);
+        let k = kernelfn::gram(kernel, base.x());
+        let eigen = SymEigen::new(&k);
+        drop(k);
+
+        let mut g = self.inner.lock().unwrap();
+        g.theta_pending.remove(&key);
+        let eigen = match eigen {
+            Ok(e) => e,
+            Err(e) => {
+                drop(g);
+                self.cv.notify_all();
+                return Err(anyhow!("eigensolver: {e}"));
+            }
+        };
+        g.setups += 1;
+        let gp = SpectralGp::from_eigen(kernel, base.x().clone(), eigen);
+        // only cache if the session is still live AND still backed by the
+        // setup we decomposed — a concurrent streaming update replaces
+        // the dataset (and purges the family), and inserting an entry
+        // derived from the *old* Gram would poison the warm path
+        let still_current =
+            g.slots.get(&id).map(|s| s.sess.gp.shares_setup(&base)).unwrap_or(false);
+        if !still_current {
+            drop(g);
+            self.cv.notify_all();
+            return Ok((gp, true));
+        }
+        let bytes = gp.setup_bytes();
+        g.tick += 1;
+        let tick = g.tick;
+        g.theta.insert(key, ThetaSlot { gp: gp.clone(), bytes, last_used: tick });
+        g.bytes += bytes;
+        self.evict_with_keeps(&mut g, id, Some(key));
+        drop(g);
+        self.cv.notify_all();
+        Ok((gp, true))
     }
 
     /// Look up a live session by id, refreshing its LRU position.
@@ -350,6 +529,9 @@ impl SessionStore {
         g.tick += 1;
         let tick = g.tick;
         g.slots.insert(id, Slot { sess: sess.clone(), last_used: tick });
+        // the grown dataset invalidates every family setup derived from
+        // the old one (they decompose the *old* Gram at other thetas)
+        g.purge_theta_of(id, false);
         self.evict_over_budget(&mut g, id);
         drop(g);
         self.cv.notify_all();
@@ -364,6 +546,7 @@ impl SessionStore {
             Some(slot) => {
                 g.release_fp(slot.sess.fingerprint, id);
                 g.bytes -= slot.sess.bytes;
+                g.purge_theta_of(id, false);
                 true
             }
             None => false,
@@ -382,6 +565,10 @@ impl SessionStore {
             evictions: g.evictions,
             setups: g.setups,
             updates: g.updates,
+            theta_entries: g.theta.len(),
+            theta_hits: g.theta_hits,
+            theta_misses: g.theta_misses,
+            theta_evictions: g.theta_evictions,
         }
     }
 }
@@ -510,6 +697,193 @@ pub fn tune_via_store(store: &SessionStore, req: &TuneRequest) -> Result<TuneRes
             tune_seconds: tt.elapsed().as_secs_f64(),
             backend: Backend::Rust,
         })
+    })
+}
+
+/// A theta-plane tuning job against an existing session: sweep the
+/// session's kernel family over `theta_range`, tuning `(sigma2,
+/// lambda2)` at O(N) per iterate inside each probe (Algorithm 1 through
+/// the eigen-family cache — DESIGN.md §9).
+#[derive(Clone, Debug)]
+pub struct ThetaTuneRequest {
+    pub session_id: u64,
+    pub ys: Vec<Vec<f64>>,
+    /// Raw (not log) theta bounds.
+    pub theta_range: (f64, f64),
+    /// Outer evaluation budget (see `TwoStepOptions::outer_iters`).
+    pub outer_iters: usize,
+    /// Outer search strategy (discrete families sweep regardless).
+    pub search: ThetaSearch,
+    /// Inner coarse-grid resolution before Newton refinement.
+    pub inner_grid: usize,
+    pub bounds: Bounds,
+    pub objective: ObjectiveKind,
+    /// Pool width for the outer wavefronts (0 = process default).
+    pub threads: usize,
+}
+
+impl ThetaTuneRequest {
+    pub fn new(session_id: u64, ys: Vec<Vec<f64>>) -> Self {
+        ThetaTuneRequest {
+            session_id,
+            ys,
+            theta_range: (1e-2, 1e2),
+            outer_iters: 20,
+            search: ThetaSearch::Wavefront { width: 0 },
+            inner_grid: 9,
+            bounds: Bounds::default(),
+            objective: ObjectiveKind::default(),
+            threads: 0,
+        }
+    }
+}
+
+/// Per-output outcome of a theta-plane tune.
+#[derive(Clone, Copy, Debug)]
+pub struct ThetaOutput {
+    /// Best (quantized) kernel hyperparameter found.
+    pub theta: f64,
+    pub hp: HyperParams,
+    pub score: f64,
+    /// O(N^3) setups actually built for this output (0 on a warm sweep).
+    pub outer_evals: usize,
+    /// Distinct quantized thetas probed (>= `outer_evals`).
+    pub distinct_thetas: usize,
+    pub inner_evals: usize,
+}
+
+/// Whole-job outcome of [`tune_theta`].
+#[derive(Clone, Debug)]
+pub struct ThetaTuneResult {
+    pub outputs: Vec<ThetaOutput>,
+    /// Total setups built across outputs — what the acceptance gate
+    /// asserts stays 0 on a warm re-sweep.
+    pub setups_built: usize,
+    pub tune_seconds: f64,
+}
+
+/// The inner objective a [`StoreThetaProvider`] hands the engine: the
+/// paper score or the evidence over one output's eigensystem.
+enum SessionObjective {
+    Paper(EigenSystem),
+    Evidence(optim::EvidenceObjective),
+}
+
+impl Objective for SessionObjective {
+    fn eval(&mut self, hp: HyperParams) -> f64 {
+        match self {
+            SessionObjective::Paper(es) => es.eval(hp),
+            SessionObjective::Evidence(ev) => ev.eval(hp),
+        }
+    }
+    fn eval_batch(&mut self, hps: &[HyperParams]) -> Vec<f64> {
+        match self {
+            SessionObjective::Paper(es) => es.eval_batch(hps),
+            SessionObjective::Evidence(ev) => ev.eval_batch(hps),
+        }
+    }
+    fn eval_full(&mut self, hp: HyperParams) -> Evaluation {
+        match self {
+            SessionObjective::Paper(es) => es.eval_full(hp),
+            SessionObjective::Evidence(ev) => ev.eval_full(hp),
+        }
+    }
+}
+
+/// [`SetupProvider`] over the store's eigen-family cache: `setup(theta)`
+/// is [`SessionStore::theta_setup`] + an O(N) `eigensystem` projection
+/// of this output.  A warm family means zero builds.
+struct StoreThetaProvider<'a> {
+    store: &'a SessionStore,
+    session_id: u64,
+    y: &'a [f64],
+    objective: ObjectiveKind,
+    domain: ThetaDomain,
+    built: AtomicUsize,
+}
+
+impl SetupProvider for StoreThetaProvider<'_> {
+    type Obj = SessionObjective;
+
+    fn domain(&self) -> ThetaDomain {
+        self.domain
+    }
+
+    fn setup(&self, theta: f64) -> Result<SessionObjective, String> {
+        let (gp, built) =
+            self.store.theta_setup(self.session_id, theta).map_err(|e| format!("{e:#}"))?;
+        if built {
+            self.built.fetch_add(1, Ordering::Relaxed);
+        }
+        if gp.n() != self.y.len() {
+            // a concurrent streaming update grew the session mid-sweep;
+            // fail the request cleanly instead of panicking in a worker
+            return Err(format!(
+                "session {} changed size mid-sweep (N {} != ys length {})",
+                self.session_id,
+                gp.n(),
+                self.y.len()
+            ));
+        }
+        let es = gp.eigensystem(self.y);
+        Ok(match self.objective {
+            ObjectiveKind::Evidence => SessionObjective::Evidence(optim::EvidenceObjective(es)),
+            ObjectiveKind::PaperScore => SessionObjective::Paper(es),
+        })
+    }
+
+    fn setups_built(&self) -> usize {
+        self.built.load(Ordering::Relaxed)
+    }
+}
+
+/// Execute a theta-plane tune against a live session.  Every probe goes
+/// through the eigen-family cache, so outputs after the first — and any
+/// repeat request over the same family — reuse the decompositions; a
+/// fully warm sweep performs zero O(N^3) work and returns bitwise the
+/// same `(theta, hp, score)` as the cold sweep that populated it.
+pub fn tune_theta(store: &SessionStore, req: &ThetaTuneRequest) -> Result<ThetaTuneResult> {
+    let sess = store
+        .get(req.session_id)
+        .ok_or_else(|| anyhow!("unknown session {}", req.session_id))?;
+    validate_outputs(sess.gp.n(), &req.ys)?;
+    let domain = sess.gp.kernel().theta_domain();
+    if domain == ThetaDomain::Fixed {
+        return Err(anyhow!("kernel family {:?} has no tunable theta", sess.gp.kernel()));
+    }
+    let opt = TwoStepOptions {
+        theta_range: req.theta_range,
+        outer_iters: req.outer_iters,
+        search: req.search,
+        bounds: req.bounds,
+        inner_grid: req.inner_grid,
+        ..Default::default()
+    };
+    crate::util::threadpool::with_threads(req.threads, || {
+        let tt = Instant::now();
+        let mut outputs = Vec::with_capacity(req.ys.len());
+        let mut setups_built = 0usize;
+        for y in &req.ys {
+            let provider = StoreThetaProvider {
+                store,
+                session_id: req.session_id,
+                y,
+                objective: req.objective,
+                domain,
+                built: AtomicUsize::new(0),
+            };
+            let r = theta_tune(&provider, &opt).map_err(|e| anyhow!(e))?;
+            setups_built += r.outer_evals;
+            outputs.push(ThetaOutput {
+                theta: r.theta,
+                hp: r.hp,
+                score: r.score,
+                outer_evals: r.outer_evals,
+                distinct_thetas: r.distinct_thetas,
+                inner_evals: r.inner_evals,
+            });
+        }
+        Ok(ThetaTuneResult { outputs, setups_built, tune_seconds: tt.elapsed().as_secs_f64() })
     })
 }
 
@@ -784,5 +1158,156 @@ mod tests {
         let res = tune_session(&store, &ok).unwrap();
         assert!(res.eigen_cached);
         assert_eq!(res.gram_seconds, 0.0);
+    }
+
+    #[test]
+    fn theta_setup_caches_and_counts() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, _) = dataset(16, 41);
+        let (sess, _) = store.create(k, x).unwrap();
+        let theta = optim::quantize_theta(3.0, ThetaDomain::Continuous);
+
+        let (a, built_a) = store.theta_setup(sess.id, theta).unwrap();
+        assert!(built_a);
+        assert_eq!(a.kernel(), k.with_theta(theta));
+        let (b, built_b) = store.theta_setup(sess.id, theta).unwrap();
+        assert!(!built_b);
+        assert_eq!(a.eigen().values, b.eigen().values);
+
+        let s = store.stats();
+        assert_eq!(s.theta_entries, 1);
+        assert_eq!((s.theta_hits, s.theta_misses), (1, 1));
+        assert_eq!(s.setups, 2, "base session + one family build");
+        assert!(s.bytes > sess.bytes, "family entry joins the byte ledger");
+
+        // the base session's own theta short-circuits without an entry
+        let base_theta = k.theta().unwrap();
+        let (c, built_c) = store.theta_setup(sess.id, base_theta).unwrap();
+        assert!(!built_c);
+        assert_eq!(c.kernel(), k);
+        assert_eq!(store.stats().theta_entries, 1);
+
+        // invalid thetas and dead sessions are rejected
+        assert!(store.theta_setup(sess.id, -1.0).is_err());
+        assert!(store.theta_setup(sess.id, f64::NAN).is_err());
+        assert!(store.theta_setup(999, theta).is_err());
+    }
+
+    #[test]
+    fn concurrent_theta_setups_single_flight() {
+        let store = std::sync::Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(48, 43);
+        let (sess, _) = store.create(k, x).unwrap();
+        let theta = optim::quantize_theta(0.7, ThetaDomain::Continuous);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let store = store.clone();
+                let id = sess.id;
+                std::thread::spawn(move || store.theta_setup(id, theta).unwrap().1)
+            })
+            .collect();
+        let builds: usize =
+            handles.into_iter().map(|h| usize::from(h.join().unwrap())).sum();
+        assert_eq!(builds, 1, "exactly one thread built; the rest were served");
+        let s = store.stats();
+        assert_eq!(s.theta_entries, 1);
+        assert_eq!(s.setups, 2, "base + one single-flighted family build");
+    }
+
+    #[test]
+    fn byte_pressure_sheds_theta_entries_before_sessions() {
+        let (k, xa, _) = dataset(16, 44);
+        let one = SpectralGp::fit(k, xa.clone()).unwrap().setup_bytes();
+        // room for the session plus roughly one family entry
+        let store = SessionStore::new(8, 2 * one + one / 2);
+        let (sess, _) = store.create(k, xa).unwrap();
+        let t1 = optim::quantize_theta(0.5, ThetaDomain::Continuous);
+        let t2 = optim::quantize_theta(5.0, ThetaDomain::Continuous);
+        store.theta_setup(sess.id, t1).unwrap();
+        store.theta_setup(sess.id, t2).unwrap();
+        let s = store.stats();
+        assert_eq!(s.sessions, 1, "the session itself survives byte pressure");
+        assert_eq!(s.theta_entries, 1, "LRU family entry was shed");
+        assert_eq!(s.theta_evictions, 1);
+        assert!(s.bytes <= 2 * one + one / 2);
+        // the shed theta rebuilds on demand
+        let (_, built) = store.theta_setup(sess.id, t1).unwrap();
+        assert!(built);
+    }
+
+    #[test]
+    fn drop_and_update_purge_family_entries() {
+        let store = SessionStore::new(8, usize::MAX);
+        let mut rng = crate::util::rng::Rng::new(45);
+        let base = Matrix::from_fn(16, 2, |_, _| rng.normal());
+        let extra = Matrix::from_fn(2, 2, |_, _| rng.normal());
+        let k = Kernel::Rbf { xi2: 2.0 };
+        let (sess, _) = store.create(k, base).unwrap();
+        let theta = optim::quantize_theta(0.9, ThetaDomain::Continuous);
+        store.theta_setup(sess.id, theta).unwrap();
+        assert_eq!(store.stats().theta_entries, 1);
+
+        // streaming growth invalidates the family (old-Gram decompositions)
+        store.update(sess.id, &extra).unwrap();
+        let s = store.stats();
+        assert_eq!(s.theta_entries, 0);
+        assert_eq!(s.theta_evictions, 0, "invalidation is not pressure");
+        // rebuilt entries decompose the *grown* dataset
+        let (gp, built) = store.theta_setup(sess.id, theta).unwrap();
+        assert!(built);
+        assert_eq!(gp.n(), 18);
+
+        // explicit drop releases the family's bytes with the session
+        assert!(store.drop_session(sess.id));
+        let s = store.stats();
+        assert_eq!((s.theta_entries, s.bytes), (0, 0));
+    }
+
+    #[test]
+    fn tune_theta_warm_sweep_is_bitwise_cold() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, ys) = dataset(24, 47);
+        let (sess, _) = store.create(k, x).unwrap();
+        let mut req = ThetaTuneRequest::new(sess.id, ys);
+        req.theta_range = (0.2, 10.0);
+        req.outer_iters = 12;
+        req.inner_grid = 5;
+        req.objective = ObjectiveKind::Evidence;
+
+        let cold = tune_theta(&store, &req).unwrap();
+        assert!(cold.setups_built > 0);
+        let setups_after_cold = store.stats().setups;
+
+        let warm = tune_theta(&store, &req).unwrap();
+        assert_eq!(warm.setups_built, 0, "warm sweep builds nothing");
+        let s = store.stats();
+        assert_eq!(s.setups, setups_after_cold, "setups stay flat");
+        assert!(s.theta_hits > 0);
+        for (a, b) in cold.outputs.iter().zip(&warm.outputs) {
+            assert_eq!(a.theta.to_bits(), b.theta.to_bits());
+            assert_eq!(a.hp, b.hp);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.distinct_thetas, b.distinct_thetas);
+        }
+    }
+
+    #[test]
+    fn tune_theta_rejects_bad_requests() {
+        let store = SessionStore::new(8, usize::MAX);
+        let (k, x, ys) = dataset(12, 49);
+        let (sess, _) = store.create(k, x.clone()).unwrap();
+        // unknown session
+        assert!(tune_theta(&store, &ThetaTuneRequest::new(999, ys.clone())).is_err());
+        // output length mismatch
+        let mut bad = ys.clone();
+        bad[0].pop();
+        assert!(tune_theta(&store, &ThetaTuneRequest::new(sess.id, bad)).is_err());
+        // inverted range
+        let mut req = ThetaTuneRequest::new(sess.id, ys.clone());
+        req.theta_range = (10.0, 0.1);
+        assert!(tune_theta(&store, &req).is_err());
+        // fixed family has no theta
+        let (lin, _) = store.create(Kernel::Linear, x).unwrap();
+        assert!(tune_theta(&store, &ThetaTuneRequest::new(lin.id, ys)).is_err());
     }
 }

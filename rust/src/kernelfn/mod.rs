@@ -15,6 +15,20 @@ use crate::util::threadpool;
 /// cost well under 1% of each worker's share).
 const PAR_GRAIN_EVALS: usize = 4096;
 
+/// The search space of a kernel family's tunable hyperparameter `theta`
+/// (see [`Kernel::with_theta`] / [`Kernel::theta_domain`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThetaDomain {
+    /// A positive real (RBF bandwidth, Matérn length-scale): continuous
+    /// line/bracket searches apply.
+    Continuous,
+    /// An integer >= 1 (polynomial degree): continuous probes round and
+    /// alias — search must sweep the discrete values instead.
+    Integer,
+    /// No tunable theta (linear kernel).
+    Fixed,
+}
+
 /// A positive-definite kernel function `K(x, y)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
@@ -69,13 +83,36 @@ impl Kernel {
     }
 
     /// Replace the tunable kernel hyperparameter (Algorithm 1's `theta`).
+    ///
+    /// `Polynomial` is a **discrete** family: the continuous `theta` is
+    /// rounded to the nearest integer degree (clamped to >= 1, non-finite
+    /// inputs clamp to 1), so distinct continuous probes closer than 0.5
+    /// alias to the *same* kernel.  A continuous line search over a
+    /// polynomial theta therefore re-scores identical setups; use
+    /// [`Kernel::theta_domain`] to pick a discrete sweep instead (the
+    /// theta-plane engine in `optim::two_step` does this automatically).
     pub fn with_theta(&self, theta: f64) -> Kernel {
         match *self {
             Kernel::Rbf { .. } => Kernel::Rbf { xi2: theta },
-            Kernel::Polynomial { .. } => Kernel::Polynomial { degree: theta.round().max(1.0) as u32 },
+            Kernel::Polynomial { .. } => {
+                let degree = if theta.is_finite() { theta.round().max(1.0) as u32 } else { 1 };
+                Kernel::Polynomial { degree }
+            }
             Kernel::Linear => Kernel::Linear,
             Kernel::Matern32 { .. } => Kernel::Matern32 { ell: theta },
             Kernel::Matern52 { .. } => Kernel::Matern52 { ell: theta },
+        }
+    }
+
+    /// What kind of parameter Algorithm 1's outer search moves for this
+    /// family — the family-awareness hook of the theta-plane engine.
+    pub fn theta_domain(&self) -> ThetaDomain {
+        match *self {
+            Kernel::Rbf { .. } | Kernel::Matern32 { .. } | Kernel::Matern52 { .. } => {
+                ThetaDomain::Continuous
+            }
+            Kernel::Polynomial { .. } => ThetaDomain::Integer,
+            Kernel::Linear => ThetaDomain::Fixed,
         }
     }
 
@@ -276,5 +313,27 @@ mod tests {
     fn with_theta_roundtrip() {
         let k = Kernel::Rbf { xi2: 1.0 }.with_theta(3.5);
         assert_eq!(k.theta(), Some(3.5));
+    }
+
+    #[test]
+    fn with_theta_polynomial_rounds_and_guards() {
+        let p = Kernel::Polynomial { degree: 2 };
+        // continuous probes alias to the nearest integer degree
+        assert_eq!(p.with_theta(2.9), Kernel::Polynomial { degree: 3 });
+        assert_eq!(p.with_theta(3.2), Kernel::Polynomial { degree: 3 });
+        // guarded: never below degree 1, non-finite clamps to 1
+        assert_eq!(p.with_theta(0.1), Kernel::Polynomial { degree: 1 });
+        assert_eq!(p.with_theta(-4.0), Kernel::Polynomial { degree: 1 });
+        assert_eq!(p.with_theta(f64::NAN), Kernel::Polynomial { degree: 1 });
+        assert_eq!(p.with_theta(f64::INFINITY), Kernel::Polynomial { degree: 1 });
+    }
+
+    #[test]
+    fn theta_domains_per_family() {
+        assert_eq!(Kernel::Rbf { xi2: 1.0 }.theta_domain(), ThetaDomain::Continuous);
+        assert_eq!(Kernel::Matern32 { ell: 1.0 }.theta_domain(), ThetaDomain::Continuous);
+        assert_eq!(Kernel::Matern52 { ell: 1.0 }.theta_domain(), ThetaDomain::Continuous);
+        assert_eq!(Kernel::Polynomial { degree: 2 }.theta_domain(), ThetaDomain::Integer);
+        assert_eq!(Kernel::Linear.theta_domain(), ThetaDomain::Fixed);
     }
 }

@@ -7,9 +7,10 @@ use anyhow::{anyhow, Result};
 use gpml::coordinator::{
     client::Client,
     server::{Server, ServerOptions},
-    session::SessionTuneRequest,
+    session::{SessionTuneRequest, ThetaTuneRequest},
     Backend, Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest,
 };
+use gpml::optim::ThetaSearch;
 use gpml::data;
 use gpml::kernelfn::{self, Kernel};
 use gpml::runtime::{default_artifact_dir, PjrtRuntime};
@@ -36,6 +37,9 @@ USAGE:
                                       N pool workers serve pure-rust jobs
   gpml client --addr <host:port> --data <csv> [tune options]
               [--session] [--append <csv>] [--stats]
+              [--tune-theta] [--theta-min 0.01] [--theta-max 100]
+              [--outer 20] [--theta-search wavefront|golden] [--wavefront 8]
+              [--inner-grid 9]
                                       submit a tuning job to a server;
                                       --session creates/reuses a server-side
                                       session first (warm requests skip the
@@ -43,7 +47,13 @@ USAGE:
                                       observations into the session via
                                       update_session (rank-one refresh)
                                       before tuning, --stats prints cache
-                                      statistics (incl. the updates counter)
+                                      statistics (incl. the theta_* family-
+                                      cache counters), --tune-theta runs
+                                      Algorithm 1 over the kernel theta
+                                      through the server's eigen-family
+                                      cache (parallel outer wavefronts;
+                                      repeat sweeps are warm and bitwise
+                                      identical; requires --session)
   gpml bench-gate --current <BENCH_x.json> --baseline <json> [--tolerance 1.25]
                                       CI perf gate: fail if any series'
                                       median regresses past tolerance
@@ -234,7 +244,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: newline-delimited JSON (docs/PROTOCOL.md); ops: ping | info | stats | tune \
-         | create_session | update_session | drop_session | evaluate | predict | shutdown"
+         | tune_theta | create_session | update_session | drop_session | evaluate | predict \
+         | shutdown"
     );
     // block forever: the acceptor thread owns the listener
     loop {
@@ -293,6 +304,31 @@ fn cmd_client(args: &Args) -> Result<()> {
                 y.extend_from_slice(extra_y);
             }
         }
+        if args.flag("tune-theta") {
+            // Algorithm 1 over the kernel theta, server-side: outer
+            // candidates fan across the worker pool and every setup
+            // lands in the eigen-family cache, so re-running this exact
+            // command is warm (`setups_built: 0`)
+            let mut treq = ThetaTuneRequest::new(id, ys);
+            treq.theta_range = (
+                args.get_f64("theta-min", treq.theta_range.0).map_err(|e| anyhow!(e))?,
+                args.get_f64("theta-max", treq.theta_range.1).map_err(|e| anyhow!(e))?,
+            );
+            treq.outer_iters = args.get_usize("outer", treq.outer_iters).map_err(|e| anyhow!(e))?;
+            treq.search = match args.get_or("theta-search", "wavefront") {
+                "wavefront" => ThetaSearch::Wavefront {
+                    width: args.get_usize("wavefront", 0).map_err(|e| anyhow!(e))?,
+                },
+                "golden" => ThetaSearch::Golden,
+                other => return Err(anyhow!("unknown theta search '{other}' (wavefront|golden)")),
+            };
+            treq.inner_grid =
+                args.get_usize("inner-grid", treq.inner_grid).map_err(|e| anyhow!(e))?;
+            treq.objective = req.objective;
+            treq.threads = req.threads;
+            println!("{}", client.tune_theta(&treq)?);
+            return Ok(());
+        }
         let mut sreq = SessionTuneRequest::new(id, ys);
         sreq.strategy = req.strategy;
         sreq.objective = req.objective;
@@ -300,6 +336,9 @@ fn cmd_client(args: &Args) -> Result<()> {
         sreq.threads = req.threads;
         println!("{}", client.tune_session(&sreq)?);
         return Ok(());
+    }
+    if args.flag("tune-theta") {
+        return Err(anyhow!("--tune-theta sweeps a server-side session; add --session"));
     }
     let res = client.tune(&req)?;
     println!("{res}");

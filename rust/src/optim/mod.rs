@@ -40,7 +40,10 @@ pub use grid::grid_search;
 pub use neldermead::nelder_mead;
 pub use newton::{newton_refine, NewtonOptions, NewtonResult};
 pub use pso::{pso_search, PsoOptions};
-pub use two_step::{two_step_tune, TwoStepOptions, TwoStepResult};
+pub use two_step::{
+    quantize_theta, theta_tune, two_step_tune, FnProvider, SetupProvider, ThetaSearch,
+    TwoStepOptions, TwoStepResult, DEFAULT_WAVEFRONT_WIDTH, MAX_DISCRETE_CANDIDATES,
+};
 
 use crate::spectral::{Evaluation, HyperParams};
 use crate::util::threadpool;

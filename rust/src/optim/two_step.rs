@@ -1,21 +1,133 @@
-//! Algorithm 1 (paper §2.2): two-step tuning when the kernel itself has a
-//! hyperparameter `theta` (RBF bandwidth, Matérn length-scale, ...).
+//! Algorithm 1 (paper §2.2) as a **theta-plane tuning engine**: two-step
+//! tuning when the kernel itself has a hyperparameter `theta` (RBF
+//! bandwidth, Matérn length-scale, polynomial degree, ...).
 //!
 //! The outer loop moves `theta` — each move costs a fresh Gram matrix and
 //! eigendecomposition, O(N^3) — while the inner loop tunes `(sigma2,
-//! lambda2)` at O(N) per iterate using the spectral identities.  The outer
-//! stage here is a golden-section search on log10(theta) (a "conventional
-//! line search on the expensive hyperparameter", as the paper puts it).
+//! lambda2)` at O(N) per iterate using the spectral identities.  This
+//! module factors that outer loop into three pieces (DESIGN.md §9):
+//!
+//! - [`SetupProvider`] — *where setups come from*: get-or-build the
+//!   eigendecomposed setup at a theta.  [`FnProvider`] builds fresh every
+//!   time (the cold path); the coordinator's session store implements the
+//!   trait over its eigen-family cache, so a warm sweep builds nothing.
+//! - **Theta quantization** ([`quantize_theta`]) — probes are snapped to
+//!   a fixed grid (1e-6 decades for continuous families, integers for
+//!   discrete ones) *before* the setup is built, so two probes closer
+//!   than the grid alias to one setup, cache keys are exact bit
+//!   patterns, and warm re-runs replay the identical computation.
+//! - [`ThetaSearch`] — *how theta moves*: the legacy serial
+//!   golden-section line search, or a **parallel bracketing wavefront**
+//!   that evaluates a whole front of candidates concurrently across the
+//!   thread pool (each candidate's O(N^3) setup is independent — the
+//!   largest un-parallelized wall-clock cost in the repo before this
+//!   engine).  Discrete families ([`ThetaDomain::Integer`]) ignore the
+//!   requested search and sweep the integer degrees in one wavefront:
+//!   a continuous bracket over a rounding family aliases probes to
+//!   identical scores and learns nothing between them (see
+//!   [`Kernel::with_theta`]).
+//!
+//! Determinism: the candidate set is a function of `(theta_range,
+//! outer_iters, search)` only — wavefront width defaults to a fixed
+//! constant, never the pool width — and every candidate's setup is
+//! built with the pool width pinned to 1 (the exact serial path), so
+//! each setup is *canonical*: results are bit-identical across thread
+//! counts and across cold/warm runs, even when a cached entry built
+//! under one request width is served to a client using another (the
+//! suite in `rust/tests/theta_engine.rs` gates this).  Parallelism
+//! comes from evaluating candidates concurrently, not from inside a
+//! setup.
+//!
+//! [`Kernel::with_theta`]: crate::kernelfn::Kernel::with_theta
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::{newton_refine, Bounds, NewtonOptions, Objective};
+use crate::kernelfn::ThetaDomain;
 use crate::spectral::HyperParams;
+use crate::util::threadpool;
+
+/// Quantization grid for continuous thetas: probes are snapped to
+/// `1/THETA_QUANTA_PER_DECADE` decades, giving 1e6 distinct setups per
+/// decade — far below any optimizer's meaningful resolution, and exact
+/// enough that a cache keyed by the quantized value's bit pattern never
+/// splits one logical probe across two entries.
+pub const THETA_QUANTA_PER_DECADE: f64 = 1e6;
+
+/// Candidates per wavefront round when [`ThetaSearch::Wavefront`] is
+/// asked for width 0 ("auto").  Deliberately a constant rather than the
+/// pool width: the probe set must not depend on how many threads happen
+/// to be available, or cold/warm and cross-width results would diverge.
+pub const DEFAULT_WAVEFRONT_WIDTH: usize = 8;
+
+/// Hard cap on candidates in a discrete-family sweep, whatever the
+/// requested outer budget: each candidate costs an O(N^3) setup, and
+/// both the degree range and the budget arrive over the wire.
+pub const MAX_DISCRETE_CANDIDATES: u64 = 4096;
+
+/// Hard cap on [`ThetaSearch::Wavefront`] width (the width rides in a
+/// wire request, and the first round is evaluated before any budget
+/// check can apply — an unclamped width would size allocations and the
+/// O(N^3)-per-candidate fan-out directly from attacker input).
+pub const MAX_WAVEFRONT_WIDTH: usize = 64;
+
+/// Snap `theta` to the engine's canonical grid for its domain.  Every
+/// probe is quantized before the setup is built, so this function *is*
+/// the cache-key contract shared by the engine, [`FnProvider`], and the
+/// coordinator's eigen-family cache.
+pub fn quantize_theta(theta: f64, domain: ThetaDomain) -> f64 {
+    match domain {
+        ThetaDomain::Integer => {
+            if theta.is_finite() {
+                theta.round().max(1.0)
+            } else {
+                1.0
+            }
+        }
+        _ => {
+            let q = THETA_QUANTA_PER_DECADE;
+            10f64.powf((theta.log10() * q).round() / q)
+        }
+    }
+}
+
+/// Outer-search strategy over theta (continuous families only; discrete
+/// families always sweep — see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThetaSearch {
+    /// Serial golden-section line search on log10(theta) — the paper's
+    /// "conventional line search on the expensive hyperparameter".
+    Golden,
+    /// Parallel bracketing wavefronts: each round evaluates `width`
+    /// evenly log-spaced candidates across the current bracket
+    /// concurrently, then shrinks the bracket to the best candidate's
+    /// neighbors.  `width: 0` means [`DEFAULT_WAVEFRONT_WIDTH`]; other
+    /// values are clamped to `4..=`[`MAX_WAVEFRONT_WIDTH`] (below 4 the
+    /// best-candidate-neighbor bracket cannot shrink — at width 3 an
+    /// interior best spans the whole bracket — and the width is
+    /// wire-reachable, so the top end is capped too).
+    Wavefront { width: usize },
+}
+
+impl Default for ThetaSearch {
+    fn default() -> Self {
+        ThetaSearch::Golden
+    }
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct TwoStepOptions {
-    /// log10 bounds for theta.
+    /// Bounds for theta (raw, not log).
     pub theta_range: (f64, f64),
-    /// Outer golden-section iterations (each costs O(N^3)).
+    /// Outer evaluation budget.  Golden: probe count (legacy iteration
+    /// semantics).  Wavefront: total distinct candidates across rounds,
+    /// floored at the wavefront width — the first round always completes,
+    /// so the effective budget is `max(outer_iters, width)`.
+    /// Discrete sweep: maximum degrees probed (evenly thinned past it).
     pub outer_iters: usize,
+    /// How the outer stage moves theta.
+    pub search: ThetaSearch,
     /// Inner (sigma2, lambda2) bounds.
     pub bounds: Bounds,
     /// Inner coarse-grid resolution before Newton refinement.
@@ -28,6 +140,7 @@ impl Default for TwoStepOptions {
         TwoStepOptions {
             theta_range: (1e-2, 1e2),
             outer_iters: 20,
+            search: ThetaSearch::default(),
             bounds: Bounds::default(),
             inner_grid: 9,
             newton: NewtonOptions::default(),
@@ -40,83 +153,343 @@ pub struct TwoStepResult {
     pub theta: f64,
     pub hp: HyperParams,
     pub score: f64,
-    /// Number of O(N^3) eigendecompositions spent (outer evaluations).
+    /// O(N^3) setups **actually built** by the provider for this run —
+    /// not iterations: probes that aliased to an already-evaluated
+    /// quantized theta, and cache hits on a warm provider, do not count.
     pub outer_evals: usize,
-    /// Total O(N) inner evaluations across all outer points.
+    /// Distinct quantized thetas whose inner problem was solved
+    /// (>= `outer_evals`; the gap is exactly the cache/memo hits).
+    pub distinct_thetas: usize,
+    /// Total O(N) inner evaluations across all distinct outer points.
     pub inner_evals: usize,
 }
 
-/// Inner solve: coarse grid + Newton on a fresh objective.
+/// Get-or-build the eigendecomposed setup for a (quantized) theta and
+/// hand back the O(N) inner objective over it.
+///
+/// `setup` takes `&self` and must be callable concurrently: the
+/// wavefront search fans one call per candidate across the thread pool.
+/// Implementations count the setups they *really* built (vs served from
+/// a cache) so [`TwoStepResult::outer_evals`] stays truthful.
+pub trait SetupProvider: Sync {
+    type Obj: Objective + Send;
+
+    /// The theta domain of the family this provider builds (drives the
+    /// family-aware search dispatch).
+    fn domain(&self) -> ThetaDomain {
+        ThetaDomain::Continuous
+    }
+
+    /// Build or fetch the setup at `theta` (already quantized by the
+    /// engine via [`quantize_theta`]).
+    fn setup(&self, theta: f64) -> Result<Self::Obj, String>;
+
+    /// Cumulative count of setups actually built (not cache hits).
+    fn setups_built(&self) -> usize;
+}
+
+/// [`SetupProvider`] over a plain closure: builds a fresh setup per
+/// distinct quantized theta — the cold, cache-less path used by
+/// [`two_step_tune`], the benches, and tests.
+pub struct FnProvider<F> {
+    f: F,
+    domain: ThetaDomain,
+    built: AtomicUsize,
+}
+
+impl<F> FnProvider<F> {
+    /// Provider over a continuous theta family.
+    pub fn new(f: F) -> Self {
+        FnProvider::with_domain(f, ThetaDomain::Continuous)
+    }
+
+    /// Provider with an explicit domain (e.g. [`ThetaDomain::Integer`]
+    /// for a polynomial-degree sweep).
+    pub fn with_domain(f: F, domain: ThetaDomain) -> Self {
+        FnProvider { f, domain, built: AtomicUsize::new(0) }
+    }
+}
+
+impl<O, F> SetupProvider for FnProvider<F>
+where
+    O: Objective + Send,
+    F: Fn(f64) -> O + Sync,
+{
+    type Obj = O;
+
+    fn domain(&self) -> ThetaDomain {
+        self.domain
+    }
+
+    fn setup(&self, theta: f64) -> Result<O, String> {
+        self.built.fetch_add(1, Ordering::Relaxed);
+        Ok((self.f)(theta))
+    }
+
+    fn setups_built(&self) -> usize {
+        self.built.load(Ordering::Relaxed)
+    }
+}
+
+/// Inner solve: coarse grid + Newton on a fresh objective (unchanged
+/// from the pre-engine implementation, so scores are bit-compatible).
 fn inner_tune<O: Objective>(obj: &mut O, opt: &TwoStepOptions) -> (HyperParams, f64, usize) {
     let coarse = super::grid_search(obj, opt.bounds, opt.inner_grid, 64);
     let refined = newton_refine(obj, coarse.hp, opt.bounds, opt.newton);
     (refined.hp, refined.score, coarse.evals + refined.evals)
 }
 
-/// Run Algorithm 1.  `make_objective(theta)` pays the O(N^3) overhead
-/// (Gram + eigendecomposition at that kernel hyperparameter) and returns
-/// the O(N) objective for the inner loop.
-pub fn two_step_tune<O, F>(mut make_objective: F, opt: TwoStepOptions) -> TwoStepResult
-where
-    O: Objective,
-    F: FnMut(f64) -> O,
-{
-    let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
-    let (mut lo, mut hi) = (opt.theta_range.0.log10(), opt.theta_range.1.log10());
-    assert!(lo < hi, "theta range must be increasing");
+/// Engine state shared by the search strategies: the memo of solved
+/// thetas (keyed by quantized bit pattern) and the running best.
+struct Engine<'a, P: SetupProvider> {
+    provider: &'a P,
+    opt: &'a TwoStepOptions,
+    /// quantized-theta bits -> (inner hp, inner score)
+    memo: HashMap<u64, (HyperParams, f64)>,
+    best_theta: f64,
+    best_hp: HyperParams,
+    best_score: f64,
+    inner_evals: usize,
+}
 
-    let mut outer_evals = 0usize;
-    let mut inner_evals = 0usize;
-    let mut best = TwoStepResult {
-        theta: f64::NAN,
-        hp: HyperParams::new(1.0, 1.0),
-        score: f64::INFINITY,
-        outer_evals: 0,
-        inner_evals: 0,
-    };
-
-    // profile of theta -> best inner score
-    let mut eval_theta = |logt: f64, outer: &mut usize, inner: &mut usize, best: &mut TwoStepResult| -> f64 {
-        let theta = 10f64.powf(logt);
-        let mut obj = make_objective(theta);
-        *outer += 1;
-        let (hp, score, ev) = inner_tune(&mut obj, &opt);
-        *inner += ev;
-        if score < best.score {
-            best.score = score;
-            best.hp = hp;
-            best.theta = theta;
-        }
-        score
-    };
-
-    let mut x1 = hi - inv_phi * (hi - lo);
-    let mut x2 = lo + inv_phi * (hi - lo);
-    let mut f1 = eval_theta(x1, &mut outer_evals, &mut inner_evals, &mut best);
-    let mut f2 = eval_theta(x2, &mut outer_evals, &mut inner_evals, &mut best);
-
-    for _ in 0..opt.outer_iters.saturating_sub(2) {
-        if f1 < f2 {
-            hi = x2;
-            x2 = x1;
-            f2 = f1;
-            x1 = hi - inv_phi * (hi - lo);
-            f1 = eval_theta(x1, &mut outer_evals, &mut inner_evals, &mut best);
-        } else {
-            lo = x1;
-            x1 = x2;
-            f1 = f2;
-            x2 = lo + inv_phi * (hi - lo);
-            f2 = eval_theta(x2, &mut outer_evals, &mut inner_evals, &mut best);
-        }
-        if hi - lo < 1e-4 {
-            break;
+impl<'a, P: SetupProvider> Engine<'a, P> {
+    fn new(provider: &'a P, opt: &'a TwoStepOptions) -> Self {
+        Engine {
+            provider,
+            opt,
+            memo: HashMap::new(),
+            best_theta: f64::NAN,
+            best_hp: HyperParams::new(1.0, 1.0),
+            best_score: f64::INFINITY,
+            inner_evals: 0,
         }
     }
 
-    best.outer_evals = outer_evals;
-    best.inner_evals = inner_evals;
-    best
+    /// The candidates not yet memoized, deduped, in first-seen order —
+    /// the single definition of "what a wave will actually evaluate",
+    /// shared by [`Engine::eval_wave`] and the wavefront budget check so
+    /// the two can never disagree.
+    fn fresh_of(&self, thetas: &[f64]) -> Vec<f64> {
+        let mut fresh: Vec<f64> = Vec::new();
+        for &t in thetas {
+            let k = t.to_bits();
+            if !self.memo.contains_key(&k) && !fresh.iter().any(|f| f.to_bits() == k) {
+                fresh.push(t);
+            }
+        }
+        fresh
+    }
+
+    /// Evaluate one wavefront of (already quantized) candidates.  Thetas
+    /// already memoized are free; the fresh ones fan out across the pool
+    /// — each worker pays the provider's setup (O(N^3) when cold) plus
+    /// the O(N)-per-iterate inner tune.  Results merge in candidate
+    /// order, so ties and the running best are deterministic regardless
+    /// of which worker finished first.
+    fn eval_wave(&mut self, thetas: &[f64]) -> Result<(), String> {
+        let fresh = self.fresh_of(thetas);
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        let (provider, opt) = (self.provider, self.opt);
+        let results =
+            threadpool::par_map(&fresh, 1, |&t| -> Result<(HyperParams, f64, usize), String> {
+                // Pin the build itself to the exact serial path: inside a
+                // pool worker nested par_* calls inline anyway, but a
+                // 1-candidate wave (every golden probe) runs on the
+                // calling thread where the eigensolver would otherwise
+                // parallelize at the request width — whose block
+                // reductions differ from serial by O(eps).  Pinning makes
+                // every setup canonical, so cached entries serve
+                // identical bits to clients at any thread count.
+                let mut obj = threadpool::with_threads(1, || provider.setup(t))?;
+                Ok(inner_tune(&mut obj, opt))
+            });
+        for (&t, r) in fresh.iter().zip(results) {
+            let (hp, score, ev) = r?;
+            self.inner_evals += ev;
+            self.memo.insert(t.to_bits(), (hp, score));
+            if score < self.best_score {
+                self.best_score = score;
+                self.best_hp = hp;
+                self.best_theta = t;
+            }
+        }
+        Ok(())
+    }
+
+    fn score_of(&self, theta: f64) -> f64 {
+        self.memo[&theta.to_bits()].1
+    }
+
+    /// Serial golden-section on log10(theta) — the legacy outer stage,
+    /// now memoized: probes that alias to an already-solved quantized
+    /// theta re-read the score instead of rebuilding the setup, so the
+    /// bracket update can never stall on duplicated work.
+    fn golden(&mut self, tmin: f64, tmax: f64) -> Result<(), String> {
+        let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
+        let (mut lo, mut hi) = (tmin.log10(), tmax.log10());
+        let q = |logt: f64| quantize_theta(10f64.powf(logt), ThetaDomain::Continuous);
+
+        let mut x1 = hi - inv_phi * (hi - lo);
+        let mut x2 = lo + inv_phi * (hi - lo);
+        self.eval_wave(&[q(x1)])?;
+        let mut f1 = self.score_of(q(x1));
+        self.eval_wave(&[q(x2)])?;
+        let mut f2 = self.score_of(q(x2));
+
+        for _ in 0..self.opt.outer_iters.saturating_sub(2) {
+            if f1 < f2 {
+                hi = x2;
+                x2 = x1;
+                f2 = f1;
+                x1 = hi - inv_phi * (hi - lo);
+                self.eval_wave(&[q(x1)])?;
+                f1 = self.score_of(q(x1));
+            } else {
+                lo = x1;
+                x1 = x2;
+                f1 = f2;
+                x2 = lo + inv_phi * (hi - lo);
+                self.eval_wave(&[q(x2)])?;
+                f2 = self.score_of(q(x2));
+            }
+            if hi - lo < 1e-4 {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Parallel bracketing wavefronts: evaluate `width` evenly log-spaced
+    /// candidates over the bracket concurrently, shrink the bracket to
+    /// the best candidate's immediate neighbors, repeat.  The bracket
+    /// endpoints of round k+1 were candidates of round k, so each round
+    /// after the first costs at most `width - 2` fresh setups.  A round
+    /// that would push the distinct-candidate count past the outer
+    /// budget does not start, so `max(outer_iters, width)` is a hard
+    /// cap (the first round always completes — the budget cannot cut a
+    /// bracket below one full wave).
+    fn wavefront(&mut self, tmin: f64, tmax: f64, width: usize) -> Result<(), String> {
+        let width =
+            if width == 0 { DEFAULT_WAVEFRONT_WIDTH } else { width.clamp(4, MAX_WAVEFRONT_WIDTH) };
+        let budget = self.opt.outer_iters.max(width);
+        let (mut lo, mut hi) = (tmin.log10(), tmax.log10());
+        loop {
+            let logts: Vec<f64> = (0..width)
+                .map(|i| lo + (hi - lo) * i as f64 / (width - 1) as f64)
+                .collect();
+            let thetas: Vec<f64> = logts
+                .iter()
+                .map(|&lt| quantize_theta(10f64.powf(lt), ThetaDomain::Continuous))
+                .collect();
+            let fresh = self.fresh_of(&thetas).len();
+            if !self.memo.is_empty() && self.memo.len() + fresh > budget {
+                break;
+            }
+            self.eval_wave(&thetas)?;
+            // best candidate of this round (first index wins ties —
+            // deterministic because scores merge in candidate order)
+            let mut bi = 0;
+            for (i, &t) in thetas.iter().enumerate().skip(1) {
+                if self.score_of(t) < self.score_of(thetas[bi]) {
+                    bi = i;
+                }
+            }
+            let nlo = logts[bi.saturating_sub(1)];
+            let nhi = logts[(bi + 1).min(width - 1)];
+            if nhi - nlo >= hi - lo {
+                break; // no shrink possible (degenerate/quantized-out bracket)
+            }
+            lo = nlo;
+            hi = nhi;
+            if hi - lo < 1e-4 {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Discrete sweep for integer theta families: evaluate every integer
+    /// degree in range (evenly thinned down to the outer budget when the
+    /// range is huge) as a single parallel wavefront.
+    ///
+    /// Both ends are clamped against wire-reachable abuse: degrees above
+    /// `u32::MAX` are meaningless (`Kernel::with_theta` stores a `u32`),
+    /// and the candidate count is hard-capped at
+    /// [`MAX_DISCRETE_CANDIDATES`] regardless of the requested outer
+    /// budget — each candidate is an O(N^3) setup, so an unbounded cap
+    /// would let one request allocate/compute without limit.
+    fn discrete(&mut self, tmin: f64, tmax: f64) -> Result<(), String> {
+        let lo = tmin.ceil().max(1.0);
+        let hi = tmax.floor().min(u32::MAX as f64);
+        if hi < lo {
+            return Err(format!("theta range ({tmin}, {tmax}) contains no integer degree >= 1"));
+        }
+        let (lo, hi) = (lo as u64, hi as u64);
+        let count = hi - lo + 1;
+        let cap = (self.opt.outer_iters.max(2) as u64).min(MAX_DISCRETE_CANDIDATES);
+        let mut degs: Vec<u64> = if count <= cap {
+            (lo..=hi).collect()
+        } else {
+            // count <= 2^32 and i < cap <= 4096, so (count-1)*i < 2^44
+            (0..cap).map(|i| lo + (count - 1) * i / (cap - 1)).collect()
+        };
+        degs.dedup();
+        let thetas: Vec<f64> = degs.into_iter().map(|d| d as f64).collect();
+        self.eval_wave(&thetas)
+    }
+}
+
+/// Run Algorithm 1 through a [`SetupProvider`]: family-aware dispatch
+/// (continuous search vs discrete sweep), quantized memoized probes, and
+/// truthful setup accounting.  Errors surface provider failures
+/// (eigensolver non-convergence, a dead session) and invalid ranges.
+pub fn theta_tune<P: SetupProvider>(
+    provider: &P,
+    opt: &TwoStepOptions,
+) -> Result<TwoStepResult, String> {
+    let (tmin, tmax) = opt.theta_range;
+    if !(tmin.is_finite() && tmax.is_finite() && tmin > 0.0 && tmin < tmax) {
+        return Err(format!("theta range must be positive and increasing, got ({tmin}, {tmax})"));
+    }
+    let built_before = provider.setups_built();
+    let mut eng = Engine::new(provider, opt);
+    match provider.domain() {
+        ThetaDomain::Fixed => {
+            return Err("kernel family has no tunable theta".to_string());
+        }
+        ThetaDomain::Integer => eng.discrete(tmin, tmax)?,
+        ThetaDomain::Continuous => match opt.search {
+            ThetaSearch::Golden => eng.golden(tmin, tmax)?,
+            ThetaSearch::Wavefront { width } => eng.wavefront(tmin, tmax, width)?,
+        },
+    }
+    Ok(TwoStepResult {
+        theta: eng.best_theta,
+        hp: eng.best_hp,
+        score: eng.best_score,
+        outer_evals: provider.setups_built() - built_before,
+        distinct_thetas: eng.memo.len(),
+        inner_evals: eng.inner_evals,
+    })
+}
+
+/// Run Algorithm 1 over a closure.  `make_objective(theta)` pays the
+/// O(N^3) overhead (Gram + eigendecomposition at that kernel
+/// hyperparameter) and returns the O(N) objective for the inner loop.
+///
+/// Compatibility wrapper over [`theta_tune`] + [`FnProvider`]; the
+/// closure must be `Fn + Sync` because a wavefront search calls it from
+/// pool workers.  Panics on an invalid `theta_range` (the provider
+/// itself cannot fail).
+pub fn two_step_tune<O, F>(make_objective: F, opt: TwoStepOptions) -> TwoStepResult
+where
+    O: Objective + Send,
+    F: Fn(f64) -> O + Sync,
+{
+    let provider = FnProvider::new(make_objective);
+    theta_tune(&provider, &opt).expect("two_step_tune: invalid theta range")
 }
 
 #[cfg(test)]
@@ -142,20 +515,24 @@ mod tests {
         }
     }
 
-    #[test]
-    fn finds_outer_and_inner_optimum() {
-        let make = |theta: f64| ThetaBowl {
+    fn theta_bowl(theta: f64) -> ThetaBowl {
+        ThetaBowl {
             bowl: Bowl::new(0.5, 2.0),
             depth: (theta.ln() - 2f64.ln()).powi(2),
-        };
+        }
+    }
+
+    #[test]
+    fn finds_outer_and_inner_optimum() {
         let r = two_step_tune(
-            make,
+            theta_bowl,
             TwoStepOptions { outer_iters: 30, ..Default::default() },
         );
         assert!((r.theta.ln() - 2f64.ln()).abs() < 0.02, "theta={}", r.theta);
         assert!((r.hp.sigma2 - 0.5).abs() < 1e-3, "{:?}", r.hp);
         assert!((r.hp.lambda2 - 2.0).abs() < 1e-3, "{:?}", r.hp);
         assert!(r.outer_evals <= 30);
+        assert_eq!(r.outer_evals, r.distinct_thetas, "cold provider: one build per theta");
         assert!(r.inner_evals > r.outer_evals, "inner loop should dominate");
     }
 
@@ -168,5 +545,147 @@ mod tests {
         );
         assert!(r.outer_evals <= 5);
         assert!(r.score.is_finite());
+    }
+
+    #[test]
+    fn wavefront_matches_golden_optimum() {
+        let golden = two_step_tune(
+            theta_bowl,
+            TwoStepOptions { outer_iters: 24, ..Default::default() },
+        );
+        let wave = two_step_tune(
+            theta_bowl,
+            TwoStepOptions {
+                outer_iters: 64,
+                search: ThetaSearch::Wavefront { width: 0 },
+                ..Default::default()
+            },
+        );
+        assert!((wave.theta.ln() - 2f64.ln()).abs() < 0.02, "theta={}", wave.theta);
+        assert!(
+            wave.score <= golden.score + 1e-6 * golden.score.abs().max(1.0),
+            "wavefront {} vs golden {}",
+            wave.score,
+            golden.score
+        );
+        assert!(wave.outer_evals <= 64);
+    }
+
+    #[test]
+    fn wavefront_is_deterministic_across_pool_widths() {
+        let opt = TwoStepOptions {
+            outer_iters: 30,
+            search: ThetaSearch::Wavefront { width: 5 },
+            ..Default::default()
+        };
+        let a = crate::util::threadpool::with_threads(1, || two_step_tune(theta_bowl, opt));
+        let b = crate::util::threadpool::with_threads(4, || two_step_tune(theta_bowl, opt));
+        assert_eq!(a.theta.to_bits(), b.theta.to_bits());
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(a.hp, b.hp);
+        assert_eq!(a.outer_evals, b.outer_evals);
+    }
+
+    #[test]
+    fn discrete_domain_sweeps_integer_degrees() {
+        // best integer degree is 3 (depth minimized at theta = pi)
+        let make = |theta: f64| ThetaBowl {
+            bowl: Bowl::new(1.0, 1.0),
+            depth: (theta - std::f64::consts::PI).powi(2),
+        };
+        let provider = FnProvider::with_domain(make, ThetaDomain::Integer);
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions { theta_range: (1.0, 6.0), outer_iters: 10, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(r.theta, 3.0);
+        assert_eq!(r.outer_evals, 6, "degrees 1..=6, one setup each");
+        assert_eq!(r.distinct_thetas, 6);
+    }
+
+    #[test]
+    fn discrete_sweep_thins_to_outer_budget() {
+        let make = |theta: f64| ThetaBowl { bowl: Bowl::new(1.0, 1.0), depth: theta };
+        let provider = FnProvider::with_domain(make, ThetaDomain::Integer);
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions { theta_range: (1.0, 100.0), outer_iters: 8, ..Default::default() },
+        )
+        .unwrap();
+        assert!(r.outer_evals <= 8, "thinned to the outer budget, got {}", r.outer_evals);
+        assert_eq!(r.theta, 1.0, "monotone depth: smallest degree wins");
+    }
+
+    #[test]
+    fn wavefront_width_is_clamped() {
+        // width rides in a wire request; the first round is evaluated
+        // before the budget can apply, so it must be hard-capped
+        let provider = FnProvider::new(theta_bowl);
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions {
+                outer_iters: 4,
+                search: ThetaSearch::Wavefront { width: 1_000_000 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            r.distinct_thetas <= MAX_WAVEFRONT_WIDTH,
+            "width must clamp to {MAX_WAVEFRONT_WIDTH}, probed {}",
+            r.distinct_thetas
+        );
+        assert!(r.score.is_finite());
+    }
+
+    #[test]
+    fn aliasing_probes_build_one_setup() {
+        // a range so narrow every continuous probe quantizes to ~the same
+        // theta: the memo must dedupe instead of rebuilding
+        let provider = FnProvider::new(theta_bowl);
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions {
+                theta_range: (2.0, 2.0 * (1.0 + 1e-9)),
+                outer_iters: 12,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            r.outer_evals <= 2,
+            "12 aliasing probes must not build 12 setups, built {}",
+            r.outer_evals
+        );
+        assert_eq!(r.outer_evals, r.distinct_thetas);
+        assert!(r.score.is_finite());
+    }
+
+    #[test]
+    fn invalid_inputs_error() {
+        let provider = FnProvider::new(theta_bowl);
+        let bad = TwoStepOptions { theta_range: (5.0, 1.0), ..Default::default() };
+        assert!(theta_tune(&provider, &bad).is_err());
+        let neg = TwoStepOptions { theta_range: (-1.0, 1.0), ..Default::default() };
+        assert!(theta_tune(&provider, &neg).is_err());
+        let fixed = FnProvider::with_domain(theta_bowl, ThetaDomain::Fixed);
+        assert!(theta_tune(&fixed, &TwoStepOptions::default()).is_err());
+        // integer range with no admissible degree
+        let int = FnProvider::with_domain(theta_bowl, ThetaDomain::Integer);
+        let empty = TwoStepOptions { theta_range: (0.1, 0.9), ..Default::default() };
+        assert!(theta_tune(&int, &empty).is_err());
+    }
+
+    #[test]
+    fn quantize_theta_is_idempotent_and_monotone() {
+        for &t in &[1e-3, 0.05, 1.0, 2.0, 3.7, 50.0, 1e4] {
+            let q = quantize_theta(t, ThetaDomain::Continuous);
+            assert_eq!(q.to_bits(), quantize_theta(q, ThetaDomain::Continuous).to_bits());
+            assert!((q / t - 1.0).abs() < 1e-5, "{t} -> {q}");
+        }
+        assert_eq!(quantize_theta(2.9, ThetaDomain::Integer), 3.0);
+        assert_eq!(quantize_theta(0.2, ThetaDomain::Integer), 1.0);
+        assert_eq!(quantize_theta(f64::NAN, ThetaDomain::Integer), 1.0);
     }
 }

@@ -215,6 +215,15 @@ impl SpectralGp {
         self.setup.updates
     }
 
+    /// True when both handles read the *same* shared setup (`Arc`
+    /// identity, not value equality).  The session store uses this to
+    /// detect that a session's dataset was replaced (streaming update /
+    /// drop + recreate) while a derived computation ran outside its
+    /// lock.
+    pub fn shares_setup(&self, other: &SpectralGp) -> bool {
+        Arc::ptr_eq(&self.setup, &other.setup)
+    }
+
     pub fn n(&self) -> usize {
         self.setup.x.rows()
     }
@@ -537,6 +546,17 @@ mod tests {
         let (inc, outcome) = gp.extend_with(&two, policy).unwrap();
         assert_eq!(outcome, ExtendOutcome::Incremental);
         assert_eq!(inc.updates(), 4);
+    }
+
+    #[test]
+    fn shares_setup_tracks_arc_identity() {
+        let (gp, _) = setup(10, 29);
+        let clone = gp.clone();
+        assert!(gp.shares_setup(&clone), "clones share the setup");
+        let (grown, _) = gp.extend(&Matrix::from_fn(1, 3, |_, _| 0.1)).unwrap();
+        assert!(!gp.shares_setup(&grown), "extend produces a fresh setup");
+        let refit = SpectralGp::fit(gp.kernel(), gp.x().clone()).unwrap();
+        assert!(!gp.shares_setup(&refit), "identical values, different setup");
     }
 
     #[test]

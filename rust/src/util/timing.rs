@@ -17,6 +17,14 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Summarize a raw sample vector (per-repetition times in
+    /// microseconds) — the shared percentile computation behind
+    /// [`measure`] and the bench binaries that time repetitions
+    /// themselves.
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        stats_of(&mut samples)
+    }
+
     /// JSON object for the machine-readable bench trajectory
     /// (`BENCH_<name>.json`; written via the in-repo `util::json`).
     pub fn to_json(&self) -> crate::util::json::Json {

@@ -1,0 +1,292 @@
+//! Integration: the theta-plane tuning engine (ISSUE 5) — warm/cold
+//! differential identity through the eigen-family cache, the
+//! wavefront-vs-golden property sweep, cross-width determinism, and the
+//! `tune_theta` wire op end to end.
+
+use gpml::coordinator::client::Client;
+use gpml::coordinator::server::Server;
+use gpml::coordinator::session::{tune_theta, SessionStore, ThetaTuneRequest};
+use gpml::coordinator::{Coordinator, ObjectiveKind};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::kernelfn::Kernel;
+use gpml::optim::{theta_tune, FnProvider, ThetaSearch, TwoStepOptions};
+use gpml::spectral::SpectralGp;
+use gpml::util::json::Json;
+
+fn dataset(n: usize, seed: u64, kernel: Kernel) -> (gpml::linalg::Matrix, Vec<Vec<f64>>) {
+    let ds = synthetic(SyntheticSpec { n, p: 3, seed, kernel, ..Default::default() }, 1);
+    (ds.x, ds.ys)
+}
+
+fn sweep_request(id: u64, ys: Vec<Vec<f64>>) -> ThetaTuneRequest {
+    let mut req = ThetaTuneRequest::new(id, ys);
+    req.theta_range = (0.2, 10.0);
+    req.outer_iters = 14;
+    req.inner_grid = 5;
+    req.objective = ObjectiveKind::Evidence;
+    req
+}
+
+/// ISSUE-5 differential test: a warm (family-cached) `tune_theta` must
+/// return bitwise-identical `(theta, hp, score)` to the cold sweep that
+/// populated the cache, at every size.
+#[test]
+fn warm_tune_theta_is_bitwise_cold_across_sizes() {
+    for &n in &[8usize, 32, 128] {
+        let kernel = Kernel::Rbf { xi2: 2.0 };
+        let (x, ys) = dataset(n, 100 + n as u64, kernel);
+        let store = SessionStore::new(8, usize::MAX);
+        let (sess, _) = store.create(kernel, x).unwrap();
+        let req = sweep_request(sess.id, ys);
+
+        let cold = tune_theta(&store, &req).unwrap();
+        assert!(cold.setups_built > 0, "N={n}: cold sweep must build");
+        let setups = store.stats().setups;
+
+        let warm = tune_theta(&store, &req).unwrap();
+        assert_eq!(warm.setups_built, 0, "N={n}: warm sweep must not build");
+        assert_eq!(store.stats().setups, setups, "N={n}: setups stay flat");
+
+        assert_eq!(cold.outputs.len(), warm.outputs.len());
+        for (a, b) in cold.outputs.iter().zip(&warm.outputs) {
+            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "N={n}: theta");
+            assert_eq!(a.hp.sigma2.to_bits(), b.hp.sigma2.to_bits(), "N={n}: sigma2");
+            assert_eq!(a.hp.lambda2.to_bits(), b.hp.lambda2.to_bits(), "N={n}: lambda2");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "N={n}: score");
+        }
+    }
+}
+
+/// The candidate set is fixed by the request, never by the pool width,
+/// and every setup is built on the pinned serial path: widths 1 and 4
+/// must agree bitwise for both search strategies (the engine analogue
+/// of the par_determinism gates; golden is the single-candidate-wave
+/// case where an unpinned build would parallelize the eigensolver).
+#[test]
+fn tune_theta_is_bitwise_identical_across_pool_widths() {
+    let kernel = Kernel::Rbf { xi2: 2.0 };
+    let (x, ys) = dataset(48, 7, kernel);
+    for search in [ThetaSearch::Wavefront { width: 0 }, ThetaSearch::Golden] {
+        let run = |threads: usize| {
+            let store = SessionStore::new(8, usize::MAX);
+            let (sess, _) = store.create(kernel, x.clone()).unwrap();
+            let mut req = sweep_request(sess.id, ys.clone());
+            req.search = search;
+            req.threads = threads;
+            tune_theta(&store, &req).unwrap()
+        };
+        let serial = run(1);
+        let pooled = run(4);
+        for (a, b) in serial.outputs.iter().zip(&pooled.outputs) {
+            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "{search:?}");
+            assert_eq!(a.hp, b.hp, "{search:?}");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "{search:?}");
+            assert_eq!(a.outer_evals, b.outer_evals, "{search:?}");
+            assert_eq!(a.distinct_thetas, b.distinct_thetas, "{search:?}");
+        }
+    }
+}
+
+/// ISSUE-5 property sweep: on random synthetic datasets the parallel
+/// wavefront outer search finds a score <= the serial golden-section
+/// result (up to float-noise slack — both converge the bracket to the
+/// same 1e-4-decade tolerance).
+#[test]
+fn wavefront_beats_or_matches_golden_on_random_datasets() {
+    for seed in 0..6u64 {
+        let kernel = Kernel::Rbf { xi2: 1.0 + seed as f64 * 0.7 };
+        let (x, ys) = dataset(32, 900 + seed, kernel);
+        let y = ys[0].clone();
+        let make = |theta: f64| {
+            let gp = SpectralGp::fit(kernel.with_theta(theta), x.clone()).unwrap();
+            gpml::optim::EvidenceObjective(gp.eigensystem(&y))
+        };
+        let base = TwoStepOptions {
+            theta_range: (0.1, 20.0),
+            inner_grid: 5,
+            ..Default::default()
+        };
+        let golden = theta_tune(
+            &FnProvider::new(&make),
+            &TwoStepOptions { outer_iters: 18, search: ThetaSearch::Golden, ..base },
+        )
+        .unwrap();
+        let wave = theta_tune(
+            &FnProvider::new(&make),
+            &TwoStepOptions {
+                outer_iters: 48,
+                search: ThetaSearch::Wavefront { width: 0 },
+                ..base
+            },
+        )
+        .unwrap();
+        assert!(
+            wave.score <= golden.score + 1e-6 * golden.score.abs().max(1.0),
+            "seed {seed}: wavefront {} should not lose to golden {}",
+            wave.score,
+            golden.score
+        );
+        assert!(wave.outer_evals <= 48, "seed {seed}: budget respected");
+    }
+}
+
+/// Polynomial is a discrete family: the engine sweeps integer degrees
+/// (one setup each — no golden-section aliasing), and the winning theta
+/// is an exact integer.
+#[test]
+fn polynomial_family_sweeps_discrete_degrees() {
+    let kernel = Kernel::Polynomial { degree: 3 };
+    let (x, ys) = dataset(24, 31, kernel);
+    let store = SessionStore::new(8, usize::MAX);
+    let (sess, _) = store.create(kernel, x).unwrap();
+    let mut req = sweep_request(sess.id, ys);
+    req.theta_range = (1.0, 5.0);
+    // golden would alias probes; the family-aware engine must ignore the
+    // requested continuous search for an Integer domain
+    req.search = ThetaSearch::Golden;
+
+    let res = tune_theta(&store, &req).unwrap();
+    let out = &res.outputs[0];
+    assert_eq!(out.theta.fract(), 0.0, "discrete family returns an integer degree");
+    assert!((1.0..=5.0).contains(&out.theta));
+    assert_eq!(out.distinct_thetas, 5, "degrees 1..=5 each probed once");
+    // degree 3 == the base session's kernel, served by the base setup
+    assert_eq!(out.outer_evals, 4, "4 new setups; the base degree was free");
+
+    // warm re-sweep: zero builds, identical bits
+    let warm = tune_theta(&store, &req).unwrap();
+    assert_eq!(warm.setups_built, 0);
+    assert_eq!(warm.outputs[0].theta.to_bits(), out.theta.to_bits());
+    assert_eq!(warm.outputs[0].score.to_bits(), out.score.to_bits());
+}
+
+/// Multi-output jobs share the family across outputs: output 2's probes
+/// hit the decompositions output 1 built.
+#[test]
+fn multi_output_sweep_shares_family_setups() {
+    let kernel = Kernel::Rbf { xi2: 2.0 };
+    let ds = synthetic(SyntheticSpec { n: 24, p: 3, seed: 55, kernel, ..Default::default() }, 3);
+    let store = SessionStore::new(8, usize::MAX);
+    let (sess, _) = store.create(kernel, ds.x).unwrap();
+    let req = sweep_request(sess.id, ds.ys);
+    let res = tune_theta(&store, &req).unwrap();
+    assert_eq!(res.outputs.len(), 3);
+    assert!(res.outputs[0].outer_evals > 0, "first output builds the family");
+    assert_eq!(res.outputs[1].outer_evals, 0, "second output rides the cache");
+    assert_eq!(res.outputs[2].outer_evals, 0);
+    assert_eq!(res.setups_built, res.outputs[0].outer_evals);
+}
+
+#[test]
+fn tune_theta_over_the_wire_with_warm_stats() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let kernel = Kernel::Rbf { xi2: 2.0 };
+    let (x, ys) = dataset(32, 71, kernel);
+    let id = client.create_session(&x, kernel).unwrap();
+
+    let req = sweep_request(id, ys);
+    let cold = client.tune_theta(&req).unwrap();
+    assert_eq!(cold.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(cold.get("setups_built").and_then(Json::as_usize).unwrap() > 0);
+    let outs = cold.get("outputs").unwrap().as_arr().unwrap();
+    assert!(outs[0].get("theta").unwrap().as_f64().unwrap() > 0.0);
+
+    let stats = client.stats().unwrap();
+    let setups_cold = stats.get("setups").and_then(Json::as_usize).unwrap();
+    let hits_cold = stats.get("theta_hits").and_then(Json::as_usize).unwrap();
+    assert!(stats.get("theta_entries").and_then(Json::as_usize).unwrap() > 0);
+
+    // warm: setups flat, theta_hits rising, bitwise-identical outputs
+    let warm = client.tune_theta(&req).unwrap();
+    assert_eq!(warm.get("setups_built").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        warm.get("outputs").unwrap().to_string(),
+        cold.get("outputs").unwrap().to_string(),
+        "warm wire response must be bitwise identical"
+    );
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("setups").and_then(Json::as_usize), Some(setups_cold));
+    assert!(stats.get("theta_hits").and_then(Json::as_usize).unwrap() > hits_cold);
+    server.stop();
+}
+
+#[test]
+fn tune_theta_wire_error_shapes() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let kernel = Kernel::Rbf { xi2: 2.0 };
+    let (x, ys) = dataset(12, 73, kernel);
+    let id = client.create_session(&x, kernel).unwrap();
+
+    // unknown session
+    let v = client.raw(r#"{"op":"tune_theta","session_id":999,"ys":[[1,2]]}"#).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").and_then(Json::as_str).unwrap().contains("unknown session"));
+
+    // parse-level strictness travels as an error response, not a hang
+    let v = client
+        .raw(&format!(
+            r#"{{"op":"tune_theta","session_id":{id},"ys":[[1]],"theta_min":5,"theta_max":1}}"#
+        ))
+        .unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    let v = client
+        .raw(&format!(r#"{{"op":"tune_theta","session_id":{id},"ys":[[1]],"search":"magic"}}"#))
+        .unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+    // wrong output length
+    let mut bad = ys.clone();
+    bad[0].pop();
+    let req = ThetaTuneRequest::new(id, bad);
+    assert!(client.tune_theta(&req).is_err());
+
+    // a family with no theta
+    let lin_id = client.create_session(&x, Kernel::Linear).unwrap();
+    let req = ThetaTuneRequest::new(lin_id, ys);
+    let err = client.tune_theta(&req).unwrap_err();
+    assert!(err.to_string().contains("no tunable theta"), "{err}");
+    server.stop();
+}
+
+/// Concurrent wire sweeps over the same family single-flight their
+/// setups: the total built never exceeds the distinct candidate count.
+#[test]
+fn concurrent_wire_sweeps_share_the_family() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+    let kernel = Kernel::Rbf { xi2: 2.0 };
+    let (x, ys) = dataset(24, 77, kernel);
+    let mut client = Client::connect(&addr).unwrap();
+    let id = client.create_session(&x, kernel).unwrap();
+
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let ys = ys.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let req = sweep_request(id, ys);
+                let res = client.tune_theta(&req).unwrap();
+                res.get("outputs").unwrap().to_string()
+            })
+        })
+        .collect();
+    let outs: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(outs.windows(2).all(|w| w[0] == w[1]), "concurrent sweeps agree bitwise");
+
+    let stats = server.session_stats();
+    let distinct = {
+        let warm = tune_theta(server.store().as_ref(), &sweep_request(id, ys)).unwrap();
+        warm.outputs[0].distinct_thetas as u64
+    };
+    // 1 base setup + at most one build per distinct theta, despite 3
+    // concurrent sweeps racing over the same candidates
+    assert!(
+        stats.setups <= 1 + distinct,
+        "setups {} exceed 1 + distinct thetas {distinct}",
+        stats.setups
+    );
+    server.stop();
+}
