@@ -19,8 +19,15 @@
 //!                           session: every probe hits the eigen-family
 //!                           cache (`setups_built: 0` asserted).
 //!
-//! All three must return **bitwise-identical** outputs (asserted on the
-//! serialized `outputs` JSON, which uses shortest-round-trip floats).
+//! Plus two ARD variants per N (PR 6 vector-theta engine): a cold 2-D
+//! coordinate-descent wavefront over a `rbf-ard` family, without
+//! (`ard_cold_wavefront`) and with (`ard_cold_newton`) the exact-Hessian
+//! Newton inner refinement — the Newton delta is the cost of the O(N)
+//! inner polish against the O(N^3)-dominated outer sweep.
+//!
+//! The first three must return **bitwise-identical** outputs (asserted
+//! on the serialized `outputs` JSON, which uses shortest-round-trip
+//! floats).
 //! Acceptance, enforced at N >= 512 on >= 4-way hardware: the parallel
 //! outer wavefront is >= 2x faster than the serial one.
 //!
@@ -40,8 +47,8 @@ use gpml::coordinator::server::Server;
 use gpml::coordinator::session::ThetaTuneRequest;
 use gpml::coordinator::{Coordinator, ObjectiveKind};
 use gpml::data::{synthetic, SyntheticSpec};
-use gpml::kernelfn::Kernel;
-use gpml::optim::ThetaSearch;
+use gpml::kernelfn::{Kernel, ThetaVec};
+use gpml::optim::{RefineKind, ThetaSearch};
 use gpml::util::cli::Args;
 use gpml::util::json::Json;
 use gpml::util::timing::{Stats, Table};
@@ -85,9 +92,12 @@ fn main() {
         "warm ms",
         "t1/t4",
         "cold/warm",
+        "ard ms",
+        "ard+newton ms",
     ]);
     type Sweep = Vec<Stats>;
     let (mut cold_t1, mut cold_t4, mut warm): (Sweep, Sweep, Sweep) = (vec![], vec![], vec![]);
+    let (mut ard_wave, mut ard_newton): (Sweep, Sweep) = (vec![], vec![]);
     let (mut speedup_outer, mut speedup_warm) = (0.0f64, 0.0f64);
 
     for &n in &sizes {
@@ -162,10 +172,56 @@ fn main() {
             "warm and cold sweeps must be bitwise identical"
         );
 
-        let (s1, s4, sw) = (
+        // ARD variants (PR 6): a cold 2-D coordinate-descent wavefront
+        // over the same outer budget, without and with the Newton polish
+        let ard_kernel = Kernel::RbfArd { xi2: ThetaVec::splat(2, 2.0) };
+        let ard_ds = synthetic(
+            SyntheticSpec { n, p: 2, seed: 13, kernel: ard_kernel, ..Default::default() },
+            1,
+        );
+        let ard_req = |id: u64, refine: RefineKind| {
+            let mut req = ThetaTuneRequest::new(id, ard_ds.ys.clone());
+            req.theta_ranges = vec![(0.2, 20.0), (0.2, 20.0)];
+            req.outer_iters = outer;
+            req.search = ThetaSearch::Wavefront { width: 8 };
+            req.inner_grid = 7;
+            req.objective = ObjectiveKind::Evidence;
+            req.refine = refine;
+            req.threads = 4;
+            req
+        };
+        let mut ard_sess: Option<u64> = None;
+        let mut ard_cold_run = |client: &mut Client, refine: RefineKind| {
+            if let Some(id) = ard_sess.take() {
+                client.drop_session(id).expect("drop ard");
+            }
+            let id = client.create_session(&ard_ds.x, ard_kernel).expect("create ard");
+            ard_sess = Some(id);
+            let t0 = std::time::Instant::now();
+            let res = client.tune_theta(&ard_req(id, refine)).expect("ard tune_theta");
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            let built = res.get("setups_built").and_then(Json::as_usize).unwrap_or(0);
+            assert!(built > 0, "cold ARD sweep must build setups");
+            us
+        };
+        let mut ardw_samples = Vec::new();
+        for _ in 0..iters {
+            ardw_samples.push(ard_cold_run(&mut client, RefineKind::None));
+        }
+        let mut ardn_samples = Vec::new();
+        for _ in 0..iters {
+            ardn_samples.push(ard_cold_run(&mut client, RefineKind::Newton));
+        }
+        if let Some(id) = ard_sess.take() {
+            client.drop_session(id).expect("drop ard");
+        }
+
+        let (s1, s4, sw, saw, san) = (
             Stats::from_samples(t1_samples),
             Stats::from_samples(t4_samples),
             Stats::from_samples(warm_samples),
+            Stats::from_samples(ardw_samples),
+            Stats::from_samples(ardn_samples),
         );
         speedup_outer = s1.median_us / s4.median_us;
         speedup_warm = s4.median_us / sw.median_us;
@@ -176,10 +232,14 @@ fn main() {
             format!("{:.2}", sw.median_us / 1e3),
             format!("{speedup_outer:.1}x"),
             format!("{speedup_warm:.1}x"),
+            format!("{:.2}", saw.median_us / 1e3),
+            format!("{:.2}", san.median_us / 1e3),
         ]);
         cold_t1.push(s1);
         cold_t4.push(s4);
         warm.push(sw);
+        ard_wave.push(saw);
+        ard_newton.push(san);
     }
     table.print();
 
@@ -213,6 +273,8 @@ fn main() {
             Series { label: "cold_outer_serial", stats: &cold_t1 },
             Series { label: "cold_outer_parallel", stats: &cold_t4 },
             Series { label: "warm", stats: &warm },
+            Series { label: "ard_cold_wavefront", stats: &ard_wave },
+            Series { label: "ard_cold_newton", stats: &ard_newton },
         ],
         vec![
             ("workers", Json::Num(server.workers() as f64)),

@@ -1,14 +1,16 @@
-//! Algorithm 1 (paper §2.2) through the theta-plane tuning engine:
-//! tune the RBF bandwidth xi2 together with (sigma2, lambda2) against a
-//! session-backed eigen-family cache (DESIGN.md §9).
+//! Algorithm 1 (paper §2.2) through the vector-theta tuning engine:
+//! tune a 2-D ARD RBF's per-dimension lengthscales together with
+//! (sigma2, lambda2) against a session-backed eigen-family cache
+//! (DESIGN.md §9–§10).
 //!
-//! The outer stage sweeps theta as **parallel bracketing wavefronts** —
-//! each candidate's O(N^3) Gram + eigendecomposition runs concurrently
-//! on the thread pool — and every setup lands in the session's family
-//! cache, so the second sweep below is *warm*: zero eigendecompositions,
-//! bitwise-identical result.  A serial golden-section sweep runs last
-//! for comparison (it is warm too: its probes largely alias into the
-//! cached wavefront thetas or rebuild only the few it needs).
+//! The outer stage runs **coordinate descent over parallel bracketing
+//! wavefronts** — one axis at a time, each wave's O(N^3) Gram +
+//! eigendecomposition concurrent on the thread pool — and the winning
+//! candidate's (sigma2, lambda2) is polished by the exact-Hessian
+//! Newton inner loop (O(N) per step).  Every setup lands in the
+//! session's family cache keyed by the quantized theta *vector*, so the
+//! second sweep below is *warm*: zero eigendecompositions,
+//! bitwise-identical result.
 //!
 //! Run: `cargo run --release --example kernel_tuning [-- --n 384 --threads 4]`
 
@@ -16,38 +18,34 @@ use std::time::Instant;
 
 use gpml::coordinator::session::{tune_theta, SessionStore, ThetaTuneRequest};
 use gpml::data::{self, SyntheticSpec};
-use gpml::kernelfn::Kernel;
-use gpml::optim::ThetaSearch;
+use gpml::kernelfn::{Kernel, ThetaVec};
+use gpml::optim::{RefineKind, ThetaSearch};
 use gpml::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
     let n = args.get_usize("n", 384).map_err(anyhow::Error::msg)?;
-    let true_xi2 = args.get_f64("xi2", 2.0).map_err(anyhow::Error::msg)?;
     gpml::util::threadpool::set_threads(args.get_usize("threads", 0).map_err(anyhow::Error::msg)?);
 
-    let spec = SyntheticSpec {
-        n,
-        p: 4,
-        kernel: Kernel::Rbf { xi2: true_xi2 },
-        sigma2: 0.05,
-        lambda2: 1.0,
-        seed: 11,
-    };
-    println!("== Algorithm 1 via the theta-plane engine ==");
+    // anisotropic ground truth: the second feature varies 4x faster
+    let true_xi2 = [2.0f64, 0.5];
+    let kernel = Kernel::RbfArd { xi2: ThetaVec::from_slice(&true_xi2).unwrap() };
+    let spec = SyntheticSpec { n, p: 2, kernel, sigma2: 0.05, lambda2: 1.0, seed: 11 };
+    println!("== Algorithm 1 via the vector-theta engine (2-D ARD) ==");
     println!(
-        "data: N={n} P={} generated with xi2={true_xi2}, sigma2={}, lambda2={}",
-        spec.p, spec.sigma2, spec.lambda2
+        "data: N={n} P={} generated with xi2=({}, {}), sigma2={}, lambda2={}",
+        spec.p, true_xi2[0], true_xi2[1], spec.sigma2, spec.lambda2
     );
     let ds = data::synthetic(spec, 1);
 
-    // the session holds the dataset; every theta probe is a family-cache
-    // entry keyed off it (unbounded budget: this demo asserts the warm
-    // re-sweep builds nothing, which a byte cap could defeat at large --n)
+    // the session holds the dataset; every theta-vector probe is a
+    // family-cache entry keyed off it (unbounded budget: this demo
+    // asserts the warm re-sweep builds nothing, which a byte cap could
+    // defeat at large --n)
     let store = SessionStore::new(8, usize::MAX);
-    let (sess, _) = store.create(spec.kernel, ds.x.clone())?;
+    let (sess, _) = store.create(kernel, ds.x.clone())?;
     let mut req = ThetaTuneRequest::new(sess.id, ds.ys.clone());
-    req.theta_range = (0.05, 50.0);
+    req.theta_ranges = vec![(0.05, 50.0), (0.05, 50.0)];
     req.outer_iters = 24;
     req.inner_grid = 9;
     req.search = ThetaSearch::Wavefront { width: 0 };
@@ -58,14 +56,22 @@ fn main() -> anyhow::Result<()> {
     let cold_secs = t0.elapsed().as_secs_f64();
     let best = &cold.outputs[0];
 
-    println!("\ncold wavefront sweep ({} threads):", gpml::util::threadpool::num_threads());
-    println!("  xi2     = {:.4}   (generating value {true_xi2})", best.theta);
+    println!("\ncold coordinate-descent sweep ({} threads):", gpml::util::threadpool::num_threads());
+    println!(
+        "  xi2     = ({:.4}, {:.4})   (generating values {}, {})",
+        best.theta.get(0),
+        best.theta.get(1),
+        true_xi2[0],
+        true_xi2[1]
+    );
     println!("  sigma2  = {:.5e} (generating value {})", best.hp.sigma2, spec.sigma2);
     println!("  lambda2 = {:.5e} (generating value {})", best.hp.lambda2, spec.lambda2);
     println!("  score   = {:.5}", best.score);
     println!(
-        "  cost: {} O(N^3) setups built over {} distinct thetas, {} inner evals, {cold_secs:.3} s",
-        best.outer_evals, best.distinct_thetas, best.inner_evals
+        "  cost: {} O(N^3) setups built over {} distinct theta vectors, {} inner evals, \
+         {} Newton steps ({} O(N) evals), {cold_secs:.3} s",
+        best.outer_evals, best.distinct_thetas, best.inner_evals, best.newton_iters,
+        best.newton_evals
     );
 
     // same request again: the family is warm — zero setups, identical bits
@@ -74,24 +80,26 @@ fn main() -> anyhow::Result<()> {
     let warm_secs = t1.elapsed().as_secs_f64();
     let wbest = &warm.outputs[0];
     assert_eq!(warm.setups_built, 0, "warm sweep must build nothing");
-    assert_eq!(wbest.theta.to_bits(), best.theta.to_bits());
+    assert_eq!(wbest.theta.bits(), best.theta.bits());
     assert_eq!(wbest.score.to_bits(), best.score.to_bits());
     println!("\nwarm re-sweep: 0 setups, bitwise-identical result, {warm_secs:.3} s");
     if warm_secs > 0.0 {
         println!("  cold/warm = {:.1}x", cold_secs / warm_secs);
     }
 
-    // serial golden-section over the same (now mostly warm) family
-    let mut golden_req = req.clone();
-    golden_req.search = ThetaSearch::Golden;
+    // skip the Newton polish for contrast: the grid-only inner loop can
+    // only do worse (or tie) at the same outer candidates
+    let mut grid_req = req.clone();
+    grid_req.refine = RefineKind::None;
     let t2 = Instant::now();
-    let golden = tune_theta(&store, &golden_req)?;
-    let gbest = &golden.outputs[0];
+    let grid = tune_theta(&store, &grid_req)?;
+    let gbest = &grid.outputs[0];
     println!(
-        "\ngolden-section comparison: score {:.5} (wavefront {:.5}), {} fresh setups, {:.3} s",
+        "\ngrid-only comparison (--refine none): score {:.5} (Newton-refined {:.5}), \
+         {} fresh setups, {:.3} s",
         gbest.score,
         best.score,
-        golden.setups_built,
+        grid.setups_built,
         t2.elapsed().as_secs_f64()
     );
 
@@ -102,10 +110,16 @@ fn main() -> anyhow::Result<()> {
         stats.setups
     );
 
-    // sanity: the recovered bandwidth should be within a factor ~3 of truth
-    let ratio = best.theta / true_xi2;
-    if !(0.33..=3.0).contains(&ratio) {
-        println!("warning: recovered xi2 off by {ratio:.2}x (small-N noise)");
+    // sanity: each recovered lengthscale should be within a factor ~3 of
+    // truth, and the anisotropy ordering should survive
+    for d in 0..2 {
+        let ratio = best.theta.get(d) / true_xi2[d];
+        if !(0.33..=3.0).contains(&ratio) {
+            println!("warning: recovered xi2[{d}] off by {ratio:.2}x (small-N noise)");
+        }
+    }
+    if best.theta.get(0) <= best.theta.get(1) {
+        println!("warning: anisotropy ordering not recovered (small-N noise)");
     }
     Ok(())
 }

@@ -31,9 +31,9 @@ use crate::coordinator::session::{
     SessionTuneRequest, StoreStats, ThetaTuneRequest, ThetaTuneResult,
 };
 use crate::coordinator::{Backend, GlobalStrategy, ObjectiveKind, TuneRequest, TuneResult};
-use crate::kernelfn::{self, Kernel};
+use crate::kernelfn::{self, Kernel, MAX_THETA_DIMS};
 use crate::linalg::Matrix;
-use crate::optim::ThetaSearch;
+use crate::optim::{RefineKind, ThetaSearch};
 use crate::spectral::{Evaluation, HyperParams};
 use crate::util::json::{self, Json};
 
@@ -180,21 +180,56 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         Some("tune_theta") => {
             let mut req = ThetaTuneRequest::new(parse_session_id(&v)?, parse_ys(&v)?);
             req.objective = parse_objective(&v);
-            let bound = |field: &str, default: f64| -> Result<f64, String> {
-                match v.get(field) {
-                    None => Ok(default),
-                    Some(x) => match x.as_f64() {
-                        Some(t) if t.is_finite() && t > 0.0 => Ok(t),
-                        _ => Err(format!("{field} must be a positive finite number")),
-                    },
+            // `theta_min`/`theta_max` accept a number (scalar families,
+            // the historical form) or equal-length arrays (one range per
+            // theta-vector component of an ARD family).  Mixing forms is
+            // an error — a half-array request is a client bug, not a
+            // broadcast.
+            let arr_form = matches!(v.get("theta_min"), Some(Json::Arr(_)))
+                || matches!(v.get("theta_max"), Some(Json::Arr(_)));
+            if arr_form {
+                let comps = |field: &str| -> Result<Vec<f64>, String> {
+                    let xs = v.get(field).and_then(Json::as_arr).ok_or_else(|| {
+                        "theta_min and theta_max must both be numbers or both arrays".to_string()
+                    })?;
+                    xs.iter()
+                        .map(|x| match x.as_f64() {
+                            Some(t) if t.is_finite() && t > 0.0 => Ok(t),
+                            _ => Err(format!("{field} must be positive finite numbers")),
+                        })
+                        .collect()
+                };
+                let lo = comps("theta_min")?;
+                let hi = comps("theta_max")?;
+                if lo.len() != hi.len() || lo.is_empty() || lo.len() > MAX_THETA_DIMS {
+                    return Err(format!(
+                        "theta_min and theta_max must be equal-length arrays of \
+                         1..={MAX_THETA_DIMS} components"
+                    ));
                 }
-            };
-            let lo = bound("theta_min", req.theta_range.0)?;
-            let hi = bound("theta_max", req.theta_range.1)?;
-            if lo >= hi {
-                return Err(format!("theta range must be increasing, got ({lo}, {hi})"));
+                for (&l, &h) in lo.iter().zip(&hi) {
+                    if l >= h {
+                        return Err(format!("theta range must be increasing, got ({l}, {h})"));
+                    }
+                }
+                req.theta_ranges = lo.into_iter().zip(hi).collect();
+            } else {
+                let bound = |field: &str, default: f64| -> Result<f64, String> {
+                    match v.get(field) {
+                        None => Ok(default),
+                        Some(x) => match x.as_f64() {
+                            Some(t) if t.is_finite() && t > 0.0 => Ok(t),
+                            _ => Err(format!("{field} must be a positive finite number")),
+                        },
+                    }
+                };
+                let lo = bound("theta_min", req.theta_range.0)?;
+                let hi = bound("theta_max", req.theta_range.1)?;
+                if lo >= hi {
+                    return Err(format!("theta range must be increasing, got ({lo}, {hi})"));
+                }
+                req.theta_range = (lo, hi);
             }
-            req.theta_range = (lo, hi);
             req.search = match v.get("search").and_then(Json::as_str) {
                 None | Some("wavefront") => {
                     let width = match v.get("wavefront") {
@@ -209,7 +244,22 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     ThetaSearch::Wavefront { width }
                 }
                 Some("golden") => ThetaSearch::Golden,
-                Some(other) => return Err(format!("unknown search '{other}' (golden|wavefront)")),
+                Some("nelder-mead") => ThetaSearch::NelderMead,
+                Some("pso") => ThetaSearch::Pso,
+                Some(other) => {
+                    return Err(format!(
+                        "unknown search '{other}' (golden|wavefront|nelder-mead|pso)"
+                    ))
+                }
+            };
+            req.refine = match v.get("refine") {
+                None => RefineKind::Newton,
+                Some(r) => match r.as_str() {
+                    Some("newton") => RefineKind::Newton,
+                    Some("none") => RefineKind::None,
+                    Some(other) => return Err(format!("unknown refine '{other}' (newton|none)")),
+                    None => return Err("refine must be a string (newton|none)".to_string()),
+                },
             };
             if let Some(outer) = v.get("outer") {
                 match outer.as_usize() {
@@ -340,13 +390,22 @@ pub fn theta_tune_response(res: &ThetaTuneResult, session_id: u64) -> String {
         .outputs
         .iter()
         .map(|o| {
+            // scalar families keep the historical Num form; ARD
+            // families report the full component array
+            let theta = if o.theta.len() == 1 {
+                Json::Num(o.theta.get(0))
+            } else {
+                Json::arr_f64(o.theta.as_slice())
+            };
             Json::obj(vec![
-                ("theta", Json::Num(o.theta)),
+                ("theta", theta),
                 ("sigma2", Json::Num(o.hp.sigma2)),
                 ("lambda2", Json::Num(o.hp.lambda2)),
                 ("score", Json::Num(o.score)),
                 ("distinct_thetas", Json::Num(o.distinct_thetas as f64)),
                 ("inner_evals", Json::Num(o.inner_evals as f64)),
+                ("newton_iters", Json::Num(o.newton_iters as f64)),
+                ("newton_evals", Json::Num(o.newton_evals as f64)),
             ])
         })
         .collect();
@@ -468,6 +527,10 @@ pub fn pong_response() -> String {
 pub fn kernel_string(kernel: Kernel) -> String {
     match kernel {
         Kernel::Rbf { xi2 } => format!("rbf:{xi2}"),
+        Kernel::RbfArd { xi2 } => {
+            let comps: Vec<String> = xi2.as_slice().iter().map(f64::to_string).collect();
+            format!("rbf-ard:{}", comps.join(","))
+        }
         Kernel::Polynomial { degree } => format!("poly:{degree}"),
         Kernel::Linear => "linear".to_string(),
         Kernel::Matern32 { ell } => format!("matern32:{ell}"),
@@ -541,12 +604,19 @@ pub fn session_tune_json(req: &SessionTuneRequest) -> String {
 /// Serialize a `tune_theta` request (client side).
 pub fn theta_tune_json(req: &ThetaTuneRequest) -> String {
     let ys: Vec<Json> = req.ys.iter().map(|y| Json::arr_f64(y)).collect();
+    let (theta_min, theta_max) = if req.theta_ranges.is_empty() {
+        (Json::Num(req.theta_range.0), Json::Num(req.theta_range.1))
+    } else {
+        let lo: Vec<f64> = req.theta_ranges.iter().map(|r| r.0).collect();
+        let hi: Vec<f64> = req.theta_ranges.iter().map(|r| r.1).collect();
+        (Json::arr_f64(&lo), Json::arr_f64(&hi))
+    };
     let mut fields = vec![
         ("op", Json::str("tune_theta")),
         ("session_id", Json::Num(req.session_id as f64)),
         ("ys", Json::Arr(ys)),
-        ("theta_min", Json::Num(req.theta_range.0)),
-        ("theta_max", Json::Num(req.theta_range.1)),
+        ("theta_min", theta_min),
+        ("theta_max", theta_max),
         ("outer", Json::Num(req.outer_iters as f64)),
         ("inner_grid", Json::Num(req.inner_grid as f64)),
         ("objective", Json::str(objective_str(req.objective))),
@@ -558,6 +628,12 @@ pub fn theta_tune_json(req: &ThetaTuneRequest) -> String {
             fields.push(("search", Json::str("wavefront")));
             fields.push(("wavefront", Json::Num(width as f64)));
         }
+        ThetaSearch::NelderMead => fields.push(("search", Json::str("nelder-mead"))),
+        ThetaSearch::Pso => fields.push(("search", Json::str("pso"))),
+    }
+    match req.refine {
+        RefineKind::Newton => {}
+        RefineKind::None => fields.push(("refine", Json::str("none"))),
     }
     Json::obj(fields).to_string()
 }
@@ -800,6 +876,18 @@ mod tests {
             Request::TuneTheta(r) => assert_eq!(r.search, ThetaSearch::Golden),
             other => panic!("expected tune_theta, got {other:?}"),
         }
+        // ARD ranges and the refine flag roundtrip
+        req.theta_ranges = vec![(0.1, 10.0), (0.2, 20.0)];
+        req.refine = RefineKind::None;
+        req.search = ThetaSearch::Pso;
+        match parse_request(&theta_tune_json(&req)).unwrap() {
+            Request::TuneTheta(r) => {
+                assert_eq!(r.theta_ranges, req.theta_ranges);
+                assert_eq!(r.refine, RefineKind::None);
+                assert_eq!(r.search, ThetaSearch::Pso);
+            }
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
     }
 
     #[test]
@@ -826,6 +914,48 @@ mod tests {
             r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":"abc"}"#,   // non-number
             r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":-3}"#,      // negative
             r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"wavefront":3.5}"#,     // fractional
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"refine":"magic"}"#,    // unknown
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"refine":3}"#,          // non-string
+        ] {
+            assert!(parse_request(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn tune_theta_array_ranges_and_refine() {
+        // the ARD form: per-component ranges as equal-length arrays
+        let line = r#"{"op":"tune_theta","session_id":1,"ys":[[1,2]],
+            "theta_min":[0.1,0.2],"theta_max":[10,20],"refine":"none",
+            "search":"nelder-mead"}"#;
+        match parse_request(line).unwrap() {
+            Request::TuneTheta(r) => {
+                assert_eq!(r.theta_ranges, vec![(0.1, 10.0), (0.2, 20.0)]);
+                assert_eq!(r.refine, RefineKind::None);
+                assert_eq!(r.search, ThetaSearch::NelderMead);
+            }
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
+        match parse_request(r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"search":"pso"}"#)
+            .unwrap()
+        {
+            Request::TuneTheta(r) => {
+                assert_eq!(r.search, ThetaSearch::Pso);
+                assert_eq!(r.refine, RefineKind::Newton, "refine defaults to newton");
+                assert!(r.theta_ranges.is_empty(), "scalar form by default");
+            }
+            other => panic!("expected tune_theta, got {other:?}"),
+        }
+        // array-form error shapes: half-array, length mismatch, bad
+        // elements, non-increasing components, over-capacity
+        for bad in [
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":[0.1,0.2],"theta_max":10}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":[0.1],"theta_max":[10,20]}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":[],"theta_max":[]}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":[-1,0.1],"theta_max":[10,20]}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":["x",0.1],"theta_max":[10,20]}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],"theta_min":[5,0.1],"theta_max":[1,20]}"#,
+            r#"{"op":"tune_theta","session_id":1,"ys":[[1]],
+                "theta_min":[1,1,1,1,1,1,1,1,1],"theta_max":[2,2,2,2,2,2,2,2,2]}"#,
         ] {
             assert!(parse_request(bad).is_err(), "should reject: {bad}");
         }
@@ -834,14 +964,17 @@ mod tests {
     #[test]
     fn theta_tune_response_shape() {
         use crate::coordinator::session::ThetaOutput;
+        use crate::kernelfn::ThetaVec;
         let res = ThetaTuneResult {
             outputs: vec![ThetaOutput {
-                theta: 2.5,
+                theta: ThetaVec::scalar(2.5),
                 hp: HyperParams::new(0.1, 1.5),
                 score: -4.25,
                 outer_evals: 14,
                 distinct_thetas: 16,
                 inner_evals: 900,
+                newton_iters: 12,
+                newton_evals: 30,
             }],
             setups_built: 14,
             tune_seconds: 0.5,
@@ -851,14 +984,44 @@ mod tests {
         assert_eq!(v.get("session_id").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("setups_built").unwrap().as_usize(), Some(14));
         let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        // a 1-component theta keeps the historical scalar form
         assert_eq!(outs[0].get("theta").unwrap().as_f64(), Some(2.5));
         assert_eq!(outs[0].get("score").unwrap().as_f64(), Some(-4.25));
         assert_eq!(outs[0].get("distinct_thetas").unwrap().as_usize(), Some(16));
+        // Newton counters are deterministic, so they live inside the
+        // byte-comparable `outputs`
+        assert_eq!(outs[0].get("newton_iters").unwrap().as_usize(), Some(12));
+        assert_eq!(outs[0].get("newton_evals").unwrap().as_usize(), Some(30));
         // the run-dependent build counter lives OUTSIDE `outputs`, so
         // warm/cold `outputs` strings can be compared byte-for-byte
         assert!(outs[0].get("outer_evals").is_none());
         let builds = v.get("outer_evals").unwrap().as_arr().unwrap();
         assert_eq!(builds[0].as_usize(), Some(14));
+    }
+
+    #[test]
+    fn theta_tune_response_ard_theta_is_an_array() {
+        use crate::kernelfn::ThetaVec;
+        let res = ThetaTuneResult {
+            outputs: vec![ThetaOutput {
+                theta: ThetaVec::from_slice(&[2.5, 0.5]).unwrap(),
+                hp: HyperParams::new(0.1, 1.5),
+                score: -1.0,
+                outer_evals: 10,
+                distinct_thetas: 12,
+                inner_evals: 500,
+                newton_iters: 9,
+                newton_evals: 22,
+            }],
+            setups_built: 10,
+            tune_seconds: 0.25,
+        };
+        let v = json::parse(&theta_tune_response(&res, 3)).unwrap();
+        let outs = v.get("outputs").unwrap().as_arr().unwrap();
+        let theta = outs[0].get("theta").unwrap().as_arr().unwrap();
+        assert_eq!(theta.len(), 2);
+        assert_eq!(theta[0].as_f64(), Some(2.5));
+        assert_eq!(theta[1].as_f64(), Some(0.5));
     }
 
     #[test]
@@ -933,8 +1096,10 @@ mod tests {
 
     #[test]
     fn kernel_string_roundtrips_every_family() {
+        use crate::kernelfn::ThetaVec;
         for k in [
             Kernel::Rbf { xi2: 1.5 },
+            Kernel::RbfArd { xi2: ThetaVec::from_slice(&[0.7, 1.6, 2.5]).unwrap() },
             Kernel::Polynomial { degree: 3 },
             Kernel::Linear,
             Kernel::Matern32 { ell: 0.5 },

@@ -51,7 +51,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::kernelfn::{self, Kernel, ThetaDomain};
+use crate::kernelfn::{self, Kernel, ThetaDomain, ThetaDomainVec, ThetaVec, ThetaVecBits};
 use crate::linalg::{Matrix, SymEigen};
 use crate::spectral::{EigenSystem, Evaluation, ExtendOutcome, HyperParams, SpectralGp};
 
@@ -60,7 +60,8 @@ use super::{
     TuneResult,
 };
 use crate::optim::{
-    self, theta_tune, Bounds, Objective, SetupProvider, ThetaSearch, TwoStepOptions,
+    self, theta_tune, Bounds, Objective, RefineKind, SetupProvider, ThetaRanges, ThetaSearch,
+    TwoStepOptions,
 };
 
 /// One cached dataset: the fitted GP handle plus bookkeeping.
@@ -122,10 +123,13 @@ struct Slot {
     last_used: u64,
 }
 
-/// Family-cache key: (session id, quantized-theta bit pattern).  The
-/// theta is quantized by the engine (`optim::quantize_theta`) before it
-/// reaches the store, so the bit pattern is canonical.
-type ThetaKey = (u64, u64);
+/// Family-cache key: (session id, quantized-theta-vector bit patterns).
+/// The theta is quantized per component by the engine
+/// (`optim::quantize_theta_vec`) before it reaches the store, so the
+/// concatenated bit patterns are canonical ([`ThetaVec::bits`]
+/// additionally folds `-0.0` to `+0.0`, and the component count is part
+/// of the key).
+type ThetaKey = (u64, ThetaVecBits);
 
 /// One eigen-family cache entry: the session's kernel family re-fitted
 /// at another theta (DESIGN.md §9).
@@ -228,6 +232,17 @@ impl SessionStore {
     /// the store lock; concurrent creates of the same dataset are
     /// single-flighted (exactly one computes, the rest wait).
     pub fn create(&self, kernel: Kernel, x: Matrix) -> Result<(Arc<Session>, bool)> {
+        // ARD lengthscales are per feature column; a mismatch would
+        // silently truncate (or debug-panic) inside the gram kernel
+        if let Kernel::RbfArd { xi2 } = kernel {
+            if xi2.len() != x.cols() {
+                return Err(anyhow!(
+                    "rbf-ard kernel has {} lengthscales; data has {} feature columns",
+                    xi2.len(),
+                    x.cols()
+                ));
+            }
+        }
         let fp = fingerprint(&x, kernel);
         {
             let mut g = self.inner.lock().unwrap();
@@ -355,10 +370,22 @@ impl SessionStore {
     /// still returned to the caller (the computation is valid against
     /// the dataset it started from) but not cached.
     pub fn theta_setup(&self, id: u64, theta: f64) -> Result<(SpectralGp, bool)> {
-        if !(theta.is_finite() && theta > 0.0) {
-            return Err(anyhow!("theta must be positive and finite, got {theta}"));
+        self.theta_setup_vec(id, &ThetaVec::scalar(theta))
+    }
+
+    /// Vector form of [`theta_setup`]: the family coordinate is a theta
+    /// *vector* (1-component for scalar kernel families), keyed in the
+    /// cache by its concatenated quantized bit patterns.
+    ///
+    /// [`theta_setup`]: SessionStore::theta_setup
+    pub fn theta_setup_vec(&self, id: u64, theta: &ThetaVec) -> Result<(SpectralGp, bool)> {
+        for i in 0..theta.len() {
+            let t = theta.get(i);
+            if !(t.is_finite() && t > 0.0) {
+                return Err(anyhow!("theta must be positive and finite, got {t}"));
+            }
         }
-        let key: ThetaKey = (id, theta.to_bits());
+        let key: ThetaKey = (id, theta.bits());
         let base = {
             let mut g = self.inner.lock().unwrap();
             loop {
@@ -366,7 +393,15 @@ impl SessionStore {
                     return Err(anyhow!("unknown session {id}"));
                 };
                 let base = slot.sess.gp.clone();
-                if base.kernel().with_theta(theta) == base.kernel() {
+                let dims = base.kernel().theta_dims();
+                if dims > 0 && theta.len() != dims {
+                    return Err(anyhow!(
+                        "theta has {} components; kernel family {:?} has {dims}",
+                        theta.len(),
+                        base.kernel()
+                    ));
+                }
+                if base.kernel().with_theta_vec(theta) == base.kernel() {
                     // the base session *is* this theta: serve it directly
                     g.theta_hits += 1;
                     g.tick += 1;
@@ -395,7 +430,7 @@ impl SessionStore {
         };
 
         // --- O(N^3) family build, outside the lock ---
-        let kernel = base.kernel().with_theta(theta);
+        let kernel = base.kernel().with_theta_vec(theta);
         let k = kernelfn::gram(kernel, base.x());
         let eigen = SymEigen::new(&k);
         drop(k);
@@ -708,14 +743,21 @@ pub fn tune_via_store(store: &SessionStore, req: &TuneRequest) -> Result<TuneRes
 pub struct ThetaTuneRequest {
     pub session_id: u64,
     pub ys: Vec<Vec<f64>>,
-    /// Raw (not log) theta bounds.
+    /// Raw (not log) theta bounds, replicated across every component of
+    /// the session's theta vector unless `theta_ranges` is non-empty.
     pub theta_range: (f64, f64),
+    /// Per-component raw theta bounds for multi-dimensional (ARD)
+    /// families; empty = scalar request (replicate `theta_range`).
+    pub theta_ranges: Vec<(f64, f64)>,
     /// Outer evaluation budget (see `TwoStepOptions::outer_iters`).
     pub outer_iters: usize,
     /// Outer search strategy (discrete families sweep regardless).
     pub search: ThetaSearch,
     /// Inner coarse-grid resolution before Newton refinement.
     pub inner_grid: usize,
+    /// Whether each outer candidate's inner solve is Newton-polished
+    /// (the default) or left at the coarse grid.
+    pub refine: RefineKind,
     pub bounds: Bounds,
     pub objective: ObjectiveKind,
     /// Pool width for the outer wavefronts (0 = process default).
@@ -728,9 +770,11 @@ impl ThetaTuneRequest {
             session_id,
             ys,
             theta_range: (1e-2, 1e2),
+            theta_ranges: Vec::new(),
             outer_iters: 20,
             search: ThetaSearch::Wavefront { width: 0 },
             inner_grid: 9,
+            refine: RefineKind::default(),
             bounds: Bounds::default(),
             objective: ObjectiveKind::default(),
             threads: 0,
@@ -741,8 +785,9 @@ impl ThetaTuneRequest {
 /// Per-output outcome of a theta-plane tune.
 #[derive(Clone, Copy, Debug)]
 pub struct ThetaOutput {
-    /// Best (quantized) kernel hyperparameter found.
-    pub theta: f64,
+    /// Best (quantized) kernel hyperparameter vector found (1-component
+    /// for scalar kernel families).
+    pub theta: ThetaVec,
     pub hp: HyperParams,
     pub score: f64,
     /// O(N^3) setups actually built for this output (0 on a warm sweep).
@@ -750,6 +795,11 @@ pub struct ThetaOutput {
     /// Distinct quantized thetas probed (>= `outer_evals`).
     pub distinct_thetas: usize,
     pub inner_evals: usize,
+    /// Newton iterations accepted across the inner refinements (0 when
+    /// `refine` is [`RefineKind::None`]).
+    pub newton_iters: usize,
+    /// O(N) evaluations consumed by Newton refinement alone.
+    pub newton_evals: usize,
 }
 
 /// Whole-job outcome of [`tune_theta`].
@@ -798,20 +848,20 @@ struct StoreThetaProvider<'a> {
     session_id: u64,
     y: &'a [f64],
     objective: ObjectiveKind,
-    domain: ThetaDomain,
+    domain: ThetaDomainVec,
     built: AtomicUsize,
 }
 
 impl SetupProvider for StoreThetaProvider<'_> {
     type Obj = SessionObjective;
 
-    fn domain(&self) -> ThetaDomain {
+    fn domain(&self) -> ThetaDomainVec {
         self.domain
     }
 
-    fn setup(&self, theta: f64) -> Result<SessionObjective, String> {
+    fn setup(&self, theta: &ThetaVec) -> Result<SessionObjective, String> {
         let (gp, built) =
-            self.store.theta_setup(self.session_id, theta).map_err(|e| format!("{e:#}"))?;
+            self.store.theta_setup_vec(self.session_id, theta).map_err(|e| format!("{e:#}"))?;
         if built {
             self.built.fetch_add(1, Ordering::Relaxed);
         }
@@ -847,16 +897,23 @@ pub fn tune_theta(store: &SessionStore, req: &ThetaTuneRequest) -> Result<ThetaT
         .get(req.session_id)
         .ok_or_else(|| anyhow!("unknown session {}", req.session_id))?;
     validate_outputs(sess.gp.n(), &req.ys)?;
-    let domain = sess.gp.kernel().theta_domain();
-    if domain == ThetaDomain::Fixed {
+    let domain = sess.gp.kernel().theta_vec_domain();
+    if domain.is_empty() || (0..domain.len()).any(|d| domain.get(d) == ThetaDomain::Fixed) {
         return Err(anyhow!("kernel family {:?} has no tunable theta", sess.gp.kernel()));
     }
+    let theta_ranges = if req.theta_ranges.is_empty() {
+        ThetaRanges::empty()
+    } else {
+        ThetaRanges::from_pairs(&req.theta_ranges).map_err(|e| anyhow!(e))?
+    };
     let opt = TwoStepOptions {
         theta_range: req.theta_range,
+        theta_ranges,
         outer_iters: req.outer_iters,
         search: req.search,
         bounds: req.bounds,
         inner_grid: req.inner_grid,
+        refine: req.refine,
         ..Default::default()
     };
     crate::util::threadpool::with_threads(req.threads, || {
@@ -881,6 +938,8 @@ pub fn tune_theta(store: &SessionStore, req: &ThetaTuneRequest) -> Result<ThetaT
                 outer_evals: r.outer_evals,
                 distinct_thetas: r.distinct_thetas,
                 inner_evals: r.inner_evals,
+                newton_iters: r.newton_iters,
+                newton_evals: r.newton_evals,
             });
         }
         Ok(ThetaTuneResult { outputs, setups_built, tune_seconds: tt.elapsed().as_secs_f64() })
@@ -1284,7 +1343,7 @@ mod tests {
         assert_eq!(s.setups, setups_after_cold, "setups stay flat");
         assert!(s.theta_hits > 0);
         for (a, b) in cold.outputs.iter().zip(&warm.outputs) {
-            assert_eq!(a.theta.to_bits(), b.theta.to_bits());
+            assert_eq!(a.theta.bits(), b.theta.bits());
             assert_eq!(a.hp, b.hp);
             assert_eq!(a.score.to_bits(), b.score.to_bits());
             assert_eq!(a.distinct_thetas, b.distinct_thetas);

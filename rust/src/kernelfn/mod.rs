@@ -29,11 +29,157 @@ pub enum ThetaDomain {
     Fixed,
 }
 
+/// Capacity of the fixed-size theta vector: enough for ARD over the
+/// feature dimensions any current caller uses, small enough that
+/// [`ThetaVec`] stays `Copy` and allocation-free inside the O(N^2)
+/// `gram` inner loops and the engine's cache keys.
+pub const MAX_THETA_DIMS: usize = 8;
+
+/// The canonical hyperparameter coordinate of the tuning engine: a small
+/// fixed-capacity vector of theta components.  Scalar kernel families
+/// are 1-component vectors; ARD families carry one component per feature
+/// dimension.  Unused capacity is zero-filled so derived equality and
+/// [`ThetaVec::bits`] are well-defined.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThetaVec {
+    len: usize,
+    vals: [f64; MAX_THETA_DIMS],
+}
+
+impl ThetaVec {
+    /// A 1-component vector (the scalar-theta compatibility embedding).
+    pub fn scalar(t: f64) -> ThetaVec {
+        let mut vals = [0.0; MAX_THETA_DIMS];
+        vals[0] = t;
+        ThetaVec { len: 1, vals }
+    }
+
+    /// `len` copies of `v`.  Panics unless `1 <= len <= MAX_THETA_DIMS`
+    /// (callers validate user-supplied lengths first).
+    pub fn splat(len: usize, v: f64) -> ThetaVec {
+        assert!((1..=MAX_THETA_DIMS).contains(&len), "theta dims {len} out of 1..={MAX_THETA_DIMS}");
+        let mut vals = [0.0; MAX_THETA_DIMS];
+        vals[..len].fill(v);
+        ThetaVec { len, vals }
+    }
+
+    /// Build from a slice; errors when the length is outside
+    /// `1..=MAX_THETA_DIMS` (the wire/CLI validation path).
+    pub fn from_slice(v: &[f64]) -> Result<ThetaVec, String> {
+        if v.is_empty() || v.len() > MAX_THETA_DIMS {
+            return Err(format!("theta has {} components (supported: 1..={MAX_THETA_DIMS})", v.len()));
+        }
+        let mut vals = [0.0; MAX_THETA_DIMS];
+        vals[..v.len()].copy_from_slice(v);
+        Ok(ThetaVec { len: v.len(), vals })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Component `i` (panics past `len`, like slice indexing).
+    pub fn get(&self, i: usize) -> f64 {
+        assert!(i < self.len, "theta component {i} out of 0..{}", self.len);
+        self.vals[i]
+    }
+
+    pub fn set(&mut self, i: usize, v: f64) {
+        assert!(i < self.len, "theta component {i} out of 0..{}", self.len);
+        self.vals[i] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.vals[..self.len]
+    }
+
+    /// The concatenated per-component bit patterns — the engine's and the
+    /// eigen-family cache's key.  `-0.0` is canonicalized to `+0.0` first
+    /// so the two zero representations cannot key distinct cache entries
+    /// for the same setup.
+    pub fn bits(&self) -> ThetaVecBits {
+        let mut bits = [0u64; MAX_THETA_DIMS];
+        for (slot, &v) in bits.iter_mut().zip(&self.vals[..self.len]) {
+            let canon = if v == 0.0 { 0.0 } else { v };
+            *slot = canon.to_bits();
+        }
+        ThetaVecBits { len: self.len, bits }
+    }
+}
+
+/// Hashable cache key derived from a [`ThetaVec`] (see [`ThetaVec::bits`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ThetaVecBits {
+    len: usize,
+    bits: [u64; MAX_THETA_DIMS],
+}
+
+impl ThetaVecBits {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Per-component search domains of a kernel family's theta vector.
+/// `len == 0` means the family has no tunable theta at all (linear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThetaDomainVec {
+    len: usize,
+    doms: [ThetaDomain; MAX_THETA_DIMS],
+}
+
+impl ThetaDomainVec {
+    /// The no-theta domain (linear kernel).
+    pub fn fixed() -> ThetaDomainVec {
+        ThetaDomainVec { len: 0, doms: [ThetaDomain::Fixed; MAX_THETA_DIMS] }
+    }
+
+    /// A 1-component domain (scalar families).
+    pub fn scalar(d: ThetaDomain) -> ThetaDomainVec {
+        ThetaDomainVec::uniform(1, d)
+    }
+
+    /// `len` copies of the same domain.  Panics unless
+    /// `1 <= len <= MAX_THETA_DIMS`.
+    pub fn uniform(len: usize, d: ThetaDomain) -> ThetaDomainVec {
+        assert!((1..=MAX_THETA_DIMS).contains(&len), "theta dims {len} out of 1..={MAX_THETA_DIMS}");
+        let mut doms = [ThetaDomain::Fixed; MAX_THETA_DIMS];
+        doms[..len].fill(d);
+        ThetaDomainVec { len, doms }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> ThetaDomain {
+        assert!(i < self.len, "theta component {i} out of 0..{}", self.len);
+        self.doms[i]
+    }
+}
+
 /// A positive-definite kernel function `K(x, y)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
     /// `exp(-||x - y||^2 / (2 xi2))`
     Rbf { xi2: f64 },
+    /// ARD RBF `exp(-Σ_d (x_d - y_d)^2 / (2 xi2_d))`: one bandwidth per
+    /// feature dimension.  `xi2.len()` must equal the feature count of
+    /// the data it is evaluated on (the coordinator validates this at
+    /// session creation).
+    RbfArd { xi2: ThetaVec },
     /// `(<x, y> + 1)^degree`
     Polynomial { degree: u32 },
     /// `<x, y>`
@@ -52,6 +198,16 @@ impl Kernel {
             Kernel::Rbf { xi2 } => {
                 let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
                 (-d2 / (2.0 * xi2)).exp()
+            }
+            Kernel::RbfArd { xi2 } => {
+                debug_assert_eq!(x.len(), xi2.len(), "ARD dims != feature dims");
+                let xs = xi2.as_slice();
+                let mut e = 0.0;
+                for d in 0..x.len().min(xs.len()) {
+                    let diff = x[d] - y[d];
+                    e += diff * diff / (2.0 * xs[d]);
+                }
+                (-e).exp()
             }
             Kernel::Polynomial { degree } => {
                 let ip: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
@@ -94,6 +250,8 @@ impl Kernel {
     pub fn with_theta(&self, theta: f64) -> Kernel {
         match *self {
             Kernel::Rbf { .. } => Kernel::Rbf { xi2: theta },
+            // scalar shim over the ARD family: broadcast to every dimension
+            Kernel::RbfArd { xi2 } => Kernel::RbfArd { xi2: ThetaVec::splat(xi2.len(), theta) },
             Kernel::Polynomial { .. } => {
                 let degree = if theta.is_finite() { theta.round().max(1.0) as u32 } else { 1 };
                 Kernel::Polynomial { degree }
@@ -104,26 +262,78 @@ impl Kernel {
         }
     }
 
+    /// Vector counterpart of [`Kernel::with_theta`]: replace the whole
+    /// theta vector.  Scalar families read component 0; `Polynomial`
+    /// keeps its rounding/clamping guards.  `t.len()` must equal
+    /// [`Kernel::theta_dims`] (callers validate; a mismatched ARD length
+    /// panics via [`ThetaVec::get`] rather than silently truncating).
+    pub fn with_theta_vec(&self, t: &ThetaVec) -> Kernel {
+        match *self {
+            Kernel::RbfArd { xi2 } => {
+                assert_eq!(t.len(), xi2.len(), "theta dims != ARD dims");
+                Kernel::RbfArd { xi2: *t }
+            }
+            Kernel::Linear => Kernel::Linear,
+            _ => self.with_theta(t.get(0)),
+        }
+    }
+
     /// What kind of parameter Algorithm 1's outer search moves for this
     /// family — the family-awareness hook of the theta-plane engine.
+    /// ARD families report the domain of a *single* component here; use
+    /// [`Kernel::theta_vec_domain`] for the full per-component picture.
     pub fn theta_domain(&self) -> ThetaDomain {
         match *self {
-            Kernel::Rbf { .. } | Kernel::Matern32 { .. } | Kernel::Matern52 { .. } => {
-                ThetaDomain::Continuous
-            }
+            Kernel::Rbf { .. }
+            | Kernel::RbfArd { .. }
+            | Kernel::Matern32 { .. }
+            | Kernel::Matern52 { .. } => ThetaDomain::Continuous,
             Kernel::Polynomial { .. } => ThetaDomain::Integer,
             Kernel::Linear => ThetaDomain::Fixed,
         }
     }
 
-    /// The tunable hyperparameter value, if any.
+    /// Number of tunable theta components (0 for linear).
+    pub fn theta_dims(&self) -> usize {
+        match *self {
+            Kernel::RbfArd { xi2 } => xi2.len(),
+            Kernel::Linear => 0,
+            _ => 1,
+        }
+    }
+
+    /// Per-component search domains of the theta vector (empty for
+    /// linear) — the vector counterpart of [`Kernel::theta_domain`].
+    pub fn theta_vec_domain(&self) -> ThetaDomainVec {
+        match *self {
+            Kernel::RbfArd { xi2 } => ThetaDomainVec::uniform(xi2.len(), ThetaDomain::Continuous),
+            Kernel::Linear => ThetaDomainVec::fixed(),
+            _ => ThetaDomainVec::scalar(self.theta_domain()),
+        }
+    }
+
+    /// The tunable hyperparameter value, if any.  ARD families are
+    /// scalar-addressable only when they have exactly one dimension; use
+    /// [`Kernel::theta_vec`] otherwise.
     pub fn theta(&self) -> Option<f64> {
         match *self {
             Kernel::Rbf { xi2 } => Some(xi2),
+            Kernel::RbfArd { xi2 } if xi2.len() == 1 => Some(xi2.get(0)),
+            Kernel::RbfArd { .. } => None,
             Kernel::Polynomial { degree } => Some(degree as f64),
             Kernel::Linear => None,
             Kernel::Matern32 { ell } => Some(ell),
             Kernel::Matern52 { ell } => Some(ell),
+        }
+    }
+
+    /// The theta vector (scalar families as 1-component vectors; `None`
+    /// for linear).
+    pub fn theta_vec(&self) -> Option<ThetaVec> {
+        match *self {
+            Kernel::RbfArd { xi2 } => Some(xi2),
+            Kernel::Linear => None,
+            _ => self.theta().map(ThetaVec::scalar),
         }
     }
 }
@@ -189,8 +399,8 @@ pub fn cross_gram(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     k
 }
 
-/// Parse `--kernel` CLI syntax: `rbf:1.5`, `poly:3`, `linear`,
-/// `matern32:0.8`, `matern52:1.2`.
+/// Parse `--kernel` CLI syntax: `rbf:1.5`, `rbf-ard:1.0,2.0,0.5`,
+/// `poly:3`, `linear`, `matern32:0.8`, `matern52:1.2`.
 pub fn parse_kernel(s: &str) -> Result<Kernel, String> {
     let (name, arg) = match s.split_once(':') {
         Some((n, a)) => (n, Some(a)),
@@ -204,11 +414,24 @@ pub fn parse_kernel(s: &str) -> Result<Kernel, String> {
     };
     match name {
         "rbf" => Ok(Kernel::Rbf { xi2: num(1.0)? }),
+        "rbf-ard" | "rbfard" => {
+            let a = arg.ok_or_else(|| {
+                "rbf-ard needs comma-separated bandwidths, e.g. rbf-ard:1.0,2.0".to_string()
+            })?;
+            let vals: Vec<f64> = a
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| format!("bad kernel parameter '{p}'")))
+                .collect::<Result<_, String>>()?;
+            if vals.iter().any(|v| !(v.is_finite() && *v > 0.0)) {
+                return Err(format!("rbf-ard bandwidths must be positive and finite, got '{a}'"));
+            }
+            Ok(Kernel::RbfArd { xi2: ThetaVec::from_slice(&vals)? })
+        }
         "poly" | "polynomial" => Ok(Kernel::Polynomial { degree: num(2.0)? as u32 }),
         "linear" => Ok(Kernel::Linear),
         "matern32" => Ok(Kernel::Matern32 { ell: num(1.0)? }),
         "matern52" => Ok(Kernel::Matern52 { ell: num(1.0)? }),
-        _ => Err(format!("unknown kernel '{name}' (rbf|poly|linear|matern32|matern52)")),
+        _ => Err(format!("unknown kernel '{name}' (rbf|rbf-ard|poly|linear|matern32|matern52)")),
     }
 }
 
@@ -335,5 +558,93 @@ mod tests {
         assert_eq!(Kernel::Matern52 { ell: 1.0 }.theta_domain(), ThetaDomain::Continuous);
         assert_eq!(Kernel::Polynomial { degree: 2 }.theta_domain(), ThetaDomain::Integer);
         assert_eq!(Kernel::Linear.theta_domain(), ThetaDomain::Fixed);
+    }
+
+    #[test]
+    fn theta_vec_roundtrip_and_dims() {
+        let tv = ThetaVec::from_slice(&[1.0, 2.0, 0.5]).unwrap();
+        let k = Kernel::RbfArd { xi2: tv };
+        assert_eq!(k.theta_dims(), 3);
+        assert_eq!(k.theta_vec(), Some(tv));
+        assert_eq!(k.theta(), None, "multi-dim ARD has no scalar theta");
+        let dom = k.theta_vec_domain();
+        assert_eq!(dom.len(), 3);
+        for i in 0..3 {
+            assert_eq!(dom.get(i), ThetaDomain::Continuous);
+        }
+        // scalar families embed as 1-vectors
+        let r = Kernel::Rbf { xi2: 1.5 };
+        assert_eq!(r.theta_dims(), 1);
+        assert_eq!(r.theta_vec(), Some(ThetaVec::scalar(1.5)));
+        assert_eq!(r.theta_vec_domain().len(), 1);
+        assert_eq!(Kernel::Linear.theta_dims(), 0);
+        assert_eq!(Kernel::Linear.theta_vec(), None);
+        assert!(Kernel::Linear.theta_vec_domain().is_empty());
+    }
+
+    #[test]
+    fn with_theta_vec_matches_scalar_shims() {
+        let t2 = ThetaVec::from_slice(&[0.7, 3.0]).unwrap();
+        let ard = Kernel::RbfArd { xi2: ThetaVec::splat(2, 1.0) };
+        assert_eq!(ard.with_theta_vec(&t2), Kernel::RbfArd { xi2: t2 });
+        // scalar broadcast over the ARD family
+        assert_eq!(ard.with_theta(2.5), Kernel::RbfArd { xi2: ThetaVec::splat(2, 2.5) });
+        // 1-component vectors reduce to with_theta exactly
+        for k in [Kernel::Rbf { xi2: 1.0 }, Kernel::Matern32 { ell: 1.0 }] {
+            assert_eq!(k.with_theta_vec(&ThetaVec::scalar(0.3)), k.with_theta(0.3));
+        }
+        assert_eq!(
+            Kernel::Polynomial { degree: 2 }.with_theta_vec(&ThetaVec::scalar(3.4)),
+            Kernel::Polynomial { degree: 3 }
+        );
+        assert_eq!(Kernel::Linear.with_theta_vec(&ThetaVec::scalar(9.0)), Kernel::Linear);
+    }
+
+    #[test]
+    fn theta_vec_bits_canonicalize_negative_zero() {
+        assert_ne!((-0.0f64).to_bits(), 0.0f64.to_bits(), "premise");
+        assert_eq!(ThetaVec::scalar(-0.0).bits(), ThetaVec::scalar(0.0).bits());
+        let a = ThetaVec::from_slice(&[1.0, -0.0]).unwrap();
+        let b = ThetaVec::from_slice(&[1.0, 0.0]).unwrap();
+        assert_eq!(a.bits(), b.bits());
+        // distinct values still key distinct entries
+        assert_ne!(ThetaVec::scalar(1.0).bits(), ThetaVec::scalar(2.0).bits());
+        assert_ne!(a.bits(), ThetaVec::scalar(1.0).bits(), "length is part of the key");
+    }
+
+    #[test]
+    fn ard_gram_equals_isotropic_gram_on_rescaled_inputs() {
+        let mut rng = Rng::new(5);
+        let x = random_x(&mut rng, 16, 3);
+        let xi2 = [0.7, 1.6, 2.5];
+        let ard = gram(Kernel::RbfArd { xi2: ThetaVec::from_slice(&xi2).unwrap() }, &x);
+        let xs = Matrix::from_fn(16, 3, |i, j| x[(i, j)] / xi2[j].sqrt());
+        let iso = gram(Kernel::Rbf { xi2: 1.0 }, &xs);
+        assert!(ard.max_abs_diff(&iso) < 1e-12, "diff {}", ard.max_abs_diff(&iso));
+    }
+
+    #[test]
+    fn ard_gram_is_psd_and_uniform_ard_matches_rbf() {
+        let mut rng = Rng::new(6);
+        let x = random_x(&mut rng, 20, 4);
+        let ard = gram(Kernel::RbfArd { xi2: ThetaVec::splat(4, 2.0) }, &x);
+        let eg = SymEigen::new(&ard).unwrap();
+        assert!(eg.values[0] > -1e-9, "min eigenvalue {}", eg.values[0]);
+        // equal bandwidths reduce to the isotropic kernel (same arithmetic
+        // up to the division placement, so compare to tight tolerance)
+        let iso = gram(Kernel::Rbf { xi2: 2.0 }, &x);
+        assert!(ard.max_abs_diff(&iso) < 1e-13);
+    }
+
+    #[test]
+    fn parse_rbf_ard_syntax() {
+        assert_eq!(
+            parse_kernel("rbf-ard:1.0,2.0,0.5").unwrap(),
+            Kernel::RbfArd { xi2: ThetaVec::from_slice(&[1.0, 2.0, 0.5]).unwrap() }
+        );
+        assert!(parse_kernel("rbf-ard").is_err(), "bandwidths required");
+        assert!(parse_kernel("rbf-ard:1.0,abc").is_err());
+        assert!(parse_kernel("rbf-ard:1.0,-2.0").is_err(), "positive only");
+        assert!(parse_kernel("rbf-ard:1,1,1,1,1,1,1,1,1").is_err(), "over capacity");
     }
 }

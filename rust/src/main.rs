@@ -10,9 +10,9 @@ use gpml::coordinator::{
     session::{SessionTuneRequest, ThetaTuneRequest},
     Backend, Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest,
 };
-use gpml::optim::ThetaSearch;
+use gpml::optim::{RefineKind, ThetaSearch};
 use gpml::data;
-use gpml::kernelfn::{self, Kernel};
+use gpml::kernelfn::{self, Kernel, ThetaVec};
 use gpml::runtime::{default_artifact_dir, PjrtRuntime};
 use gpml::spectral::{HyperParams, SpectralGp};
 use gpml::util::cli::Args;
@@ -38,8 +38,9 @@ USAGE:
   gpml client --addr <host:port> --data <csv> [tune options]
               [--session] [--append <csv>] [--stats]
               [--tune-theta] [--theta-min 0.01] [--theta-max 100]
-              [--outer 20] [--theta-search wavefront|golden] [--wavefront 8]
-              [--inner-grid 9]
+              [--theta-dims D] [--outer 20]
+              [--theta-search wavefront|golden|nelder-mead|pso]
+              [--wavefront 8] [--inner-grid 9] [--refine newton|none]
                                       submit a tuning job to a server;
                                       --session creates/reuses a server-side
                                       session first (warm requests skip the
@@ -53,10 +54,17 @@ USAGE:
                                       through the server's eigen-family
                                       cache (parallel outer wavefronts;
                                       repeat sweeps are warm and bitwise
-                                      identical; requires --session)
+                                      identical; requires --session),
+                                      --theta-dims D expands an rbf kernel
+                                      to a D-lengthscale rbf-ard family
+                                      swept by coordinate descent,
+                                      --refine none skips the exact-Hessian
+                                      Newton polish at the outer optimum
   gpml bench-gate --current <BENCH_x.json> --baseline <json> [--tolerance 1.25]
-                                      CI perf gate: fail if any series'
-                                      median regresses past tolerance
+              [--write-baseline]      CI perf gate: fail if any series'
+                                      median regresses past tolerance;
+                                      --write-baseline instead rewrites the
+                                      --baseline file from --current medians
   gpml info   [--artifacts <dir>]     list compiled artifacts and buckets
   gpml help                           this text
 
@@ -106,8 +114,25 @@ fn main() {
 }
 
 fn parse_common(args: &Args) -> Result<(Kernel, Backend, GlobalStrategy, u64)> {
-    let kernel = kernelfn::parse_kernel(args.get_or("kernel", "rbf:1.0"))
+    let mut kernel = kernelfn::parse_kernel(args.get_or("kernel", "rbf:1.0"))
         .map_err(|e| anyhow!(e))?;
+    // `--theta-dims D` expands an isotropic rbf into a D-lengthscale ARD
+    // family (every lengthscale starts at the isotropic xi2); rbf-ard
+    // kernels spell their dimension in the kernel string itself
+    let theta_dims = args.get_usize("theta-dims", 0).map_err(|e| anyhow!(e))?;
+    if theta_dims >= 1 {
+        kernel = match kernel {
+            Kernel::Rbf { xi2 } => Kernel::RbfArd {
+                xi2: ThetaVec::from_slice(&vec![xi2; theta_dims]).map_err(|e| anyhow!(e))?,
+            },
+            Kernel::RbfArd { xi2 } if xi2.len() == theta_dims => Kernel::RbfArd { xi2 },
+            other => {
+                return Err(anyhow!(
+                    "--theta-dims {theta_dims} expands an isotropic rbf kernel, got {other:?}"
+                ))
+            }
+        };
+    }
     let backend = match args.get_or("backend", "rust") {
         "rust" => Backend::Rust,
         "pjrt" => Backend::Pjrt,
@@ -320,7 +345,18 @@ fn cmd_client(args: &Args) -> Result<()> {
                     width: args.get_usize("wavefront", 0).map_err(|e| anyhow!(e))?,
                 },
                 "golden" => ThetaSearch::Golden,
-                other => return Err(anyhow!("unknown theta search '{other}' (wavefront|golden)")),
+                "nelder-mead" => ThetaSearch::NelderMead,
+                "pso" => ThetaSearch::Pso,
+                other => {
+                    return Err(anyhow!(
+                        "unknown theta search '{other}' (wavefront|golden|nelder-mead|pso)"
+                    ))
+                }
+            };
+            treq.refine = match args.get_or("refine", "newton") {
+                "newton" => RefineKind::Newton,
+                "none" => RefineKind::None,
+                other => return Err(anyhow!("unknown refine '{other}' (newton|none)")),
             };
             treq.inner_grid =
                 args.get_usize("inner-grid", treq.inner_grid).map_err(|e| anyhow!(e))?;
@@ -356,6 +392,41 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
         gpml::util::json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
     };
     let current = read(current_path)?;
+    if args.flag("write-baseline") {
+        // re-baseline: replace the --baseline file with the medians the
+        // current run measured (ns + per-series median_us; the envelope
+        // semantics stay "fail past tolerance * these numbers")
+        use gpml::util::json::Json;
+        let bench = current.get("bench").and_then(Json::as_str).unwrap_or("bench");
+        let ns = current
+            .get("ns")
+            .cloned()
+            .ok_or_else(|| anyhow!("{current_path}: missing top-level \"ns\" array"))?;
+        let series = current
+            .get("series")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("{current_path}: missing top-level \"series\" object"))?;
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        for (label, s) in series {
+            let med = s
+                .get("median_us")
+                .cloned()
+                .ok_or_else(|| anyhow!("{current_path}: series '{label}' missing median_us"))?;
+            pairs.push((label.as_str(), Json::obj(vec![("median_us", med)])));
+        }
+        let count = pairs.len();
+        let note = format!("written by `gpml bench-gate --write-baseline` from {current_path}");
+        let out = Json::obj(vec![
+            ("bench", Json::str(bench)),
+            ("note", Json::str(&note)),
+            ("ns", ns),
+            ("series", Json::obj(pairs)),
+        ]);
+        std::fs::write(baseline_path, format!("{out}\n"))
+            .map_err(|e| anyhow!("writing {baseline_path}: {e}"))?;
+        println!("bench-gate: wrote baseline {baseline_path} ({count} series)");
+        return Ok(());
+    }
     let baseline = read(baseline_path)?;
     if let Some(note) = baseline.get("note").and_then(gpml::util::json::Json::as_str) {
         println!("baseline note: {note}");

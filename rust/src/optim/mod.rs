@@ -37,12 +37,13 @@ pub mod pso;
 pub mod two_step;
 
 pub use grid::grid_search;
-pub use neldermead::nelder_mead;
+pub use neldermead::{nelder_mead, nelder_mead_vec};
 pub use newton::{newton_refine, NewtonOptions, NewtonResult};
-pub use pso::{pso_search, PsoOptions};
+pub use pso::{pso_search, pso_search_vec, PsoOptions};
 pub use two_step::{
-    quantize_theta, theta_tune, two_step_tune, FnProvider, SetupProvider, ThetaSearch,
-    TwoStepOptions, TwoStepResult, DEFAULT_WAVEFRONT_WIDTH, MAX_DISCRETE_CANDIDATES,
+    quantize_theta, quantize_theta_vec, theta_tune, two_step_tune, FnProvider, RefineKind,
+    SetupProvider, ThetaRanges, ThetaSearch, TwoStepOptions, TwoStepResult, VecFnProvider,
+    DEFAULT_WAVEFRONT_WIDTH, MAX_DISCRETE_CANDIDATES, MAX_WAVEFRONT_WIDTH,
 };
 
 use crate::spectral::{Evaluation, HyperParams};

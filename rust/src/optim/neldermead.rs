@@ -105,6 +105,126 @@ pub fn nelder_mead<O: Objective>(
     SearchResult { hp: to_hp(simplex[bi]), score: f[bi], evals }
 }
 
+/// Dimension-generic Nelder-Mead core over a boxed domain — the vector
+/// theta search's backend (`ThetaSearch::NelderMead`).  The closure is
+/// `FnMut` (serial by design: the theta engine memoizes probes and
+/// builds any fresh setup through its own parallel wave); coordinates
+/// are whatever space the caller chose (the engine passes log10 theta).
+/// Returns `(best_point, best_score, evals)`.
+///
+/// NaN scores order as equal rather than panicking — the engine reports
+/// over-budget probes as +inf, and a pathological objective must not
+/// take down the server.
+pub fn nelder_mead_vec(
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    start: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    step: f64,
+    max_iters: usize,
+    tol: f64,
+) -> (Vec<f64>, f64, usize) {
+    let n = start.len();
+    assert!(n >= 1 && lo.len() == n && hi.len() == n, "dimension mismatch");
+    let clamp = |p: &mut [f64]| {
+        for d in 0..n {
+            p[d] = p[d].clamp(lo[d], hi[d]);
+        }
+    };
+
+    // n+1 vertices: start, plus start nudged along each axis
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    let mut p0 = start.to_vec();
+    clamp(&mut p0);
+    simplex.push(p0.clone());
+    for d in 0..n {
+        let mut p = p0.clone();
+        // nudge inward when the start sits on the upper bound
+        p[d] = if p[d] + step <= hi[d] { p[d] + step } else { p[d] - step };
+        clamp(&mut p);
+        simplex.push(p);
+    }
+    let mut evals = 0usize;
+    let mut fs: Vec<f64> = simplex
+        .iter()
+        .map(|p| {
+            evals += 1;
+            f(p)
+        })
+        .collect();
+
+    let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal);
+    for _ in 0..max_iters {
+        let mut order: Vec<usize> = (0..=n).collect();
+        order.sort_by(|&a, &b| cmp(&fs[a], &fs[b]));
+        let (b, w) = (order[0], order[n]);
+        let second_worst = fs[order[n - 1]];
+        if (fs[w] - fs[b]).abs() < tol * (1.0 + fs[b].abs()) {
+            break;
+        }
+        // centroid of all vertices but the worst
+        let mut centroid = vec![0.0; n];
+        for &i in order.iter().take(n) {
+            for d in 0..n {
+                centroid[d] += simplex[i][d];
+            }
+        }
+        for c in centroid.iter_mut() {
+            *c /= n as f64;
+        }
+        let along = |scale: f64| {
+            let mut p: Vec<f64> =
+                (0..n).map(|d| centroid[d] + scale * (centroid[d] - simplex[w][d])).collect();
+            clamp(&mut p);
+            p
+        };
+        let refl = along(1.0);
+        evals += 1;
+        let fr = f(&refl);
+        if fr < fs[b] {
+            let exp = along(2.0);
+            evals += 1;
+            let fe = f(&exp);
+            if fe < fr {
+                simplex[w] = exp;
+                fs[w] = fe;
+            } else {
+                simplex[w] = refl;
+                fs[w] = fr;
+            }
+        } else if fr < second_worst {
+            simplex[w] = refl;
+            fs[w] = fr;
+        } else {
+            let con = along(-0.5);
+            evals += 1;
+            let fc = f(&con);
+            if fc < fs[w] {
+                simplex[w] = con;
+                fs[w] = fc;
+            } else {
+                // shrink every non-best vertex toward the best
+                let best = simplex[b].clone();
+                for &i in order.iter().skip(1) {
+                    for d in 0..n {
+                        simplex[i][d] = best[d] + 0.5 * (simplex[i][d] - best[d]);
+                    }
+                    evals += 1;
+                    fs[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+
+    let mut bi = 0;
+    for i in 1..=n {
+        if fs[i] < fs[bi] {
+            bi = i;
+        }
+    }
+    (simplex.swap_remove(bi), fs[bi], evals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +262,47 @@ mod tests {
         );
         assert!(r.evals < 20);
         assert!(r.score.is_finite());
+    }
+
+    #[test]
+    fn vec_core_minimizes_a_3d_quadratic() {
+        let target = [0.3, -0.7, 1.1];
+        let mut f = |p: &[f64]| -> f64 {
+            p.iter().zip(&target).map(|(x, t)| (x - t) * (x - t)).sum()
+        };
+        let (best, score, evals) = nelder_mead_vec(
+            &mut f,
+            &[0.0, 0.0, 0.0],
+            &[-2.0, -2.0, -2.0],
+            &[2.0, 2.0, 2.0],
+            0.25,
+            400,
+            1e-14,
+        );
+        for (x, t) in best.iter().zip(&target) {
+            assert!((x - t).abs() < 1e-4, "{best:?}");
+        }
+        assert!(score < 1e-7, "score {score}");
+        assert!(evals > 4);
+    }
+
+    #[test]
+    fn vec_core_respects_bounds_and_nan_scores() {
+        // optimum outside the box, plus NaN pockets: must stay in bounds
+        // and terminate without panicking
+        let mut f = |p: &[f64]| -> f64 {
+            if p[0] > 0.9 && p[0] < 0.95 {
+                f64::NAN
+            } else {
+                (p[0] - 5.0).powi(2) + (p[1] + 5.0).powi(2)
+            }
+        };
+        let (best, _, _) =
+            nelder_mead_vec(&mut f, &[0.0, 0.0], &[-1.0, -1.0], &[1.0, 1.0], 0.25, 200, 1e-12);
+        assert!(best.iter().all(|&x| (-1.0..=1.0).contains(&x)), "{best:?}");
+        // the NaN pocket sits at 0.9..0.95, so "past 0.85" demonstrates
+        // progress toward the bound without betting on which pocket edge
+        // the simplex settles against
+        assert!(best[0] > 0.85 && best[1] < -0.85, "should push toward (1, -1): {best:?}");
     }
 }

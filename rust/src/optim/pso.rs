@@ -109,6 +109,75 @@ pub fn pso_search<O: Objective>(obj: &mut O, bounds: Bounds, opt: PsoOptions) ->
     SearchResult { hp: to_hp(&gbest), score: gbest_score, evals }
 }
 
+/// Dimension-generic PSO core over a boxed domain — the vector theta
+/// search's backend (`ThetaSearch::Pso`).  Serial `FnMut` evaluation by
+/// design: the theta engine memoizes probes and parallelizes any fresh
+/// setup through its own wave, so batching here would only reorder
+/// (and de-determinize) the probe stream.  Deterministic per
+/// `opt.seed`.  Returns `(best_point, best_score, evals)`.
+pub fn pso_search_vec(
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    lo: &[f64],
+    hi: &[f64],
+    opt: PsoOptions,
+) -> (Vec<f64>, f64, usize) {
+    let n = lo.len();
+    assert!(n >= 1 && hi.len() == n, "dimension mismatch");
+    let mut rng = Rng::new(opt.seed);
+    let np = opt.particles.max(2);
+
+    let mut pos: Vec<Vec<f64>> =
+        (0..np).map(|_| (0..n).map(|d| rng.uniform_in(lo[d], hi[d])).collect()).collect();
+    let vmax: Vec<f64> = (0..n).map(|d| (hi[d] - lo[d]) * 0.2).collect();
+    let mut vel: Vec<Vec<f64>> =
+        (0..np).map(|_| (0..n).map(|d| rng.uniform_in(-vmax[d], vmax[d])).collect()).collect();
+
+    let mut evals = 0usize;
+    let mut pbest = pos.clone();
+    let mut pbest_score: Vec<f64> = pos
+        .iter()
+        .map(|p| {
+            evals += 1;
+            f(p)
+        })
+        .collect();
+    let (mut gbest, mut gbest_score) = {
+        let mut bi = 0;
+        for i in 1..np {
+            if pbest_score[i] < pbest_score[bi] {
+                bi = i;
+            }
+        }
+        (pbest[bi].clone(), pbest_score[bi])
+    };
+
+    for _ in 0..opt.iterations {
+        for i in 0..np {
+            for d in 0..n {
+                let r1 = rng.uniform();
+                let r2 = rng.uniform();
+                vel[i][d] = opt.inertia * vel[i][d]
+                    + opt.cognitive * r1 * (pbest[i][d] - pos[i][d])
+                    + opt.social * r2 * (gbest[d] - pos[i][d]);
+                vel[i][d] = vel[i][d].clamp(-vmax[d], vmax[d]);
+                pos[i][d] = (pos[i][d] + vel[i][d]).clamp(lo[d], hi[d]);
+            }
+            evals += 1;
+            let score = f(&pos[i]);
+            if score < pbest_score[i] {
+                pbest_score[i] = score;
+                pbest[i].copy_from_slice(&pos[i]);
+                if score < gbest_score {
+                    gbest_score = score;
+                    gbest.copy_from_slice(&pos[i]);
+                }
+            }
+        }
+    }
+
+    (gbest, gbest_score, evals)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +213,35 @@ mod tests {
         let o = PsoOptions { particles: 8, iterations: 60, ..Default::default() };
         let r = pso_search(&mut Bowl::new(0.9, 1.1), Bounds::default(), o);
         assert!(r.score < 0.05, "score {}", r.score);
+    }
+
+    #[test]
+    fn vec_core_minimizes_a_3d_quadratic_within_bounds() {
+        let target = [0.3, -0.7, 1.1];
+        let mut f = |p: &[f64]| -> f64 {
+            p.iter().zip(&target).map(|(x, t)| (x - t) * (x - t)).sum()
+        };
+        let lo = [-2.0, -2.0, -2.0];
+        let hi = [2.0, 2.0, 2.0];
+        let o = PsoOptions { particles: 16, iterations: 80, ..Default::default() };
+        let (best, score, evals) = pso_search_vec(&mut f, &lo, &hi, o);
+        assert!(best.iter().zip(&lo).zip(&hi).all(|((&x, &l), &h)| x >= l && x <= h));
+        for (x, t) in best.iter().zip(&target) {
+            assert!((x - t).abs() < 0.05, "{best:?}");
+        }
+        assert!(score < 0.01, "score {score}");
+        assert_eq!(evals, 16 + 16 * 80);
+    }
+
+    #[test]
+    fn vec_core_is_deterministic_per_seed() {
+        let run = || {
+            let mut f = |p: &[f64]| (p[0] - 1.0).powi(2) + (p[1] + 1.0).powi(2);
+            pso_search_vec(&mut f, &[-3.0, -3.0], &[3.0, 3.0], PsoOptions::default())
+        };
+        let (a, sa, _) = run();
+        let (b, sb, _) = run();
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        assert_eq!(a, b);
     }
 }

@@ -1,33 +1,46 @@
 //! Algorithm 1 (paper §2.2) as a **theta-plane tuning engine**: two-step
-//! tuning when the kernel itself has a hyperparameter `theta` (RBF
-//! bandwidth, Matérn length-scale, polynomial degree, ...).
+//! tuning when the kernel itself has hyperparameters `theta` (RBF
+//! bandwidth, ARD bandwidth vector, Matérn length-scale, polynomial
+//! degree, ...).
 //!
 //! The outer loop moves `theta` — each move costs a fresh Gram matrix and
 //! eigendecomposition, O(N^3) — while the inner loop tunes `(sigma2,
 //! lambda2)` at O(N) per iterate using the spectral identities.  This
-//! module factors that outer loop into three pieces (DESIGN.md §9):
+//! module factors that outer loop into three pieces (DESIGN.md §9–10):
 //!
 //! - [`SetupProvider`] — *where setups come from*: get-or-build the
-//!   eigendecomposed setup at a theta.  [`FnProvider`] builds fresh every
-//!   time (the cold path); the coordinator's session store implements the
-//!   trait over its eigen-family cache, so a warm sweep builds nothing.
-//! - **Theta quantization** ([`quantize_theta`]) — probes are snapped to
-//!   a fixed grid (1e-6 decades for continuous families, integers for
-//!   discrete ones) *before* the setup is built, so two probes closer
-//!   than the grid alias to one setup, cache keys are exact bit
-//!   patterns, and warm re-runs replay the identical computation.
-//! - [`ThetaSearch`] — *how theta moves*: the legacy serial
-//!   golden-section line search, or a **parallel bracketing wavefront**
-//!   that evaluates a whole front of candidates concurrently across the
-//!   thread pool (each candidate's O(N^3) setup is independent — the
-//!   largest un-parallelized wall-clock cost in the repo before this
-//!   engine).  Discrete families ([`ThetaDomain::Integer`]) ignore the
-//!   requested search and sweep the integer degrees in one wavefront:
-//!   a continuous bracket over a rounding family aliases probes to
-//!   identical scores and learns nothing between them (see
-//!   [`Kernel::with_theta`]).
+//!   eigendecomposed setup at a theta vector.  [`FnProvider`] /
+//!   [`VecFnProvider`] build fresh every time (the cold path); the
+//!   coordinator's session store implements the trait over its
+//!   eigen-family cache, so a warm sweep builds nothing.
+//! - **Theta quantization** ([`quantize_theta`] / [`quantize_theta_vec`])
+//!   — probes are snapped per component to a fixed grid (1e-6 decades
+//!   for continuous families, integers for discrete ones) *before* the
+//!   setup is built, so two probes closer than the grid alias to one
+//!   setup, cache keys are exact concatenated bit patterns
+//!   ([`ThetaVec::bits`], `-0.0` canonicalized), and warm re-runs replay
+//!   the identical computation.
+//! - [`ThetaSearch`] — *how theta moves*: the serial golden-section line
+//!   search, the **parallel bracketing wavefront** (each round evaluates
+//!   a whole front of candidates concurrently across the thread pool),
+//!   or the derivative-free [`ThetaSearch::NelderMead`] /
+//!   [`ThetaSearch::Pso`] comparison backends.  For d > 1 the
+//!   golden/wavefront searches run as **coordinate descent**: one
+//!   bracketed sweep per component with the other components pinned at
+//!   the running best, repeated until a full pass stops improving.
+//!   Discrete components ([`ThetaDomain::Integer`]) ignore the requested
+//!   search and sweep the integer degrees in one wavefront: a continuous
+//!   bracket over a rounding family aliases probes to identical scores
+//!   and learns nothing between them (see [`Kernel::with_theta`]).
 //!
-//! Determinism: the candidate set is a function of `(theta_range,
+//! The inner stage is controlled by [`TwoStepOptions::refine`]: after the
+//! coarse (sigma2, lambda2) grid, [`RefineKind::Newton`] (the default)
+//! polishes with [`newton_refine`] on the paper's exact 2×2 Hessian —
+//! each Newton step is one fused O(N) evaluation (Props. 2.1–2.3), so
+//! refinement costs O(N) per iterate, never O(N^3).
+//! [`TwoStepResult::newton_iters`]/[`newton_evals`] report that work.
+//!
+//! Determinism: the candidate set is a function of `(theta ranges,
 //! outer_iters, search)` only — wavefront width defaults to a fixed
 //! constant, never the pool width — and every candidate's setup is
 //! built with the pool width pinned to 1 (the exact serial path), so
@@ -39,12 +52,13 @@
 //! setup.
 //!
 //! [`Kernel::with_theta`]: crate::kernelfn::Kernel::with_theta
+//! [`newton_evals`]: TwoStepResult::newton_evals
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::{newton_refine, Bounds, NewtonOptions, Objective};
-use crate::kernelfn::ThetaDomain;
+use crate::kernelfn::{ThetaDomain, ThetaDomainVec, ThetaVec, ThetaVecBits, MAX_THETA_DIMS};
 use crate::spectral::HyperParams;
 use crate::util::threadpool;
 
@@ -74,10 +88,13 @@ pub const MAX_WAVEFRONT_WIDTH: usize = 64;
 
 /// Snap `theta` to the engine's canonical grid for its domain.  Every
 /// probe is quantized before the setup is built, so this function *is*
-/// the cache-key contract shared by the engine, [`FnProvider`], and the
-/// coordinator's eigen-family cache.
+/// the cache-key contract shared by the engine, the providers, and the
+/// coordinator's eigen-family cache.  The result is canonicalized so it
+/// can never be `-0.0` (whose bit pattern differs from `+0.0` and would
+/// key a duplicate cache entry for the same setup — see
+/// [`ThetaVec::bits`], which applies the same canonicalization).
 pub fn quantize_theta(theta: f64, domain: ThetaDomain) -> f64 {
-    match domain {
+    let q = match domain {
         ThetaDomain::Integer => {
             if theta.is_finite() {
                 theta.round().max(1.0)
@@ -89,15 +106,33 @@ pub fn quantize_theta(theta: f64, domain: ThetaDomain) -> f64 {
             let q = THETA_QUANTA_PER_DECADE;
             10f64.powf((theta.log10() * q).round() / q)
         }
+    };
+    // `-0.0 == 0.0`, so this maps -0.0 (and only -0.0) to +0.0
+    if q == 0.0 {
+        0.0
+    } else {
+        q
     }
 }
 
-/// Outer-search strategy over theta (continuous families only; discrete
-/// families always sweep — see the module docs).
+/// Per-component [`quantize_theta`] over a theta vector (`domain` must
+/// have the same length).
+pub fn quantize_theta_vec(theta: &ThetaVec, domain: &ThetaDomainVec) -> ThetaVec {
+    assert_eq!(theta.len(), domain.len(), "theta dims != domain dims");
+    let mut out = *theta;
+    for d in 0..theta.len() {
+        out.set(d, quantize_theta(theta.get(d), domain.get(d)));
+    }
+    out
+}
+
+/// Outer-search strategy over theta (continuous components only;
+/// discrete components always sweep — see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ThetaSearch {
     /// Serial golden-section line search on log10(theta) — the paper's
-    /// "conventional line search on the expensive hyperparameter".
+    /// "conventional line search on the expensive hyperparameter".  For
+    /// d > 1: one golden sweep per component under coordinate descent.
     Golden,
     /// Parallel bracketing wavefronts: each round evaluates `width`
     /// evenly log-spaced candidates across the current bracket
@@ -106,8 +141,17 @@ pub enum ThetaSearch {
     /// values are clamped to `4..=`[`MAX_WAVEFRONT_WIDTH`] (below 4 the
     /// best-candidate-neighbor bracket cannot shrink — at width 3 an
     /// interior best spans the whole bracket — and the width is
-    /// wire-reachable, so the top end is capped too).
+    /// wire-reachable, so the top end is capped too).  For d > 1: one
+    /// bracketed wavefront per component under coordinate descent.
     Wavefront { width: usize },
+    /// Derivative-free Nelder-Mead simplex over the full log10(theta)
+    /// vector (any d) — a comparison backend for the wavefront, probing
+    /// through the same quantize/memoize pipeline.
+    NelderMead,
+    /// Particle-swarm search over the full log10(theta) vector (any d)
+    /// with a fixed internal seed — deterministic, like every other
+    /// search here.
+    Pso,
 }
 
 impl Default for ThetaSearch {
@@ -116,15 +160,92 @@ impl Default for ThetaSearch {
     }
 }
 
+/// How the inner (sigma2, lambda2) solve finishes at each outer
+/// candidate (see [`TwoStepOptions::refine`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RefineKind {
+    /// Coarse grid, then [`newton_refine`] on the exact O(N) 2×2
+    /// Hessian (the default — and the historical behavior, so scalar
+    /// results are bit-compatible with earlier releases).
+    #[default]
+    Newton,
+    /// Coarse grid only (isolates the Newton stage's contribution; the
+    /// comparison benches use it).
+    None,
+}
+
+/// Per-component theta ranges for a multi-dimensional outer search.
+/// Empty means "scalar request": [`TwoStepOptions::theta_range`]
+/// replicates across every provider dimension.  Fixed capacity keeps
+/// [`TwoStepOptions`] `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThetaRanges {
+    len: usize,
+    lo: [f64; MAX_THETA_DIMS],
+    hi: [f64; MAX_THETA_DIMS],
+}
+
+impl Default for ThetaRanges {
+    fn default() -> Self {
+        ThetaRanges::empty()
+    }
+}
+
+impl ThetaRanges {
+    /// The scalar-request marker: replicate `theta_range` over dims.
+    pub fn empty() -> ThetaRanges {
+        ThetaRanges { len: 0, lo: [0.0; MAX_THETA_DIMS], hi: [0.0; MAX_THETA_DIMS] }
+    }
+
+    /// Explicit per-component ranges; errors when the length is outside
+    /// `1..=MAX_THETA_DIMS` (range *values* are validated by
+    /// [`theta_tune`], which owns the error message).
+    pub fn from_pairs(pairs: &[(f64, f64)]) -> Result<ThetaRanges, String> {
+        if pairs.is_empty() || pairs.len() > MAX_THETA_DIMS {
+            return Err(format!(
+                "theta ranges have {} components (supported: 1..={MAX_THETA_DIMS})",
+                pairs.len()
+            ));
+        }
+        let mut r = ThetaRanges::empty();
+        for (i, &(lo, hi)) in pairs.iter().enumerate() {
+            r.lo[i] = lo;
+            r.hi[i] = hi;
+        }
+        r.len = pairs.len();
+        Ok(r)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> (f64, f64) {
+        assert!(i < self.len, "theta range {i} out of 0..{}", self.len);
+        (self.lo[i], self.hi[i])
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct TwoStepOptions {
-    /// Bounds for theta (raw, not log).
+    /// Bounds for theta (raw, not log), replicated across every
+    /// component unless `theta_ranges` is non-empty.
     pub theta_range: (f64, f64),
+    /// Per-component theta bounds (multi-dimensional requests).  Must be
+    /// empty or match the provider's dimension count.
+    pub theta_ranges: ThetaRanges,
     /// Outer evaluation budget.  Golden: probe count (legacy iteration
     /// semantics).  Wavefront: total distinct candidates across rounds,
     /// floored at the wavefront width — the first round always completes,
     /// so the effective budget is `max(outer_iters, width)`.
     /// Discrete sweep: maximum degrees probed (evenly thinned past it).
+    /// For d > 1 the budget applies **per component sweep**, not to the
+    /// whole coordinate-descent pass (each sweep is the scalar engine on
+    /// one axis).
     pub outer_iters: usize,
     /// How the outer stage moves theta.
     pub search: ThetaSearch,
@@ -132,6 +253,8 @@ pub struct TwoStepOptions {
     pub bounds: Bounds,
     /// Inner coarse-grid resolution before Newton refinement.
     pub inner_grid: usize,
+    /// Whether the inner solve polishes the coarse grid with Newton.
+    pub refine: RefineKind,
     pub newton: NewtonOptions,
 }
 
@@ -139,10 +262,12 @@ impl Default for TwoStepOptions {
     fn default() -> Self {
         TwoStepOptions {
             theta_range: (1e-2, 1e2),
+            theta_ranges: ThetaRanges::empty(),
             outer_iters: 20,
             search: ThetaSearch::default(),
             bounds: Bounds::default(),
             inner_grid: 9,
+            refine: RefineKind::default(),
             newton: NewtonOptions::default(),
         }
     }
@@ -150,22 +275,31 @@ impl Default for TwoStepOptions {
 
 #[derive(Clone, Debug)]
 pub struct TwoStepResult {
-    pub theta: f64,
+    /// Best quantized theta vector (1-component for scalar families).
+    pub theta: ThetaVec,
     pub hp: HyperParams,
     pub score: f64,
     /// O(N^3) setups **actually built** by the provider for this run —
-    /// not iterations: probes that aliased to an already-evaluated
-    /// quantized theta, and cache hits on a warm provider, do not count.
+    /// not iterations, and never Newton's O(N) re-evaluations: probes
+    /// that aliased to an already-evaluated quantized theta, and cache
+    /// hits on a warm provider, do not count.
     pub outer_evals: usize,
     /// Distinct quantized thetas whose inner problem was solved
     /// (>= `outer_evals`; the gap is exactly the cache/memo hits).
     pub distinct_thetas: usize,
-    /// Total O(N) inner evaluations across all distinct outer points.
+    /// Total O(N) inner evaluations across all distinct outer points
+    /// (coarse grid + Newton).
     pub inner_evals: usize,
+    /// Newton iterations accepted across all distinct outer points (0
+    /// when [`RefineKind::None`]).
+    pub newton_iters: usize,
+    /// Fused O(N) evaluations consumed by Newton refinement alone (a
+    /// subset of `inner_evals`).
+    pub newton_evals: usize,
 }
 
-/// Get-or-build the eigendecomposed setup for a (quantized) theta and
-/// hand back the O(N) inner objective over it.
+/// Get-or-build the eigendecomposed setup for a (quantized) theta vector
+/// and hand back the O(N) inner objective over it.
 ///
 /// `setup` takes `&self` and must be callable concurrently: the
 /// wavefront search fans one call per candidate across the thread pool.
@@ -174,23 +308,25 @@ pub struct TwoStepResult {
 pub trait SetupProvider: Sync {
     type Obj: Objective + Send;
 
-    /// The theta domain of the family this provider builds (drives the
-    /// family-aware search dispatch).
-    fn domain(&self) -> ThetaDomain {
-        ThetaDomain::Continuous
+    /// The per-component theta domains of the family this provider
+    /// builds (drives the family-aware search dispatch; scalar families
+    /// report one component).
+    fn domain(&self) -> ThetaDomainVec {
+        ThetaDomainVec::scalar(ThetaDomain::Continuous)
     }
 
     /// Build or fetch the setup at `theta` (already quantized by the
-    /// engine via [`quantize_theta`]).
-    fn setup(&self, theta: f64) -> Result<Self::Obj, String>;
+    /// engine via [`quantize_theta_vec`]).
+    fn setup(&self, theta: &ThetaVec) -> Result<Self::Obj, String>;
 
     /// Cumulative count of setups actually built (not cache hits).
     fn setups_built(&self) -> usize;
 }
 
-/// [`SetupProvider`] over a plain closure: builds a fresh setup per
-/// distinct quantized theta — the cold, cache-less path used by
-/// [`two_step_tune`], the benches, and tests.
+/// [`SetupProvider`] over a plain scalar closure: builds a fresh setup
+/// per distinct quantized theta — the cold, cache-less path used by
+/// [`two_step_tune`], the benches, and tests.  One-dimensional by
+/// construction; use [`VecFnProvider`] for d > 1.
 pub struct FnProvider<F> {
     f: F,
     domain: ThetaDomain,
@@ -217,11 +353,47 @@ where
 {
     type Obj = O;
 
-    fn domain(&self) -> ThetaDomain {
+    fn domain(&self) -> ThetaDomainVec {
+        ThetaDomainVec::scalar(self.domain)
+    }
+
+    fn setup(&self, theta: &ThetaVec) -> Result<O, String> {
+        self.built.fetch_add(1, Ordering::Relaxed);
+        Ok((self.f)(theta.get(0)))
+    }
+
+    fn setups_built(&self) -> usize {
+        self.built.load(Ordering::Relaxed)
+    }
+}
+
+/// [`SetupProvider`] over a vector closure with an explicit
+/// per-component domain — the cold path for multi-dimensional (ARD)
+/// families.
+pub struct VecFnProvider<F> {
+    f: F,
+    domain: ThetaDomainVec,
+    built: AtomicUsize,
+}
+
+impl<F> VecFnProvider<F> {
+    pub fn new(f: F, domain: ThetaDomainVec) -> Self {
+        VecFnProvider { f, domain, built: AtomicUsize::new(0) }
+    }
+}
+
+impl<O, F> SetupProvider for VecFnProvider<F>
+where
+    O: Objective + Send,
+    F: Fn(&ThetaVec) -> O + Sync,
+{
+    type Obj = O;
+
+    fn domain(&self) -> ThetaDomainVec {
         self.domain
     }
 
-    fn setup(&self, theta: f64) -> Result<O, String> {
+    fn setup(&self, theta: &ThetaVec) -> Result<O, String> {
         self.built.fetch_add(1, Ordering::Relaxed);
         Ok((self.f)(theta))
     }
@@ -231,53 +403,93 @@ where
     }
 }
 
-/// Inner solve: coarse grid + Newton on a fresh objective (unchanged
-/// from the pre-engine implementation, so scores are bit-compatible).
-fn inner_tune<O: Objective>(obj: &mut O, opt: &TwoStepOptions) -> (HyperParams, f64, usize) {
+/// Outcome of one inner (sigma2, lambda2) solve.
+struct InnerOutcome {
+    hp: HyperParams,
+    score: f64,
+    evals: usize,
+    newton_iters: usize,
+    newton_evals: usize,
+}
+
+/// Inner solve: coarse grid, then (by default) Newton on the exact O(N)
+/// 2×2 Hessian.  The Newton path is unchanged from the pre-engine
+/// implementation, so scalar scores stay bit-compatible; `newton_refine`
+/// accepts only strict improvements, so its score can never exceed the
+/// coarse-grid score it starts from.
+fn inner_tune<O: Objective>(obj: &mut O, opt: &TwoStepOptions) -> InnerOutcome {
     let coarse = super::grid_search(obj, opt.bounds, opt.inner_grid, 64);
-    let refined = newton_refine(obj, coarse.hp, opt.bounds, opt.newton);
-    (refined.hp, refined.score, coarse.evals + refined.evals)
+    match opt.refine {
+        RefineKind::Newton => {
+            let refined = newton_refine(obj, coarse.hp, opt.bounds, opt.newton);
+            InnerOutcome {
+                hp: refined.hp,
+                score: refined.score,
+                evals: coarse.evals + refined.evals,
+                newton_iters: refined.iters,
+                newton_evals: refined.evals,
+            }
+        }
+        RefineKind::None => InnerOutcome {
+            hp: coarse.hp,
+            score: coarse.score,
+            evals: coarse.evals,
+            newton_iters: 0,
+            newton_evals: 0,
+        },
+    }
+}
+
+/// The candidates of `thetas` not yet in `seen`, deduped by bit key, in
+/// first-seen order — the single definition of "what a wave will
+/// actually evaluate", shared by the evaluation and the budget checks so
+/// the two can never disagree.
+fn fresh_against(seen: &dyn Fn(&ThetaVecBits) -> bool, thetas: &[ThetaVec]) -> Vec<ThetaVec> {
+    let mut fresh: Vec<ThetaVec> = Vec::new();
+    for t in thetas {
+        let k = t.bits();
+        if !seen(&k) && !fresh.iter().any(|f| f.bits() == k) {
+            fresh.push(*t);
+        }
+    }
+    fresh
 }
 
 /// Engine state shared by the search strategies: the memo of solved
-/// thetas (keyed by quantized bit pattern) and the running best.
+/// thetas (keyed by concatenated quantized bit patterns) and the running
+/// best.
 struct Engine<'a, P: SetupProvider> {
     provider: &'a P,
     opt: &'a TwoStepOptions,
+    dom: ThetaDomainVec,
     /// quantized-theta bits -> (inner hp, inner score)
-    memo: HashMap<u64, (HyperParams, f64)>,
-    best_theta: f64,
+    memo: HashMap<ThetaVecBits, (HyperParams, f64)>,
+    best_theta: ThetaVec,
     best_hp: HyperParams,
     best_score: f64,
     inner_evals: usize,
+    newton_iters: usize,
+    newton_evals: usize,
 }
 
 impl<'a, P: SetupProvider> Engine<'a, P> {
-    fn new(provider: &'a P, opt: &'a TwoStepOptions) -> Self {
+    fn new(provider: &'a P, opt: &'a TwoStepOptions, dom: ThetaDomainVec) -> Self {
         Engine {
             provider,
             opt,
+            dom,
             memo: HashMap::new(),
-            best_theta: f64::NAN,
+            best_theta: ThetaVec::splat(dom.len().max(1), f64::NAN),
             best_hp: HyperParams::new(1.0, 1.0),
             best_score: f64::INFINITY,
             inner_evals: 0,
+            newton_iters: 0,
+            newton_evals: 0,
         }
     }
 
-    /// The candidates not yet memoized, deduped, in first-seen order —
-    /// the single definition of "what a wave will actually evaluate",
-    /// shared by [`Engine::eval_wave`] and the wavefront budget check so
-    /// the two can never disagree.
-    fn fresh_of(&self, thetas: &[f64]) -> Vec<f64> {
-        let mut fresh: Vec<f64> = Vec::new();
-        for &t in thetas {
-            let k = t.to_bits();
-            if !self.memo.contains_key(&k) && !fresh.iter().any(|f| f.to_bits() == k) {
-                fresh.push(t);
-            }
-        }
-        fresh
+    fn fresh_of(&self, thetas: &[ThetaVec]) -> Vec<ThetaVec> {
+        fresh_against(&|k| self.memo.contains_key(k), thetas)
     }
 
     /// Evaluate one wavefront of (already quantized) candidates.  Thetas
@@ -286,57 +498,63 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
     /// the O(N)-per-iterate inner tune.  Results merge in candidate
     /// order, so ties and the running best are deterministic regardless
     /// of which worker finished first.
-    fn eval_wave(&mut self, thetas: &[f64]) -> Result<(), String> {
+    fn eval_wave(&mut self, thetas: &[ThetaVec]) -> Result<(), String> {
         let fresh = self.fresh_of(thetas);
         if fresh.is_empty() {
             return Ok(());
         }
         let (provider, opt) = (self.provider, self.opt);
-        let results =
-            threadpool::par_map(&fresh, 1, |&t| -> Result<(HyperParams, f64, usize), String> {
-                // Pin the build itself to the exact serial path: inside a
-                // pool worker nested par_* calls inline anyway, but a
-                // 1-candidate wave (every golden probe) runs on the
-                // calling thread where the eigensolver would otherwise
-                // parallelize at the request width — whose block
-                // reductions differ from serial by O(eps).  Pinning makes
-                // every setup canonical, so cached entries serve
-                // identical bits to clients at any thread count.
-                let mut obj = threadpool::with_threads(1, || provider.setup(t))?;
-                Ok(inner_tune(&mut obj, opt))
-            });
-        for (&t, r) in fresh.iter().zip(results) {
-            let (hp, score, ev) = r?;
-            self.inner_evals += ev;
-            self.memo.insert(t.to_bits(), (hp, score));
-            if score < self.best_score {
-                self.best_score = score;
-                self.best_hp = hp;
-                self.best_theta = t;
+        let results = threadpool::par_map(&fresh, 1, |t| -> Result<InnerOutcome, String> {
+            // Pin the build itself to the exact serial path: inside a
+            // pool worker nested par_* calls inline anyway, but a
+            // 1-candidate wave (every golden probe) runs on the
+            // calling thread where the eigensolver would otherwise
+            // parallelize at the request width — whose block
+            // reductions differ from serial by O(eps).  Pinning makes
+            // every setup canonical, so cached entries serve
+            // identical bits to clients at any thread count.
+            let mut obj = threadpool::with_threads(1, || provider.setup(t))?;
+            Ok(inner_tune(&mut obj, opt))
+        });
+        for (t, r) in fresh.iter().zip(results) {
+            let out = r?;
+            self.inner_evals += out.evals;
+            self.newton_iters += out.newton_iters;
+            self.newton_evals += out.newton_evals;
+            self.memo.insert(t.bits(), (out.hp, out.score));
+            if out.score < self.best_score {
+                self.best_score = out.score;
+                self.best_hp = out.hp;
+                self.best_theta = *t;
             }
         }
         Ok(())
     }
 
-    fn score_of(&self, theta: f64) -> f64 {
-        self.memo[&theta.to_bits()].1
+    fn score_of(&self, theta: &ThetaVec) -> f64 {
+        self.memo[&theta.bits()].1
     }
 
-    /// Serial golden-section on log10(theta) — the legacy outer stage,
-    /// now memoized: probes that alias to an already-solved quantized
-    /// theta re-read the score instead of rebuilding the setup, so the
-    /// bracket update can never stall on duplicated work.
-    fn golden(&mut self, tmin: f64, tmax: f64) -> Result<(), String> {
+    /// Serial golden-section on log10 of component `d` (the other
+    /// components pinned at `cur`) — the legacy outer stage, memoized:
+    /// probes that alias to an already-solved quantized theta re-read
+    /// the score instead of rebuilding the setup, so the bracket update
+    /// can never stall on duplicated work.
+    fn golden_dim(&mut self, cur: &ThetaVec, d: usize, tmin: f64, tmax: f64) -> Result<(), String> {
         let inv_phi = (5f64.sqrt() - 1.0) / 2.0;
         let (mut lo, mut hi) = (tmin.log10(), tmax.log10());
-        let q = |logt: f64| quantize_theta(10f64.powf(logt), ThetaDomain::Continuous);
+        let q = |logt: f64| {
+            let mut t = *cur;
+            t.set(d, quantize_theta(10f64.powf(logt), ThetaDomain::Continuous));
+            t
+        };
 
         let mut x1 = hi - inv_phi * (hi - lo);
         let mut x2 = lo + inv_phi * (hi - lo);
         self.eval_wave(&[q(x1)])?;
-        let mut f1 = self.score_of(q(x1));
+        let mut f1 = self.score_of(&q(x1));
         self.eval_wave(&[q(x2)])?;
-        let mut f2 = self.score_of(q(x2));
+        let mut f2 = self.score_of(&q(x2));
 
         for _ in 0..self.opt.outer_iters.saturating_sub(2) {
             if f1 < f2 {
@@ -345,14 +563,14 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
                 f2 = f1;
                 x1 = hi - inv_phi * (hi - lo);
                 self.eval_wave(&[q(x1)])?;
-                f1 = self.score_of(q(x1));
+                f1 = self.score_of(&q(x1));
             } else {
                 lo = x1;
                 x1 = x2;
                 f1 = f2;
                 x2 = lo + inv_phi * (hi - lo);
                 self.eval_wave(&[q(x2)])?;
-                f2 = self.score_of(q(x2));
+                f2 = self.score_of(&q(x2));
             }
             if hi - lo < 1e-4 {
                 break;
@@ -361,38 +579,58 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
         Ok(())
     }
 
-    /// Parallel bracketing wavefronts: evaluate `width` evenly log-spaced
+    /// Parallel bracketing wavefronts over component `d` (the other
+    /// components pinned at `cur`): evaluate `width` evenly log-spaced
     /// candidates over the bracket concurrently, shrink the bracket to
     /// the best candidate's immediate neighbors, repeat.  The bracket
     /// endpoints of round k+1 were candidates of round k, so each round
     /// after the first costs at most `width - 2` fresh setups.  A round
-    /// that would push the distinct-candidate count past the outer
-    /// budget does not start, so `max(outer_iters, width)` is a hard
-    /// cap (the first round always completes — the budget cannot cut a
-    /// bracket below one full wave).
-    fn wavefront(&mut self, tmin: f64, tmax: f64, width: usize) -> Result<(), String> {
+    /// that would push this sweep's distinct-candidate count past the
+    /// outer budget does not start, so `max(outer_iters, width)` is a
+    /// hard per-sweep cap (the first round always completes — the budget
+    /// cannot cut a bracket below one full wave).
+    fn wavefront_dim(
+        &mut self,
+        cur: &ThetaVec,
+        d: usize,
+        tmin: f64,
+        tmax: f64,
+        width: usize,
+    ) -> Result<(), String> {
         let width =
             if width == 0 { DEFAULT_WAVEFRONT_WIDTH } else { width.clamp(4, MAX_WAVEFRONT_WIDTH) };
         let budget = self.opt.outer_iters.max(width);
         let (mut lo, mut hi) = (tmin.log10(), tmax.log10());
+        // this sweep's own candidate ledger: for a 1-D run it coincides
+        // with the engine memo (preserving the historical budget
+        // semantics bit-for-bit); under coordinate descent it keeps one
+        // axis sweep from starving the next
+        let mut seen: HashSet<ThetaVecBits> = HashSet::new();
         loop {
             let logts: Vec<f64> = (0..width)
                 .map(|i| lo + (hi - lo) * i as f64 / (width - 1) as f64)
                 .collect();
-            let thetas: Vec<f64> = logts
+            let thetas: Vec<ThetaVec> = logts
                 .iter()
-                .map(|&lt| quantize_theta(10f64.powf(lt), ThetaDomain::Continuous))
+                .map(|&lt| {
+                    let mut t = *cur;
+                    t.set(d, quantize_theta(10f64.powf(lt), ThetaDomain::Continuous));
+                    t
+                })
                 .collect();
-            let fresh = self.fresh_of(&thetas).len();
-            if !self.memo.is_empty() && self.memo.len() + fresh > budget {
+            let fresh = fresh_against(&|k| seen.contains(k), &thetas).len();
+            if !seen.is_empty() && seen.len() + fresh > budget {
                 break;
             }
             self.eval_wave(&thetas)?;
+            for t in &thetas {
+                seen.insert(t.bits());
+            }
             // best candidate of this round (first index wins ties —
             // deterministic because scores merge in candidate order)
             let mut bi = 0;
-            for (i, &t) in thetas.iter().enumerate().skip(1) {
-                if self.score_of(t) < self.score_of(thetas[bi]) {
+            for (i, t) in thetas.iter().enumerate().skip(1) {
+                if self.score_of(t) < self.score_of(&thetas[bi]) {
                     bi = i;
                 }
             }
@@ -410,9 +648,10 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
         Ok(())
     }
 
-    /// Discrete sweep for integer theta families: evaluate every integer
-    /// degree in range (evenly thinned down to the outer budget when the
-    /// range is huge) as a single parallel wavefront.
+    /// Discrete sweep of component `d` for integer theta families:
+    /// evaluate every integer degree in range (evenly thinned down to
+    /// the outer budget when the range is huge) as a single parallel
+    /// wavefront.
     ///
     /// Both ends are clamped against wire-reachable abuse: degrees above
     /// `u32::MAX` are meaningless (`Kernel::with_theta` stores a `u32`),
@@ -420,7 +659,13 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
     /// [`MAX_DISCRETE_CANDIDATES`] regardless of the requested outer
     /// budget — each candidate is an O(N^3) setup, so an unbounded cap
     /// would let one request allocate/compute without limit.
-    fn discrete(&mut self, tmin: f64, tmax: f64) -> Result<(), String> {
+    fn discrete_dim(
+        &mut self,
+        cur: &ThetaVec,
+        d: usize,
+        tmin: f64,
+        tmax: f64,
+    ) -> Result<(), String> {
         let lo = tmin.ceil().max(1.0);
         let hi = tmax.floor().min(u32::MAX as f64);
         if hi < lo {
@@ -436,34 +681,198 @@ impl<'a, P: SetupProvider> Engine<'a, P> {
             (0..cap).map(|i| lo + (count - 1) * i / (cap - 1)).collect()
         };
         degs.dedup();
-        let thetas: Vec<f64> = degs.into_iter().map(|d| d as f64).collect();
+        let thetas: Vec<ThetaVec> = degs
+            .into_iter()
+            .map(|deg| {
+                let mut t = *cur;
+                t.set(d, deg as f64);
+                t
+            })
+            .collect();
         self.eval_wave(&thetas)
+    }
+
+    /// One bracketed sweep of component `d`, dispatched on that
+    /// component's domain and the requested search.
+    fn sweep_dim(&mut self, cur: &ThetaVec, d: usize, range: (f64, f64)) -> Result<(), String> {
+        match self.dom.get(d) {
+            ThetaDomain::Integer => self.discrete_dim(cur, d, range.0, range.1),
+            _ => match self.opt.search {
+                ThetaSearch::Golden => self.golden_dim(cur, d, range.0, range.1),
+                ThetaSearch::Wavefront { width } => {
+                    self.wavefront_dim(cur, d, range.0, range.1, width)
+                }
+                // mixed-domain fallback when a full-vector search cannot
+                // run: default-width wavefront on the continuous axis
+                ThetaSearch::NelderMead | ThetaSearch::Pso => {
+                    self.wavefront_dim(cur, d, range.0, range.1, 0)
+                }
+            },
+        }
+    }
+
+    /// The quantized geometric midpoint of every component's range — the
+    /// starting point that pins off-axis components before their own
+    /// sweep has run.
+    fn start_point(&self, ranges: &[(f64, f64)]) -> ThetaVec {
+        let mut cur = ThetaVec::splat(ranges.len(), 1.0);
+        for (d, &(lo, hi)) in ranges.iter().enumerate() {
+            let mid = 10f64.powf(0.5 * (lo.log10() + hi.log10()));
+            cur.set(d, quantize_theta(mid, self.dom.get(d)));
+        }
+        cur
+    }
+
+    /// Golden/wavefront/discrete dispatch.  d == 1 is exactly one sweep
+    /// — the scalar engine, bit-for-bit.  d > 1 runs coordinate descent:
+    /// sweep each component in turn with the others pinned at the
+    /// running best, until a full pass stops improving (or builds
+    /// nothing fresh), with a fixed pass cap as a backstop.
+    fn coordinate_descent(&mut self, ranges: &[(f64, f64)]) -> Result<(), String> {
+        let dims = ranges.len();
+        let mut cur = self.start_point(ranges);
+        if dims == 1 {
+            return self.sweep_dim(&cur, 0, ranges[0]);
+        }
+        const MAX_PASSES: usize = 8;
+        for _ in 0..MAX_PASSES {
+            let score_before = self.best_score;
+            let solved_before = self.memo.len();
+            for (d, &range) in ranges.iter().enumerate() {
+                self.sweep_dim(&cur, d, range)?;
+                if self.best_score < f64::INFINITY {
+                    cur = self.best_theta;
+                }
+            }
+            let improved = self.best_score < score_before;
+            if !improved || self.memo.len() == solved_before {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantize a log10-space probe point, evaluate it through the memo,
+    /// and return its score — the shared probe used by the Nelder-Mead
+    /// and PSO backends.  Fresh probes past the outer budget are not
+    /// built; they report +inf so the search turns back toward explored
+    /// territory (deterministically).
+    fn probe(&mut self, logt: &[f64], budget: usize, err: &mut Option<String>) -> f64 {
+        let mut t = ThetaVec::splat(logt.len(), 1.0);
+        for (d, &lt) in logt.iter().enumerate() {
+            t.set(d, quantize_theta(10f64.powf(lt), self.dom.get(d)));
+        }
+        if let Some(&(_, score)) = self.memo.get(&t.bits()) {
+            return score;
+        }
+        if self.memo.len() >= budget {
+            return f64::INFINITY;
+        }
+        match self.eval_wave(std::slice::from_ref(&t)) {
+            Ok(()) => self.score_of(&t),
+            Err(e) => {
+                if err.is_none() {
+                    *err = Some(e);
+                }
+                f64::INFINITY
+            }
+        }
+    }
+
+    /// Nelder-Mead over the full log10(theta) vector through the
+    /// quantize/memoize probe.
+    fn nelder_mead_theta(&mut self, ranges: &[(f64, f64)]) -> Result<(), String> {
+        let budget = self.opt.outer_iters.max(2);
+        let lo: Vec<f64> = ranges.iter().map(|r| r.0.log10()).collect();
+        let hi: Vec<f64> = ranges.iter().map(|r| r.1.log10()).collect();
+        let start: Vec<f64> = lo.iter().zip(&hi).map(|(&l, &h)| 0.5 * (l + h)).collect();
+        let mut err: Option<String> = None;
+        {
+            let mut f = |p: &[f64]| self.probe(p, budget, &mut err);
+            super::neldermead::nelder_mead_vec(&mut f, &start, &lo, &hi, 0.25, 4 * budget, 1e-10);
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// PSO over the full log10(theta) vector through the
+    /// quantize/memoize probe (fixed internal seed — deterministic).
+    fn pso_theta(&mut self, ranges: &[(f64, f64)]) -> Result<(), String> {
+        let budget = self.opt.outer_iters.max(2);
+        let lo: Vec<f64> = ranges.iter().map(|r| r.0.log10()).collect();
+        let hi: Vec<f64> = ranges.iter().map(|r| r.1.log10()).collect();
+        let popt = super::PsoOptions {
+            particles: 8,
+            iterations: (4 * budget / 8).max(4),
+            seed: 0x7e7a_5eed,
+            ..Default::default()
+        };
+        let mut err: Option<String> = None;
+        {
+            let mut f = |p: &[f64]| self.probe(p, budget, &mut err);
+            super::pso::pso_search_vec(&mut f, &lo, &hi, popt);
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
 /// Run Algorithm 1 through a [`SetupProvider`]: family-aware dispatch
-/// (continuous search vs discrete sweep), quantized memoized probes, and
-/// truthful setup accounting.  Errors surface provider failures
-/// (eigensolver non-convergence, a dead session) and invalid ranges.
+/// (continuous search vs discrete sweep, scalar sweep vs coordinate
+/// descent for d > 1), quantized memoized probes, and truthful setup
+/// accounting.  Errors surface provider failures (eigensolver
+/// non-convergence, a dead session) and invalid ranges.
 pub fn theta_tune<P: SetupProvider>(
     provider: &P,
     opt: &TwoStepOptions,
 ) -> Result<TwoStepResult, String> {
-    let (tmin, tmax) = opt.theta_range;
-    if !(tmin.is_finite() && tmax.is_finite() && tmin > 0.0 && tmin < tmax) {
-        return Err(format!("theta range must be positive and increasing, got ({tmin}, {tmax})"));
-    }
-    let built_before = provider.setups_built();
-    let mut eng = Engine::new(provider, opt);
-    match provider.domain() {
-        ThetaDomain::Fixed => {
-            return Err("kernel family has no tunable theta".to_string());
+    // validate the requested ranges first (scalar requests keep the
+    // historical error precedence)
+    if opt.theta_ranges.is_empty() {
+        let (tmin, tmax) = opt.theta_range;
+        if !(tmin.is_finite() && tmax.is_finite() && tmin > 0.0 && tmin < tmax) {
+            return Err(format!(
+                "theta range must be positive and increasing, got ({tmin}, {tmax})"
+            ));
         }
-        ThetaDomain::Integer => eng.discrete(tmin, tmax)?,
-        ThetaDomain::Continuous => match opt.search {
-            ThetaSearch::Golden => eng.golden(tmin, tmax)?,
-            ThetaSearch::Wavefront { width } => eng.wavefront(tmin, tmax, width)?,
-        },
+    } else {
+        for i in 0..opt.theta_ranges.len() {
+            let (tmin, tmax) = opt.theta_ranges.get(i);
+            if !(tmin.is_finite() && tmax.is_finite() && tmin > 0.0 && tmin < tmax) {
+                return Err(format!(
+                    "theta range must be positive and increasing, got ({tmin}, {tmax})"
+                ));
+            }
+        }
+    }
+    let dom = provider.domain();
+    let dims = dom.len();
+    if dims == 0 || (0..dims).any(|d| dom.get(d) == ThetaDomain::Fixed) {
+        return Err("kernel family has no tunable theta".to_string());
+    }
+    let ranges: Vec<(f64, f64)> = if opt.theta_ranges.is_empty() {
+        vec![opt.theta_range; dims]
+    } else {
+        if opt.theta_ranges.len() != dims {
+            return Err(format!(
+                "theta ranges have {} components; the kernel family has {dims}",
+                opt.theta_ranges.len()
+            ));
+        }
+        (0..dims).map(|i| opt.theta_ranges.get(i)).collect()
+    };
+
+    let built_before = provider.setups_built();
+    let mut eng = Engine::new(provider, opt, dom);
+    let all_continuous = (0..dims).all(|d| dom.get(d) == ThetaDomain::Continuous);
+    match opt.search {
+        ThetaSearch::NelderMead if all_continuous => eng.nelder_mead_theta(&ranges)?,
+        ThetaSearch::Pso if all_continuous => eng.pso_theta(&ranges)?,
+        _ => eng.coordinate_descent(&ranges)?,
     }
     Ok(TwoStepResult {
         theta: eng.best_theta,
@@ -472,11 +881,13 @@ pub fn theta_tune<P: SetupProvider>(
         outer_evals: provider.setups_built() - built_before,
         distinct_thetas: eng.memo.len(),
         inner_evals: eng.inner_evals,
+        newton_iters: eng.newton_iters,
+        newton_evals: eng.newton_evals,
     })
 }
 
-/// Run Algorithm 1 over a closure.  `make_objective(theta)` pays the
-/// O(N^3) overhead (Gram + eigendecomposition at that kernel
+/// Run Algorithm 1 over a scalar closure.  `make_objective(theta)` pays
+/// the O(N^3) overhead (Gram + eigendecomposition at that kernel
 /// hyperparameter) and returns the O(N) objective for the inner loop.
 ///
 /// Compatibility wrapper over [`theta_tune`] + [`FnProvider`]; the
@@ -522,18 +933,30 @@ mod tests {
         }
     }
 
+    /// 2-D variant with a separable optimum at (2.0, 0.5).
+    fn theta_bowl2(theta: &ThetaVec) -> ThetaBowl {
+        ThetaBowl {
+            bowl: Bowl::new(0.5, 2.0),
+            depth: (theta.get(0).ln() - 2f64.ln()).powi(2)
+                + (theta.get(1).ln() - 0.5f64.ln()).powi(2),
+        }
+    }
+
     #[test]
     fn finds_outer_and_inner_optimum() {
         let r = two_step_tune(
             theta_bowl,
             TwoStepOptions { outer_iters: 30, ..Default::default() },
         );
-        assert!((r.theta.ln() - 2f64.ln()).abs() < 0.02, "theta={}", r.theta);
+        assert_eq!(r.theta.len(), 1, "scalar family tunes a 1-vector");
+        assert!((r.theta.get(0).ln() - 2f64.ln()).abs() < 0.02, "theta={:?}", r.theta);
         assert!((r.hp.sigma2 - 0.5).abs() < 1e-3, "{:?}", r.hp);
         assert!((r.hp.lambda2 - 2.0).abs() < 1e-3, "{:?}", r.hp);
         assert!(r.outer_evals <= 30);
         assert_eq!(r.outer_evals, r.distinct_thetas, "cold provider: one build per theta");
         assert!(r.inner_evals > r.outer_evals, "inner loop should dominate");
+        assert!(r.newton_evals > 0, "default refine runs Newton");
+        assert!(r.newton_evals < r.inner_evals, "Newton is a subset of the inner work");
     }
 
     #[test]
@@ -561,7 +984,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        assert!((wave.theta.ln() - 2f64.ln()).abs() < 0.02, "theta={}", wave.theta);
+        assert!((wave.theta.get(0).ln() - 2f64.ln()).abs() < 0.02, "theta={:?}", wave.theta);
         assert!(
             wave.score <= golden.score + 1e-6 * golden.score.abs().max(1.0),
             "wavefront {} vs golden {}",
@@ -580,10 +1003,12 @@ mod tests {
         };
         let a = crate::util::threadpool::with_threads(1, || two_step_tune(theta_bowl, opt));
         let b = crate::util::threadpool::with_threads(4, || two_step_tune(theta_bowl, opt));
-        assert_eq!(a.theta.to_bits(), b.theta.to_bits());
+        assert_eq!(a.theta.bits(), b.theta.bits());
         assert_eq!(a.score.to_bits(), b.score.to_bits());
         assert_eq!(a.hp, b.hp);
         assert_eq!(a.outer_evals, b.outer_evals);
+        assert_eq!(a.newton_iters, b.newton_iters);
+        assert_eq!(a.newton_evals, b.newton_evals);
     }
 
     #[test]
@@ -599,7 +1024,7 @@ mod tests {
             &TwoStepOptions { theta_range: (1.0, 6.0), outer_iters: 10, ..Default::default() },
         )
         .unwrap();
-        assert_eq!(r.theta, 3.0);
+        assert_eq!(r.theta.get(0), 3.0);
         assert_eq!(r.outer_evals, 6, "degrees 1..=6, one setup each");
         assert_eq!(r.distinct_thetas, 6);
     }
@@ -614,7 +1039,7 @@ mod tests {
         )
         .unwrap();
         assert!(r.outer_evals <= 8, "thinned to the outer budget, got {}", r.outer_evals);
-        assert_eq!(r.theta, 1.0, "monotone depth: smallest degree wins");
+        assert_eq!(r.theta.get(0), 1.0, "monotone depth: smallest degree wins");
     }
 
     #[test]
@@ -675,6 +1100,19 @@ mod tests {
         let int = FnProvider::with_domain(theta_bowl, ThetaDomain::Integer);
         let empty = TwoStepOptions { theta_range: (0.1, 0.9), ..Default::default() };
         assert!(theta_tune(&int, &empty).is_err());
+        // vector ranges must match the provider's dimensions
+        let mismatched = TwoStepOptions {
+            theta_ranges: ThetaRanges::from_pairs(&[(0.1, 1.0), (0.1, 1.0)]).unwrap(),
+            ..Default::default()
+        };
+        let err = theta_tune(&provider, &mismatched).unwrap_err();
+        assert!(err.contains("2 components"), "{err}");
+        // per-component range values are validated like scalar ones
+        let badvec = TwoStepOptions {
+            theta_ranges: ThetaRanges::from_pairs(&[(5.0, 1.0)]).unwrap(),
+            ..Default::default()
+        };
+        assert!(theta_tune(&provider, &badvec).is_err());
     }
 
     #[test]
@@ -687,5 +1125,134 @@ mod tests {
         assert_eq!(quantize_theta(2.9, ThetaDomain::Integer), 3.0);
         assert_eq!(quantize_theta(0.2, ThetaDomain::Integer), 1.0);
         assert_eq!(quantize_theta(f64::NAN, ThetaDomain::Integer), 1.0);
+    }
+
+    #[test]
+    fn quantize_canonicalizes_negative_zero() {
+        // -0.0 == 0.0 yet their bit patterns differ; before this fix the
+        // two keyed distinct eigen-family cache entries for one setup
+        assert_ne!((-0.0f64).to_bits(), 0.0f64.to_bits(), "premise");
+        let qn = quantize_theta(-0.0, ThetaDomain::Continuous);
+        let qp = quantize_theta(0.0, ThetaDomain::Continuous);
+        assert_eq!(qn.to_bits(), qp.to_bits());
+        assert_eq!(qn.to_bits(), 0.0f64.to_bits(), "canonical form is +0.0");
+        // and the vector key applies the same canonicalization
+        let dom = ThetaDomainVec::uniform(2, ThetaDomain::Continuous);
+        let a = quantize_theta_vec(&ThetaVec::from_slice(&[1.0, -0.0]).unwrap(), &dom);
+        let b = quantize_theta_vec(&ThetaVec::from_slice(&[1.0, 0.0]).unwrap(), &dom);
+        assert_eq!(a.bits(), b.bits());
+    }
+
+    #[test]
+    fn vector_coordinate_descent_finds_separable_optimum() {
+        let provider =
+            VecFnProvider::new(theta_bowl2, ThetaDomainVec::uniform(2, ThetaDomain::Continuous));
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions {
+                theta_range: (0.05, 50.0),
+                outer_iters: 24,
+                search: ThetaSearch::Wavefront { width: 0 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r.theta.len(), 2);
+        assert!((r.theta.get(0).ln() - 2f64.ln()).abs() < 0.05, "theta={:?}", r.theta);
+        assert!((r.theta.get(1).ln() - 0.5f64.ln()).abs() < 0.05, "theta={:?}", r.theta);
+        assert_eq!(r.outer_evals, r.distinct_thetas, "cold provider: one build per theta");
+    }
+
+    #[test]
+    fn vector_per_component_ranges_constrain_each_axis() {
+        let provider =
+            VecFnProvider::new(theta_bowl2, ThetaDomainVec::uniform(2, ThetaDomain::Continuous));
+        // clamp component 1 away from its optimum at 0.5
+        let r = theta_tune(
+            &provider,
+            &TwoStepOptions {
+                theta_ranges: ThetaRanges::from_pairs(&[(0.05, 50.0), (1.0, 50.0)]).unwrap(),
+                outer_iters: 24,
+                search: ThetaSearch::Wavefront { width: 0 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.theta.get(1) >= 1.0 - 1e-9, "range violated: {:?}", r.theta);
+        assert!((r.theta.get(0).ln() - 2f64.ln()).abs() < 0.05, "theta={:?}", r.theta);
+    }
+
+    #[test]
+    fn vector_wavefront_is_deterministic_across_pool_widths() {
+        let run = || {
+            let provider = VecFnProvider::new(
+                theta_bowl2,
+                ThetaDomainVec::uniform(2, ThetaDomain::Continuous),
+            );
+            theta_tune(
+                &provider,
+                &TwoStepOptions {
+                    theta_range: (0.05, 50.0),
+                    outer_iters: 20,
+                    search: ThetaSearch::Wavefront { width: 5 },
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let a = crate::util::threadpool::with_threads(1, run);
+        let b = crate::util::threadpool::with_threads(4, run);
+        assert_eq!(a.theta.bits(), b.theta.bits());
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(a.outer_evals, b.outer_evals);
+    }
+
+    #[test]
+    fn refine_none_skips_newton_and_never_beats_it() {
+        let with = two_step_tune(
+            theta_bowl,
+            TwoStepOptions { outer_iters: 16, ..Default::default() },
+        );
+        let without = two_step_tune(
+            theta_bowl,
+            TwoStepOptions { outer_iters: 16, refine: RefineKind::None, ..Default::default() },
+        );
+        assert_eq!(without.newton_iters, 0);
+        assert_eq!(without.newton_evals, 0);
+        assert!(with.newton_evals > 0);
+        // newton_refine accepts only strict improvements, so on the same
+        // candidate set the refined score cannot be worse
+        assert!(
+            with.score <= without.score,
+            "newton {} vs grid-only {}",
+            with.score,
+            without.score
+        );
+    }
+
+    #[test]
+    fn nelder_mead_and_pso_match_the_wavefront_optimum() {
+        let wave = two_step_tune(
+            theta_bowl,
+            TwoStepOptions {
+                outer_iters: 32,
+                search: ThetaSearch::Wavefront { width: 0 },
+                ..Default::default()
+            },
+        );
+        for search in [ThetaSearch::NelderMead, ThetaSearch::Pso] {
+            let r = two_step_tune(
+                theta_bowl,
+                TwoStepOptions { outer_iters: 32, search, ..Default::default() },
+            );
+            let slack = 1e-2 * wave.score.abs().max(1.0);
+            assert!(
+                r.score <= wave.score + slack,
+                "{search:?} score {} vs wavefront {}",
+                r.score,
+                wave.score
+            );
+            assert!(r.outer_evals <= 32, "{search:?} built {}", r.outer_evals);
+        }
     }
 }

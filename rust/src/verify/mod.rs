@@ -19,6 +19,10 @@
 //! - [`check_internal`] — the fused [`EigenSystem::evaluate`] pass vs the
 //!   standalone `score`/`grad` paths (machine-precision agreement; they
 //!   share per-element helpers) and Hessian symmetry.
+//! - [`ard_differential_suite`] — the per-dimension-lengthscale
+//!   [`Kernel::RbfArd`] gram vs the isotropic gram on rescaled inputs (an
+//!   exact algebraic identity), plus a finite-difference check of the
+//!   score's slope along each theta component through both constructions.
 //!
 //! ## Tolerance model
 //!
@@ -42,7 +46,7 @@
 
 pub mod fd;
 
-use crate::kernelfn::{self, Kernel};
+use crate::kernelfn::{self, Kernel, ThetaVec};
 use crate::linalg::{Matrix, SymEigen};
 use crate::naive::NaiveEvaluator;
 use crate::spectral::{EigenSystem, Evaluation, HyperParams};
@@ -495,6 +499,143 @@ pub fn random_triples_suite(count: usize, seed: u64) -> VerifyReport {
     report
 }
 
+/// Score of the ARD family at lengthscales `v`, through either the ARD
+/// gram itself (`rescaled = false`) or the isotropic `xi2 = 1` gram on
+/// inputs pre-scaled by `1 / sqrt(v_j)` (`rescaled = true`) — two
+/// independent constructions of the same mathematical quantity.
+fn ard_score_path(
+    x: &Matrix,
+    y: &[f64],
+    v: &[f64],
+    hp: HyperParams,
+    rescaled: bool,
+) -> Result<(f64, EigenSystem), String> {
+    let k = if rescaled {
+        let xs = Matrix::from_fn(x.rows(), x.cols(), |i, j| x[(i, j)] / v[j].sqrt());
+        kernelfn::gram(Kernel::Rbf { xi2: 1.0 }, &xs)
+    } else {
+        kernelfn::gram(Kernel::RbfArd { xi2: ThetaVec::from_slice(v)? }, x)
+    };
+    let eigen = SymEigen::new(&k).map_err(|e| e.to_string())?;
+    let es = EigenSystem::new(&eigen, y);
+    Ok((es.score(hp), es))
+}
+
+/// ARD differential gates (the PR 6 vector-theta acceptance): for each
+/// `N` in `sizes`, draw random 3-feature data and log-uniform
+/// per-dimension lengthscales, then check
+///
+/// 1. the [`Kernel::RbfArd`] gram equals the isotropic gram on inputs
+///    rescaled by `1/sqrt(xi2_d)` to machine precision (the ARD kernel's
+///    defining algebraic identity),
+/// 2. the eq. 19 score agrees through both gram constructions after the
+///    eigendecomposition (eigen-representation tolerance model, as for
+///    the dense cross-checks), and
+/// 3. the central-difference slope of the score **along each theta
+///    component** agrees between the two constructions — the
+///    theta-sensitivity contract the vector tuning engine's coordinate
+///    sweeps rely on.
+pub fn ard_differential_suite(sizes: &[usize], seed: u64) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    let mut rng = Rng::new(seed);
+    let hp = HyperParams::new(0.3, 1.0);
+    let d = 3usize;
+    for &n in sizes {
+        let xi2: Vec<f64> = (0..d).map(|_| 10f64.powf(rng.uniform_in(-0.5, 0.5))).collect();
+        let x = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+        let ctx = format!("ARD N={n} xi2=({:.3},{:.3},{:.3})", xi2[0], xi2[1], xi2[2]);
+        report.cases += 1;
+
+        // (1) gram identity: entries are exp(-e) with the exponent summed
+        // in different orders, so they agree to a few eps absolutely
+        // (e * exp(-e) is bounded); 64 eps is generous and still catches
+        // any real per-dimension transcription error
+        let tv = ThetaVec::from_slice(&xi2).expect("d <= MAX_THETA_DIMS");
+        let k_ard = kernelfn::gram(Kernel::RbfArd { xi2: tv }, &x);
+        let xs = Matrix::from_fn(n, d, |i, j| x[(i, j)] / xi2[j].sqrt());
+        let k_iso = kernelfn::gram(Kernel::Rbf { xi2: 1.0 }, &xs);
+        let mut maxdiff = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                maxdiff = maxdiff.max((k_ard[(i, j)] - k_iso[(i, j)]).abs());
+            }
+        }
+        report.check(
+            &ctx,
+            "ARD gram vs rescaled isotropic gram",
+            maxdiff,
+            0.0,
+            64.0 * f64::EPSILON,
+        );
+
+        // (2) score agreement through the eigendecomposition
+        let (sa, es) = match ard_score_path(&x, &y, &xi2, hp, false) {
+            Ok(v) => v,
+            Err(e) => {
+                report.check(&ctx, &format!("eigendecomposition ({e})"), f64::NAN, 0.0, 0.0);
+                continue;
+            }
+        };
+        let sb = match ard_score_path(&x, &y, &xi2, hp, true) {
+            Ok((s, _)) => s,
+            Err(e) => {
+                report.check(&ctx, &format!("eigendecomposition ({e})"), f64::NAN, 0.0, 0.0);
+                continue;
+            }
+        };
+        let mags = es.evaluate_magnitudes(hp);
+        let per_eval = noise_floor(n, mags.score) + eigen_repr_noise(&es, hp, &mags).score;
+        report.check(
+            &ctx,
+            "score: ARD gram vs rescaled isotropic gram",
+            sa,
+            sb,
+            1e-7 * sa.abs().max(sb.abs()) + per_eval,
+        );
+
+        // (3) fd slope of the score along each theta component, both
+        // constructions: same central stencil on the same mathematical
+        // function, so truncation cancels and the tolerance is the
+        // per-evaluation noise amplified by 1/h
+        let step = f64::EPSILON.cbrt();
+        for c in 0..d {
+            let h = step * xi2[c];
+            let slope = |rescaled: bool| -> Result<f64, String> {
+                let mut hi_v = xi2.clone();
+                hi_v[c] += h;
+                let mut lo_v = xi2.clone();
+                lo_v[c] -= h;
+                let (f_hi, _) = ard_score_path(&x, &y, &hi_v, hp, rescaled)?;
+                let (f_lo, _) = ard_score_path(&x, &y, &lo_v, hp, rescaled)?;
+                Ok((f_hi - f_lo) / (2.0 * h))
+            };
+            match (slope(false), slope(true)) {
+                (Ok(ga), Ok(gi)) => {
+                    let tol = 1e-7 * ga.abs().max(gi.abs()) + 8.0 * per_eval / h;
+                    report.check(
+                        &ctx,
+                        &format!("fd dscore/dtheta[{c}]: ARD vs rescaled isotropic"),
+                        ga,
+                        gi,
+                        tol,
+                    );
+                }
+                (Err(e), _) | (_, Err(e)) => {
+                    report.check(
+                        &ctx,
+                        &format!("fd eigendecomposition (component {c}: {e})"),
+                        f64::NAN,
+                        0.0,
+                        0.0,
+                    );
+                }
+            }
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -583,6 +724,38 @@ mod tests {
         assert_eq!(a.checks, 2);
         assert_eq!(a.cases, 1);
         assert!(!a.ok());
+    }
+
+    #[test]
+    fn ard_suite_is_clean_at_small_sizes() {
+        let report = ard_differential_suite(&[8, 16], 0xA4D5_EED);
+        assert!(report.ok(), "{}", report.summary());
+        assert_eq!(report.cases, 2);
+        // per size: gram identity + score agreement + 3 component slopes
+        assert_eq!(report.checks, 2 * 5);
+    }
+
+    #[test]
+    fn ard_suite_detects_a_planted_lengthscale_swap() {
+        // Sanity on the gate's teeth: the gram identity must fail when
+        // the rescaling uses permuted lengthscales (the aliasing bug a
+        // per-dimension transcription error would produce).  We emulate
+        // it by comparing the ARD gram against an isotropic gram rescaled
+        // with the components reversed.
+        let mut rng = Rng::new(11);
+        let xi2 = [0.4, 2.5, 1.0];
+        let x = Matrix::from_fn(12, 3, |_, _| rng.normal());
+        let tv = ThetaVec::from_slice(&xi2).unwrap();
+        let k_ard = kernelfn::gram(Kernel::RbfArd { xi2: tv }, &x);
+        let xs = Matrix::from_fn(12, 3, |i, j| x[(i, j)] / xi2[2 - j].sqrt());
+        let k_bad = kernelfn::gram(Kernel::Rbf { xi2: 1.0 }, &xs);
+        let mut maxdiff = 0.0f64;
+        for i in 0..12 {
+            for j in 0..12 {
+                maxdiff = maxdiff.max((k_ard[(i, j)] - k_bad[(i, j)]).abs());
+            }
+        }
+        assert!(maxdiff > 1e-3, "swapped lengthscales went undetected ({maxdiff:.3e})");
     }
 
     #[test]

@@ -1,15 +1,16 @@
-//! Integration: the theta-plane tuning engine (ISSUE 5) — warm/cold
-//! differential identity through the eigen-family cache, the
-//! wavefront-vs-golden property sweep, cross-width determinism, and the
-//! `tune_theta` wire op end to end.
+//! Integration: the theta-plane tuning engine (ISSUE 5, extended by the
+//! PR 6 vector-theta refactor) — warm/cold differential identity through
+//! the eigen-family cache (scalar and 2-D ARD), the wavefront-vs-golden
+//! property sweep, Newton inner-refinement properties, cross-width
+//! determinism, and the `tune_theta` wire op end to end.
 
 use gpml::coordinator::client::Client;
 use gpml::coordinator::server::Server;
 use gpml::coordinator::session::{tune_theta, SessionStore, ThetaTuneRequest};
 use gpml::coordinator::{Coordinator, ObjectiveKind};
 use gpml::data::{synthetic, SyntheticSpec};
-use gpml::kernelfn::Kernel;
-use gpml::optim::{theta_tune, FnProvider, ThetaSearch, TwoStepOptions};
+use gpml::kernelfn::{Kernel, ThetaVec};
+use gpml::optim::{theta_tune, FnProvider, RefineKind, ThetaSearch, TwoStepOptions};
 use gpml::spectral::SpectralGp;
 use gpml::util::json::Json;
 
@@ -49,10 +50,12 @@ fn warm_tune_theta_is_bitwise_cold_across_sizes() {
 
         assert_eq!(cold.outputs.len(), warm.outputs.len());
         for (a, b) in cold.outputs.iter().zip(&warm.outputs) {
-            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "N={n}: theta");
+            assert_eq!(a.theta.bits(), b.theta.bits(), "N={n}: theta");
             assert_eq!(a.hp.sigma2.to_bits(), b.hp.sigma2.to_bits(), "N={n}: sigma2");
             assert_eq!(a.hp.lambda2.to_bits(), b.hp.lambda2.to_bits(), "N={n}: lambda2");
             assert_eq!(a.score.to_bits(), b.score.to_bits(), "N={n}: score");
+            assert_eq!(a.newton_iters, b.newton_iters, "N={n}: newton iters");
+            assert_eq!(a.newton_evals, b.newton_evals, "N={n}: newton evals");
         }
     }
 }
@@ -78,11 +81,13 @@ fn tune_theta_is_bitwise_identical_across_pool_widths() {
         let serial = run(1);
         let pooled = run(4);
         for (a, b) in serial.outputs.iter().zip(&pooled.outputs) {
-            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "{search:?}");
+            assert_eq!(a.theta.bits(), b.theta.bits(), "{search:?}");
             assert_eq!(a.hp, b.hp, "{search:?}");
             assert_eq!(a.score.to_bits(), b.score.to_bits(), "{search:?}");
             assert_eq!(a.outer_evals, b.outer_evals, "{search:?}");
             assert_eq!(a.distinct_thetas, b.distinct_thetas, "{search:?}");
+            assert_eq!(a.newton_iters, b.newton_iters, "{search:?}");
+            assert_eq!(a.newton_evals, b.newton_evals, "{search:?}");
         }
     }
 }
@@ -147,8 +152,8 @@ fn polynomial_family_sweeps_discrete_degrees() {
 
     let res = tune_theta(&store, &req).unwrap();
     let out = &res.outputs[0];
-    assert_eq!(out.theta.fract(), 0.0, "discrete family returns an integer degree");
-    assert!((1.0..=5.0).contains(&out.theta));
+    assert_eq!(out.theta.get(0).fract(), 0.0, "discrete family returns an integer degree");
+    assert!((1.0..=5.0).contains(&out.theta.get(0)));
     assert_eq!(out.distinct_thetas, 5, "degrees 1..=5 each probed once");
     // degree 3 == the base session's kernel, served by the base setup
     assert_eq!(out.outer_evals, 4, "4 new setups; the base degree was free");
@@ -156,7 +161,7 @@ fn polynomial_family_sweeps_discrete_degrees() {
     // warm re-sweep: zero builds, identical bits
     let warm = tune_theta(&store, &req).unwrap();
     assert_eq!(warm.setups_built, 0);
-    assert_eq!(warm.outputs[0].theta.to_bits(), out.theta.to_bits());
+    assert_eq!(warm.outputs[0].theta.bits(), out.theta.bits());
     assert_eq!(warm.outputs[0].score.to_bits(), out.score.to_bits());
 }
 
@@ -289,4 +294,185 @@ fn concurrent_wire_sweeps_share_the_family() {
         stats.setups
     );
     server.stop();
+}
+
+/// PR 6 acceptance: a 2-D ARD sweep is warm/cold bitwise-differential —
+/// the warm re-sweep builds **zero** setups and returns byte-identical
+/// outputs (vector theta, hp, score, Newton counters).
+#[test]
+fn warm_ard_sweep_is_bitwise_cold_with_zero_builds() {
+    let kernel = Kernel::RbfArd { xi2: ThetaVec::splat(2, 2.0) };
+    let ds = synthetic(SyntheticSpec { n: 24, p: 2, seed: 91, kernel, ..Default::default() }, 1);
+    let store = SessionStore::new(8, usize::MAX);
+    let (sess, _) = store.create(kernel, ds.x).unwrap();
+    let mut req = sweep_request(sess.id, ds.ys);
+    req.theta_ranges = vec![(0.2, 10.0), (0.2, 10.0)];
+    req.outer_iters = 10;
+
+    let cold = tune_theta(&store, &req).unwrap();
+    assert!(cold.setups_built > 0, "cold ARD sweep must build");
+    let out = &cold.outputs[0];
+    assert_eq!(out.theta.len(), 2, "2-D family returns a 2-component theta");
+
+    let warm = tune_theta(&store, &req).unwrap();
+    assert_eq!(warm.setups_built, 0, "warm ARD re-sweep builds zero setups");
+    let w = &warm.outputs[0];
+    assert_eq!(w.theta.bits(), out.theta.bits());
+    assert_eq!(w.hp.sigma2.to_bits(), out.hp.sigma2.to_bits());
+    assert_eq!(w.hp.lambda2.to_bits(), out.hp.lambda2.to_bits());
+    assert_eq!(w.score.to_bits(), out.score.to_bits());
+    assert_eq!(w.newton_iters, out.newton_iters);
+    assert_eq!(w.newton_evals, out.newton_evals);
+}
+
+/// The ARD wire path end to end: array `theta_min`/`theta_max` travel
+/// through `tune_theta`, the response theta comes back as an array, and
+/// the warm re-request is byte-identical with zero builds.
+#[test]
+fn ard_tune_theta_over_the_wire_returns_vector_theta() {
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let kernel = Kernel::RbfArd { xi2: ThetaVec::splat(2, 2.0) };
+    let ds = synthetic(SyntheticSpec { n: 16, p: 2, seed: 19, kernel, ..Default::default() }, 1);
+    let id = client.create_session(&ds.x, kernel).unwrap();
+
+    let mut req = sweep_request(id, ds.ys);
+    req.theta_ranges = vec![(0.2, 10.0), (0.2, 10.0)];
+    req.outer_iters = 6;
+    let cold = client.tune_theta(&req).unwrap();
+    assert_eq!(cold.get("ok").and_then(Json::as_bool), Some(true), "{cold}");
+    let outs = cold.get("outputs").unwrap().as_arr().unwrap();
+    let theta = outs[0].get("theta").unwrap().as_arr().unwrap();
+    assert_eq!(theta.len(), 2, "ARD theta travels as an array");
+    assert!(theta.iter().all(|t| t.as_f64().unwrap() > 0.0));
+
+    let warm = client.tune_theta(&req).unwrap();
+    assert_eq!(warm.get("setups_built").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        warm.get("outputs").unwrap().to_string(),
+        cold.get("outputs").unwrap().to_string(),
+        "warm ARD wire response must be byte-identical"
+    );
+    server.stop();
+}
+
+/// An ARD kernel whose lengthscale count disagrees with the data's
+/// feature columns is rejected at session creation, not deep inside the
+/// gram kernel.
+#[test]
+fn ard_session_requires_matching_feature_dims() {
+    let iso = Kernel::Rbf { xi2: 1.0 };
+    let ds = synthetic(SyntheticSpec { n: 8, p: 3, seed: 1, kernel: iso, ..Default::default() }, 1);
+    let store = SessionStore::new(8, usize::MAX);
+    let err = store.create(Kernel::RbfArd { xi2: ThetaVec::splat(2, 1.0) }, ds.x).unwrap_err();
+    assert!(err.to_string().contains("lengthscales"), "{err}");
+}
+
+/// ISSUE-6 property sweep: the exact-Hessian Newton inner refinement
+/// must not lose to the grid-only inner loop — over 50 random
+/// (dataset, kernel) triples the refined score is <= the
+/// wavefront-without-Newton score (tiny slack: the two runs may settle
+/// on outer candidates refined to different inner optima).
+#[test]
+fn newton_refinement_never_loses_to_grid_only_on_random_triples() {
+    for seed in 0..50u64 {
+        let kernel = match seed % 3 {
+            0 => Kernel::Rbf { xi2: 0.5 + seed as f64 * 0.1 },
+            1 => Kernel::Matern32 { ell: 0.5 + seed as f64 * 0.05 },
+            _ => Kernel::Matern52 { ell: 0.4 + seed as f64 * 0.04 },
+        };
+        let (x, ys) = dataset(16, 5000 + seed, kernel);
+        let y = ys[0].clone();
+        let make = |theta: f64| {
+            let gp = SpectralGp::fit(kernel.with_theta(theta), x.clone()).unwrap();
+            gpml::optim::EvidenceObjective(gp.eigensystem(&y))
+        };
+        let base = TwoStepOptions {
+            theta_range: (0.2, 10.0),
+            outer_iters: 16,
+            search: ThetaSearch::Wavefront { width: 0 },
+            inner_grid: 5,
+            ..Default::default()
+        };
+        let refined = theta_tune(&FnProvider::new(&make), &base).unwrap();
+        let grid_only = theta_tune(
+            &FnProvider::new(&make),
+            &TwoStepOptions { refine: RefineKind::None, ..base },
+        )
+        .unwrap();
+        assert!(refined.newton_evals > 0, "seed {seed}: Newton must have run");
+        assert_eq!(grid_only.newton_evals, 0, "seed {seed}: grid-only skips Newton");
+        assert_eq!(grid_only.newton_iters, 0, "seed {seed}");
+        assert!(
+            refined.score <= grid_only.score + 1e-4 * grid_only.score.abs().max(1.0),
+            "seed {seed}: refined {} must not lose to grid-only {}",
+            refined.score,
+            grid_only.score
+        );
+    }
+}
+
+/// Regression (ISSUE-6): `outer_evals` counts distinct setups built for
+/// the sweep — Newton's O(N) inner re-evaluations are reported in the
+/// separate `newton_evals` counter and never inflate it.  The discrete
+/// polynomial family fixes the candidate set independently of inner
+/// scores, so refine on/off must report identical `outer_evals`.
+#[test]
+fn outer_evals_count_setups_not_newton_reevaluations() {
+    let kernel = Kernel::Polynomial { degree: 2 };
+    let ds = synthetic(SyntheticSpec { n: 20, p: 3, seed: 83, kernel, ..Default::default() }, 1);
+    let run = |refine: RefineKind| {
+        let store = SessionStore::new(8, usize::MAX);
+        let (sess, _) = store.create(kernel, ds.x.clone()).unwrap();
+        let mut req = sweep_request(sess.id, ds.ys.clone());
+        req.theta_range = (1.0, 6.0);
+        req.refine = refine;
+        tune_theta(&store, &req).unwrap()
+    };
+    let refined = run(RefineKind::Newton);
+    let grid = run(RefineKind::None);
+    let (a, b) = (&refined.outputs[0], &grid.outputs[0]);
+    assert!(a.newton_evals > 0, "Newton evaluations are accounted somewhere");
+    assert_eq!(b.newton_evals, 0);
+    assert_eq!(a.outer_evals, b.outer_evals, "outer_evals must not absorb Newton's evals");
+    assert_eq!(a.distinct_thetas, b.distinct_thetas);
+    assert_eq!(refined.setups_built, a.outer_evals, "outer_evals == setups built this sweep");
+}
+
+/// ISSUE-6 satellite: the Nelder-Mead and PSO comparison backends land
+/// on the wavefront's optimum (within termination slack) on random
+/// datasets, inside the same probe budget.
+#[test]
+fn nelder_mead_and_pso_match_the_wavefront_on_random_datasets() {
+    for seed in 0..4u64 {
+        let kernel = Kernel::Rbf { xi2: 1.0 + seed as f64 * 0.6 };
+        let (x, ys) = dataset(20, 7000 + seed, kernel);
+        let y = ys[0].clone();
+        let make = |theta: f64| {
+            let gp = SpectralGp::fit(kernel.with_theta(theta), x.clone()).unwrap();
+            gpml::optim::EvidenceObjective(gp.eigensystem(&y))
+        };
+        let base = TwoStepOptions {
+            theta_range: (0.1, 20.0),
+            outer_iters: 40,
+            inner_grid: 5,
+            ..Default::default()
+        };
+        let wave = theta_tune(
+            &FnProvider::new(&make),
+            &TwoStepOptions { search: ThetaSearch::Wavefront { width: 0 }, ..base },
+        )
+        .unwrap();
+        for search in [ThetaSearch::NelderMead, ThetaSearch::Pso] {
+            let r =
+                theta_tune(&FnProvider::new(&make), &TwoStepOptions { search, ..base }).unwrap();
+            assert!(
+                r.score <= wave.score + 1e-2 * wave.score.abs().max(1.0),
+                "seed {seed} {search:?}: {} vs wavefront {}",
+                r.score,
+                wave.score
+            );
+            assert!(r.outer_evals <= 40, "seed {seed} {search:?}: budget respected");
+        }
+    }
 }

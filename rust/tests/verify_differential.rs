@@ -10,7 +10,7 @@
 //! `spectral`, `naive` or `linalg` that breaks an identity fails
 //! `cargo test` here with a per-quantity report.
 
-use gpml::verify::{differential_suite, random_triples_suite, SuiteConfig};
+use gpml::verify::{ard_differential_suite, differential_suite, random_triples_suite, SuiteConfig};
 
 #[test]
 fn spectral_identities_hold_across_the_grid() {
@@ -56,6 +56,19 @@ fn two_hundred_random_triples() {
     assert!(report.ok(), "{}", report.summary());
     assert_eq!(report.cases, 200);
     assert!(report.checks >= 200 * 10, "{} checks", report.checks);
+}
+
+#[test]
+fn ard_grams_and_score_slopes_match_the_isotropic_rescaling() {
+    // PR 6 vector-theta acceptance: the ARD gram equals the isotropic
+    // gram on rescaled inputs, the eq. 19 score agrees through both
+    // constructions, and the score's finite-difference slope along each
+    // theta component matches — at every size the main suite covers.
+    let report = ard_differential_suite(&[8, 32, 128], 0xA4D_0001);
+    assert!(report.ok(), "{}", report.summary());
+    assert_eq!(report.cases, 3);
+    // per size: gram identity + score agreement + 3 component slopes
+    assert_eq!(report.checks, 3 * 5);
 }
 
 #[test]
