@@ -1,0 +1,170 @@
+//! Degraded-mode serving (requires `--features fault-inject`): warm
+//! per-request latency while a seeded fraction of pool jobs panics,
+//! versus the same traffic on a healthy server (DESIGN.md §11).
+//!
+//! The claim under test: panic isolation + worker respawn keep the
+//! *healthy* requests' latency flat — a faulted neighbor costs its own
+//! request, not the pool.  Measured per sweep point, over the wire:
+//!
+//! - `evaluate_healthy`  — warm evaluate, no faults armed;
+//! - `evaluate_degraded` — the same traffic with `WorkerPanic` armed at
+//!                         1-in-10 (each firing kills a worker mid-job;
+//!                         the supervisor respawns it).  Faulted requests
+//!                         are counted and their error responses timed
+//!                         like any other response.
+//!
+//! After the burst the bench asserts the pool is at full strength (all
+//! respawns happened, concurrent healthy traffic completes).
+//!
+//! Writes `BENCH_degraded.json` next to the stdout table.
+//!
+//! Options (after `cargo bench --bench serve_degraded --`):
+//!   --sizes 64,128           sweep override
+//!   --max-n 128              cap the sweep (CI smoke uses this)
+//!   --iters 40               timed requests per series
+
+mod bench_common;
+
+use bench_common::{bench_json, write_bench_json, Series};
+use gpml::coordinator::client::Client;
+use gpml::coordinator::protocol::{self, EvaluateRequest};
+use gpml::coordinator::server::{Server, ServerOptions};
+use gpml::coordinator::{Coordinator, ObjectiveKind};
+use gpml::data::{synthetic, SyntheticSpec};
+use gpml::faults::inject::{self, FaultPoint};
+use gpml::kernelfn::Kernel;
+use gpml::spectral::HyperParams;
+use gpml::util::cli::Args;
+use gpml::util::json::Json;
+use gpml::util::timing::{measure, Stats, Table};
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let default_sizes = [64usize, 128];
+    let mut sizes = args.get_usize_list("sizes", &default_sizes).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.get_usize("max-n", usize::MAX) {
+        Ok(cap) => sizes.retain(|&n| n <= cap),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if sizes.is_empty() {
+        eprintln!("empty sweep after --sizes/--max-n filtering");
+        std::process::exit(2);
+    }
+    let iters = args.get_usize("iters", 40).unwrap_or(40).max(10);
+
+    let opts = ServerOptions { workers: 2, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).expect("bind");
+    let addr = server.addr.to_string();
+    println!(
+        "== degraded serving: warm evaluate latency, healthy vs 10% worker panics \
+         ({} pool workers) ==",
+        server.workers()
+    );
+
+    let mut table =
+        Table::new(&["N", "healthy us", "degraded us", "degraded/healthy", "faulted reqs"]);
+    let (mut healthy, mut degraded): (Vec<Stats>, Vec<Stats>) = (vec![], vec![]);
+    let mut total_faulted = 0u64;
+
+    for &n in &sizes {
+        inject::reset();
+        let mut client = Client::connect(&addr).expect("connect");
+        let ds = synthetic(SyntheticSpec { n, p: 4, seed: 7, ..Default::default() }, 1);
+        let id = client.create_session(&ds.x, KERNEL).expect("create");
+        let ereq = EvaluateRequest {
+            session_id: id,
+            y: ds.ys[0].clone(),
+            hp: HyperParams::new(0.1, 1.0),
+            objective: ObjectiveKind::Evidence,
+        };
+        let line = protocol::evaluate_json(&ereq);
+
+        let st_healthy = measure(5, iters, || {
+            client.evaluate(&ereq).expect("healthy evaluate");
+        });
+
+        // 1-in-10 pool jobs panic their worker mid-dispatch; the faulted
+        // request's error response is timed like any success (raw, not
+        // checked, so the bench sees the degradation instead of dying)
+        inject::arm(FaultPoint::WorkerPanic, 10, u64::MAX);
+        let mut faulted = 0u64;
+        let st_degraded = measure(0, iters, || {
+            let v = client.raw(&line).expect("degraded evaluate transport");
+            if v.get("ok").and_then(Json::as_bool) != Some(true) {
+                faulted += 1;
+            }
+        });
+        inject::reset();
+        total_faulted += faulted;
+
+        table.row(&[
+            n.to_string(),
+            format!("{:.0}", st_healthy.median_us),
+            format!("{:.0}", st_degraded.median_us),
+            format!("{:.2}x", st_degraded.median_us / st_healthy.median_us),
+            format!("{faulted}/{iters}"),
+        ]);
+        healthy.push(st_healthy);
+        degraded.push(st_degraded);
+    }
+    table.print();
+
+    // post-burst: the pool must be at full strength — every panicked
+    // worker respawned, and concurrent healthy traffic completes
+    let respawns = server.session_stats().faults.worker_respawns;
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            let n = sizes[0];
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let ds = synthetic(
+                    SyntheticSpec { n, p: 4, seed: 100 + i, ..Default::default() },
+                    1,
+                );
+                let id = c.create_session(&ds.x, KERNEL).expect("create");
+                let ereq = EvaluateRequest {
+                    session_id: id,
+                    y: ds.ys[0].clone(),
+                    hp: HyperParams::new(0.1, 1.0),
+                    objective: ObjectiveKind::Evidence,
+                };
+                c.evaluate(&ereq).expect("post-burst evaluate");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("post-burst client");
+    }
+    println!(
+        "\npool healed: {respawns} worker respawn(s) over {total_faulted} faulted request(s); \
+         4 concurrent clients served post-burst"
+    );
+    assert!(
+        total_faulted == 0 || respawns > 0,
+        "faults fired but no worker respawn was recorded"
+    );
+
+    let payload = bench_json(
+        "degraded",
+        &sizes,
+        &[
+            Series { label: "evaluate_healthy", stats: &healthy },
+            Series { label: "evaluate_degraded", stats: &degraded },
+        ],
+        vec![
+            ("faulted_requests", Json::Num(total_faulted as f64)),
+            ("worker_respawns", Json::Num(respawns as f64)),
+        ],
+    );
+    write_bench_json("degraded", &payload);
+    server.stop();
+}

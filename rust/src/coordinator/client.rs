@@ -4,11 +4,17 @@
 //! `create_session` -> repeated `tune_session` / `evaluate` / `predict`
 //! (all O(N) on the server), with `update_session` appending streaming
 //! observations in place -> optional `drop_session`.
+//!
+//! The client is resilience-aware (DESIGN.md §11): failures come back as
+//! a typed [`ClientError`] distinguishing *shed* (`Overloaded`, carrying
+//! the server's `retry_after_ms` hint), *timed out* (`Deadline`), and
+//! *failed* (`Server` / `Protocol` / `Io`).  Shed requests are retried
+//! automatically with capped exponential backoff plus deterministic
+//! seeded jitter, honoring the server's hint ([`ClientOptions`]).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
-
-use anyhow::{anyhow, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use crate::coordinator::protocol::{self, EvaluateRequest, PredictRequest};
 use crate::coordinator::session::{SessionTuneRequest, ThetaTuneRequest};
@@ -17,64 +23,218 @@ use crate::kernelfn::Kernel;
 use crate::linalg::Matrix;
 use crate::util::json::{self, Json};
 
+/// Typed client-side failure.  `Overloaded` and `Deadline` are the
+/// server's structured degradation responses (PROTOCOL.md Conventions);
+/// `Server` is any other `"ok": false`; `Protocol` means the response
+/// was missing, truncated, or not the documented shape; `Io` is the
+/// transport (connect/read/write/timeout).
+#[derive(Debug)]
+pub enum ClientError {
+    /// Admission control shed the request; retry after the hinted delay.
+    Overloaded { retry_after_ms: u64 },
+    /// The server gave up on the request (`--request-timeout`).
+    Deadline { timeout_ms: u64 },
+    /// Structured server-side failure.
+    Server { message: String },
+    /// Malformed or unexpected response shape.
+    Protocol { message: String },
+    /// Transport-level failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded (retry after {retry_after_ms} ms)")
+            }
+            ClientError::Deadline { timeout_ms } => {
+                write!(f, "server deadline expired ({timeout_ms} ms)")
+            }
+            ClientError::Server { message } => write!(f, "server error: {message}"),
+            ClientError::Protocol { message } => write!(f, "protocol error: {message}"),
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// Connection and retry policy.  Retries apply *only* to `overloaded`
+/// sheds — a shed is the one failure the server explicitly invites the
+/// client to repeat; deadlines and errors surface immediately.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientOptions {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Socket read timeout (None = wait forever; large tunes on a
+    /// generously-configured server can legitimately run long).
+    pub read_timeout: Option<Duration>,
+    /// Extra attempts after a shed (0 = surface `Overloaded` at once).
+    pub retries: usize,
+    /// Exponential backoff base; attempt k waits `base * 2^k` capped at
+    /// `backoff_cap`, never less than the server's `retry_after_ms`.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter (de-synchronizes
+    /// clients that were shed together without any RNG/clock state).
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Some(Duration::from_secs(300)),
+            retries: 3,
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
 /// One connection to a running coordinator server.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    opts: ClientOptions,
+}
+
+/// Deterministic jitter in `[0, cap]` from (seed, attempt) — xorshift,
+/// no RNG or clock state, so retry schedules are reproducible.
+fn jitter_ms(seed: u64, attempt: u32, cap: u64) -> u64 {
+    if cap == 0 {
+        return 0;
+    }
+    let mut s = seed ^ (0x2545_f491_4f6c_dd1d_u64.wrapping_mul(attempt as u64 + 1));
+    s ^= s << 13;
+    s ^= s >> 7;
+    s ^= s << 17;
+    s % (cap + 1)
 }
 
 impl Client {
-    pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        Client::connect_with(addr, ClientOptions::default())
     }
 
-    /// Send a raw line, read one JSON response line.
-    pub fn raw(&mut self, line: &str) -> Result<Json> {
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<Client, ClientError> {
+        let resolved = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| ClientError::Protocol { message: format!("cannot resolve {addr}") })?;
+        let stream = TcpStream::connect_timeout(&resolved, opts.connect_timeout)?;
+        stream.set_read_timeout(opts.read_timeout)?;
+        stream.set_write_timeout(Some(opts.connect_timeout))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, opts })
+    }
+
+    /// Send a raw line, read one JSON response line.  No retry, no
+    /// `ok` check — the caller sees the response verbatim.
+    pub fn raw(&mut self, line: &str) -> Result<Json, ClientError> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut response = String::new();
         self.reader.read_line(&mut response)?;
         if response.is_empty() {
-            return Err(anyhow!("server closed connection"));
+            return Err(ClientError::Protocol { message: "server closed connection".into() });
         }
-        json::parse(response.trim()).map_err(|e| anyhow!("bad response: {e}"))
+        json::parse(response.trim())
+            .map_err(|e| ClientError::Protocol { message: format!("bad response: {e}") })
     }
 
-    pub fn ping(&mut self) -> Result<bool> {
+    /// Classify an `"ok": false` response into its typed error.
+    fn classify(v: Json) -> Result<Json, ClientError> {
+        if v.get("ok").and_then(Json::as_bool) == Some(true) {
+            return Ok(v);
+        }
+        match v.get("error").and_then(Json::as_str) {
+            Some("overloaded") => Err(ClientError::Overloaded {
+                retry_after_ms: v
+                    .get("retry_after_ms")
+                    .and_then(Json::as_f64)
+                    .map(|ms| ms.max(0.0) as u64)
+                    .unwrap_or(100),
+            }),
+            Some("deadline") => Err(ClientError::Deadline {
+                timeout_ms: v
+                    .get("timeout_ms")
+                    .and_then(Json::as_f64)
+                    .map(|ms| ms.max(0.0) as u64)
+                    .unwrap_or(0),
+            }),
+            Some(msg) => Err(ClientError::Server { message: msg.to_string() }),
+            None => Err(ClientError::Protocol { message: format!("malformed response: {v}") }),
+        }
+    }
+
+    /// Send a line and require an `"ok": true` response, retrying sheds
+    /// with capped exponential backoff + deterministic jitter.
+    fn checked(&mut self, line: &str) -> Result<Json, ClientError> {
+        let mut attempt: u32 = 0;
+        loop {
+            match Self::classify(self.raw(line)?) {
+                Ok(v) => return Ok(v),
+                Err(ClientError::Overloaded { retry_after_ms })
+                    if (attempt as usize) < self.opts.retries =>
+                {
+                    let backoff = self
+                        .opts
+                        .backoff_base
+                        .saturating_mul(1u32 << attempt.min(16))
+                        .min(self.opts.backoff_cap)
+                        .as_millis() as u64;
+                    let base = backoff.max(retry_after_ms);
+                    let delay = base + jitter_ms(self.opts.seed, attempt, base / 4);
+                    std::thread::sleep(Duration::from_millis(delay));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<bool, ClientError> {
         let v = self.raw(r#"{"op":"ping"}"#)?;
-        Ok(v.get("pong").and_then(Json::as_bool).unwrap_or(false))
+        match v.get("pong").and_then(Json::as_bool) {
+            Some(b) => Ok(b),
+            None => Err(ClientError::Protocol { message: format!("malformed ping response: {v}") }),
+        }
     }
 
-    pub fn info(&mut self) -> Result<Json> {
+    pub fn info(&mut self) -> Result<Json, ClientError> {
         self.raw(r#"{"op":"info"}"#)
     }
 
-    /// Send a line and require an `"ok": true` response.
-    fn checked(&mut self, line: &str) -> Result<Json> {
-        let v = self.raw(line)?;
-        if v.get("ok").and_then(Json::as_bool) != Some(true) {
-            let msg = v.get("error").and_then(Json::as_str).unwrap_or("unknown error");
-            return Err(anyhow!("server error: {msg}"));
-        }
-        Ok(v)
-    }
-
     /// Submit an inline tuning job and return the parsed response.
-    pub fn tune(&mut self, req: &TuneRequest) -> Result<Json> {
+    pub fn tune(&mut self, req: &TuneRequest) -> Result<Json, ClientError> {
         self.checked(&protocol::tune_request_json(req))
     }
 
     /// Create (or look up) the server-side session for a dataset; the
     /// server pays the O(N^3) setup at most once per fingerprint.
     /// Returns the session id to reference in subsequent requests.
-    pub fn create_session(&mut self, x: &Matrix, kernel: Kernel) -> Result<u64> {
+    pub fn create_session(&mut self, x: &Matrix, kernel: Kernel) -> Result<u64, ClientError> {
         let v = self.checked(&protocol::create_session_json(x, kernel, 0))?;
-        v.get("session_id")
-            .and_then(Json::as_f64)
-            .map(|id| id as u64)
-            .ok_or_else(|| anyhow!("malformed create_session response"))
+        v.get("session_id").and_then(Json::as_f64).map(|id| id as u64).ok_or_else(|| {
+            ClientError::Protocol { message: "malformed create_session response".into() }
+        })
     }
 
     /// Full create-session response (id, `cached`, setup timings, bytes).
@@ -83,13 +243,13 @@ impl Client {
         x: &Matrix,
         kernel: Kernel,
         threads: usize,
-    ) -> Result<Json> {
+    ) -> Result<Json, ClientError> {
         self.checked(&protocol::create_session_json(x, kernel, threads))
     }
 
     /// Submit a tuning job against an existing session — O(N) per
     /// iterate on the server, zero setup work.
-    pub fn tune_session(&mut self, req: &SessionTuneRequest) -> Result<Json> {
+    pub fn tune_session(&mut self, req: &SessionTuneRequest) -> Result<Json, ClientError> {
         self.checked(&protocol::session_tune_json(req))
     }
 
@@ -100,43 +260,94 @@ impl Client {
     /// sweep over a warm family performs zero O(N^3) work
     /// (`setups_built: 0` in the response) and returns bitwise-identical
     /// results.
-    pub fn tune_theta(&mut self, req: &ThetaTuneRequest) -> Result<Json> {
+    pub fn tune_theta(&mut self, req: &ThetaTuneRequest) -> Result<Json, ClientError> {
         self.checked(&protocol::theta_tune_json(req))
     }
 
     /// Score/Jacobian/Hessian at one hyperparameter point (O(N)).
-    pub fn evaluate(&mut self, req: &EvaluateRequest) -> Result<Json> {
+    pub fn evaluate(&mut self, req: &EvaluateRequest) -> Result<Json, ClientError> {
         self.checked(&protocol::evaluate_json(req))
     }
 
     /// Posterior predictive mean + variance at new inputs.
-    pub fn predict(&mut self, req: &PredictRequest) -> Result<Json> {
+    pub fn predict(&mut self, req: &PredictRequest) -> Result<Json, ClientError> {
         self.checked(&protocol::predict_json(req))
     }
 
     /// Append observations to a server-side session (streaming update):
     /// the server refreshes the cached eigendecomposition by rank-one
-    /// corrections (full refit past its fallback policy) and evolves the
-    /// session fingerprint to the grown dataset.  Subsequent requests
-    /// must send length-N' outputs (`n` in the response).  `threads`
-    /// pins the server-side pool width for this refresh (0 = default).
+    /// corrections (degradation-ladder refit past its fallback policy)
+    /// and evolves the session fingerprint to the grown dataset.
+    /// Subsequent requests must send length-N' outputs (`n` in the
+    /// response).  `threads` pins the server-side pool width for this
+    /// refresh (0 = default).
     pub fn update_session(
         &mut self,
         session_id: u64,
         x_new: &Matrix,
         threads: usize,
-    ) -> Result<Json> {
+    ) -> Result<Json, ClientError> {
         self.checked(&protocol::update_session_json(session_id, x_new, threads))
     }
 
     /// Drop a session; returns whether it existed.
-    pub fn drop_session(&mut self, session_id: u64) -> Result<bool> {
+    pub fn drop_session(&mut self, session_id: u64) -> Result<bool, ClientError> {
         let v = self.checked(&protocol::drop_session_json(session_id))?;
-        Ok(v.get("dropped").and_then(Json::as_bool).unwrap_or(false))
+        match v.get("dropped").and_then(Json::as_bool) {
+            Some(b) => Ok(b),
+            None => Err(ClientError::Protocol {
+                message: format!("malformed drop_session response: {v}"),
+            }),
+        }
     }
 
-    /// Session-cache statistics (hit/miss/eviction/setup counters).
-    pub fn stats(&mut self) -> Result<Json> {
+    /// Session-cache statistics (hit/miss/eviction/setup counters
+    /// plus the fault and degradation counters).
+    pub fn stats(&mut self) -> Result<Json, ClientError> {
         self.checked(r#"{"op":"stats"}"#)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        for attempt in 0..8 {
+            let a = jitter_ms(42, attempt, 100);
+            let b = jitter_ms(42, attempt, 100);
+            assert_eq!(a, b);
+            assert!(a <= 100);
+        }
+        assert_eq!(jitter_ms(7, 0, 0), 0);
+        // different attempts de-synchronize
+        let all: std::collections::HashSet<_> =
+            (0..16).map(|k| jitter_ms(9, k, 1_000_000)).collect();
+        assert!(all.len() > 8, "jitter collapsed: {all:?}");
+    }
+
+    #[test]
+    fn classify_separates_shed_deadline_and_failure() {
+        let shed =
+            json::parse(r#"{"ok":false,"error":"overloaded","retry_after_ms":250}"#).unwrap();
+        match Client::classify(shed) {
+            Err(ClientError::Overloaded { retry_after_ms: 250 }) => {}
+            other => panic!("expected Overloaded(250): {other:?}"),
+        }
+        let dl = json::parse(r#"{"ok":false,"error":"deadline","timeout_ms":30000}"#).unwrap();
+        match Client::classify(dl) {
+            Err(ClientError::Deadline { timeout_ms: 30000 }) => {}
+            other => panic!("expected Deadline(30000): {other:?}"),
+        }
+        let err = json::parse(r#"{"ok":false,"error":"unknown session 9"}"#).unwrap();
+        match Client::classify(err) {
+            Err(ClientError::Server { message }) => assert!(message.contains("unknown session")),
+            other => panic!("expected Server: {other:?}"),
+        }
+        let odd = json::parse(r#"{"what":1}"#).unwrap();
+        assert!(matches!(Client::classify(odd), Err(ClientError::Protocol { .. })));
+        let ok = json::parse(r#"{"ok":true}"#).unwrap();
+        assert!(Client::classify(ok).is_ok());
     }
 }

@@ -483,6 +483,12 @@ pub fn stats_response(s: &StoreStats, workers: usize) -> String {
         ("theta_hits", Json::Num(s.theta_hits as f64)),
         ("theta_misses", Json::Num(s.theta_misses as f64)),
         ("theta_evictions", Json::Num(s.theta_evictions as f64)),
+        ("sheds", Json::Num(s.faults.sheds as f64)),
+        ("panics", Json::Num(s.faults.panics as f64)),
+        ("worker_respawns", Json::Num(s.faults.worker_respawns as f64)),
+        ("jitter_retries", Json::Num(s.faults.jitter_retries as f64)),
+        ("fallback_refits", Json::Num(s.faults.fallback_refits as f64)),
+        ("deadline_expired", Json::Num(s.faults.deadline_expired as f64)),
         ("workers", Json::Num(workers as f64)),
     ])
     .to_string()
@@ -516,6 +522,31 @@ pub fn predict_response(mean: &[f64], var: &[f64], session_id: u64) -> String {
 
 pub fn error_response(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).to_string()
+}
+
+/// Admission-control shed: the job queue is past `--max-queue`, so the
+/// server refuses the work instead of queueing unbounded O(N^3).  The
+/// `retry_after_ms` hint tells well-behaved clients (see
+/// [`crate::coordinator::client::Client`]) when to come back.
+pub fn overloaded_response(retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str("overloaded")),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
+/// Per-request deadline expiry: the job did not answer within
+/// `--request-timeout`.  The connection stays usable; the abandoned
+/// job's eventual reply is discarded by the server.
+pub fn deadline_response(timeout_ms: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str("deadline")),
+        ("timeout_ms", Json::Num(timeout_ms as f64)),
+    ])
+    .to_string()
 }
 
 pub fn pong_response() -> String {
@@ -846,6 +877,41 @@ mod tests {
         assert_eq!(v.get("theta_hits").unwrap().as_usize(), Some(40));
         assert_eq!(v.get("theta_misses").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("theta_evictions").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn stats_response_includes_fault_counters() {
+        let s = StoreStats {
+            faults: crate::faults::FaultSnapshot {
+                sheds: 4,
+                panics: 1,
+                worker_respawns: 1,
+                jitter_retries: 3,
+                fallback_refits: 2,
+                deadline_expired: 5,
+            },
+            ..Default::default()
+        };
+        let v = json::parse(&stats_response(&s, 1)).unwrap();
+        assert_eq!(v.get("sheds").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("panics").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("worker_respawns").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("jitter_retries").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("fallback_refits").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("deadline_expired").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn overloaded_and_deadline_shapes() {
+        let v = json::parse(&overloaded_response(250)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_usize(), Some(250));
+
+        let v = json::parse(&deadline_response(30_000)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("deadline"));
+        assert_eq!(v.get("timeout_ms").unwrap().as_usize(), Some(30_000));
     }
 
     #[test]

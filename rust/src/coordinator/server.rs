@@ -12,16 +12,29 @@
 //!
 //! Responses travel back on per-job channels.  (tokio is not vendored in
 //! this image — DESIGN.md §5.)
+//!
+//! The serving tier is fault-hardened (DESIGN.md §11): request lines are
+//! byte-capped, connections carry socket read/write timeouts, every
+//! request has a deadline (`--request-timeout`), the job queues are
+//! bounded by admission control (`--max-queue` — excess load is *shed*
+//! with a structured `overloaded` response instead of queueing unbounded
+//! O(N^3) work), jobs run under per-job `catch_unwind` panic isolation,
+//! and a pool worker that loses a panic past the job boundary respawns
+//! itself.  Every degradation bumps a [`FaultCounters`] counter that the
+//! wire `stats` op reports.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread;
+use std::time::Duration;
 
 use crate::coordinator::session::{self, SessionStore, StoreStats};
 use crate::coordinator::{protocol, Backend, Coordinator};
+use crate::faults::{FaultCounters, FaultPolicy};
 use crate::util::json::Json;
 
 /// A job in flight: the parsed request and the channel to answer on.
@@ -30,7 +43,8 @@ enum Job {
     Stop,
 }
 
-/// Server configuration: pool width and session-cache budgets.
+/// Server configuration: pool width, session-cache budgets, and the
+/// fault-hardening knobs (deadline, admission control, line cap).
 #[derive(Clone, Copy, Debug)]
 pub struct ServerOptions {
     /// Worker threads for the pure-rust executor; 0 = auto (the host's
@@ -42,6 +56,20 @@ pub struct ServerOptions {
     pub max_sessions: usize,
     /// Session-cache byte budget (setup memory, not request payloads).
     pub max_bytes: usize,
+    /// Per-request deadline: a job that has not answered within this
+    /// window gets a structured `deadline` error (the abandoned job's
+    /// eventual result is discarded).  Also the socket read/write
+    /// timeout — a connection stalled mid-line past this window is a
+    /// slow-loris and is answered + closed; an *idle* connection (no
+    /// bytes of a next request yet) is never expired.
+    pub request_timeout: Duration,
+    /// Admission-control bound: jobs waiting in an executor's queue
+    /// beyond this are shed with `overloaded` + `retry_after_ms`
+    /// instead of queueing more O(N^3) work.
+    pub max_queue: usize,
+    /// Per-request line cap: a single connection cannot balloon server
+    /// memory by streaming an unbounded line.
+    pub max_line_bytes: usize,
 }
 
 impl ServerOptions {
@@ -49,6 +77,13 @@ impl ServerOptions {
     pub const DEFAULT_MAX_BYTES: usize = 1 << 30;
     /// Default entry budget.
     pub const DEFAULT_MAX_SESSIONS: usize = 64;
+    /// Default per-request deadline.
+    pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+    /// Default admission-control queue bound.
+    pub const DEFAULT_MAX_QUEUE: usize = 128;
+    /// Default request-line cap: 32 MiB comfortably fits an N = 2048,
+    /// P = 64 dataset as JSON while still bounding a hostile line.
+    pub const DEFAULT_MAX_LINE_BYTES: usize = 32 << 20;
 }
 
 impl Default for ServerOptions {
@@ -57,6 +92,9 @@ impl Default for ServerOptions {
             workers: 0,
             max_sessions: Self::DEFAULT_MAX_SESSIONS,
             max_bytes: Self::DEFAULT_MAX_BYTES,
+            request_timeout: Self::DEFAULT_REQUEST_TIMEOUT,
+            max_queue: Self::DEFAULT_MAX_QUEUE,
+            max_line_bytes: Self::DEFAULT_MAX_LINE_BYTES,
         }
     }
 }
@@ -69,11 +107,18 @@ fn resolve_workers(requested: usize) -> usize {
     }
 }
 
-/// Handles to both executors, shared by every connection thread.
+/// Everything a connection thread needs, shared behind one `Arc`: the
+/// executor queues with their depth gauges, the fault counters, the
+/// hardening knobs, and the stop flag.
 struct Queues {
     coord: Sender<Job>,
     pool: Sender<Job>,
     workers: usize,
+    coord_depth: Arc<AtomicUsize>,
+    pool_depth: Arc<AtomicUsize>,
+    counters: Arc<FaultCounters>,
+    opts: ServerOptions,
+    stopping: Arc<AtomicBool>,
 }
 
 impl Queues {
@@ -84,6 +129,15 @@ impl Queues {
         for _ in 0..self.workers {
             let _ = self.pool.send(Job::Stop);
         }
+    }
+
+    /// Graceful shutdown, phase one: refuse new submissions (connection
+    /// threads answer "server stopping"), then enqueue the Stop jobs —
+    /// FIFO *behind* every already-accepted job, so in-flight work
+    /// drains before the executors exit.
+    fn begin_stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.stop_all();
     }
 }
 
@@ -122,19 +176,38 @@ impl Server {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let workers = resolve_workers(opts.workers);
-        let store = Arc::new(SessionStore::new(opts.max_sessions, opts.max_bytes));
+        // one counter block shared by the store's degradation ladder and
+        // the server's shed/panic/respawn/deadline accounting
+        let counters = Arc::new(FaultCounters::default());
+        let store = Arc::new(SessionStore::with_faults(
+            opts.max_sessions,
+            opts.max_bytes,
+            FaultPolicy::default(),
+            counters.clone(),
+        ));
 
         // coordinator worker: owns the (non-Send) coordinator; executes
-        // pjrt-backend tunes serially and answers `info`
+        // pjrt-backend tunes serially and answers `info`.  Job panics are
+        // isolated per job; the thread itself never dies on one.
         let (coord_tx, coord_rx): (Sender<Job>, Receiver<Job>) = channel();
+        let coord_depth = Arc::new(AtomicUsize::new(0));
         let coord_store = store.clone();
+        let coord_counters = counters.clone();
+        let coord_gauge = coord_depth.clone();
         let coord_handle = thread::spawn(move || {
             let mut coord = make_coordinator();
             while let Ok(job) = coord_rx.recv() {
                 match job {
                     Job::Stop => break,
                     Job::Handle(req, reply) => {
-                        let response = dispatch_coord(&mut coord, &coord_store, workers, req);
+                        coord_gauge.fetch_sub(1, Ordering::SeqCst);
+                        let response = catch_unwind(AssertUnwindSafe(|| {
+                            dispatch_coord(&mut coord, &coord_store, workers, req)
+                        }))
+                        .unwrap_or_else(|p| {
+                            FaultCounters::bump(&coord_counters.panics);
+                            panic_response(&p)
+                        });
                         let _ = reply.send(response);
                     }
                 }
@@ -146,31 +219,33 @@ impl Server {
         // blocked in recv, never while executing a job.
         let (pool_tx, pool_rx): (Sender<Job>, Receiver<Job>) = channel();
         let pool_rx = Arc::new(Mutex::new(pool_rx));
+        let pool_depth = Arc::new(AtomicUsize::new(0));
         let pool_handles: Vec<_> = (0..workers)
             .map(|_| {
-                let rx = pool_rx.clone();
-                let store = store.clone();
-                thread::spawn(move || loop {
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(job) => job,
-                        Err(_) => break,
-                    };
-                    match job {
-                        Job::Stop => break,
-                        Job::Handle(req, reply) => {
-                            let response = dispatch_pool(&store, workers, req);
-                            let _ = reply.send(response);
-                        }
-                    }
-                })
+                spawn_pool_worker(
+                    pool_rx.clone(),
+                    store.clone(),
+                    pool_depth.clone(),
+                    counters.clone(),
+                    workers,
+                )
             })
             .collect();
 
-        let queues = Arc::new(Queues { coord: coord_tx, pool: pool_tx, workers });
+        let stopping = Arc::new(AtomicBool::new(false));
+        let queues = Arc::new(Queues {
+            coord: coord_tx,
+            pool: pool_tx,
+            workers,
+            coord_depth,
+            pool_depth,
+            counters,
+            opts,
+            stopping: stopping.clone(),
+        });
 
         // acceptor: one thread per connection; exits when `stopping` is
         // set (stop() pokes it with a dummy connection to unblock accept)
-        let stopping = Arc::new(AtomicBool::new(false));
         let accept_queues = queues.clone();
         let stop_flag = stopping.clone();
         let accept_handle = thread::spawn(move || {
@@ -207,27 +282,118 @@ impl Server {
         &self.store
     }
 
-    /// Point-in-time session-cache statistics.
+    /// Point-in-time session-cache statistics (includes the fault and
+    /// degradation counters).
     pub fn session_stats(&self) -> StoreStats {
         self.store.stats()
     }
 
     /// Stop every executor and the acceptor, joining all threads.
+    /// Graceful: new submissions are refused first, then the executors
+    /// drain their already-accepted jobs before exiting.
     pub fn stop(mut self) {
-        self.queues.stop_all();
+        self.queues.begin_stop();
         if let Some(h) = self.coord_handle.take() {
             let _ = h.join();
         }
         for h in self.pool_handles.drain(..) {
             let _ = h.join();
         }
-        // the acceptor blocks in accept(); raise the flag, then poke it
-        self.stopping.store(true, Ordering::SeqCst);
+        // the acceptor blocks in accept(); the flag is up, so poke it
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        debug_assert!(self.stopping.load(Ordering::SeqCst));
     }
+}
+
+/// Spawn one pool worker under a supervisor loop: the worker body runs
+/// under `catch_unwind`, so a panic that escapes a job boundary (per-job
+/// isolation already catches panics *inside* `dispatch_pool`) respawns
+/// the loop instead of silently shrinking the pool.
+fn spawn_pool_worker(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    store: Arc<SessionStore>,
+    depth: Arc<AtomicUsize>,
+    counters: Arc<FaultCounters>,
+    workers: usize,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || loop {
+        let exit = catch_unwind(AssertUnwindSafe(|| {
+            pool_worker_loop(&rx, &store, &depth, &counters, workers)
+        }));
+        match exit {
+            Ok(()) => break, // Stop job or closed channel: clean exit
+            Err(_) => {
+                // self-heal: the worker lost a job to a panic outside the
+                // per-job isolation; count it and rejoin the pool
+                FaultCounters::bump(&counters.worker_respawns);
+            }
+        }
+    })
+}
+
+fn pool_worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    store: &SessionStore,
+    depth: &AtomicUsize,
+    counters: &FaultCounters,
+    workers: usize,
+) {
+    loop {
+        // a panicking job cannot poison this mutex (it is released before
+        // dispatch), but recover regardless: one poisoned receiver must
+        // not wedge the whole pool
+        let job = match rx.lock().unwrap_or_else(PoisonError::into_inner).recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        match job {
+            Job::Stop => return,
+            Job::Handle(req, reply) => {
+                depth.fetch_sub(1, Ordering::SeqCst);
+                #[cfg(feature = "fault-inject")]
+                {
+                    use crate::faults::inject;
+                    if inject::fire(inject::FaultPoint::WorkerPanic) {
+                        // dropping `reply` tells the connection the job
+                        // died; the supervisor respawns this worker
+                        panic!("injected worker panic");
+                    }
+                    if inject::fire(inject::FaultPoint::SlowDispatch) {
+                        thread::sleep(Duration::from_millis(inject::slow_dispatch_ms()));
+                    }
+                }
+                // per-job panic isolation: a poisoned request kills
+                // neither this worker nor the shared receiver
+                let response =
+                    catch_unwind(AssertUnwindSafe(|| dispatch_pool(store, workers, req)))
+                        .unwrap_or_else(|p| {
+                            FaultCounters::bump(&counters.panics);
+                            panic_response(&p)
+                        });
+                let _ = reply.send(response);
+            }
+        }
+    }
+}
+
+/// Structured error for an isolated job panic.
+fn panic_response(payload: &(dyn std::any::Any + Send)) -> String {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload");
+    protocol::error_response(&format!("internal error: worker panicked: {msg}"))
+}
+
+/// Deterministic retry hint for a shed: grows with how far past the cap
+/// the queue is, bounded so clients never sleep absurdly long.
+fn retry_hint_ms(depth: usize, max_queue: usize) -> u64 {
+    let over = depth.saturating_sub(max_queue) as u64;
+    (100 + 50 * over).min(5_000)
 }
 
 /// Does this request need the serial coordinator worker?
@@ -348,17 +514,140 @@ fn dispatch_pool(store: &SessionStore, workers: usize, req: protocol::Request) -
     }
 }
 
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// A complete newline-terminated line within the cap.
+    Line(String),
+    /// Peer closed the connection.
+    Eof,
+    /// Read timeout with *no* bytes of a next request: an idle
+    /// persistent connection, not a fault.
+    IdleTimeout,
+    /// Read timeout with a half-received line: a slow-loris (or a
+    /// wedged peer) holding the connection mid-request.
+    Stalled,
+    /// The line exceeded the cap (the remainder is unread).
+    TooLong,
+}
+
+/// Read one newline-terminated line without letting a single connection
+/// balloon memory: bytes accumulate up to `max`, and the socket read
+/// timeout distinguishes idle connections from mid-line stalls.
+fn read_bounded_line(reader: &mut BufReader<TcpStream>, max: usize) -> io::Result<LineRead> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, complete) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(if line.is_empty() {
+                        LineRead::IdleTimeout
+                    } else {
+                        LineRead::Stalled
+                    });
+                }
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.extend_from_slice(&chunk[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(chunk);
+                    (chunk.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if line.len() > max {
+            return Ok(LineRead::TooLong);
+        }
+        if complete {
+            return Ok(LineRead::Line(String::from_utf8_lossy(&line).into_owned()));
+        }
+    }
+}
+
+fn respond(writer: &mut TcpStream, response: &str) -> io::Result<()> {
+    writer.write_all(response.as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+/// Admission control + submission + deadline for one parsed request.
+fn submit(queues: &Queues, req: protocol::Request) -> String {
+    if queues.stopping.load(Ordering::SeqCst) {
+        return protocol::error_response("server stopping");
+    }
+    let (queue, depth) = if needs_coordinator(&req) {
+        (&queues.coord, &queues.coord_depth)
+    } else {
+        (&queues.pool, &queues.pool_depth)
+    };
+    let opts = &queues.opts;
+    // shed before queueing: an overloaded server answers cheaply *now*
+    // instead of growing a queue of O(N^3) jobs it will never catch up on
+    let waiting = depth.load(Ordering::SeqCst);
+    if waiting >= opts.max_queue {
+        FaultCounters::bump(&queues.counters.sheds);
+        return protocol::overloaded_response(retry_hint_ms(waiting, opts.max_queue));
+    }
+    let (reply_tx, reply_rx) = channel();
+    depth.fetch_add(1, Ordering::SeqCst);
+    if queue.send(Job::Handle(req, reply_tx)).is_err() {
+        depth.fetch_sub(1, Ordering::SeqCst);
+        return protocol::error_response("worker stopped");
+    }
+    match reply_rx.recv_timeout(opts.request_timeout) {
+        Ok(response) => response,
+        Err(RecvTimeoutError::Timeout) => {
+            // the job still runs to completion on its worker; its reply
+            // lands in a dropped channel and is discarded
+            FaultCounters::bump(&queues.counters.deadline_expired);
+            protocol::deadline_response(opts.request_timeout.as_millis() as u64)
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            protocol::error_response("worker dropped job")
+        }
+    }
+}
+
 fn handle_connection(stream: TcpStream, queues: Arc<Queues>) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
+    let opts = queues.opts;
+    stream.set_read_timeout(Some(opts.request_timeout))?;
+    stream.set_write_timeout(Some(opts.request_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
     loop {
-        line.clear();
-        let n = reader.read_line(&mut line)?;
-        if n == 0 {
-            return Ok(()); // client closed
-        }
+        let line = match read_bounded_line(&mut reader, opts.max_line_bytes)? {
+            LineRead::Eof => return Ok(()), // client closed
+            LineRead::IdleTimeout => continue,
+            LineRead::Stalled => {
+                FaultCounters::bump(&queues.counters.deadline_expired);
+                let _ = respond(
+                    &mut writer,
+                    &protocol::deadline_response(opts.request_timeout.as_millis() as u64),
+                );
+                return Ok(());
+            }
+            LineRead::TooLong => {
+                let _ = respond(
+                    &mut writer,
+                    &protocol::error_response(&format!(
+                        "request line exceeds {} bytes",
+                        opts.max_line_bytes
+                    )),
+                );
+                return Ok(()); // cannot resync mid-line; hang up
+            }
+            LineRead::Line(line) => line,
+        };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -367,26 +656,13 @@ fn handle_connection(stream: TcpStream, queues: Arc<Queues>) -> std::io::Result<
             Err(e) => protocol::error_response(&e),
             Ok(protocol::Request::Shutdown) => {
                 // acknowledged; the CLI layer decides whether to exit
-                queues.stop_all();
-                writer.write_all(protocol::pong_response().as_bytes())?;
-                writer.write_all(b"\n")?;
+                queues.begin_stop();
+                respond(&mut writer, &protocol::pong_response())?;
                 return Ok(());
             }
-            Ok(req) => {
-                let (reply_tx, reply_rx) = channel();
-                let queue = if needs_coordinator(&req) { &queues.coord } else { &queues.pool };
-                if queue.send(Job::Handle(req, reply_tx)).is_err() {
-                    protocol::error_response("worker stopped")
-                } else {
-                    reply_rx
-                        .recv()
-                        .unwrap_or_else(|_| protocol::error_response("worker dropped job"))
-                }
-            }
+            Ok(req) => submit(&queues, req),
         };
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        let _ = peer;
+        respond(&mut writer, &response)?;
     }
 }
 
@@ -396,6 +672,7 @@ mod tests {
     use crate::coordinator::client::Client;
     use crate::coordinator::{Coordinator, GlobalStrategy, TuneRequest};
     use crate::data::{synthetic, SyntheticSpec};
+    use crate::util::json;
 
     #[test]
     fn ping_info_roundtrip() {
@@ -471,6 +748,84 @@ mod tests {
         let mut client = Client::connect(&server.addr.to_string()).unwrap();
         let stats = client.stats().unwrap();
         assert_eq!(stats.get("workers").unwrap().as_usize(), Some(2));
+        server.stop();
+    }
+
+    #[test]
+    fn zero_queue_sheds_with_structured_retry_hint() {
+        // max_queue 0: every submission sheds — the deterministic way to
+        // observe the admission-control response shape
+        let opts = ServerOptions { workers: 1, max_queue: 0, ..Default::default() };
+        let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let v = client.raw(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        let hint = v.get("retry_after_ms").unwrap().as_f64().unwrap();
+        assert!(hint >= 100.0 && hint <= 5_000.0, "hint in range: {hint}");
+        assert!(server.session_stats().faults.sheds >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn deadline_answers_structurally_and_connection_stays_usable() {
+        let opts = ServerOptions {
+            workers: 1,
+            request_timeout: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+        // manual socket: each request goes out as ONE write so the tiny
+        // socket read timeout cannot split a request mid-line
+        let mut sock = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let ds = synthetic(SyntheticSpec { n: 300, p: 2, seed: 5, ..Default::default() }, 1);
+        let mut req = TuneRequest::new(ds.x, ds.ys, crate::kernelfn::Kernel::Rbf { xi2: 1.0 });
+        req.strategy = GlobalStrategy::Grid { points_per_axis: 5 };
+        let line = format!("{}\n", protocol::tune_request_json(&req));
+        sock.write_all(line.as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = json::parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("deadline"), "{resp}");
+        assert!(v.get("timeout_ms").unwrap().as_f64().unwrap() >= 2.0);
+        assert!(server.session_stats().faults.deadline_expired >= 1);
+        // the same connection stays in protocol sync: once the worker
+        // drains the abandoned job, a ping answers inside the deadline
+        let mut pinged = false;
+        for _ in 0..500 {
+            sock.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let v = json::parse(resp.trim()).unwrap();
+            if v.get("ok").unwrap().as_bool() == Some(true) {
+                pinged = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(pinged, "connection unusable after a deadline response");
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected() {
+        let opts = ServerOptions { max_line_bytes: 1024, ..Default::default() };
+        let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let big = format!(r#"{{"op":"ping","pad":"{}"}}"#, "x".repeat(4096));
+        let v = client.raw(&big).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("exceeds"),
+            "names the cap: {v}"
+        );
+        // the connection closes after an unresyncable oversized line...
+        assert!(client.raw(r#"{"op":"ping"}"#).is_err());
+        // ...and fresh connections (and normal-size lines) are unaffected
+        let mut fresh = Client::connect(&server.addr.to_string()).unwrap();
+        assert!(fresh.ping().unwrap());
         server.stop();
     }
 }

@@ -46,14 +46,17 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::faults::{hardened_eigen, FaultCounters, FaultPolicy, FaultSnapshot};
 use crate::kernelfn::{self, Kernel, ThetaDomain, ThetaDomainVec, ThetaVec, ThetaVecBits};
-use crate::linalg::{Matrix, SymEigen};
-use crate::spectral::{EigenSystem, Evaluation, ExtendOutcome, HyperParams, SpectralGp};
+use crate::linalg::Matrix;
+use crate::spectral::{
+    EigenSystem, Evaluation, ExtendOutcome, HyperParams, RefitReason, SpectralGp,
+};
 
 use super::{
     fingerprint, tune_one, Backend, GlobalStrategy, ObjectiveKind, OutputResult, TuneRequest,
@@ -115,6 +118,10 @@ pub struct StoreStats {
     /// either budget.  Explicit `drop_session` and streaming-update
     /// invalidation are not counted.
     pub theta_evictions: u64,
+    /// Fault/degradation counters (DESIGN.md §11) — shared with the
+    /// server, which accounts sheds/panics/respawns/deadlines on the
+    /// same block the store's degradation ladder bumps.
+    pub faults: FaultSnapshot,
 }
 
 struct Slot {
@@ -211,20 +218,100 @@ impl Inner {
 pub struct SessionStore {
     max_sessions: usize,
     max_bytes: usize,
+    fault_policy: FaultPolicy,
+    faults: Arc<FaultCounters>,
     inner: Mutex<Inner>,
     cv: Condvar,
+}
+
+/// Single-flight registration key: which in-flight set holds the claim.
+#[derive(Clone, Copy)]
+enum PendingKey {
+    Fp(u64),
+    Theta(ThetaKey),
+    Update(u64),
+}
+
+/// Drop-guard for a single-flight claim: removes the registration and
+/// wakes every condvar waiter on *all* exit paths — success, early
+/// `return Err` (the eigensolver-error paths), or a panic unwinding
+/// through the builder (the server isolates job panics with
+/// `catch_unwind`; without this guard a failed builder would strand
+/// every waiter on the condvar forever).
+struct PendingGuard<'a> {
+    store: &'a SessionStore,
+    key: PendingKey,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.store.guard();
+        match self.key {
+            PendingKey::Fp(fp) => {
+                g.pending.remove(&fp);
+            }
+            PendingKey::Theta(key) => {
+                g.theta_pending.remove(&key);
+            }
+            PendingKey::Update(id) => {
+                g.updating.remove(&id);
+            }
+        }
+        drop(g);
+        self.store.cv.notify_all();
+    }
 }
 
 impl SessionStore {
     /// `max_sessions` entries / `max_bytes` of setup memory; eviction is
     /// LRU and runs when either budget is exceeded.
     pub fn new(max_sessions: usize, max_bytes: usize) -> Self {
+        Self::with_faults(
+            max_sessions,
+            max_bytes,
+            FaultPolicy::default(),
+            Arc::new(FaultCounters::default()),
+        )
+    }
+
+    /// [`new`](SessionStore::new) with an explicit degradation-ladder
+    /// policy and a (possibly shared) counter block.  The server shares
+    /// one [`FaultCounters`] between the store's ladder and its own
+    /// shed/panic/deadline accounting, so the wire `stats` op reports a
+    /// single fault surface.
+    pub fn with_faults(
+        max_sessions: usize,
+        max_bytes: usize,
+        fault_policy: FaultPolicy,
+        faults: Arc<FaultCounters>,
+    ) -> Self {
         SessionStore {
             max_sessions: max_sessions.max(1),
             max_bytes,
+            fault_policy,
+            faults,
             inner: Mutex::new(Inner::default()),
             cv: Condvar::new(),
         }
+    }
+
+    /// The shared fault-counter block.
+    pub fn fault_counters(&self) -> Arc<FaultCounters> {
+        self.faults.clone()
+    }
+
+    /// Lock the store map, recovering from poison: mutations under this
+    /// lock are short and complete (the O(N^3) work runs outside it), so
+    /// a panicking job cannot leave `Inner` half-mutated — continuing
+    /// with the recovered state is safe, while propagating the poison
+    /// would turn one isolated panic into a permanently wedged store.
+    fn guard(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Condvar wait with the same poison recovery as [`guard`](Self::guard).
+    fn wait_on<'a>(&self, g: MutexGuard<'a, Inner>) -> MutexGuard<'a, Inner> {
+        self.cv.wait(g).unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Get-or-create the session for (kernel, x).  Returns the session
@@ -245,7 +332,7 @@ impl SessionStore {
         }
         let fp = fingerprint(&x, kernel);
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.guard();
             loop {
                 if let Some(&id) = g.by_fp.get(&fp) {
                     g.hits += 1;
@@ -257,7 +344,7 @@ impl SessionStore {
                 }
                 if g.pending.contains(&fp) {
                     // another worker is computing this setup; wait for it
-                    g = self.cv.wait(g).unwrap();
+                    g = self.wait_on(g);
                     continue;
                 }
                 g.misses += 1;
@@ -265,26 +352,23 @@ impl SessionStore {
                 break;
             }
         }
+        // claim released + waiters woken on every exit path from here on
+        let _claim = PendingGuard { store: self, key: PendingKey::Fp(fp) };
 
         // --- O(N^3) setup, outside the lock (other sessions stay served) ---
         let tg = Instant::now();
         let k = kernelfn::gram(kernel, &x);
         let gram_seconds = tg.elapsed().as_secs_f64();
         let te = Instant::now();
-        let eigen = SymEigen::new(&k);
+        let hardened = hardened_eigen(&k, &self.fault_policy, &self.faults);
         let eigen_seconds = te.elapsed().as_secs_f64();
         drop(k);
+        // the degradation ladder already walked its jitter/fallback rungs
+        // (DESIGN.md §11); an error here is its structured, final end —
+        // waiters wake (via `_claim`), retry, and fail the same way
+        let eigen = hardened.map_err(|e| anyhow!("eigensolver: {e}"))?.eigen;
 
-        let mut g = self.inner.lock().unwrap();
-        g.pending.remove(&fp);
-        let eigen = match eigen {
-            Ok(e) => e,
-            Err(e) => {
-                // wake waiters so they can retry (and fail) themselves
-                self.cv.notify_all();
-                return Err(anyhow!("eigensolver: {e}"));
-            }
-        };
+        let mut g = self.guard();
         g.setups += 1;
         g.next_id += 1;
         g.tick += 1;
@@ -387,7 +471,7 @@ impl SessionStore {
         }
         let key: ThetaKey = (id, theta.bits());
         let base = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.guard();
             loop {
                 let Some(slot) = g.slots.get(&id) else {
                     return Err(anyhow!("unknown session {id}"));
@@ -420,7 +504,7 @@ impl SessionStore {
                     return Ok((gp, false));
                 }
                 if g.theta_pending.contains(&key) {
-                    g = self.cv.wait(g).unwrap();
+                    g = self.wait_on(g);
                     continue;
                 }
                 g.theta_misses += 1;
@@ -428,23 +512,17 @@ impl SessionStore {
                 break base;
             }
         };
+        // claim released + waiters woken on every exit path from here on
+        let _claim = PendingGuard { store: self, key: PendingKey::Theta(key) };
 
         // --- O(N^3) family build, outside the lock ---
         let kernel = base.kernel().with_theta_vec(theta);
         let k = kernelfn::gram(kernel, base.x());
-        let eigen = SymEigen::new(&k);
+        let hardened = hardened_eigen(&k, &self.fault_policy, &self.faults);
         drop(k);
+        let eigen = hardened.map_err(|e| anyhow!("eigensolver: {e}"))?.eigen;
 
-        let mut g = self.inner.lock().unwrap();
-        g.theta_pending.remove(&key);
-        let eigen = match eigen {
-            Ok(e) => e,
-            Err(e) => {
-                drop(g);
-                self.cv.notify_all();
-                return Err(anyhow!("eigensolver: {e}"));
-            }
-        };
+        let mut g = self.guard();
         g.setups += 1;
         let gp = SpectralGp::from_eigen(kernel, base.x().clone(), eigen);
         // only cache if the session is still live AND still backed by the
@@ -471,7 +549,7 @@ impl SessionStore {
 
     /// Look up a live session by id, refreshing its LRU position.
     pub fn get(&self, id: u64) -> Option<Arc<Session>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         g.tick += 1;
         let tick = g.tick;
         let slot = g.slots.get_mut(&id)?;
@@ -493,20 +571,22 @@ impl SessionStore {
     /// `unknown session` rather than resurrecting the entry.
     pub fn update(&self, id: u64, x_new: &Matrix) -> Result<UpdateResult> {
         let gp = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.guard();
             loop {
                 let Some(slot) = g.slots.get(&id) else {
                     return Err(anyhow!("unknown session {id}"));
                 };
                 let gp = slot.sess.gp.clone();
                 if g.updating.contains(&id) {
-                    g = self.cv.wait(g).unwrap();
+                    g = self.wait_on(g);
                     continue;
                 }
                 g.updating.insert(id);
                 break gp;
             }
         };
+        // claim released + waiters woken on every exit path from here on
+        let _claim = PendingGuard { store: self, key: PendingKey::Update(id) };
 
         // --- the update work, outside the lock ---
         let work = (|| -> Result<(SpectralGp, ExtendOutcome, f64)> {
@@ -517,24 +597,35 @@ impl SessionStore {
                 return Err(anyhow!("x_new: {} cols != P {}", x_new.cols(), gp.x().cols()));
             }
             let t0 = Instant::now();
-            let (new_gp, outcome) = gp.extend(x_new).map_err(|e| anyhow!("eigensolver: {e}"))?;
+            #[cfg(feature = "fault-inject")]
+            let extended = if crate::faults::inject::fire(
+                crate::faults::inject::FaultPoint::EigenNoConvergence,
+            ) {
+                Err(crate::linalg::eigen::NoConvergence { eigenvalue_index: 0 })
+            } else {
+                gp.extend(x_new)
+            };
+            #[cfg(not(feature = "fault-inject"))]
+            let extended = gp.extend(x_new);
+            let (new_gp, outcome) = match extended {
+                Ok(v) => v,
+                // the incremental eigensolve failed: the ExtendPolicy
+                // fallback generalizes into the degradation ladder — a
+                // from-scratch refit with jitter/fallback escalation
+                Err(_) => self.ladder_refit(&gp, x_new)?,
+            };
             Ok((new_gp, outcome, t0.elapsed().as_secs_f64()))
         })();
 
-        let mut g = self.inner.lock().unwrap();
-        g.updating.remove(&id);
+        let mut g = self.guard();
         let (new_gp, outcome, update_seconds) = match work {
             Ok(v) => v,
-            Err(e) => {
-                drop(g);
-                self.cv.notify_all();
-                return Err(e);
-            }
+            // `g` unlocks before `_claim` releases the claim (reverse
+            // declaration order), so the guard's relock cannot deadlock
+            Err(e) => return Err(e),
         };
         // the session may have been dropped/evicted while we worked
         let Some(old) = g.slots.get(&id) else {
-            drop(g);
-            self.cv.notify_all();
             return Err(anyhow!("unknown session {id}"));
         };
         let old_sess = old.sess.clone();
@@ -573,10 +664,36 @@ impl SessionStore {
         Ok(UpdateResult { sess, incremental: refit_reason.is_none(), refit_reason, update_seconds })
     }
 
+    /// Full refit of a grown dataset through the degradation ladder —
+    /// the streaming path's generalization of the [`ExtendPolicy`]
+    /// fallback: when the incremental eigensolve itself fails, rebuild
+    /// the grown Gram and decompose it with jitter/fallback escalation
+    /// instead of surfacing the raw `NoConvergence`.
+    ///
+    /// [`ExtendPolicy`]: crate::spectral::ExtendPolicy
+    fn ladder_refit(
+        &self,
+        gp: &SpectralGp,
+        x_new: &Matrix,
+    ) -> Result<(SpectralGp, ExtendOutcome)> {
+        FaultCounters::bump(&self.faults.fallback_refits);
+        let p = gp.x().cols();
+        let mut data = gp.x().data().to_vec();
+        data.extend_from_slice(x_new.data());
+        let full_x = Matrix::from_vec(gp.n() + x_new.rows(), p, data);
+        let k = kernelfn::gram(gp.kernel(), &full_x);
+        let h = hardened_eigen(&k, &self.fault_policy, &self.faults)
+            .map_err(|e| anyhow!("eigensolver: {e}"))?;
+        Ok((
+            SpectralGp::from_eigen(gp.kernel(), full_x, h.eigen),
+            ExtendOutcome::Refit(RefitReason::EigenFailure),
+        ))
+    }
+
     /// Explicitly drop a session; returns whether it existed.  Freed
     /// bytes are not counted as evictions.
     pub fn drop_session(&self, id: u64) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         match g.slots.remove(&id) {
             Some(slot) => {
                 g.release_fp(slot.sess.fingerprint, id);
@@ -589,7 +706,7 @@ impl SessionStore {
     }
 
     pub fn stats(&self) -> StoreStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         StoreStats {
             sessions: g.slots.len(),
             bytes: g.bytes,
@@ -604,6 +721,7 @@ impl SessionStore {
             theta_hits: g.theta_hits,
             theta_misses: g.theta_misses,
             theta_evictions: g.theta_evictions,
+            faults: self.faults.snapshot(),
         }
     }
 }
@@ -1368,5 +1486,105 @@ mod tests {
         // fixed family has no theta
         let (lin, _) = store.create(Kernel::Linear, x).unwrap();
         assert!(tune_theta(&store, &ThetaTuneRequest::new(lin.id, ys)).is_err());
+    }
+
+    /// Block `waiters` threads on a single-flight claim, kill the
+    /// "builder" by panicking it while it holds only the [`PendingGuard`],
+    /// then require every waiter to complete within the deadline — the
+    /// regression shape for the condvar-stranding bug this guard fixes.
+    fn assert_guard_unblocks<F>(store: &Arc<SessionStore>, key: PendingKey, waiter: F)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        use std::sync::mpsc::channel;
+        use std::time::Duration;
+
+        // simulate the real paths' claim: register under the lock
+        {
+            let mut g = store.guard();
+            match key {
+                PendingKey::Fp(fp) => {
+                    g.pending.insert(fp);
+                }
+                PendingKey::Theta(k) => {
+                    g.theta_pending.insert(k);
+                }
+                PendingKey::Update(id) => {
+                    g.updating.insert(id);
+                }
+            }
+        }
+        let waiter = Arc::new(waiter);
+        let (tx, rx) = channel();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let waiter = waiter.clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    waiter();
+                    tx.send(()).unwrap();
+                })
+            })
+            .collect();
+        // let the waiters reach the condvar, then fail the builder: its
+        // unwind drops the guard, which must release the claim and wake
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(rx.try_recv().is_err(), "waiters blocked on the in-flight claim");
+        let store_for_builder = store.clone();
+        let builder = std::thread::spawn(move || {
+            let _claim = PendingGuard { store: &store_for_builder, key };
+            panic!("builder failed mid-setup");
+        });
+        assert!(builder.join().is_err());
+        for _ in &handles {
+            rx.recv_timeout(Duration::from_secs(30))
+                .expect("waiter stranded after the building thread failed");
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn failed_create_builder_wakes_waiters() {
+        let store = Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(16, 77);
+        let fp = fingerprint(&x, k);
+        let s2 = store.clone();
+        assert_guard_unblocks(&store, PendingKey::Fp(fp), move || {
+            // a woken waiter finds no claim and builds the setup itself
+            s2.create(k, x.clone()).unwrap();
+        });
+        let s = store.stats();
+        assert_eq!(s.setups, 1, "one surviving waiter built; the rest hit");
+    }
+
+    #[test]
+    fn failed_theta_builder_wakes_waiters() {
+        let store = Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(16, 78);
+        let (sess, _) = store.create(k, x).unwrap();
+        let theta = optim::quantize_theta(3.0, ThetaDomain::Continuous);
+        let key = (sess.id, ThetaVec::scalar(theta).bits());
+        let s2 = store.clone();
+        let id = sess.id;
+        assert_guard_unblocks(&store, PendingKey::Theta(key), move || {
+            s2.theta_setup(id, theta).unwrap();
+        });
+        assert_eq!(store.stats().theta_entries, 1);
+    }
+
+    #[test]
+    fn failed_updater_wakes_waiters() {
+        let store = Arc::new(SessionStore::new(8, usize::MAX));
+        let (k, x, _) = dataset(16, 79);
+        let (sess, _) = store.create(k, x).unwrap();
+        let s2 = store.clone();
+        let id = sess.id;
+        assert_guard_unblocks(&store, PendingKey::Update(id), move || {
+            let row = Matrix::from_fn(1, 2, |_, j| 0.4 + j as f64 * 0.2);
+            s2.update(id, &row).unwrap();
+        });
+        assert_eq!(store.stats().updates, 3, "every blocked updater was served");
     }
 }

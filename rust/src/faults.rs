@@ -1,0 +1,408 @@
+//! Fault policy and the numeric degradation ladder (DESIGN.md §11).
+//!
+//! The paper's economics — one O(N^3) setup amortized over k* O(N)
+//! iterates — only pay off in a server that *survives*: a non-convergent
+//! QL iteration ([`crate::linalg::eigen::NoConvergence`]) or an
+//! ill-conditioned Gram matrix at the small-lengthscale edge of a theta
+//! sweep must degrade by policy, not panic.  This module centralizes
+//! that policy:
+//!
+//! - [`FaultPolicy`] — the ladder's knobs (jitter base, rung count,
+//!   positive-definiteness tolerance);
+//! - [`hardened_eigen`] — the deterministic degradation ladder itself:
+//!   clean decomposition → jitter-boosted retries (each rung scales the
+//!   diagonal boost by 10x) → a Cholesky-backed fallback path → a clean
+//!   structured [`FaultError`];
+//! - [`FaultCounters`] — shared observable counters every degradation
+//!   increments, surfaced through the wire `stats` op.
+//!
+//! The ladder is deterministic: the same input walks the same rungs and
+//! produces the same [`SetupGrade`], so warm-cache bitwise identity is
+//! preserved (a rescued setup is cached like any other — its grade is a
+//! property of the decomposition, not of the request that triggered it).
+
+#[cfg(feature = "fault-inject")]
+pub mod inject;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::{matmul, norm2, Cholesky, Matrix, SymEigen};
+
+/// Knobs of the numeric degradation ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPolicy {
+    /// Base diagonal jitter, as a fraction of the mean diagonal
+    /// (`trace/N`).  Rung `r` adds `jitter_eps * 10^(r-1) * trace/N`.
+    pub jitter_eps: f64,
+    /// Jitter rungs to attempt before the Cholesky fallback.
+    pub max_jitter_rungs: usize,
+    /// Relative tolerance for the positive-semi-definiteness check: a
+    /// decomposition whose most negative eigenvalue is below
+    /// `-pd_tol * spectral scale` is treated as a failure (a kernel Gram
+    /// matrix is PSD in exact arithmetic; a materially negative spectrum
+    /// corrupts `log det` and every score built on it).
+    pub pd_tol: f64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        // 1e-10 * trace/N is far below the verify suite's 1e-7 relative
+        // tolerance; four rungs top out at 1e-7 * trace/N, still a
+        // perturbation the score tolerances absorb.
+        FaultPolicy { jitter_eps: 1e-10, max_jitter_rungs: 4, pd_tol: 1e-8 }
+    }
+}
+
+/// Shared fault/degradation counters.  One instance is shared by the
+/// server (sheds, panics, respawns, deadlines) and the session store
+/// (jitter retries, fallback refits); the wire `stats` op serializes a
+/// [`snapshot`](FaultCounters::snapshot).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Requests rejected by admission control (`overloaded` responses).
+    pub sheds: AtomicU64,
+    /// Jobs that panicked inside a worker (isolated by `catch_unwind`).
+    pub panics: AtomicU64,
+    /// Pool workers respawned after a panic escaped a job boundary.
+    pub worker_respawns: AtomicU64,
+    /// Jitter-boosted eigendecomposition retries (ladder rungs walked).
+    pub jitter_retries: AtomicU64,
+    /// Cholesky-backed fallback decompositions attempted, plus streaming
+    /// updates refitted because the incremental path's eigensolve failed.
+    pub fallback_refits: AtomicU64,
+    /// Requests answered with a `deadline` error.
+    pub deadline_expired: AtomicU64,
+}
+
+/// Point-in-time copy of [`FaultCounters`] (plain integers, for stats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    pub sheds: u64,
+    pub panics: u64,
+    pub worker_respawns: u64,
+    pub jitter_retries: u64,
+    pub fallback_refits: u64,
+    pub deadline_expired: u64,
+}
+
+impl FaultCounters {
+    pub fn snapshot(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            sheds: self.sheds.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            jitter_retries: self.jitter_retries.load(Ordering::Relaxed),
+            fallback_refits: self.fallback_refits.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// How a decomposition was obtained — clean, or via which ladder rung.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SetupGrade {
+    /// First attempt succeeded (the overwhelmingly common case).
+    Clean,
+    /// Rescued by jitter rung `rung` (1-based): `jitter` was added to
+    /// the diagonal before decomposing.
+    Jittered { rung: usize, jitter: f64 },
+    /// Rescued by the Cholesky-backed path at the maximum jitter.
+    CholFallback { jitter: f64 },
+}
+
+impl SetupGrade {
+    pub fn is_clean(&self) -> bool {
+        matches!(self, SetupGrade::Clean)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SetupGrade::Clean => "clean",
+            SetupGrade::Jittered { .. } => "jittered",
+            SetupGrade::CholFallback { .. } => "chol-fallback",
+        }
+    }
+}
+
+/// A decomposition that survived the ladder, tagged with how.
+#[derive(Clone, Debug)]
+pub struct HardenedEigen {
+    pub eigen: SymEigen,
+    pub grade: SetupGrade,
+}
+
+/// Every rung failed: the structured end of the ladder.  Carries what
+/// was attempted so the error message (and logs) show the full walk.
+#[derive(Debug)]
+pub struct FaultError {
+    /// Jitter rungs attempted (== `FaultPolicy::max_jitter_rungs` unless
+    /// the ladder was configured shorter).
+    pub rungs: usize,
+    /// Largest diagonal jitter tried.
+    pub max_jitter: f64,
+    /// The final failure, after the Cholesky fallback also failed.
+    pub cause: String,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degradation ladder exhausted ({} jitter rungs, max jitter {:.3e}, \
+             cholesky fallback): {}",
+            self.rungs, self.max_jitter, self.cause
+        )
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Decompose `k` through the degradation ladder:
+///
+/// 1. clean `SymEigen::new` + PSD check;
+/// 2. up to [`FaultPolicy::max_jitter_rungs`] jitter-boosted retries,
+///    rung `r` adding `jitter_eps * 10^(r-1) * trace/N` to the diagonal
+///    (each counted in [`FaultCounters::jitter_retries`]);
+/// 3. a Cholesky-backed decomposition of the max-jittered matrix
+///    (counted in [`FaultCounters::fallback_refits`]);
+/// 4. a structured [`FaultError`] recording the whole walk.
+///
+/// The ladder is deterministic — no randomness, no clocks — so repeated
+/// calls on the same matrix take the same path.
+pub fn hardened_eigen(
+    k: &Matrix,
+    policy: &FaultPolicy,
+    counters: &FaultCounters,
+) -> Result<HardenedEigen, FaultError> {
+    let n = k.rows();
+    let base = if n == 0 { 0.0 } else { (k.trace().abs() / n as f64).max(f64::MIN_POSITIVE) };
+
+    let mut last_cause = match attempt(k, policy) {
+        Ok(eigen) => return Ok(HardenedEigen { eigen, grade: SetupGrade::Clean }),
+        Err(cause) => cause,
+    };
+
+    let mut jitter = 0.0;
+    for rung in 1..=policy.max_jitter_rungs {
+        jitter = policy.jitter_eps * 10f64.powi(rung as i32 - 1) * base;
+        FaultCounters::bump(&counters.jitter_retries);
+        let mut kj = k.clone();
+        kj.add_diag(jitter);
+        match attempt(&kj, policy) {
+            Ok(eigen) => {
+                return Ok(HardenedEigen { eigen, grade: SetupGrade::Jittered { rung, jitter } })
+            }
+            Err(cause) => last_cause = cause,
+        }
+    }
+
+    // Cholesky-backed fallback at the maximum jitter: a different O(N^3)
+    // algorithm with a different failure surface (pivot breakdown instead
+    // of QL stagnation).
+    if jitter == 0.0 {
+        jitter = policy.jitter_eps * base;
+    }
+    FaultCounters::bump(&counters.fallback_refits);
+    let mut kj = k.clone();
+    kj.add_diag(jitter);
+    match cholesky_eigen(&kj) {
+        Ok(eigen) => Ok(HardenedEigen { eigen, grade: SetupGrade::CholFallback { jitter } }),
+        Err(cause) => Err(FaultError {
+            rungs: policy.max_jitter_rungs,
+            max_jitter: jitter,
+            cause: format!("{last_cause}; {cause}"),
+        }),
+    }
+}
+
+/// One ladder attempt: decompose (through the injection hook) and reject
+/// non-finite or materially negative spectra.
+fn attempt(k: &Matrix, policy: &FaultPolicy) -> Result<SymEigen, String> {
+    let eigen = try_eigen(k).map_err(|e| e.to_string())?;
+    check_psd(&eigen, policy)?;
+    Ok(eigen)
+}
+
+/// `SymEigen::new` behind the fault-injection hook: under the
+/// `fault-inject` feature an armed [`inject::FaultPoint::EigenNoConvergence`]
+/// makes this return the same error a real QL stagnation would.
+fn try_eigen(k: &Matrix) -> Result<SymEigen, crate::linalg::eigen::NoConvergence> {
+    #[cfg(feature = "fault-inject")]
+    if inject::fire(inject::FaultPoint::EigenNoConvergence) {
+        return Err(crate::linalg::eigen::NoConvergence { eigenvalue_index: 0 });
+    }
+    SymEigen::new(k)
+}
+
+/// A kernel Gram matrix is PSD in exact arithmetic; eigenvalues below
+/// `-pd_tol * scale` (or non-finite) mean the decomposition cannot back
+/// the paper's `log det` identities.
+fn check_psd(eigen: &SymEigen, policy: &FaultPolicy) -> Result<(), String> {
+    // values are ascending (eigen.rs contract)
+    let min = eigen.values.first().copied().unwrap_or(0.0);
+    let max = eigen.values.last().copied().unwrap_or(0.0);
+    if !min.is_finite() || !max.is_finite() {
+        return Err("non-finite eigenvalues".to_string());
+    }
+    let scale = min.abs().max(max.abs()).max(f64::MIN_POSITIVE);
+    if min < -policy.pd_tol * scale {
+        return Err(format!("gram not positive semi-definite (min eigenvalue {min:.6e})"));
+    }
+    Ok(())
+}
+
+/// Cholesky-backed eigendecomposition of a positive-definite matrix:
+/// factor `A = L L'`, decompose the *similar* matrix `M = L' L`
+/// (same spectrum, and the two-sided similarity often conditions the QL
+/// iteration better than `A` itself), then map eigenvectors back —
+/// `A (L v) = L (L' L) v = s (L v)`, so `u = L v / |L v|`.
+///
+/// Fails (with a message naming the stage) when `A` is not positive
+/// definite or the inner eigendecomposition itself fails — the ladder
+/// reports both in its structured error.
+pub fn cholesky_eigen(a: &Matrix) -> Result<SymEigen, String> {
+    let ch = Cholesky::new(a).map_err(|e| format!("cholesky fallback: {e}"))?;
+    let l = ch.l();
+    let m = matmul(&l.t(), l);
+    let eigen = try_eigen(&m).map_err(|e| format!("cholesky fallback eigen: {e}"))?;
+    let n = a.rows();
+    let mut vectors = Matrix::zeros(n, n);
+    for j in 0..n {
+        let v = eigen.vectors.col(j);
+        let u = l.matvec(&v);
+        let nrm = norm2(&u);
+        let inv = if nrm > 0.0 { 1.0 / nrm } else { 0.0 };
+        for i in 0..n {
+            vectors[(i, j)] = u[i] * inv;
+        }
+    }
+    Ok(SymEigen { values: eigen.values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_bt;
+
+    /// Deterministic symmetric PSD test matrix `B B'` with bounded entries.
+    fn psd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        let b = Matrix::from_fn(n, n, |_, _| next());
+        matmul_bt(&b, &b)
+    }
+
+    #[test]
+    fn clean_matrix_takes_the_clean_rung() {
+        let k = psd(12, 7);
+        let counters = FaultCounters::default();
+        let h = hardened_eigen(&k, &FaultPolicy::default(), &counters).unwrap();
+        assert_eq!(h.grade, SetupGrade::Clean);
+        let snap = counters.snapshot();
+        assert_eq!((snap.jitter_retries, snap.fallback_refits), (0, 0));
+        // identical to the direct decomposition, bit for bit
+        let direct = SymEigen::new(&k).unwrap();
+        assert_eq!(h.eigen.values, direct.values);
+        assert_eq!(h.eigen.vectors.data(), direct.vectors.data());
+    }
+
+    #[test]
+    fn markedly_non_pd_walks_every_rung_in_order() {
+        // min eigenvalue pushed far below what any jitter rung repairs
+        let mut k = psd(10, 3);
+        let spread = SymEigen::new(&k).unwrap().values.last().copied().unwrap();
+        k.add_diag(-0.5 * spread);
+        let policy = FaultPolicy::default();
+        let counters = FaultCounters::default();
+        let err = hardened_eigen(&k, &policy, &counters).unwrap_err();
+        assert_eq!(err.rungs, policy.max_jitter_rungs);
+        let snap = counters.snapshot();
+        assert_eq!(snap.jitter_retries, policy.max_jitter_rungs as u64);
+        assert_eq!(snap.fallback_refits, 1);
+        let msg = err.to_string();
+        assert!(msg.contains("positive"), "cause names the PSD failure: {msg}");
+        assert!(msg.contains("cholesky"), "cause names the fallback stage: {msg}");
+    }
+
+    #[test]
+    fn slightly_non_pd_is_rescued_by_a_jitter_rung() {
+        let n = 10;
+        let mut k = psd(n, 5);
+        let clean_min = SymEigen::new(&k).unwrap().values[0];
+        let scale = SymEigen::new(&k).unwrap().values[n - 1];
+        // plant a deficit a middle rung's jitter repairs: rung r adds
+        // jitter_eps * 10^(r-1) * trace/n
+        let policy = FaultPolicy::default();
+        let trace_over_n = k.trace() / n as f64;
+        let deficit = clean_min + 2.0 * policy.pd_tol * scale;
+        k.add_diag(-deficit);
+        let counters = FaultCounters::default();
+        let h = hardened_eigen(&k, &policy, &counters).unwrap();
+        match h.grade {
+            SetupGrade::Jittered { rung, jitter } => {
+                assert!((1..=policy.max_jitter_rungs).contains(&rung));
+                assert!(jitter > 0.0 && jitter <= policy.jitter_eps * 1e4 * trace_over_n);
+                assert_eq!(counters.snapshot().jitter_retries, rung as u64);
+            }
+            other => panic!("expected a jitter rescue, got {other:?}"),
+        }
+        // ladder result == direct decomposition of the jittered matrix
+        let SetupGrade::Jittered { jitter, .. } = h.grade else { unreachable!() };
+        let mut kj = k.clone();
+        kj.add_diag(jitter);
+        let direct = SymEigen::new(&kj).unwrap();
+        assert_eq!(h.eigen.values, direct.values);
+    }
+
+    #[test]
+    fn cholesky_eigen_matches_direct_decomposition() {
+        let mut k = psd(16, 11);
+        k.add_diag(1e-6 * k.trace() / 16.0);
+        let ch = cholesky_eigen(&k).unwrap();
+        let direct = SymEigen::new(&k).unwrap();
+        for (a, b) in ch.values.iter().zip(&direct.values) {
+            assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        // same invariant subspaces: the reconstruction must match
+        assert!(ch.reconstruct().max_abs_diff(&k) < 1e-8 * k.fro_norm().max(1.0));
+        // and the vectors are orthonormal
+        let utu = matmul(&ch.vectors.t(), &ch.vectors);
+        assert!(utu.max_abs_diff(&Matrix::eye(16)) < 1e-8);
+    }
+
+    #[test]
+    fn cholesky_eigen_rejects_non_pd() {
+        let mut k = psd(8, 2);
+        let top = SymEigen::new(&k).unwrap().values[7];
+        k.add_diag(-0.5 * top);
+        let err = cholesky_eigen(&k).unwrap_err();
+        assert!(err.contains("cholesky"), "{err}");
+    }
+
+    #[test]
+    fn ladder_is_deterministic() {
+        let mut k = psd(9, 13);
+        let clean_min = SymEigen::new(&k).unwrap().values[0];
+        let scale = SymEigen::new(&k).unwrap().values[8];
+        k.add_diag(-(clean_min + 2e-8 * scale));
+        let policy = FaultPolicy::default();
+        let c1 = FaultCounters::default();
+        let c2 = FaultCounters::default();
+        let a = hardened_eigen(&k, &policy, &c1).unwrap();
+        let b = hardened_eigen(&k, &policy, &c2).unwrap();
+        assert_eq!(a.grade, b.grade);
+        assert_eq!(a.eigen.values, b.eigen.values);
+        assert_eq!(a.eigen.vectors.data(), b.eigen.vectors.data());
+        assert_eq!(c1.snapshot(), c2.snapshot());
+    }
+}

@@ -1,0 +1,144 @@
+//! Deterministic fault injection (test-only; cargo feature
+//! `fault-inject`).  Nothing in this module exists in a default build —
+//! every call site is `#[cfg(feature = "fault-inject")]`-gated, so the
+//! production binary carries zero injection branches.
+//!
+//! Injection is counter-scheduled, not random: arming a point with
+//! `(every, limit)` makes every `every`-th traversal of that point fire,
+//! at most `limit` times, regardless of thread interleaving — the chaos
+//! suite gets a reproducible fault schedule without clocks or RNG state.
+//! (Slow-client, oversized-request and mid-request-disconnect faults
+//! need no server-side hook: the chaos tests drive those straight from
+//! misbehaving client sockets.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Server-side points where a fault can be made to fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// The eigensolver call inside the degradation ladder reports
+    /// `NoConvergence` instead of decomposing.
+    EigenNoConvergence = 0,
+    /// A pool worker panics after dequeuing a job (outside the per-job
+    /// `catch_unwind`), exercising the supervisor respawn path.
+    WorkerPanic = 1,
+    /// Job dispatch stalls for [`slow_dispatch_ms`] before executing,
+    /// exercising the per-request deadline.
+    SlowDispatch = 2,
+}
+
+const POINTS: usize = 3;
+
+// Per-point schedule: fire on every `EVERY`-th traversal (0 = disarmed),
+// at most `LIMIT` times; `SEEN`/`FIRED` are the traversal/fire counters.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static EVERY: [AtomicU64; POINTS] = [ZERO; POINTS];
+static LIMIT: [AtomicU64; POINTS] = [ZERO; POINTS];
+static SEEN: [AtomicU64; POINTS] = [ZERO; POINTS];
+static FIRED: [AtomicU64; POINTS] = [ZERO; POINTS];
+static SLOW_MS: AtomicU64 = AtomicU64::new(0);
+
+/// Arm `point`: every `every`-th traversal fires, at most `limit` times.
+/// `every = 1` fires on the next `limit` traversals; `every = 10` models
+/// a 10% fault rate.  Re-arming resets the point's counters.
+pub fn arm(point: FaultPoint, every: u64, limit: u64) {
+    let i = point as usize;
+    SEEN[i].store(0, Ordering::SeqCst);
+    FIRED[i].store(0, Ordering::SeqCst);
+    LIMIT[i].store(limit, Ordering::SeqCst);
+    EVERY[i].store(every, Ordering::SeqCst);
+}
+
+/// Disarm every point and zero all counters.
+pub fn reset() {
+    for i in 0..POINTS {
+        EVERY[i].store(0, Ordering::SeqCst);
+        LIMIT[i].store(0, Ordering::SeqCst);
+        SEEN[i].store(0, Ordering::SeqCst);
+        FIRED[i].store(0, Ordering::SeqCst);
+    }
+    SLOW_MS.store(0, Ordering::SeqCst);
+}
+
+/// Called by instrumented code at the injection point; true = inject.
+pub fn fire(point: FaultPoint) -> bool {
+    let i = point as usize;
+    let every = EVERY[i].load(Ordering::SeqCst);
+    if every == 0 {
+        return false;
+    }
+    let seen = SEEN[i].fetch_add(1, Ordering::SeqCst) + 1;
+    if seen % every != 0 {
+        return false;
+    }
+    // claim one of the `limit` firings atomically
+    loop {
+        let fired = FIRED[i].load(Ordering::SeqCst);
+        if fired >= LIMIT[i].load(Ordering::SeqCst) {
+            return false;
+        }
+        if FIRED[i]
+            .compare_exchange(fired, fired + 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// How many times `point` has fired since it was last armed.
+pub fn fired(point: FaultPoint) -> u64 {
+    FIRED[point as usize].load(Ordering::SeqCst)
+}
+
+/// How many times `point` has been traversed since it was last armed.
+pub fn seen(point: FaultPoint) -> u64 {
+    SEEN[point as usize].load(Ordering::SeqCst)
+}
+
+/// Stall duration for [`FaultPoint::SlowDispatch`] firings.
+pub fn set_slow_dispatch_ms(ms: u64) {
+    SLOW_MS.store(ms, Ordering::SeqCst);
+}
+
+pub fn slow_dispatch_ms() -> u64 {
+    SLOW_MS.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the schedule is process-global; serialize tests that touch it
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn schedule_is_counter_driven() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        arm(FaultPoint::EigenNoConvergence, 3, 2);
+        let fires: Vec<bool> =
+            (0..9).map(|_| fire(FaultPoint::EigenNoConvergence)).collect();
+        // fires on traversals 3 and 6; limit 2 stops traversal 9
+        assert_eq!(
+            fires,
+            vec![false, false, true, false, false, true, false, false, false]
+        );
+        assert_eq!(fired(FaultPoint::EigenNoConvergence), 2);
+        assert_eq!(seen(FaultPoint::EigenNoConvergence), 9);
+        reset();
+        assert!(!fire(FaultPoint::EigenNoConvergence));
+    }
+
+    #[test]
+    fn points_are_independent() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        arm(FaultPoint::WorkerPanic, 1, 1);
+        assert!(!fire(FaultPoint::EigenNoConvergence));
+        assert!(fire(FaultPoint::WorkerPanic));
+        assert!(!fire(FaultPoint::WorkerPanic));
+        reset();
+    }
+}

@@ -60,6 +60,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod kernelfn;
 pub mod linalg;
 pub mod naive;

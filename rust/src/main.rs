@@ -5,7 +5,7 @@
 use anyhow::{anyhow, Result};
 
 use gpml::coordinator::{
-    client::Client,
+    client::{Client, ClientOptions},
     server::{Server, ServerOptions},
     session::{SessionTuneRequest, ThetaTuneRequest},
     Backend, Coordinator, GlobalStrategy, ObjectiveKind, TuneRequest,
@@ -31,12 +31,20 @@ USAGE:
               [--seed 42] --out <csv> generate a synthetic GP dataset
   gpml serve  [--addr 127.0.0.1:7070] [--no-pjrt] [--workers N]
               [--cache-sessions K] [--cache-bytes 1g]
+              [--request-timeout 30000] [--max-queue 128]
+              [--max-line-bytes 32m]
                                       run the tuning coordinator server;
                                       sessions cache the O(N^3) setup across
                                       requests (LRU, K entries / byte budget),
-                                      N pool workers serve pure-rust jobs
+                                      N pool workers serve pure-rust jobs;
+                                      requests past --request-timeout ms get
+                                      a structured deadline error, load past
+                                      --max-queue queued jobs is shed with
+                                      overloaded + retry_after_ms, request
+                                      lines are capped at --max-line-bytes
   gpml client --addr <host:port> --data <csv> [tune options]
               [--session] [--append <csv>] [--stats]
+              [--retries 3] [--connect-timeout 10000] [--read-timeout 300000]
               [--tune-theta] [--theta-min 0.01] [--theta-max 100]
               [--theta-dims D] [--outer 20]
               [--theta-search wavefront|golden|nelder-mead|pso]
@@ -241,6 +249,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_bytes: args
             .get_bytes("cache-bytes", ServerOptions::DEFAULT_MAX_BYTES)
             .map_err(|e| anyhow!(e))?,
+        request_timeout: std::time::Duration::from_millis(
+            args.get_usize(
+                "request-timeout",
+                ServerOptions::DEFAULT_REQUEST_TIMEOUT.as_millis() as usize,
+            )
+            .map_err(|e| anyhow!(e))? as u64,
+        ),
+        max_queue: args
+            .get_usize("max-queue", ServerOptions::DEFAULT_MAX_QUEUE)
+            .map_err(|e| anyhow!(e))?,
+        max_line_bytes: args
+            .get_bytes("max-line-bytes", ServerOptions::DEFAULT_MAX_LINE_BYTES)
+            .map_err(|e| anyhow!(e))?,
     };
     let artifacts: std::path::PathBuf =
         args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir);
@@ -268,6 +289,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.max_bytes
     );
     println!(
+        "deadline: {} ms | queue bound: {} jobs | line cap: {} bytes",
+        opts.request_timeout.as_millis(),
+        opts.max_queue,
+        opts.max_line_bytes
+    );
+    println!(
         "protocol: newline-delimited JSON (docs/PROTOCOL.md); ops: ping | info | stats | tune \
          | tune_theta | create_session | update_session | drop_session | evaluate | predict \
          | shutdown"
@@ -280,7 +307,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr <host:port> is required"))?;
-    let mut client = Client::connect(addr)?;
+    let defaults = ClientOptions::default();
+    let read_ms = args
+        .get_usize(
+            "read-timeout",
+            defaults.read_timeout.map(|d| d.as_millis() as usize).unwrap_or(0),
+        )
+        .map_err(|e| anyhow!(e))?;
+    let copts = ClientOptions {
+        retries: args.get_usize("retries", defaults.retries).map_err(|e| anyhow!(e))?,
+        connect_timeout: std::time::Duration::from_millis(
+            args.get_usize("connect-timeout", defaults.connect_timeout.as_millis() as usize)
+                .map_err(|e| anyhow!(e))? as u64,
+        ),
+        // 0 = no read timeout (long tunes against a generous server)
+        read_timeout: if read_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(read_ms as u64))
+        },
+        ..defaults
+    };
+    let mut client = Client::connect_with(addr, copts)?;
     if args.flag("stats") {
         println!("{}", client.stats()?);
         return Ok(());

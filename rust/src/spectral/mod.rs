@@ -86,6 +86,9 @@ pub enum RefitReason {
     UpdateBudget,
     /// The updated eigenbasis drifted past [`ExtendPolicy::ortho_tol`].
     Conditioning,
+    /// The incremental path's eigensolve failed and the degradation
+    /// ladder ([`crate::faults::hardened_eigen`]) refitted from scratch.
+    EigenFailure,
 }
 
 impl RefitReason {
@@ -93,6 +96,7 @@ impl RefitReason {
         match self {
             RefitReason::UpdateBudget => "update-budget",
             RefitReason::Conditioning => "conditioning",
+            RefitReason::EigenFailure => "eigen-failure",
         }
     }
 }

@@ -1,0 +1,372 @@
+//! Chaos suite (requires `--features fault-inject`): seeded, counter-
+//! scheduled faults fire against a live server while healthy traffic on
+//! neighboring connections must come back **bitwise identical** to its
+//! pre-fault baseline (DESIGN.md §11).
+//!
+//! The injection points are process-global, so every test serializes on
+//! one mutex and resets the schedule on entry and exit.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use gpml::coordinator::client::{Client, ClientError, ClientOptions};
+use gpml::coordinator::protocol::EvaluateRequest;
+use gpml::coordinator::server::{Server, ServerOptions};
+use gpml::coordinator::{Coordinator, ObjectiveKind};
+use gpml::faults::inject::{self, FaultPoint};
+use gpml::faults::FaultPolicy;
+use gpml::kernelfn::Kernel;
+use gpml::linalg::Matrix;
+use gpml::spectral::HyperParams;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize on the global injection state and guarantee a clean
+/// schedule before and after each test (even on panic).
+struct InjectionSession<'a> {
+    _guard: std::sync::MutexGuard<'a, ()>,
+}
+
+impl<'a> InjectionSession<'a> {
+    fn begin() -> InjectionSession<'a> {
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        inject::reset();
+        InjectionSession { _guard: guard }
+    }
+}
+
+impl Drop for InjectionSession<'_> {
+    fn drop(&mut self) {
+        inject::reset();
+    }
+}
+
+/// Deterministic inputs matrix.
+fn inputs(n: usize, p: usize, seed: u64) -> Matrix {
+    let mut state = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    Matrix::from_fn(n, p, |_, _| {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    })
+}
+
+/// Deterministic outputs.
+fn outputs(n: usize, seed: u64) -> Vec<f64> {
+    let mut state = seed.wrapping_mul(0x2545f4914f6cdd1d).wrapping_add(9);
+    (0..n)
+        .map(|_| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        })
+        .collect()
+}
+
+const KERNEL: Kernel = Kernel::Rbf { xi2: 2.0 };
+
+fn eval_req(id: u64, n: usize) -> EvaluateRequest {
+    EvaluateRequest {
+        session_id: id,
+        y: outputs(n, 5),
+        hp: HyperParams::new(0.1, 1.3),
+        objective: ObjectiveKind::PaperScore,
+    }
+}
+
+/// No-retry client options so tests observe sheds and errors directly.
+fn direct_options() -> ClientOptions {
+    ClientOptions { retries: 0, ..ClientOptions::default() }
+}
+
+/// Healthy traffic replayed around seeded faults on *neighboring*
+/// connections is bitwise identical to its pre-fault baseline, and no
+/// worker is permanently lost.
+#[test]
+fn healthy_traffic_is_bitwise_stable_while_neighbors_fault() {
+    let session = InjectionSession::begin();
+    let n = 24;
+    let opts = ServerOptions {
+        workers: 2,
+        // short enough that the slow-loris connection expires inside the
+        // test; all healthy ops here are sub-millisecond
+        request_timeout: Duration::from_millis(500),
+        max_line_bytes: 1 << 20,
+        ..Default::default()
+    };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+
+    // --- healthy baseline ---
+    let mut healthy = Client::connect_with(&addr, direct_options()).unwrap();
+    let x = inputs(n, 3, 42);
+    let id = healthy.create_session(&x, KERNEL).unwrap();
+    let baseline_eval = healthy.evaluate(&eval_req(id, n)).unwrap().to_string();
+
+    // --- fault 1: a worker panic on a neighboring connection ---
+    inject::arm(FaultPoint::WorkerPanic, 1, 1);
+    {
+        let mut victim = Client::connect_with(&addr, direct_options()).unwrap();
+        let v = victim.raw(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "job died: {v}");
+    }
+    assert_eq!(inject::fired(FaultPoint::WorkerPanic), 1);
+
+    // --- fault 2: eigensolver non-convergence exhausts the ladder on a
+    // *different* dataset (clean + every jitter rung + cholesky inner) ---
+    let rungs = FaultPolicy::default().max_jitter_rungs as u64;
+    inject::arm(FaultPoint::EigenNoConvergence, 1, rungs + 2);
+    {
+        let mut victim = Client::connect_with(&addr, direct_options()).unwrap();
+        let err = victim.create_session(&inputs(n, 3, 777), KERNEL).unwrap_err();
+        match err {
+            ClientError::Server { message } => {
+                assert!(message.contains("ladder exhausted"), "structured ladder error: {message}")
+            }
+            other => panic!("expected a structured server error, got {other:?}"),
+        }
+    }
+    assert_eq!(inject::fired(FaultPoint::EigenNoConvergence), rungs + 2);
+
+    // --- fault 3: an oversized request line ---
+    {
+        let mut victim = Client::connect_with(&addr, direct_options()).unwrap();
+        let big = format!(r#"{{"op":"ping","pad":"{}"}}"#, "x".repeat(2 << 20));
+        let v = victim.raw(&big).unwrap();
+        assert!(
+            v.get("error").and_then(|e| e.as_str()).unwrap_or("").contains("exceeds"),
+            "oversized line is rejected: {v}"
+        );
+    }
+
+    // --- fault 4: a slow-loris holding half a request line ---
+    {
+        let mut loris = TcpStream::connect(server.addr).unwrap();
+        loris.write_all(br#"{"op":"pi"#).unwrap(); // half a line, then stall
+        let mut resp = String::new();
+        let mut reader = BufReader::new(loris.try_clone().unwrap());
+        reader.read_line(&mut resp).unwrap(); // server expires the stall
+        assert!(resp.contains("deadline"), "slow-loris answered + closed: {resp}");
+    }
+
+    // --- fault 5: a mid-request disconnect ---
+    {
+        let mut rude = TcpStream::connect(server.addr).unwrap();
+        rude.write_all(br#"{"op":"stats","#).unwrap();
+        rude.shutdown(Shutdown::Both).unwrap();
+    }
+
+    // --- healthy traffic replays bitwise identically ---
+    let replay = healthy.evaluate(&eval_req(id, n)).unwrap().to_string();
+    assert_eq!(baseline_eval, replay, "same connection, same bits");
+    let mut fresh = Client::connect_with(&addr, direct_options()).unwrap();
+    let id2 = fresh.create_session(&x, KERNEL).unwrap();
+    assert_eq!(id2, id, "fingerprint-cached session survived the faults");
+    let replay_fresh = fresh.evaluate(&eval_req(id2, n)).unwrap().to_string();
+    assert_eq!(baseline_eval, replay_fresh, "fresh connection, same bits");
+
+    // --- the pool is whole: both workers answer, and the counters saw
+    // every fault ---
+    let stats = fresh.stats().unwrap();
+    let faults = server.session_stats().faults;
+    assert!(faults.worker_respawns >= 1, "panicked worker respawned: {faults:?}");
+    assert!(faults.jitter_retries >= rungs, "ladder rungs recorded: {faults:?}");
+    assert!(faults.fallback_refits >= 1, "cholesky fallback recorded: {faults:?}");
+    assert!(faults.deadline_expired >= 1, "slow-loris expiry recorded: {faults:?}");
+    let wire_respawns = stats.get("worker_respawns").and_then(|v| v.as_usize());
+    assert_eq!(wire_respawns, Some(faults.worker_respawns as usize));
+    drop(session);
+    server.stop();
+}
+
+/// Panicking every worker in the pool respawns every worker: the pool
+/// self-heals to full strength and keeps serving concurrent load.
+#[test]
+fn pool_self_heals_after_every_worker_panics() {
+    let session = InjectionSession::begin();
+    let opts = ServerOptions { workers: 2, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+
+    inject::arm(FaultPoint::WorkerPanic, 1, 2);
+    for _ in 0..2 {
+        let mut victim = Client::connect_with(&addr, direct_options()).unwrap();
+        let v = victim.raw(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false));
+    }
+    assert_eq!(inject::fired(FaultPoint::WorkerPanic), 2);
+
+    // both workers died once; both must be back — serve concurrent jobs
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect_with(&addr, direct_options()).unwrap();
+                let id = c.create_session(&inputs(16, 2, 100 + i), KERNEL).unwrap();
+                c.evaluate(&eval_req(id, 16)).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.session_stats().faults.worker_respawns, 2);
+    drop(session);
+    server.stop();
+}
+
+/// A stalled dispatch trips the per-request deadline: the client gets a
+/// typed `Deadline`, the counter moves, and the worker recovers.
+#[test]
+fn slow_dispatch_trips_the_deadline() {
+    let session = InjectionSession::begin();
+    let opts = ServerOptions {
+        workers: 1,
+        request_timeout: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+
+    inject::set_slow_dispatch_ms(400);
+    inject::arm(FaultPoint::SlowDispatch, 1, 1);
+    let mut client = Client::connect_with(&addr, direct_options()).unwrap();
+    let err = client.stats().unwrap_err();
+    match err {
+        ClientError::Deadline { timeout_ms } => assert!(timeout_ms >= 100),
+        other => panic!("expected Deadline, got {other:?}"),
+    }
+    assert!(server.session_stats().faults.deadline_expired >= 1);
+
+    // once the stalled job drains, the same connection serves again
+    let mut ok = false;
+    for _ in 0..100 {
+        let pong = client.raw(r#"{"op":"ping"}"#);
+        if pong.map(|v| v.get("ok").and_then(|o| o.as_bool()) == Some(true)).unwrap_or(false) {
+            ok = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(ok, "worker never recovered from the stalled dispatch");
+    drop(session);
+    server.stop();
+}
+
+/// An overloaded server sheds with `overloaded` + `retry_after_ms`; the
+/// typed client surfaces it after its retry budget, and the shed is
+/// counted.
+#[test]
+fn overload_sheds_and_the_typed_client_reports_it() {
+    let session = InjectionSession::begin();
+    let opts = ServerOptions { workers: 1, max_queue: 0, ..Default::default() };
+    let server = Server::start_with("127.0.0.1:0", opts, Coordinator::rust_only).unwrap();
+    let copts = ClientOptions {
+        retries: 2,
+        backoff_base: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(10),
+        ..ClientOptions::default()
+    };
+    let mut client = Client::connect_with(&server.addr.to_string(), copts).unwrap();
+    match client.stats().unwrap_err() {
+        ClientError::Overloaded { retry_after_ms } => assert!(retry_after_ms >= 100),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // 1 initial + 2 retries, all shed
+    assert!(server.session_stats().faults.sheds >= 3);
+    drop(session);
+    server.stop();
+}
+
+/// Single-flight under an exhausted ladder: concurrent creates of the
+/// same dataset all fail fast — the failed builder's drop-guard wakes
+/// the waiters instead of leaving them blocked on the condvar — and a
+/// later create (injection disarmed) succeeds cleanly.
+#[test]
+fn failed_setup_wakes_single_flight_waiters_under_injection() {
+    let session = InjectionSession::begin();
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let addr = server.addr.to_string();
+    let n = 20;
+
+    // every eigensolve fails until reset: the ladder exhausts for every
+    // builder, however many race
+    inject::arm(FaultPoint::EigenNoConvergence, 1, u64::MAX);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect_with(&addr, direct_options()).unwrap();
+                let res = c.create_session(&inputs(n, 2, 1234), KERNEL);
+                tx.send(res.is_err()).unwrap();
+            })
+        })
+        .collect();
+    for _ in 0..3 {
+        let errored = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("a single-flight waiter hung on a failed builder");
+        assert!(errored, "creates must fail while injection exhausts the ladder");
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    inject::reset();
+    let mut c = Client::connect_with(&addr, direct_options()).unwrap();
+    let id = c.create_session(&inputs(n, 2, 1234), KERNEL).unwrap();
+    c.evaluate(&eval_req(id, n)).unwrap();
+    drop(session);
+    server.stop();
+}
+
+/// A failed incremental eigensolve inside `update_session` degrades to a
+/// ladder refit and reports `refit_reason: "eigen-failure"` on the wire.
+#[test]
+fn update_falls_back_to_ladder_refit_on_eigen_failure() {
+    let session = InjectionSession::begin();
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect_with(&server.addr.to_string(), direct_options()).unwrap();
+    let n = 18;
+    let id = client.create_session(&inputs(n, 2, 55), KERNEL).unwrap();
+
+    // exactly one failure: the extend's eigensolve dies, the ladder's
+    // from-scratch refit (next traversal, injection exhausted) succeeds
+    inject::arm(FaultPoint::EigenNoConvergence, 1, 1);
+    let v = client.update_session(id, &inputs(2, 2, 56), 0).unwrap();
+    assert_eq!(v.get("incremental").and_then(|b| b.as_bool()), Some(false), "{v}");
+    assert_eq!(
+        v.get("refit_reason").and_then(|r| r.as_str()),
+        Some("eigen-failure"),
+        "ladder refit is attributed: {v}"
+    );
+    assert_eq!(v.get("n").and_then(|x| x.as_usize()), Some(n + 2), "{v}");
+    assert!(server.session_stats().faults.fallback_refits >= 1);
+
+    // the refitted session evaluates normally
+    client.evaluate(&eval_req(id, n + 2)).unwrap();
+    drop(session);
+    server.stop();
+}
+
+/// Healthy-path determinism guard for the counters themselves: with no
+/// faults armed, serving traffic moves none of the fault counters.
+#[test]
+fn healthy_traffic_leaves_fault_counters_at_zero() {
+    let session = InjectionSession::begin();
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect_with(&server.addr.to_string(), direct_options()).unwrap();
+    let id = client.create_session(&inputs(20, 2, 9), KERNEL).unwrap();
+    client.evaluate(&eval_req(id, 20)).unwrap();
+    client.update_session(id, &inputs(1, 2, 10), 0).unwrap();
+    let snap = server.session_stats().faults;
+    assert_eq!(snap, gpml::faults::FaultSnapshot::default(), "clean serve: {snap:?}");
+    drop(session);
+    server.stop();
+}
