@@ -4,6 +4,14 @@
 //! (the process default width), as the before/after evidence for the
 //! scoped-pool substrate (DESIGN.md §6).
 //!
+//! Since ISSUE 8 the eigendecomposition is timed under *both* solvers
+//! (DESIGN.md §12): `eigen_ql_*` is the classic implicit-shift QL
+//! sweep, `eigen_dac_*` the divide-and-conquer default.  The
+//! `dac_vs_ql` ratio (QL pooled over D&C pooled at the largest N) is
+//! the headline series, with an acceptance floor once the sweep
+//! reaches N >= 512 on >= 4-way hardware; CI smoke runs stay below
+//! that and only feed the bench-gate envelopes in BENCH_setup.json.
+//!
 //! Writes `BENCH_setup.json` next to the stdout table.
 //!
 //! Options (after `cargo bench --bench setup_overhead --`):
@@ -15,7 +23,7 @@ mod bench_common;
 
 use bench_common::*;
 use gpml::kernelfn::{gram, Kernel};
-use gpml::linalg::{Matrix, SymEigen};
+use gpml::linalg::{EigenSolver, Matrix, SymEigen};
 use gpml::util::cli::Args;
 use gpml::util::json::Json;
 use gpml::util::rng::Rng;
@@ -43,7 +51,11 @@ fn main() {
     let iters = args.get_usize("iters", 0).unwrap_or(0);
 
     let pooled = threadpool::num_threads();
-    println!("== setup overhead: gram + SymEigen::new, serial vs pooled ({pooled} threads) ==");
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== setup overhead: gram + SymEigen (ql vs dac), serial vs pooled \
+         ({pooled} threads, {hw}-way hardware) =="
+    );
     if pooled < 2 {
         println!("(pool width is 1 — set GPML_THREADS or run on a multi-core host for a contrast)");
     }
@@ -52,12 +64,18 @@ fn main() {
         "N",
         "gram 1T ms",
         "gram pooled ms",
-        "eigen 1T ms",
-        "eigen pooled ms",
-        "setup speedup",
+        "ql 1T ms",
+        "ql pooled ms",
+        "dac 1T ms",
+        "dac pooled ms",
+        "dac vs ql",
     ]);
-    let (mut g1, mut gp, mut e1, mut ep): (Vec<Stats>, Vec<Stats>, Vec<Stats>, Vec<Stats>) =
-        (vec![], vec![], vec![], vec![]);
+    let mut g1: Vec<Stats> = vec![];
+    let mut gp: Vec<Stats> = vec![];
+    let mut ql1: Vec<Stats> = vec![];
+    let mut qlp: Vec<Stats> = vec![];
+    let mut dac1: Vec<Stats> = vec![];
+    let mut dacp: Vec<Stats> = vec![];
 
     for &n in &sizes {
         let mut rng = Rng::new(n as u64);
@@ -82,41 +100,66 @@ fn main() {
         let st_gp = measure(0, reps, || {
             std::hint::black_box(gram(kern, &x));
         });
-        let st_e1 = threadpool::with_threads(1, || {
+        let st_ql1 = threadpool::with_threads(1, || {
             measure(0, reps, || {
-                std::hint::black_box(SymEigen::new(&k).expect("eigensolver"));
+                std::hint::black_box(SymEigen::new_with(&k, EigenSolver::Ql).expect("ql"));
             })
         });
-        let st_ep = measure(0, reps, || {
-            std::hint::black_box(SymEigen::new(&k).expect("eigensolver"));
+        let st_qlp = measure(0, reps, || {
+            std::hint::black_box(SymEigen::new_with(&k, EigenSolver::Ql).expect("ql"));
+        });
+        let st_dac1 = threadpool::with_threads(1, || {
+            measure(0, reps, || {
+                std::hint::black_box(SymEigen::new_with(&k, EigenSolver::Dac).expect("dac"));
+            })
+        });
+        let st_dacp = measure(0, reps, || {
+            std::hint::black_box(SymEigen::new_with(&k, EigenSolver::Dac).expect("dac"));
         });
 
-        let setup_1t = st_g1.median_us + st_e1.median_us;
-        let setup_p = st_gp.median_us + st_ep.median_us;
         table.row(&[
             n.to_string(),
             format!("{:.1}", st_g1.median_us / 1e3),
             format!("{:.1}", st_gp.median_us / 1e3),
-            format!("{:.1}", st_e1.median_us / 1e3),
-            format!("{:.1}", st_ep.median_us / 1e3),
-            format!("{:.2}x", setup_1t / setup_p),
+            format!("{:.1}", st_ql1.median_us / 1e3),
+            format!("{:.1}", st_qlp.median_us / 1e3),
+            format!("{:.1}", st_dac1.median_us / 1e3),
+            format!("{:.1}", st_dacp.median_us / 1e3),
+            format!("{:.2}x", st_qlp.median_us / st_dacp.median_us),
         ]);
         g1.push(st_g1);
         gp.push(st_gp);
-        e1.push(st_e1);
-        ep.push(st_ep);
+        ql1.push(st_ql1);
+        qlp.push(st_qlp);
+        dac1.push(st_dac1);
+        dacp.push(st_dacp);
     }
     table.print();
 
     let last = sizes.len() - 1;
     let gram_speedup = g1[last].median_us / gp[last].median_us;
-    let eigen_speedup = e1[last].median_us / ep[last].median_us;
-    let setup_speedup =
-        (g1[last].median_us + e1[last].median_us) / (gp[last].median_us + ep[last].median_us);
+    let eigen_speedup = dac1[last].median_us / dacp[last].median_us;
+    let dac_over_ql = qlp[last].median_us / dacp[last].median_us;
+    let setup_speedup = (g1[last].median_us + dac1[last].median_us)
+        / (gp[last].median_us + dacp[last].median_us);
     println!(
-        "\n@ N={}: gram {gram_speedup:.2}x, eigen {eigen_speedup:.2}x, gram+eigen {setup_speedup:.2}x ({pooled} threads vs 1)",
+        "\n@ N={}: gram {gram_speedup:.2}x, eigen(dac) {eigen_speedup:.2}x, gram+eigen \
+         {setup_speedup:.2}x ({pooled} threads vs 1); dac over ql {dac_over_ql:.2}x \
+         (acceptance floor at N>=512: dac beats ql)",
         sizes[last]
     );
+
+    // Acceptance (ISSUE 8): at full scale the D&C default must beat the
+    // QL escape hatch.  Skipped on CI smoke sweeps (--max-n 256) and on
+    // narrow hardware, matching the theta_sweep gate pattern.
+    if sizes[last] >= 512 && hw >= 4 {
+        assert!(
+            dac_over_ql >= 1.1,
+            "acceptance failed: D&C eigensolver only {dac_over_ql:.2}x vs QL at N={} \
+             (pooled); expected the GEMM-dominated merge to win at this size",
+            sizes[last]
+        );
+    }
 
     let payload = bench_json(
         "setup",
@@ -124,8 +167,10 @@ fn main() {
         &[
             Series { label: "gram_serial", stats: &g1 },
             Series { label: "gram_pooled", stats: &gp },
-            Series { label: "eigen_serial", stats: &e1 },
-            Series { label: "eigen_pooled", stats: &ep },
+            Series { label: "eigen_ql_serial", stats: &ql1 },
+            Series { label: "eigen_ql_pooled", stats: &qlp },
+            Series { label: "eigen_dac_serial", stats: &dac1 },
+            Series { label: "eigen_dac_pooled", stats: &dacp },
         ],
         vec![
             ("threads_pooled", Json::Num(pooled as f64)),
@@ -136,6 +181,13 @@ fn main() {
                     ("gram", Json::Num(gram_speedup)),
                     ("eigen", Json::Num(eigen_speedup)),
                     ("setup", Json::Num(setup_speedup)),
+                ]),
+            ),
+            (
+                "dac_vs_ql_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(sizes[last] as f64)),
+                    ("ql_over_dac_pooled", Json::Num(dac_over_ql)),
                 ]),
             ),
         ],

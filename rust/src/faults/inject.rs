@@ -25,9 +25,14 @@ pub enum FaultPoint {
     /// Job dispatch stalls for [`slow_dispatch_ms`] before executing,
     /// exercising the per-request deadline.
     SlowDispatch = 2,
+    /// A merge step of the divide-and-conquer tridiagonal solver
+    /// reports `NoConvergence`, exercising the degradation ladder
+    /// through the D&C path specifically (the clean attempt and each
+    /// jitter rung traverse this point once per merge).
+    DacMergeNoConvergence = 3,
 }
 
-const POINTS: usize = 3;
+const POINTS: usize = 4;
 
 // Per-point schedule: fire on every `EVERY`-th traversal (0 = disarmed),
 // at most `LIMIT` times; `SEEN`/`FIRED` are the traversal/fire counters.

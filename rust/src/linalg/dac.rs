@@ -1,0 +1,236 @@
+//! Cuppen-style divide-and-conquer symmetric tridiagonal eigensolver
+//! (DESIGN.md §12) — the post-`tred2` stage that replaces the
+//! sequential QL iteration as the default solver.
+//!
+//! The tridiagonal `T` is torn at its midpoint by a rank-one
+//! correction:
+//!
+//! ```text
+//! T = [ T1~  0  ]  +  beta w w',   w = e_{k-1} + e_k,  beta = T[k, k-1]
+//!     [ 0   T2~ ]
+//! ```
+//!
+//! where `T1~`/`T2~` are the two halves with `beta` subtracted from
+//! their facing diagonal entries.  Each half is solved recursively
+//! (leaves at or below [`CROSSOVER`] use the in-repo QL iteration,
+//! `eigen::tql2`), and the halves are recombined by projecting `w` into
+//! the children's eigenbases — `z = [last row of Q1; first row of Q2]`
+//! — which turns the merge into exactly the `diag(d) + beta z z'`
+//! problem the shared [`secular`](crate::linalg::secular) machinery
+//! already solves for streaming rank-one updates: deflation, pooled
+//! per-interval secular bisection, Gu–Eisenstat z-hat, and blocked-GEMM
+//! eigenvector back-multiplication.
+//!
+//! Determinism (DESIGN.md §6, §12): the recursion tree is a pure
+//! function of `n` (fixed midpoint split, fixed crossover), children
+//! are solved in a fixed order, and every merge fan-out partitions by
+//! shape-only grain sizes — results are bit-identical across
+//! `GPML_THREADS`, with width 1 running the exact serial path.
+//!
+//! `tql2` stays available as the full-size solver behind the
+//! `GPML_EIGEN=ql` escape hatch and serves as the in-repo oracle for
+//! the differential suite (`rust/tests/eigen_dac.rs`).
+
+use super::eigen::{self, NoConvergence, SymEigen};
+use super::matrix::Matrix;
+use super::secular;
+
+/// Leaf crossover: subproblems at or below this size are solved by one
+/// QL iteration instead of recursing.  The value is fixed — never
+/// width-, env- or hardware-dependent — so the recursion shape (and
+/// therefore the floating-point arithmetic) is identical everywhere.
+/// Below it the O(n^3) QL cost is small and the merge bookkeeping
+/// dominates; 32 keeps leaves inside one cache tile.
+pub(crate) const CROSSOVER: usize = 32;
+
+/// Eigendecomposition of the symmetric tridiagonal `(d, sub)` where
+/// `d` is the diagonal (length n) and `sub` the sub-diagonal (length
+/// n-1, `sub[i] = T[i+1, i]`).  Returns the [`SymEigen`] convention:
+/// ascending eigenvalues, orthogonal columns.
+pub(crate) fn solve_tridiag(d: &[f64], sub: &[f64]) -> Result<SymEigen, NoConvergence> {
+    debug_assert_eq!(sub.len(), d.len().saturating_sub(1), "sub-diagonal length");
+    solve_rec(d, sub, 0)
+}
+
+/// `base` is the offset of this subproblem within the original matrix,
+/// used only to report a meaningful index on `NoConvergence`.
+fn solve_rec(d: &[f64], sub: &[f64], base: usize) -> Result<SymEigen, NoConvergence> {
+    let n = d.len();
+    if n <= CROSSOVER {
+        return ql_leaf(d, sub, base);
+    }
+    let k = n / 2;
+    let beta = sub[k - 1];
+    // rank-one tear: subtract beta from the two facing diagonal entries
+    // so T = diag(T1~, T2~) + beta w w' exactly, for beta of any sign
+    let mut d1 = d[..k].to_vec();
+    let mut d2 = d[k..].to_vec();
+    d1[k - 1] -= beta;
+    d2[0] -= beta;
+    // children in fixed order; parallelism comes from each merge's
+    // pooled fan-outs, not from racing the two subtrees (DESIGN.md §12)
+    let left = solve_rec(&d1, &sub[..k - 1], base)?;
+    let right = solve_rec(&d2, &sub[k..], base + k)?;
+    #[cfg(feature = "fault-inject")]
+    if crate::faults::inject::fire(crate::faults::inject::FaultPoint::DacMergeNoConvergence) {
+        return Err(NoConvergence { eigenvalue_index: base + k });
+    }
+    Ok(merge(&left, &right, beta))
+}
+
+/// Recombine two child decompositions across the rank-one tear.
+///
+/// In the permuted basis `Q = diag(Q1, Q2) P` (columns sorted so the
+/// merged child spectrum ascends; ties take the left child first — a
+/// fixed, width-independent order) the torn matrix is
+/// `diag(dm) + beta zm zm'` with `zm` drawn from the last row of `Q1`
+/// and the first row of `Q2`.  `beta = 0` (a decoupled tridiagonal)
+/// short-circuits inside `merge_spectrum`: the sorted union of the
+/// child spectra with the permuted block-diagonal basis is already the
+/// exact answer.
+fn merge(left: &SymEigen, right: &SymEigen, beta: f64) -> SymEigen {
+    let k = left.values.len();
+    let m = right.values.len();
+    let n = k + m;
+    // two-pointer merge of the two ascending spectra
+    let mut perm: Vec<usize> = Vec::with_capacity(n);
+    let (mut i, mut j) = (0, 0);
+    while i < k && j < m {
+        if left.values[i] <= right.values[j] {
+            perm.push(i);
+            i += 1;
+        } else {
+            perm.push(k + j);
+            j += 1;
+        }
+    }
+    while i < k {
+        perm.push(i);
+        i += 1;
+    }
+    while j < m {
+        perm.push(k + j);
+        j += 1;
+    }
+
+    let mut dm = Vec::with_capacity(n);
+    let mut zm = Vec::with_capacity(n);
+    let mut basis = Matrix::zeros(n, n);
+    for (col, &src) in perm.iter().enumerate() {
+        if src < k {
+            dm.push(left.values[src]);
+            zm.push(left.vectors[(k - 1, src)]);
+            for r in 0..k {
+                basis[(r, col)] = left.vectors[(r, src)];
+            }
+        } else {
+            let s = src - k;
+            dm.push(right.values[s]);
+            zm.push(right.vectors[(0, s)]);
+            for r in 0..m {
+                basis[(k + r, col)] = right.vectors[(r, s)];
+            }
+        }
+    }
+    secular::merge_spectrum(&dm, zm, beta, basis)
+}
+
+/// Solve a leaf with the QL iteration on an identity accumulator.
+fn ql_leaf(d: &[f64], sub: &[f64], base: usize) -> Result<SymEigen, NoConvergence> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(SymEigen { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    let mut dd = d.to_vec();
+    // tql2 reads the sub-diagonal from e[1..] (tred2's layout)
+    let mut e = vec![0.0; n];
+    e[1..].copy_from_slice(sub);
+    let mut z = Matrix::eye(n);
+    eigen::tql2(&mut z, &mut dd, &mut e)
+        .map_err(|err| NoConvergence { eigenvalue_index: base + err.eigenvalue_index })?;
+    Ok(SymEigen { values: dd, vectors: z })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    /// Dense tridiagonal for reference checks.
+    fn dense_tridiag(d: &[f64], sub: &[f64]) -> Matrix {
+        let n = d.len();
+        Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                d[i]
+            } else if i == j + 1 {
+                sub[j]
+            } else if j == i + 1 {
+                sub[i]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Deterministic wiggly tridiagonal (no RNG needed).
+    fn test_problem(n: usize) -> (Vec<f64>, Vec<f64>) {
+        let d: Vec<f64> =
+            (0..n).map(|i| (i as f64 * 0.7).sin() * 2.0 + 0.1 * i as f64).collect();
+        let sub: Vec<f64> =
+            (0..n.saturating_sub(1)).map(|i| (i as f64 * 1.3).cos() * 0.8 + 0.05).collect();
+        (d, sub)
+    }
+
+    fn assert_solves(n: usize) {
+        let (d, sub) = test_problem(n);
+        let a = dense_tridiag(&d, &sub);
+        let got = solve_tridiag(&d, &sub).unwrap();
+        let want = ql_leaf(&d, &sub, 0).unwrap();
+        let scale = got.values.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (g, w) in got.values.iter().zip(&want.values) {
+            assert!((g - w).abs() < 1e-12 * scale, "n={n}: {g} vs {w}");
+        }
+        assert!(got.reconstruct().max_abs_diff(&a) < 1e-11 * scale, "n={n} reconstruct");
+        let utu = matmul(&got.vectors.t(), &got.vectors);
+        assert!(utu.max_abs_diff(&Matrix::eye(n)) < 1e-11, "n={n} orthogonality");
+    }
+
+    #[test]
+    fn matches_ql_around_the_crossover() {
+        for n in [1, 2, 3, 31, 32, 33, 48, 64, 65] {
+            assert_solves(n);
+        }
+    }
+
+    #[test]
+    fn at_or_below_crossover_is_the_ql_path_bitwise() {
+        let (d, sub) = test_problem(CROSSOVER);
+        let dac = solve_tridiag(&d, &sub).unwrap();
+        let ql = ql_leaf(&d, &sub, 0).unwrap();
+        assert_eq!(dac.values, ql.values);
+        assert_eq!(dac.vectors.data(), ql.vectors.data());
+    }
+
+    #[test]
+    fn zero_coupling_at_the_split_point() {
+        // sub[k-1] = 0: the tear is a no-op (beta = 0) and the merge
+        // must return the exact sorted union of the decoupled blocks
+        let n = 2 * CROSSOVER;
+        let (d, mut sub) = test_problem(n);
+        sub[n / 2 - 1] = 0.0;
+        let a = dense_tridiag(&d, &sub);
+        let got = solve_tridiag(&d, &sub).unwrap();
+        let scale = got.values.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        assert!(got.reconstruct().max_abs_diff(&a) < 1e-11 * scale);
+        for w in got.values.windows(2) {
+            assert!(w[0] <= w[1], "not ascending across decoupled blocks");
+        }
+    }
+
+    #[test]
+    fn empty_problem() {
+        let eg = solve_tridiag(&[], &[]).unwrap();
+        assert!(eg.values.is_empty());
+        assert_eq!(eg.vectors.rows(), 0);
+    }
+}

@@ -4,14 +4,21 @@
 //! Classic two-phase dense solver, implemented from scratch:
 //!  1. Householder tridiagonalization with accumulation of the orthogonal
 //!     transform (EISPACK `tred2`).
-//!  2. Implicit-shift QL iteration on the tridiagonal matrix, rotating the
-//!     accumulated transform into the eigenvector matrix (EISPACK `tql2`).
+//!  2. A tridiagonal eigensolver: by default the Cuppen
+//!     divide-and-conquer solver (`linalg/dac.rs`, DESIGN.md §12) whose
+//!     eigenvector accumulation is one blocked GEMM against the
+//!     `tred2` transform; setting the environment variable
+//!     `GPML_EIGEN=ql` (or calling [`with_solver`]) falls back to the
+//!     implicit-shift QL iteration (EISPACK `tql2`), which doubles as
+//!     the in-repo oracle for the differential suite.
 //!
 //! Output convention matches the paper: ascending eigenvalues `s` and an
 //! orthogonal `U` whose *columns* are eigenvectors, `K = U diag(s) U'`.
 
 use super::matrix::Matrix;
 use crate::util::threadpool::{self, div_ceil, SharedMut};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Minimum per-worker work (multiply-add units) before a tred2/tql2
 /// sweep fans out through the pool — below this the per-step scope
@@ -44,10 +51,96 @@ impl std::fmt::Display for NoConvergence {
 }
 impl std::error::Error for NoConvergence {}
 
+/// Which solver handles the tridiagonal stage of [`SymEigen::new`].
+///
+/// The default is resolved once per process from the `GPML_EIGEN`
+/// environment variable (`ql` selects [`EigenSolver::Ql`], anything
+/// else — including unset — selects [`EigenSolver::Dac`]) and can be
+/// overridden per call tree with [`with_solver`].  Both produce the
+/// same convention (ascending eigenvalues, orthogonal columns); the QL
+/// path is the in-repo oracle the differential suite gates D&C against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EigenSolver {
+    /// Cuppen divide-and-conquer over the shared secular merge
+    /// machinery (`linalg/dac.rs`) — the default.
+    Dac,
+    /// Sequential implicit-shift QL iteration (EISPACK `tql2`) — the
+    /// escape hatch (`GPML_EIGEN=ql`) and oracle.
+    Ql,
+}
+
+impl EigenSolver {
+    /// Stable label, matching the accepted `GPML_EIGEN` values.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EigenSolver::Dac => "dac",
+            EigenSolver::Ql => "ql",
+        }
+    }
+}
+
+// Encoding shared by the env cache and the thread-local override:
+// 0 = unset, 1 = Dac, 2 = Ql.
+const SOLVER_UNSET: usize = 0;
+const SOLVER_DAC: usize = 1;
+const SOLVER_QL: usize = 2;
+
+fn env_solver() -> EigenSolver {
+    static CACHE: AtomicUsize = AtomicUsize::new(SOLVER_UNSET);
+    match CACHE.load(Ordering::Relaxed) {
+        SOLVER_DAC => return EigenSolver::Dac,
+        SOLVER_QL => return EigenSolver::Ql,
+        _ => {}
+    }
+    let solver = match std::env::var("GPML_EIGEN") {
+        Ok(v) if v.eq_ignore_ascii_case("ql") => EigenSolver::Ql,
+        _ => EigenSolver::Dac,
+    };
+    let code = if solver == EigenSolver::Ql { SOLVER_QL } else { SOLVER_DAC };
+    CACHE.store(code, Ordering::Relaxed);
+    solver
+}
+
+thread_local! {
+    static LOCAL_SOLVER: Cell<usize> = const { Cell::new(SOLVER_UNSET) };
+}
+
+/// The solver [`SymEigen::new`] will dispatch to on this thread: the
+/// innermost [`with_solver`] override if one is active, else the
+/// process-wide `GPML_EIGEN` choice (default [`EigenSolver::Dac`]).
+pub fn default_solver() -> EigenSolver {
+    match LOCAL_SOLVER.with(Cell::get) {
+        SOLVER_DAC => EigenSolver::Dac,
+        SOLVER_QL => EigenSolver::Ql,
+        _ => env_solver(),
+    }
+}
+
+/// Run `f` with every [`SymEigen::new`] on this thread dispatched to
+/// `solver`, restoring the previous choice on exit (panic-safe; nests).
+/// Thread-local: work handed to other threads inside `f` still sees
+/// their own default.
+pub fn with_solver<R>(solver: EigenSolver, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_SOLVER.with(|c| c.set(self.0));
+        }
+    }
+    let code = if solver == EigenSolver::Ql { SOLVER_QL } else { SOLVER_DAC };
+    let _restore = Restore(LOCAL_SOLVER.with(|c| c.replace(code)));
+    f()
+}
+
 impl SymEigen {
     /// Decompose a symmetric matrix (only the lower triangle is read; the
-    /// input is copied).
+    /// input is copied) with the ambient solver — see [`default_solver`].
     pub fn new(a: &Matrix) -> Result<SymEigen, NoConvergence> {
+        SymEigen::new_with(a, default_solver())
+    }
+
+    /// Decompose with an explicit tridiagonal-stage solver.
+    pub fn new_with(a: &Matrix, solver: EigenSolver) -> Result<SymEigen, NoConvergence> {
         assert!(a.is_square(), "eigendecomposition needs a square matrix");
         let n = a.rows();
         if n == 0 {
@@ -58,8 +151,17 @@ impl SymEigen {
         let mut d = vec![0.0; n]; // diagonal
         let mut e = vec![0.0; n]; // sub-diagonal
         tred2(&mut z, &mut d, &mut e);
-        tql2(&mut z, &mut d, &mut e)?;
-        Ok(SymEigen { values: d, vectors: z })
+        // At or below the D&C leaf crossover the two solvers are the
+        // same QL code path (a single leaf) — run it on the accumulated
+        // transform directly instead of paying a wasted n x n GEMM.
+        if solver == EigenSolver::Ql || n <= super::dac::CROSSOVER {
+            tql2(&mut z, &mut d, &mut e)?;
+            return Ok(SymEigen { values: d, vectors: z });
+        }
+        let tri = super::dac::solve_tridiag(&d, &e[1..])?;
+        // back-multiply the tred2 transform: U = Z * Q_tri, one blocked GEMM
+        let vectors = crate::linalg::gemm::matmul(&z, &tri.vectors);
+        Ok(SymEigen { values: tri.values, vectors })
     }
 
     /// `U' y` — projection of targets onto the eigenbasis (eq. 18).
@@ -94,9 +196,11 @@ impl SymEigen {
 /// parallel over their disjoint target rows (bit-identical across
 /// thread counts — the per-element arithmetic is the serial one), and
 /// the transform accumulation splits its row-streaming sum into
-/// per-worker partials reduced in block order (the one pooled site
-/// whose FP association differs from serial, by O(eps); gated by the
-/// differential-verification suite).
+/// fixed-shape k-blocks (a function of the step size only, never the
+/// pool width) whose private partials are reduced serially in block
+/// order — so the accumulated transform, and with it the whole solve,
+/// is bit-identical at any `GPML_THREADS` (DESIGN.md §12's determinism
+/// policy; a single block collapses to the pre-pool serial sweep).
 fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
     for i in (1..n).rev() {
@@ -188,9 +292,13 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
         if d[i] != 0.0 {
             let zi: Vec<f64> = z.row(i)[..i].to_vec();
             let grain_rows = (PAR_GRAIN / i.max(1)).max(1);
-            let workers = threadpool::plan_workers(i, grain_rows);
-            if workers <= 1 {
-                // the pre-pool serial sweep, bit for bit
+            // fixed-shape k-blocks of grain_rows rows: the block layout
+            // depends only on the step size i, never on the pool width,
+            // so the block-order reduction below is bit-identical at any
+            // GPML_THREADS (width 1 walks the same blocks serially)
+            let blocks = div_ceil(i.max(1), grain_rows);
+            if blocks <= 1 {
+                // one block == the pre-pool serial sweep, bit for bit
                 for gj in gbuf[..i].iter_mut() {
                     *gj = 0.0;
                 }
@@ -207,12 +315,11 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                 // contiguous k-blocks accumulate private partials (each
                 // block row-streams exactly like the serial sweep), then
                 // a serial block-order reduction
-                let kb = div_ceil(i, workers);
-                let mut partials = vec![0.0f64; workers * i];
+                let mut partials = vec![0.0f64; blocks * i];
                 let zd = z.data();
                 threadpool::par_chunks_mut(&mut partials, i, |b, part| {
-                    let k0 = b * kb;
-                    let k1 = (k0 + kb).min(i);
+                    let k0 = b * grain_rows;
+                    let k1 = (k0 + grain_rows).min(i);
                     for k in k0..k1 {
                         let vik = zi[k];
                         if vik != 0.0 {
@@ -226,7 +333,7 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                 for gj in gbuf[..i].iter_mut() {
                     *gj = 0.0;
                 }
-                for b in 0..workers {
+                for b in 0..blocks {
                     for (gj, &p) in gbuf[..i].iter_mut().zip(&partials[b * i..b * i + i]) {
                         *gj += p;
                     }
@@ -271,7 +378,7 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
 /// bit-identical to the serial interleaved application at any thread
 /// count.  The documented cache-linear layout is preserved: workers walk
 /// contiguous column segments of the two affected rows per rotation.
-fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergence> {
+pub(crate) fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<(), NoConvergence> {
     let n = d.len();
     if n == 1 {
         return Ok(());
@@ -535,6 +642,66 @@ mod tests {
         assert!((eg.values[3] - total).abs() < 1e-9);
         for v in &eg.values[..3] {
             assert!(v.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_and_one_dimensional_matrices() {
+        for solver in [EigenSolver::Dac, EigenSolver::Ql] {
+            let eg = SymEigen::new_with(&Matrix::zeros(0, 0), solver).unwrap();
+            assert!(eg.values.is_empty());
+            assert_eq!(eg.vectors.rows(), 0);
+            assert!(eg.project(&[]).is_empty());
+            let eg = SymEigen::new_with(&Matrix::diag(&[-3.5]), solver).unwrap();
+            assert_eq!(eg.values, vec![-3.5]);
+            assert_eq!(eg.vectors[(0, 0)].abs(), 1.0);
+        }
+    }
+
+    #[test]
+    fn already_tridiagonal_input() {
+        // tred2 must pass a tridiagonal matrix through (scale == 0 in
+        // every Householder step) and both solvers must still decompose it
+        for &n in &[2usize, 3, 8, 33, 64] {
+            let a = Matrix::from_fn(n, n, |i, j| {
+                if i == j {
+                    1.0 + 0.3 * i as f64
+                } else if i.abs_diff(j) == 1 {
+                    0.4 + 0.01 * i.min(j) as f64
+                } else {
+                    0.0
+                }
+            });
+            for solver in [EigenSolver::Dac, EigenSolver::Ql] {
+                let eg = SymEigen::new_with(&a, solver).unwrap();
+                assert!(
+                    eg.reconstruct().max_abs_diff(&a) < 1e-11,
+                    "tridiagonal n={n} {}",
+                    solver.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_solver_overrides_and_restores() {
+        let mut rng = Rng::new(77);
+        let a = random_sym(&mut rng, 40);
+        let dac = with_solver(EigenSolver::Dac, || SymEigen::new(&a)).unwrap();
+        let ql = with_solver(EigenSolver::Ql, || SymEigen::new(&a)).unwrap();
+        assert_eq!(dac.values, SymEigen::new_with(&a, EigenSolver::Dac).unwrap().values);
+        assert_eq!(ql.values, SymEigen::new_with(&a, EigenSolver::Ql).unwrap().values);
+        // nesting restores the outer override
+        with_solver(EigenSolver::Ql, || {
+            with_solver(EigenSolver::Dac, || {
+                assert_eq!(default_solver(), EigenSolver::Dac);
+            });
+            assert_eq!(default_solver(), EigenSolver::Ql);
+        });
+        // both agree on the spectrum to oracle accuracy
+        let scale = ql.values.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (d, q) in dac.values.iter().zip(&ql.values) {
+            assert!((d - q).abs() < 1e-12 * scale, "{d} vs {q}");
         }
     }
 

@@ -1,18 +1,23 @@
 //! Dense linear-algebra substrate, implemented from scratch (no external
 //! linalg crates in this image): row-major [`Matrix`], blocked GEMM,
 //! Cholesky (naive-baseline engine), the symmetric eigensolver (the
-//! paper's O(N^3) overhead), rank-one eigendecomposition updates (the
-//! streaming path, DESIGN.md §8), and Strassen multiplication (Prop. 2.4).
+//! paper's O(N^3) overhead; divide-and-conquer tridiagonal stage in
+//! `dac` over the shared `secular` merge machinery, with the QL
+//! iteration behind the `GPML_EIGEN=ql` escape hatch), rank-one
+//! eigendecomposition updates (the streaming path, DESIGN.md §8), and
+//! Strassen multiplication (Prop. 2.4).
 
 pub mod chol;
+pub(crate) mod dac;
 pub mod eigen;
 pub mod gemm;
 pub mod matrix;
 pub mod rankone;
+pub(crate) mod secular;
 pub mod strassen;
 
 pub use chol::{CholError, Cholesky};
-pub use eigen::SymEigen;
+pub use eigen::{with_solver, EigenSolver, SymEigen};
 pub use gemm::{matmul, matmul_bt};
 pub use matrix::{axpy, dot, norm2, Matrix};
 pub use rankone::{ortho_drift, rank_one_update};

@@ -2,27 +2,16 @@
 //! counterpart of the paper's one-time O(N^3) overhead (DESIGN.md §8).
 //!
 //! Given `A = U diag(d) U'` and a correction `A + rho v v'`, the updated
-//! decomposition is recovered without re-tridiagonalizing:
-//!
-//! 1. project `z = U' v` (the update in the eigenbasis), O(N^2);
-//! 2. **deflate**: components with negligible `|z_i|` keep their
-//!    eigenpair verbatim, and (near-)equal eigenvalues are merged by
-//!    Givens rotations that concentrate their `z` mass into one
-//!    representative per cluster (the rotated-out partners deflate) —
-//!    this is what makes streaming updates cheap on kernel Gram
-//!    matrices, whose numerically-zero eigenvalue clusters deflate
-//!    almost entirely;
-//! 3. solve the **secular equation** `1 + rho * sum_i z_i^2/(d_i - s) = 0`
-//!    once per surviving interval (monotone in each interval, so a
-//!    safeguarded bisection in pole-relative coordinates cannot miss),
-//!    intervals fanned out across the scoped pool;
-//! 4. recompute the update vector a la Gu–Eisenstat from the solved
-//!    eigenvalues (`z_hat`), which restores numerical orthogonality of
-//!    the new eigenvectors even for tightly-spaced spectra;
-//! 5. rotate: each new eigenvector is `U_k w_j` with
-//!    `w_j(i) = z_hat_i / (d_i - s_j)`, assembled for all survivors as
-//!    one blocked [`gemm`] product over the k surviving columns —
-//!    O(N k^2), with k typically far below N after step 2.
+//! decomposition is recovered without re-tridiagonalizing: project
+//! `z = U' v` (the update in the eigenbasis, O(N^2)), then hand the
+//! resulting `diag(d) + rho z z'` problem to the shared
+//! [`secular`](crate::linalg::secular) merge machinery — amplitude and
+//! cluster deflation, per-interval secular bisection fanned across the
+//! scoped pool, Gu–Eisenstat z-hat, and the surviving-columns basis
+//! rotation as one blocked GEMM (O(N k^2) with k typically far below N
+//! after deflation; kernel Gram matrices' numerically-zero eigenvalue
+//! clusters deflate almost entirely).  The same machinery drives the
+//! divide-and-conquer tridiagonal solver's merge step (`linalg/dac.rs`).
 //!
 //! The result is ascending-sorted like [`SymEigen::new`].  Accuracy is
 //! O(eps * ||A|| + |rho| ||v||^2) per update; callers that chain many
@@ -31,39 +20,7 @@
 //! (DESIGN.md §8's fallback policy).
 
 use super::eigen::SymEigen;
-use super::matrix::Matrix;
-use crate::linalg::gemm;
-use crate::util::threadpool::{self, SharedMut};
-
-/// Minimum per-worker multiply-add units before the secular solves /
-/// z-hat recomputations fan out (same policy as `linalg/eigen`).
-const PAR_GRAIN: usize = 1 << 14;
-
-/// One solved secular root, kept in pole-relative form: the eigenvalue is
-/// `d[base] + offset` where `d[base]` is the closest pole.  Differences
-/// `d_i - lambda` are then computed as `(d_i - d[base]) - offset`, which
-/// never cancels catastrophically — the two addends are exact data.
-#[derive(Clone, Copy, Debug)]
-struct Root {
-    base: usize,
-    offset: f64,
-}
-
-impl Root {
-    #[inline]
-    fn value(&self, d: &[f64]) -> f64 {
-        d[self.base] + self.offset
-    }
-    /// `d[i] - lambda`, cancellation-safe.
-    #[inline]
-    fn pole_gap(&self, d: &[f64], i: usize) -> f64 {
-        if i == self.base {
-            -self.offset
-        } else {
-            (d[i] - d[self.base]) - self.offset
-        }
-    }
-}
+use super::secular;
 
 /// Eigendecomposition of `A + rho v v'` from the decomposition of `A`.
 ///
@@ -81,249 +38,7 @@ pub fn rank_one_update(eigen: &SymEigen, v: &[f64], rho: f64) -> SymEigen {
     if rho == 0.0 || zz == 0.0 {
         return eigen.clone();
     }
-
-    let d = &eigen.values;
-    // Perturbation scale: deflating a component of size z_i perturbs the
-    // matrix by at most 2|rho||z_i|sqrt(zz); dropping a cluster's
-    // off-diagonal perturbs by at most the cluster gap.  Both thresholds
-    // come from the same norm estimate (Weyl).
-    let anorm = d
-        .iter()
-        .fold(0.0f64, |m, x| m.max(x.abs()))
-        .max(rho.abs() * zz)
-        .max(f64::MIN_POSITIVE);
-    let tol = 8.0 * f64::EPSILON * anorm;
-
-    // --- step 2: deflation ---------------------------------------------
-    // Rotations mutate working copies; the original eigen is only read.
-    let mut zw = z;
-    let mut vectors = eigen.vectors.clone();
-    let z_floor = tol / (2.0 * rho.abs() * zz.sqrt());
-    let mut survivors: Vec<usize> = (0..n).filter(|&i| zw[i].abs() > z_floor).collect();
-
-    // cluster deflation: adjacent surviving poles closer than tol are
-    // merged — rotate the earlier component's mass into the later one
-    // (exact when the eigenvalues are equal, O(tol) otherwise)
-    if survivors.len() >= 2 {
-        let mut merged: Vec<usize> = Vec::with_capacity(survivors.len());
-        let mut head = survivors[0];
-        for &next in &survivors[1..] {
-            if d[next] - d[head] <= tol {
-                let (zh, zn) = (zw[head], zw[next]);
-                let r = zh.hypot(zn);
-                let (c, s) = (zn / r, zh / r);
-                zw[head] = 0.0;
-                zw[next] = r;
-                rotate_columns(&mut vectors, head, next, c, s);
-                // `head` deflates with its eigenvalue unchanged
-            } else {
-                merged.push(head);
-            }
-            head = next;
-        }
-        merged.push(head);
-        survivors = merged;
-    }
-
-    let k = survivors.len();
-    if k == 0 {
-        // the update was numerically invisible
-        return SymEigen { values: d.clone(), vectors };
-    }
-
-    let ds: Vec<f64> = survivors.iter().map(|&i| d[i]).collect();
-    let zs: Vec<f64> = survivors.iter().map(|&i| zw[i]).collect();
-    let zzs: f64 = zs.iter().map(|x| x * x).sum();
-
-    // --- step 3: secular roots ------------------------------------------
-    let roots = if k == 1 {
-        vec![Root { base: 0, offset: rho * zzs }]
-    } else if rho > 0.0 {
-        solve_secular(&ds, &zs, rho)
-    } else {
-        // eig(A + rho vv') = -eig(-A + (-rho) vv'): flip sign and order,
-        // solve the positive problem, map the roots back
-        let df: Vec<f64> = ds.iter().rev().map(|x| -x).collect();
-        let zf: Vec<f64> = zs.iter().rev().copied().collect();
-        let flipped = solve_secular(&df, &zf, -rho);
-        (0..k)
-            .map(|j| {
-                let r = flipped[k - 1 - j];
-                Root { base: k - 1 - r.base, offset: -r.offset }
-            })
-            .collect()
-    };
-
-    // --- step 4: Gu–Eisenstat z-hat --------------------------------------
-    // |z_hat_i|^2 = prod_j (s_j - d_i) / (rho * prod_{j != i} (d_j - d_i));
-    // the ratio is positive by interlacing, so it is accumulated in log
-    // magnitude (products of k factors of wildly varying scale would
-    // otherwise over/underflow) and signed from the original z.
-    let ln_rho = rho.abs().ln();
-    let zhat: Vec<f64> = threadpool::par_map(
-        &(0..k).collect::<Vec<usize>>(),
-        (PAR_GRAIN / (2 * k).max(1)).max(1),
-        |&i| {
-            let mut acc = -ln_rho;
-            for (j, r) in roots.iter().enumerate() {
-                acc += r.pole_gap(&ds, i).abs().ln();
-                if j != i {
-                    acc -= (ds[j] - ds[i]).abs().ln();
-                }
-            }
-            (0.5 * acc).exp().copysign(zs[i])
-        },
-    );
-
-    // --- step 5: eigenvectors --------------------------------------------
-    // w_j(i) = z_hat_i / (d_i - s_j), normalized; survivors-only basis
-    // rotation Q = U_k W as one blocked GEMM (N x k by k x k).
-    let mut w = Matrix::zeros(k, k);
-    {
-        let shared = SharedMut::new(w.data_mut());
-        threadpool::par_for(k, (PAR_GRAIN / (2 * k).max(1)).max(1), |j| {
-            let r = &roots[j];
-            let mut col = vec![0.0f64; k];
-            let mut norm2 = 0.0;
-            for i in 0..k {
-                let wi = zhat[i] / r.pole_gap(&ds, i);
-                norm2 += wi * wi;
-                col[i] = wi;
-            }
-            let inv = 1.0 / norm2.sqrt();
-            for (i, wi) in col.into_iter().enumerate() {
-                // Safety: worker j writes only column j.
-                unsafe { shared.write(i * k + j, wi * inv) };
-            }
-        });
-    }
-    let mut u_sub = Matrix::zeros(n, k);
-    for (jj, &col) in survivors.iter().enumerate() {
-        for i in 0..n {
-            u_sub[(i, jj)] = vectors[(i, col)];
-        }
-    }
-    let q = gemm::matmul(&u_sub, &w);
-
-    // --- assemble + sort ascending ---------------------------------------
-    // pair each output eigenvalue with its column source: deflated
-    // columns pass through (possibly cluster-rotated), survivors take the
-    // rotated columns of q
-    enum Src {
-        Old(usize),
-        New(usize),
-    }
-    let mut pairs: Vec<(f64, Src)> = Vec::with_capacity(n);
-    let survivor_set: Vec<bool> = {
-        let mut m = vec![false; n];
-        for &i in &survivors {
-            m[i] = true;
-        }
-        m
-    };
-    for i in 0..n {
-        if !survivor_set[i] {
-            pairs.push((d[i], Src::Old(i)));
-        }
-    }
-    for (j, r) in roots.iter().enumerate() {
-        pairs.push((r.value(&ds), Src::New(j)));
-    }
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-
-    let mut values = Vec::with_capacity(n);
-    let mut out = Matrix::zeros(n, n);
-    for (col, (val, src)) in pairs.into_iter().enumerate() {
-        values.push(val);
-        match src {
-            Src::Old(c) => {
-                for i in 0..n {
-                    out[(i, col)] = vectors[(i, c)];
-                }
-            }
-            Src::New(j) => {
-                for i in 0..n {
-                    out[(i, col)] = q[(i, j)];
-                }
-            }
-        }
-    }
-    SymEigen { values, vectors: out }
-}
-
-/// Givens rotation of eigenvector columns `i` and `j`:
-/// `u_i <- c u_i - s u_j`, `u_j <- s u_i + c u_j`.
-fn rotate_columns(u: &mut Matrix, i: usize, j: usize, c: f64, s: f64) {
-    let n = u.rows();
-    for r in 0..n {
-        let (a, b) = (u[(r, i)], u[(r, j)]);
-        u[(r, i)] = c * a - s * b;
-        u[(r, j)] = s * a + c * b;
-    }
-}
-
-/// Roots of `1 + rho * sum_i z_i^2 / (d_i - s) = 0` for `rho > 0`,
-/// `d` strictly ascending (post-deflation), all `z_i != 0`, `k >= 2`.
-/// Root `j` lies in `(d_j, d_{j+1})` (last: `(d_{k-1}, d_{k-1} + rho z'z)`).
-///
-/// Each interval solve picks the closer pole as origin (decided by the
-/// secular function's sign at the midpoint) and bisects in pole-relative
-/// coordinates — the function is strictly increasing on the interval, so
-/// bisection converges unconditionally to f64 fixpoint.  Intervals are
-/// independent and fan out across the pool with serial-identical
-/// arithmetic (bit-identical across widths).
-fn solve_secular(d: &[f64], z: &[f64], rho: f64) -> Vec<Root> {
-    let k = d.len();
-    let zz: f64 = z.iter().map(|x| x * x).sum();
-    let js: Vec<usize> = (0..k).collect();
-    // ~60-120 g() evaluations of O(k) each per interval
-    let grain = (PAR_GRAIN / (128 * k)).max(1);
-    threadpool::par_map(&js, grain, |&j| {
-        // g(t) = 1 + rho sum_i z_i^2 / (delta_i - t), origin-relative
-        let g = |origin: usize, t: f64| -> f64 {
-            let mut acc = 1.0;
-            for i in 0..k {
-                let delta = if i == origin { 0.0 } else { d[i] - d[origin] };
-                acc += rho * z[i] * z[i] / (delta - t);
-            }
-            acc
-        };
-        let (origin, mut lo, mut hi) = if j + 1 < k {
-            let gap = d[j + 1] - d[j];
-            // g just right of d_j is -inf, just left of d_{j+1} is +inf;
-            // the midpoint sign picks the closer pole as origin
-            if g(j, 0.5 * gap) >= 0.0 {
-                (j, 0.0, 0.5 * gap)
-            } else {
-                (j + 1, -0.5 * gap, 0.0)
-            }
-        } else {
-            // last interval: upper bound d_{k-1} + rho z'z is not a pole
-            (j, 0.0, rho * zz)
-        };
-        // invariant: g(lo) < 0 <= g(hi) (limits at the open endpoints)
-        for _ in 0..200 {
-            let mid = 0.5 * (lo + hi);
-            if mid == lo || mid == hi {
-                break;
-            }
-            if g(origin, mid) < 0.0 {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        // return the side strictly inside the interval, so the offset is
-        // never exactly 0 (which would alias the pole in step 5)
-        let t = if origin == j && lo == 0.0 {
-            hi
-        } else if origin == j + 1 && hi == 0.0 {
-            lo
-        } else {
-            0.5 * (lo + hi)
-        };
-        Root { base: origin, offset: t }
-    })
+    secular::merge_spectrum(&eigen.values, z, rho, eigen.vectors.clone())
 }
 
 /// Cheap orthogonality probe: max over a deterministic sample of column
@@ -360,7 +75,9 @@ pub fn ortho_drift(eigen: &SymEigen, samples: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm;
     use crate::linalg::gemm::matmul_bt;
+    use crate::linalg::matrix::Matrix;
     use crate::util::rng::Rng;
     use crate::util::threadpool::with_threads;
 

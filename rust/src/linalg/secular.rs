@@ -1,0 +1,384 @@
+//! Shared secular-equation merge machinery (DESIGN.md §8, §12).
+//!
+//! Both eigen-update paths in this crate reduce to the same core
+//! problem: given `D + rho z z'` with `D = diag(d)` ascending and the
+//! current eigenbasis expressed as the columns of `vectors`, produce
+//! the updated decomposition.  [`rank_one_update`] reaches it from a
+//! streaming correction `A + rho v v'`; the divide-and-conquer
+//! tridiagonal solver (`linalg/dac.rs`) reaches it once per merge of
+//! two child spectra after a rank-one tear.  The pipeline lives here so
+//! both callers share one implementation, bit for bit:
+//!
+//! 1. **deflate** by amplitude (negligible `|z_i|` keeps its eigenpair
+//!    verbatim) and by cluster (near-equal poles merged via Givens
+//!    rotations that concentrate their `z` mass into one survivor);
+//! 2. solve the **secular equation**
+//!    `1 + rho * sum_i z_i^2 / (d_i - s) = 0` once per surviving
+//!    interval, fanned across the scoped pool in pole-relative
+//!    coordinates (safeguarded bisection cannot miss);
+//! 3. recompute the update vector a la Gu–Eisenstat from the solved
+//!    roots (`z_hat`), restoring numerical orthogonality even for
+//!    tightly-spaced spectra;
+//! 4. rotate the surviving basis columns by the `k x k` solution matrix
+//!    `W` as one blocked [`gemm`] product, then re-assemble deflated
+//!    and updated columns ascending-sorted.
+//!
+//! Determinism (DESIGN.md §6): every fan-out below partitions by fixed
+//! grain sizes that depend only on the problem shape `k`, never on the
+//! pool width, and each unit of work is self-contained — results are
+//! bit-identical across `GPML_THREADS`, with width 1 running the exact
+//! serial loop.
+//!
+//! [`rank_one_update`]: crate::linalg::rankone::rank_one_update
+
+use super::eigen::SymEigen;
+use super::matrix::Matrix;
+use crate::linalg::gemm;
+use crate::util::threadpool::{self, SharedMut};
+
+/// Minimum per-worker multiply-add units before the secular solves /
+/// z-hat recomputations fan out (same policy as `linalg/eigen`).
+const PAR_GRAIN: usize = 1 << 14;
+
+/// One solved secular root, kept in pole-relative form: the eigenvalue is
+/// `d[base] + offset` where `d[base]` is the closest pole.  Differences
+/// `d_i - lambda` are then computed as `(d_i - d[base]) - offset`, which
+/// never cancels catastrophically — the two addends are exact data.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Root {
+    pub(crate) base: usize,
+    pub(crate) offset: f64,
+}
+
+impl Root {
+    #[inline]
+    pub(crate) fn value(&self, d: &[f64]) -> f64 {
+        d[self.base] + self.offset
+    }
+    /// `d[i] - lambda`, cancellation-safe.
+    #[inline]
+    pub(crate) fn pole_gap(&self, d: &[f64], i: usize) -> f64 {
+        if i == self.base {
+            -self.offset
+        } else {
+            (d[i] - d[self.base]) - self.offset
+        }
+    }
+}
+
+/// Eigendecomposition of `basis * (diag(d) + rho z z') * basis'` given
+/// `d` ascending and an orthogonal `basis` whose column `i` carries
+/// pole `d[i]`.
+///
+/// `z` and `vectors` are consumed as working storage (deflation rotates
+/// basis columns in place).  `rho = 0` or `z = 0` returns the input
+/// decomposition unchanged — for the divide-and-conquer caller that is
+/// the exact decoupled-blocks answer (the merged spectrum is already
+/// sorted and the basis already block-diagonal).
+pub(crate) fn merge_spectrum(d: &[f64], z: Vec<f64>, rho: f64, vectors: Matrix) -> SymEigen {
+    let n = d.len();
+    debug_assert_eq!(z.len(), n, "z length != spectrum size");
+    debug_assert_eq!(vectors.cols(), n, "basis columns != spectrum size");
+    let zz: f64 = z.iter().map(|x| x * x).sum();
+    if n == 0 || rho == 0.0 || zz == 0.0 {
+        return SymEigen { values: d.to_vec(), vectors };
+    }
+
+    // Perturbation scale: deflating a component of size z_i perturbs the
+    // matrix by at most 2|rho||z_i|sqrt(zz); dropping a cluster's
+    // off-diagonal perturbs by at most the cluster gap.  Both thresholds
+    // come from the same norm estimate (Weyl).
+    let anorm = d
+        .iter()
+        .fold(0.0f64, |m, x| m.max(x.abs()))
+        .max(rho.abs() * zz)
+        .max(f64::MIN_POSITIVE);
+    let tol = 8.0 * f64::EPSILON * anorm;
+
+    // --- step 1: deflation ---------------------------------------------
+    // Rotations mutate the working copies owned by this call.
+    let mut zw = z;
+    let mut vectors = vectors;
+    let z_floor = tol / (2.0 * rho.abs() * zz.sqrt());
+    let mut survivors: Vec<usize> = (0..n).filter(|&i| zw[i].abs() > z_floor).collect();
+
+    // cluster deflation: adjacent surviving poles closer than tol are
+    // merged — rotate the earlier component's mass into the later one
+    // (exact when the eigenvalues are equal, O(tol) otherwise)
+    if survivors.len() >= 2 {
+        let mut merged: Vec<usize> = Vec::with_capacity(survivors.len());
+        let mut head = survivors[0];
+        for &next in &survivors[1..] {
+            if d[next] - d[head] <= tol {
+                let (zh, zn) = (zw[head], zw[next]);
+                let r = zh.hypot(zn);
+                let (c, s) = (zn / r, zh / r);
+                zw[head] = 0.0;
+                zw[next] = r;
+                rotate_columns(&mut vectors, head, next, c, s);
+                // `head` deflates with its eigenvalue unchanged
+            } else {
+                merged.push(head);
+            }
+            head = next;
+        }
+        merged.push(head);
+        survivors = merged;
+    }
+
+    let k = survivors.len();
+    if k == 0 {
+        // the update was numerically invisible
+        return SymEigen { values: d.to_vec(), vectors };
+    }
+
+    let ds: Vec<f64> = survivors.iter().map(|&i| d[i]).collect();
+    let zs: Vec<f64> = survivors.iter().map(|&i| zw[i]).collect();
+    let zzs: f64 = zs.iter().map(|x| x * x).sum();
+
+    // --- step 2: secular roots ------------------------------------------
+    let roots = if k == 1 {
+        vec![Root { base: 0, offset: rho * zzs }]
+    } else if rho > 0.0 {
+        solve_secular(&ds, &zs, rho)
+    } else {
+        // eig(A + rho vv') = -eig(-A + (-rho) vv'): flip sign and order,
+        // solve the positive problem, map the roots back
+        let df: Vec<f64> = ds.iter().rev().map(|x| -x).collect();
+        let zf: Vec<f64> = zs.iter().rev().copied().collect();
+        let flipped = solve_secular(&df, &zf, -rho);
+        (0..k)
+            .map(|j| {
+                let r = flipped[k - 1 - j];
+                Root { base: k - 1 - r.base, offset: -r.offset }
+            })
+            .collect()
+    };
+
+    // --- step 3: Gu–Eisenstat z-hat --------------------------------------
+    // |z_hat_i|^2 = prod_j (s_j - d_i) / (rho * prod_{j != i} (d_j - d_i));
+    // the ratio is positive by interlacing, so it is accumulated in log
+    // magnitude (products of k factors of wildly varying scale would
+    // otherwise over/underflow) and signed from the original z.
+    let ln_rho = rho.abs().ln();
+    let zhat: Vec<f64> = threadpool::par_map(
+        &(0..k).collect::<Vec<usize>>(),
+        (PAR_GRAIN / (2 * k).max(1)).max(1),
+        |&i| {
+            let mut acc = -ln_rho;
+            for (j, r) in roots.iter().enumerate() {
+                acc += r.pole_gap(&ds, i).abs().ln();
+                if j != i {
+                    acc -= (ds[j] - ds[i]).abs().ln();
+                }
+            }
+            (0.5 * acc).exp().copysign(zs[i])
+        },
+    );
+
+    // --- step 4: eigenvectors --------------------------------------------
+    // w_j(i) = z_hat_i / (d_i - s_j), normalized; survivors-only basis
+    // rotation Q = U_k W as one blocked GEMM (N x k by k x k).
+    let mut w = Matrix::zeros(k, k);
+    {
+        let shared = SharedMut::new(w.data_mut());
+        threadpool::par_for(k, (PAR_GRAIN / (2 * k).max(1)).max(1), |j| {
+            let r = &roots[j];
+            let mut col = vec![0.0f64; k];
+            let mut norm2 = 0.0;
+            for i in 0..k {
+                let wi = zhat[i] / r.pole_gap(&ds, i);
+                norm2 += wi * wi;
+                col[i] = wi;
+            }
+            let inv = 1.0 / norm2.sqrt();
+            for (i, wi) in col.into_iter().enumerate() {
+                // Safety: worker j writes only column j.
+                unsafe { shared.write(i * k + j, wi * inv) };
+            }
+        });
+    }
+    let mut u_sub = Matrix::zeros(n, k);
+    for (jj, &col) in survivors.iter().enumerate() {
+        for i in 0..n {
+            u_sub[(i, jj)] = vectors[(i, col)];
+        }
+    }
+    let q = gemm::matmul(&u_sub, &w);
+
+    // --- assemble + sort ascending ---------------------------------------
+    // pair each output eigenvalue with its column source: deflated
+    // columns pass through (possibly cluster-rotated), survivors take the
+    // rotated columns of q
+    enum Src {
+        Old(usize),
+        New(usize),
+    }
+    let mut pairs: Vec<(f64, Src)> = Vec::with_capacity(n);
+    let survivor_set: Vec<bool> = {
+        let mut m = vec![false; n];
+        for &i in &survivors {
+            m[i] = true;
+        }
+        m
+    };
+    for i in 0..n {
+        if !survivor_set[i] {
+            pairs.push((d[i], Src::Old(i)));
+        }
+    }
+    for (j, r) in roots.iter().enumerate() {
+        pairs.push((r.value(&ds), Src::New(j)));
+    }
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut values = Vec::with_capacity(n);
+    let mut out = Matrix::zeros(n, n);
+    for (col, (val, src)) in pairs.into_iter().enumerate() {
+        values.push(val);
+        match src {
+            Src::Old(c) => {
+                for i in 0..n {
+                    out[(i, col)] = vectors[(i, c)];
+                }
+            }
+            Src::New(j) => {
+                for i in 0..n {
+                    out[(i, col)] = q[(i, j)];
+                }
+            }
+        }
+    }
+    SymEigen { values, vectors: out }
+}
+
+/// Givens rotation of eigenvector columns `i` and `j`:
+/// `u_i <- c u_i - s u_j`, `u_j <- s u_i + c u_j`.
+fn rotate_columns(u: &mut Matrix, i: usize, j: usize, c: f64, s: f64) {
+    let n = u.rows();
+    for r in 0..n {
+        let (a, b) = (u[(r, i)], u[(r, j)]);
+        u[(r, i)] = c * a - s * b;
+        u[(r, j)] = s * a + c * b;
+    }
+}
+
+/// Roots of `1 + rho * sum_i z_i^2 / (d_i - s) = 0` for `rho > 0`,
+/// `d` strictly ascending (post-deflation), all `z_i != 0`, `k >= 2`.
+/// Root `j` lies in `(d_j, d_{j+1})` (last: `(d_{k-1}, d_{k-1} + rho z'z)`).
+///
+/// Each interval solve picks the closer pole as origin (decided by the
+/// secular function's sign at the midpoint) and bisects in pole-relative
+/// coordinates — the function is strictly increasing on the interval, so
+/// bisection converges unconditionally to f64 fixpoint.  Intervals are
+/// independent and fan out across the pool with serial-identical
+/// arithmetic (bit-identical across widths).
+pub(crate) fn solve_secular(d: &[f64], z: &[f64], rho: f64) -> Vec<Root> {
+    let k = d.len();
+    let zz: f64 = z.iter().map(|x| x * x).sum();
+    let js: Vec<usize> = (0..k).collect();
+    // ~60-120 g() evaluations of O(k) each per interval
+    let grain = (PAR_GRAIN / (128 * k)).max(1);
+    threadpool::par_map(&js, grain, |&j| {
+        // g(t) = 1 + rho sum_i z_i^2 / (delta_i - t), origin-relative
+        let g = |origin: usize, t: f64| -> f64 {
+            let mut acc = 1.0;
+            for i in 0..k {
+                let delta = if i == origin { 0.0 } else { d[i] - d[origin] };
+                acc += rho * z[i] * z[i] / (delta - t);
+            }
+            acc
+        };
+        let (origin, mut lo, mut hi) = if j + 1 < k {
+            let gap = d[j + 1] - d[j];
+            // g just right of d_j is -inf, just left of d_{j+1} is +inf;
+            // the midpoint sign picks the closer pole as origin
+            if g(j, 0.5 * gap) >= 0.0 {
+                (j, 0.0, 0.5 * gap)
+            } else {
+                (j + 1, -0.5 * gap, 0.0)
+            }
+        } else {
+            // last interval: upper bound d_{k-1} + rho z'z is not a pole
+            (j, 0.0, rho * zz)
+        };
+        // invariant: g(lo) < 0 <= g(hi) (limits at the open endpoints)
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if mid == lo || mid == hi {
+                break;
+            }
+            if g(origin, mid) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // return the side strictly inside the interval, so the offset is
+        // never exactly 0 (which would alias the pole in step 4)
+        let t = if origin == j && lo == 0.0 {
+            hi
+        } else if origin == j + 1 && hi == 0.0 {
+            lo
+        } else {
+            0.5 * (lo + hi)
+        };
+        Root { base: origin, offset: t }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    /// Dense `basis (diag(d) + rho z z') basis'` for reference checks.
+    fn dense(d: &[f64], z: &[f64], rho: f64, basis: &Matrix) -> Matrix {
+        let n = d.len();
+        let inner = Matrix::from_fn(n, n, |i, j| {
+            let diag = if i == j { d[i] } else { 0.0 };
+            diag + rho * z[i] * z[j]
+        });
+        matmul(&matmul(basis, &inner), &basis.t())
+    }
+
+    #[test]
+    fn merges_diagonal_plus_rank_one_both_signs() {
+        let d = [-1.5, -0.25, 0.0, 0.75, 2.0];
+        let z = [0.6, -0.3, 0.8, 0.2, -0.5];
+        for &rho in &[1.0, -1.0, 0.4] {
+            let eg = merge_spectrum(&d, z.to_vec(), rho, Matrix::eye(5));
+            let a = dense(&d, &z, rho, &Matrix::eye(5));
+            assert!(eg.reconstruct().max_abs_diff(&a) < 1e-10, "rho={rho}");
+            let utu = matmul(&eg.vectors.t(), &eg.vectors);
+            assert!(utu.max_abs_diff(&Matrix::eye(5)) < 1e-12, "rho={rho}");
+            for w in eg.values.windows(2) {
+                assert!(w[0] <= w[1], "rho={rho}: not ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rho_or_zero_z_is_identity() {
+        let d = [0.5, 1.0, 3.0];
+        let eg = merge_spectrum(&d, vec![1.0, -2.0, 0.5], 0.0, Matrix::eye(3));
+        assert_eq!(eg.values, d.to_vec());
+        assert_eq!(eg.vectors.data(), Matrix::eye(3).data());
+        let eg = merge_spectrum(&d, vec![0.0; 3], 2.0, Matrix::eye(3));
+        assert_eq!(eg.values, d.to_vec());
+    }
+
+    #[test]
+    fn secular_roots_interlace() {
+        let d = [0.0, 1.0, 2.5, 4.0];
+        let z = [0.5, 0.5, 0.5, 0.5];
+        let zz: f64 = z.iter().map(|x| x * x).sum();
+        let roots = solve_secular(&d, &z, 1.0);
+        for (j, r) in roots.iter().enumerate() {
+            let s = r.value(&d);
+            assert!(s > d[j], "root {j} below its pole");
+            let hi = if j + 1 < 4 { d[j + 1] } else { d[3] + zz };
+            assert!(s <= hi, "root {j} above its interval");
+        }
+    }
+}

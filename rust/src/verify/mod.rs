@@ -47,7 +47,7 @@
 pub mod fd;
 
 use crate::kernelfn::{self, Kernel, ThetaVec};
-use crate::linalg::{Matrix, SymEigen};
+use crate::linalg::{matmul, Matrix, SymEigen};
 use crate::naive::NaiveEvaluator;
 use crate::spectral::{EigenSystem, Evaluation, HyperParams};
 use crate::util::rng::Rng;
@@ -636,6 +636,107 @@ pub fn ard_differential_suite(sizes: &[usize], seed: u64) -> VerifyReport {
     report
 }
 
+/// Tolerances for [`spectral_gate`].  Every bound is relative to the
+/// spectral scale `max(1, max_j |lambda_j|)` of the decomposition under
+/// test, so the gate is meaningful for Gram matrices of any magnitude.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralGateConfig {
+    /// Eigenvalue agreement with the oracle decomposition.
+    pub value_rtol: f64,
+    /// Elementwise residual bound for `A v_j - lambda_j v_j`.
+    pub residual_tol: f64,
+    /// Elementwise bound for `Q'Q - I`.
+    pub ortho_tol: f64,
+}
+
+impl Default for SpectralGateConfig {
+    fn default() -> Self {
+        SpectralGateConfig { value_rtol: 1e-12, residual_tol: 1e-10, ortho_tol: 1e-10 }
+    }
+}
+
+/// Oracle-grade acceptance gate for an eigendecomposition of `a`
+/// (the test wall the divide-and-conquer solver is shipped behind —
+/// `rust/tests/eigen_dac.rs`): ascending finite eigenvalues, the
+/// eigenpair residual `A v_j = lambda_j v_j`, eigenvector
+/// orthogonality, and — when an `oracle` decomposition (the QL path)
+/// is supplied — eigenvalue agreement at `value_rtol`.  Returns the
+/// first violated property as an error naming the offending index.
+pub fn spectral_gate(
+    a: &Matrix,
+    eigen: &SymEigen,
+    oracle: Option<&SymEigen>,
+    cfg: &SpectralGateConfig,
+) -> Result<(), String> {
+    let n = a.rows();
+    if eigen.values.len() != n || eigen.vectors.rows() != n || eigen.vectors.cols() != n {
+        return Err(format!(
+            "shape mismatch: {} values / {}x{} vectors for an {n}x{n} matrix",
+            eigen.values.len(),
+            eigen.vectors.rows(),
+            eigen.vectors.cols()
+        ));
+    }
+    let scale = eigen.values.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (j, v) in eigen.values.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(format!("eigenvalue {j} is not finite: {v}"));
+        }
+    }
+    for (j, w) in eigen.values.windows(2).enumerate() {
+        if w[0] > w[1] {
+            return Err(format!("eigenvalues not ascending at {j}: {} > {}", w[0], w[1]));
+        }
+    }
+    if let Some(oracle) = oracle {
+        if oracle.values.len() != n {
+            return Err(format!("oracle has {} values, expected {n}", oracle.values.len()));
+        }
+        for j in 0..n {
+            let (got, want) = (eigen.values[j], oracle.values[j]);
+            if (got - want).abs() > cfg.value_rtol * scale {
+                return Err(format!(
+                    "eigenvalue {j} disagrees with the oracle: {got} vs {want} \
+                     (|diff| = {:e} > {:e})",
+                    (got - want).abs(),
+                    cfg.value_rtol * scale
+                ));
+            }
+        }
+    }
+    if n == 0 {
+        return Ok(());
+    }
+    // residual: A Q - Q diag(lambda) as one GEMM, then an elementwise scan
+    let aq = matmul(a, &eigen.vectors);
+    for j in 0..n {
+        for i in 0..n {
+            let r = (aq[(i, j)] - eigen.values[j] * eigen.vectors[(i, j)]).abs();
+            if r > cfg.residual_tol * scale {
+                return Err(format!(
+                    "eigenpair {j} residual at row {i}: {r:e} > {:e}",
+                    cfg.residual_tol * scale
+                ));
+            }
+        }
+    }
+    // orthogonality: Q'Q vs I
+    let qtq = matmul(&eigen.vectors.t(), &eigen.vectors);
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            let drift = (qtq[(i, j)] - want).abs();
+            if drift > cfg.ortho_tol {
+                return Err(format!(
+                    "orthogonality drift at ({i}, {j}): {drift:e} > {:e}",
+                    cfg.ortho_tol
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -768,5 +869,28 @@ mod tests {
         let report = differential_suite(&cfg);
         assert!(report.ok(), "{}", report.summary());
         assert!(report.cases > 0 && report.checks > report.cases);
+    }
+
+    #[test]
+    fn spectral_gate_accepts_clean_and_rejects_corrupted() {
+        use crate::linalg::EigenSolver;
+        let mut rng = Rng::new(21);
+        let x = Matrix::from_fn(40, 3, |_, _| rng.normal());
+        let k = kernelfn::gram(Kernel::Rbf { xi2: 1.0 }, &x);
+        let cfg = SpectralGateConfig::default();
+        let dac = SymEigen::new_with(&k, EigenSolver::Dac).unwrap();
+        let ql = SymEigen::new_with(&k, EigenSolver::Ql).unwrap();
+        spectral_gate(&k, &dac, Some(&ql), &cfg).unwrap();
+        spectral_gate(&k, &ql, Some(&dac), &cfg).unwrap();
+        // a corrupted eigenvalue must trip the oracle comparison
+        let mut bad = dac.clone();
+        bad.values[20] += 1e-8 * bad.values.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        assert!(spectral_gate(&k, &bad, Some(&ql), &cfg).is_err());
+        // a denormalized eigenvector column must trip orthogonality
+        let mut bad = dac.clone();
+        for r in 0..40 {
+            bad.vectors[(r, 5)] *= 1.0 + 1e-6;
+        }
+        assert!(spectral_gate(&k, &bad, None, &cfg).is_err());
     }
 }

@@ -355,6 +355,46 @@ fn update_falls_back_to_ladder_refit_on_eigen_failure() {
     server.stop();
 }
 
+/// The streaming eigen-failure path driven *through the D&C solver*:
+/// the extend's eigensolve dies, and the ladder refit's clean attempt
+/// then dies inside the divide-and-conquer merge step, so the rung-1
+/// jitter retry serves the refit.  The wire response still reports
+/// `refit_reason: "eigen-failure"` and the counters record the deeper
+/// walk.  (Assumes the default solver — the chaos CI job does not set
+/// `GPML_EIGEN`, and a session above the crossover traverses a merge
+/// on every decomposition.)
+#[test]
+fn update_ladder_refit_degrades_through_the_dac_merge() {
+    let session = InjectionSession::begin();
+    let server = Server::start("127.0.0.1:0", Coordinator::rust_only).unwrap();
+    let mut client = Client::connect_with(&server.addr.to_string(), direct_options()).unwrap();
+    // above the D&C leaf crossover (32), so the ladder's from-scratch
+    // refit of the extended session traverses the merge injection point
+    let n = 40;
+    let id = client.create_session(&inputs(n, 2, 57), KERNEL).unwrap();
+
+    // one extend failure + one merge failure: the incremental path dies,
+    // the refit's clean attempt dies in the merge, jitter rung 1 rescues
+    inject::arm(FaultPoint::EigenNoConvergence, 1, 1);
+    inject::arm(FaultPoint::DacMergeNoConvergence, 1, 1);
+    let v = client.update_session(id, &inputs(2, 2, 58), 0).unwrap();
+    assert_eq!(v.get("incremental").and_then(|b| b.as_bool()), Some(false), "{v}");
+    assert_eq!(
+        v.get("refit_reason").and_then(|r| r.as_str()),
+        Some("eigen-failure"),
+        "ladder refit is attributed: {v}"
+    );
+    assert_eq!(v.get("n").and_then(|x| x.as_usize()), Some(n + 2), "{v}");
+    let faults = server.session_stats().faults;
+    assert!(faults.fallback_refits >= 1, "refit recorded: {faults:?}");
+    assert!(faults.jitter_retries >= 1, "the merge failure forced a jitter rung: {faults:?}");
+
+    // the rescued session evaluates normally
+    client.evaluate(&eval_req(id, n + 2)).unwrap();
+    drop(session);
+    server.stop();
+}
+
 /// Healthy-path determinism guard for the counters themselves: with no
 /// faults armed, serving traffic moves none of the fault counters.
 #[test]

@@ -1,0 +1,230 @@
+//! Oracle-grade spectral test wall for the divide-and-conquer
+//! eigensolver (ISSUE 8): seeded random symmetric matrices with
+//! *planted* spectra are decomposed by both solvers and gated through
+//! `verify::spectral_gate` — eigenvalues vs the QL oracle at rtol
+//! 1e-12, eigenpair residuals, and orthogonality at 1e-10 — plus
+//! planted-bug tests proving the gate has teeth.
+//!
+//! Sizes deliberately straddle the D&C leaf crossover (32) and force
+//! odd splits; solvers are pinned per call via `with_solver` /
+//! `SymEigen::new_with`, so the suite is independent of the ambient
+//! `GPML_EIGEN` value (CI runs it under both).
+
+use gpml::linalg::{with_solver, EigenSolver, Matrix, SymEigen};
+use gpml::util::rng::Rng;
+use gpml::verify::{spectral_gate, SpectralGateConfig};
+
+/// Off-crossover, odd-split, and unit sizes from the ISSUE.
+const SIZES: &[usize] = &[1, 2, 3, 8, 33, 128, 257];
+
+/// A deterministic orthogonal basis: eigenvectors of a seeded random
+/// symmetric matrix, taken from the QL path so the basis itself never
+/// depends on the solver under test.
+fn random_orthogonal(rng: &mut Rng, n: usize) -> Matrix {
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut s = b.add(&b.t());
+    s.scale(0.5);
+    SymEigen::new_with(&s, EigenSolver::Ql).unwrap().vectors
+}
+
+/// `Q diag(vals) Q'` with `vals` sorted ascending in place, so the
+/// planted spectrum is directly comparable to solver output.
+fn plant(q: &Matrix, vals: &mut Vec<f64>) -> Matrix {
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SymEigen { values: vals.clone(), vectors: q.clone() }.reconstruct()
+}
+
+/// Run one planted-spectrum family through both solvers and the gate.
+fn gate_family(name: &str, spectrum: impl Fn(usize) -> Vec<f64>) {
+    let mut rng = Rng::new(0xDAC0 + name.len() as u64);
+    let cfg = SpectralGateConfig::default();
+    for &n in SIZES {
+        let q = random_orthogonal(&mut rng, n);
+        let mut vals = spectrum(n);
+        assert_eq!(vals.len(), n, "family {name} produced a wrong-size spectrum");
+        let a = plant(&q, &mut vals);
+        // exercise the default-dispatch path, pinned to D&C
+        let dac = with_solver(EigenSolver::Dac, || SymEigen::new(&a))
+            .unwrap_or_else(|e| panic!("{name} n={n}: dac failed: {e}"));
+        let ql = SymEigen::new_with(&a, EigenSolver::Ql)
+            .unwrap_or_else(|e| panic!("{name} n={n}: ql oracle failed: {e}"));
+        spectral_gate(&a, &dac, Some(&ql), &cfg)
+            .unwrap_or_else(|e| panic!("{name} n={n} (dac vs ql oracle): {e}"));
+        // the oracle itself must clear the residual/orthogonality bars
+        spectral_gate(&a, &ql, None, &cfg)
+            .unwrap_or_else(|e| panic!("{name} n={n} (ql self-check): {e}"));
+        // and the planted spectrum must be recovered
+        let scale = vals.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (j, (got, want)) in dac.values.iter().zip(&vals).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-10 * scale,
+                "{name} n={n}: planted eigenvalue {j} not recovered: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn planted_tight_clusters() {
+    // almost-degenerate cluster at 1 (gaps of a few ulps — the regime
+    // where naive secular updates lose orthogonality), plus separated
+    // anchors so deflation cannot trivialize the merge
+    gate_family("tight-clusters", |n| {
+        (0..n)
+            .map(|i| match i % 8 {
+                0 => 0.25,
+                1 => 4.0 + 1e-13 * (i / 8) as f64,
+                _ => 1.0 + 1e-14 * i as f64,
+            })
+            .collect()
+    });
+}
+
+#[test]
+fn planted_rank_deficient() {
+    // half the spectrum exactly zero (the kernel Gram regime), the rest
+    // spread over two decades
+    gate_family("rank-deficient", |n| {
+        (0..n)
+            .map(|i| if i < n / 2 { 0.0 } else { 0.1 * (1 + i - n / 2) as f64 })
+            .collect()
+    });
+}
+
+#[test]
+fn planted_geometric_decay() {
+    // lambda_i = 1.25^-i: every scale from O(1) down to underflow-ish,
+    // adjacent gaps shrinking geometrically
+    gate_family("geometric-decay", |n| (0..n).map(|i| 1.25f64.powi(-(i as i32))).collect())
+}
+
+#[test]
+fn planted_plus_minus_pairs() {
+    // symmetric ±pairs (indefinite input — exercises the rho < 0 merge
+    // flip); odd sizes add a zero
+    gate_family("pm-pairs", |n| {
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n / 2 {
+            let mag = 1.0 + 0.5 * i as f64;
+            v.push(mag);
+            v.push(-mag);
+        }
+        if n % 2 == 1 {
+            v.push(0.0);
+        }
+        v
+    });
+}
+
+#[test]
+fn planted_uniform_random() {
+    gate_family("uniform-random", |n| {
+        let mut r = Rng::new(0xF00D + n as u64);
+        (0..n).map(|_| r.uniform_in(-5.0, 5.0)).collect()
+    });
+}
+
+/// The gate must trip when a single secular root is wrong — the exact
+/// failure mode a broken merge would produce.
+#[test]
+fn gate_trips_on_a_corrupted_secular_root() {
+    let n = 64;
+    let mut rng = Rng::new(0xBAD);
+    let q = random_orthogonal(&mut rng, n);
+    let mut vals: Vec<f64> = (0..n).map(|i| 1.0 + 0.05 * i as f64).collect();
+    let a = plant(&q, &mut vals);
+    let ql = SymEigen::new_with(&a, EigenSolver::Ql).unwrap();
+    let dac = SymEigen::new_with(&a, EigenSolver::Dac).unwrap();
+    let cfg = SpectralGateConfig::default();
+    spectral_gate(&a, &dac, Some(&ql), &cfg).expect("clean decomposition must pass");
+
+    // one mis-converged root, 1e-8 * scale off — far above solver noise,
+    // far below anything a reconstruct-level smoke test would notice
+    let scale = vals.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let mut bad = dac.clone();
+    bad.values[40] += 1e-8 * scale;
+    assert!(
+        spectral_gate(&a, &bad, Some(&ql), &cfg).is_err(),
+        "corrupted secular root slipped through the gate"
+    );
+
+    // a denormalized eigenvector column (broken z-hat / W normalization)
+    let mut bad = dac.clone();
+    for r in 0..n {
+        bad.vectors[(r, 17)] *= 1.0 + 1e-6;
+    }
+    assert!(
+        spectral_gate(&a, &bad, Some(&ql), &cfg).is_err(),
+        "denormalized eigenvector column slipped through the gate"
+    );
+
+    // swapped adjacent eigenvalues (a broken merge permutation)
+    let mut bad = dac.clone();
+    bad.values.swap(20, 21);
+    assert!(
+        spectral_gate(&a, &bad, Some(&ql), &cfg).is_err(),
+        "non-ascending spectrum slipped through the gate"
+    );
+}
+
+/// Unit sizes and already-tridiagonal inputs (the latent edge cases the
+/// ISSUE calls out), through both solvers.
+#[test]
+fn unit_sizes_and_tridiagonal_inputs() {
+    let cfg = SpectralGateConfig::default();
+    for solver in [EigenSolver::Dac, EigenSolver::Ql] {
+        // N = 0
+        let a = Matrix::zeros(0, 0);
+        let eg = SymEigen::new_with(&a, solver).unwrap();
+        assert!(eg.values.is_empty());
+        spectral_gate(&a, &eg, None, &cfg).unwrap();
+        // N = 1, negative entry
+        let a = Matrix::diag(&[-2.25]);
+        let eg = SymEigen::new_with(&a, solver).unwrap();
+        assert_eq!(eg.values, vec![-2.25]);
+        spectral_gate(&a, &eg, None, &cfg).unwrap();
+    }
+    // already-tridiagonal inputs, including one decoupled exactly at the
+    // D&C split point (beta = 0 merge) and one fully diagonal
+    for &n in &[2usize, 3, 8, 33, 40, 64] {
+        let mut tri = Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                (i as f64 * 0.9).cos() * 3.0
+            } else if i.abs_diff(j) == 1 {
+                0.7 + 0.02 * i.min(j) as f64
+            } else {
+                0.0
+            }
+        });
+        if n == 40 {
+            tri[(19, 20)] = 0.0;
+            tri[(20, 19)] = 0.0;
+        }
+        let ql = SymEigen::new_with(&tri, EigenSolver::Ql).unwrap();
+        let dac = SymEigen::new_with(&tri, EigenSolver::Dac).unwrap();
+        let cfg = SpectralGateConfig::default();
+        spectral_gate(&tri, &dac, Some(&ql), &cfg)
+            .unwrap_or_else(|e| panic!("tridiagonal n={n}: {e}"));
+
+        let diag = Matrix::diag(&(0..n).map(|i| (i % 5) as f64).collect::<Vec<_>>());
+        let ql = SymEigen::new_with(&diag, EigenSolver::Ql).unwrap();
+        let dac = SymEigen::new_with(&diag, EigenSolver::Dac).unwrap();
+        spectral_gate(&diag, &dac, Some(&ql), &cfg)
+            .unwrap_or_else(|e| panic!("diagonal n={n}: {e}"));
+    }
+}
+
+/// Below the crossover, D&C dispatch *is* the QL path — bit for bit.
+#[test]
+fn below_crossover_solvers_are_bitwise_identical() {
+    let mut rng = Rng::new(0x51CE);
+    for &n in &[1usize, 8, 16, 31, 32] {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.add(&b.t());
+        a.scale(0.5);
+        let dac = SymEigen::new_with(&a, EigenSolver::Dac).unwrap();
+        let ql = SymEigen::new_with(&a, EigenSolver::Ql).unwrap();
+        assert_eq!(dac.values, ql.values, "n={n}");
+        assert_eq!(dac.vectors.data(), ql.vectors.data(), "n={n}");
+    }
+}

@@ -5,7 +5,7 @@
 //! rung — when no jitter can repair the spectrum.
 
 use gpml::faults::{cholesky_eigen, hardened_eigen, FaultCounters, FaultPolicy, SetupGrade};
-use gpml::linalg::{matmul_bt, Matrix, SymEigen};
+use gpml::linalg::{matmul_bt, with_solver, EigenSolver, Matrix, SymEigen};
 use gpml::spectral::{EigenSystem, HyperParams};
 
 /// Deterministic symmetric PSD matrix `B B'` with bounded entries.
@@ -158,4 +158,127 @@ fn zero_dimensional_matrix_does_not_panic() {
     let k = Matrix::zeros(0, 0);
     let counters = FaultCounters::default();
     let _ = hardened_eigen(&k, &FaultPolicy::default(), &counters);
+}
+
+/// The ladder routes through whichever solver is ambient: a clean walk
+/// under D&C is bitwise the direct D&C decomposition, and its
+/// score/Jacobian/Hessian agree with the QL oracle's within the
+/// differential tolerances.
+#[test]
+fn clean_ladder_through_dac_matches_the_ql_oracle() {
+    let n = 48; // above the D&C crossover: the solve traverses a merge
+    let k = psd(n, 51);
+    let counters = FaultCounters::default();
+    let h = with_solver(EigenSolver::Dac, || {
+        hardened_eigen(&k, &FaultPolicy::default(), &counters)
+    })
+    .unwrap();
+    assert_eq!(h.grade, SetupGrade::Clean);
+    let direct = SymEigen::new_with(&k, EigenSolver::Dac).unwrap();
+    assert_eq!(h.eigen.values, direct.values);
+    assert_eq!(h.eigen.vectors.data(), direct.vectors.data());
+
+    let ql = SymEigen::new_with(&k, EigenSolver::Ql).unwrap();
+    let y = outputs(n, 9);
+    let es_dac = EigenSystem::new(&h.eigen, &y);
+    let es_ql = EigenSystem::new(&ql, &y);
+    for &(s2, l2) in &[(0.05, 1.0), (0.5, 0.2), (2.0, 4.0)] {
+        let hp = HyperParams::new(s2, l2);
+        let a = es_dac.evaluate(hp);
+        let b = es_ql.evaluate(hp);
+        assert!(rel(a.score, b.score) < 1e-9, "score at ({s2}, {l2})");
+        for d in 0..2 {
+            // absolute-with-floor: jacobian components may sit near zero
+            let diff = (a.jac[d] - b.jac[d]).abs();
+            let bar = 1e-9 * (1.0 + a.jac[d].abs().max(b.jac[d].abs()));
+            assert!(diff < bar, "jac[{d}] at ({s2}, {l2}): {} vs {}", a.jac[d], b.jac[d]);
+        }
+    }
+}
+
+/// End-to-end ladder walks driven by the D&C merge injection point
+/// (`--features fault-inject`): the clean attempt dies inside the new
+/// solver, and the ladder degrades exactly as it would for a real QL
+/// stagnation — jitter rungs first, Cholesky fallback after, structured
+/// error at the very end.
+#[cfg(feature = "fault-inject")]
+mod dac_merge_injection {
+    use super::*;
+    use gpml::faults::inject::{self, FaultPoint};
+
+    /// Injection state is process-global; serialize the tests that arm it.
+    static INJECT_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// n > CROSSOVER so every solve traverses exactly one merge — each
+    /// ladder attempt consumes exactly one scheduled firing.
+    const N: usize = 48;
+
+    #[test]
+    fn merge_failure_walks_one_jitter_rung_and_is_differentially_exact() {
+        let _g = INJECT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        inject::reset();
+        let k = psd(N, 61);
+        let policy = FaultPolicy::default();
+        let counters = FaultCounters::default();
+        inject::arm(FaultPoint::DacMergeNoConvergence, 1, 1);
+        let h = with_solver(EigenSolver::Dac, || hardened_eigen(&k, &policy, &counters));
+        inject::reset();
+        let h = h.unwrap();
+        let SetupGrade::Jittered { rung, jitter } = h.grade else {
+            panic!("expected a jitter rescue, got {:?}", h.grade);
+        };
+        assert_eq!(rung, 1, "first rung must rescue once the injection budget is spent");
+        assert_eq!(counters.snapshot().jitter_retries, 1);
+        // bitwise the direct D&C decomposition of the jittered matrix
+        let mut kj = k.clone();
+        kj.add_diag(jitter);
+        let direct = SymEigen::new_with(&kj, EigenSolver::Dac).unwrap();
+        assert_eq!(h.eigen.values, direct.values);
+        assert_eq!(h.eigen.vectors.data(), direct.vectors.data());
+    }
+
+    #[test]
+    fn merge_failures_exhaust_jitter_and_land_on_the_cholesky_fallback() {
+        let _g = INJECT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        inject::reset();
+        let k = psd(N, 67);
+        let policy = FaultPolicy::default();
+        let counters = FaultCounters::default();
+        // clean attempt + all four jitter rungs fail; the Cholesky
+        // fallback's inner eigensolve is the sixth traversal and succeeds
+        inject::arm(FaultPoint::DacMergeNoConvergence, 1, 1 + policy.max_jitter_rungs as u64);
+        let h = with_solver(EigenSolver::Dac, || hardened_eigen(&k, &policy, &counters));
+        inject::reset();
+        let h = h.unwrap();
+        assert!(
+            matches!(h.grade, SetupGrade::CholFallback { .. }),
+            "expected the Cholesky fallback, got {:?}",
+            h.grade
+        );
+        let snap = counters.snapshot();
+        assert_eq!(snap.jitter_retries, policy.max_jitter_rungs as u64);
+        assert_eq!(snap.fallback_refits, 1);
+        // the fallback result is still a usable decomposition
+        assert!(h.eigen.reconstruct().max_abs_diff(&k) < 1e-6 * (1.0 + k.fro_norm()));
+    }
+
+    #[test]
+    fn merge_failures_all_the_way_down_exhaust_the_ladder() {
+        let _g = INJECT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        inject::reset();
+        let k = psd(N, 71);
+        let policy = FaultPolicy::default();
+        let counters = FaultCounters::default();
+        // one more firing than the fallback needs: every rung dies
+        inject::arm(FaultPoint::DacMergeNoConvergence, 1, 2 + policy.max_jitter_rungs as u64);
+        let err = with_solver(EigenSolver::Dac, || hardened_eigen(&k, &policy, &counters));
+        inject::reset();
+        let err = err.unwrap_err();
+        assert_eq!(err.rungs, policy.max_jitter_rungs);
+        let msg = err.to_string();
+        assert!(msg.contains("cholesky"), "error names the fallback stage: {msg}");
+        let snap = counters.snapshot();
+        assert_eq!(snap.jitter_retries, policy.max_jitter_rungs as u64);
+        assert_eq!(snap.fallback_refits, 1);
+    }
 }

@@ -1,18 +1,22 @@
-//! Pool correctness and determinism gates (ISSUE 2 satellite): width 1
-//! must run the identical pre-pool serial arithmetic, and pooled runs
-//! must agree with serial — bit-identical wherever the write partition
-//! keeps per-element arithmetic fixed (gram, GEMM, Strassen, tql2,
-//! wavefronts), and within 1e-12 where a block reduction re-associates
-//! a sum (the tred2 transform accumulation).
+//! Pool correctness and determinism gates (ISSUE 2 satellite, extended
+//! by ISSUE 8): width 1 must run the identical pre-pool serial
+//! arithmetic, and pooled runs must agree with serial bit for bit —
+//! every fan-out partitions by fixed-shape grains (a function of the
+//! problem size only, never the pool width) with serial-identical
+//! per-element arithmetic, including the tred2 transform accumulation
+//! and every stage of the divide-and-conquer eigensolver's merges
+//! (DESIGN.md §6, §12).
 //!
 //! Thread widths are pinned per test via `threadpool::with_threads`,
-//! which is thread-local, so these tests are safe under the parallel
-//! libtest runner and independent of the ambient GPML_THREADS value.
+//! and eigensolvers via `with_solver` / `SymEigen::new_with` — both
+//! thread-local — so these tests are safe under the parallel libtest
+//! runner and independent of the ambient GPML_THREADS / GPML_EIGEN
+//! values.
 
 use gpml::kernelfn::{cross_gram, gram, Kernel};
-use gpml::linalg::{gemm, strassen, Matrix, SymEigen};
+use gpml::linalg::{gemm, strassen, with_solver, EigenSolver, Matrix, SymEigen};
 use gpml::optim::{self, Bounds, Objective};
-use gpml::spectral::{EigenSystem, HyperParams};
+use gpml::spectral::{EigenSystem, HyperParams, SpectralGp};
 use gpml::util::rng::Rng;
 use gpml::util::threadpool::with_threads;
 use gpml::verify::{differential_suite, SuiteConfig};
@@ -145,30 +149,81 @@ fn strassen_bitwise_across_widths() {
 }
 
 #[test]
-fn eigendecomposition_within_1e12_across_widths() {
+fn eigendecomposition_bitwise_across_widths() {
     let mut rng = Rng::new(16);
     // above the eigensolver's fan-out threshold (steps i >= ~256 pool)
     let x = random(&mut rng, 400, 3);
     let k = gram(Kernel::Rbf { xi2: 1.5 }, &x);
+    // the ambient-default solver (whichever GPML_EIGEN selected): since
+    // ISSUE 8 the tred2 transform accumulation reduces fixed-shape
+    // blocks, so the full solve — not just the tridiagonal phase — is
+    // bit-identical across widths
     let e1 = with_threads(1, || SymEigen::new(&k).expect("serial eigensolver"));
     let e4 = with_threads(4, || SymEigen::new(&k).expect("pooled eigensolver"));
-    // the tridiagonal (d, e) path is bit-identical across widths; only
-    // the accumulated transform sees the block reduction, so both
-    // eigenvalues and eigenvectors must agree far inside 1e-12
-    let scale = e1.values.last().copied().unwrap_or(1.0).abs().max(1.0);
-    for (v1, v4) in e1.values.iter().zip(&e4.values) {
-        assert!(
-            (v1 - v4).abs() <= 1e-12 * scale,
-            "eigenvalue drift across widths: {v1} vs {v4}"
-        );
-    }
+    assert_eq!(e1.values, e4.values, "eigenvalue drift across widths");
     assert!(
-        e1.vectors.max_abs_diff(&e4.vectors) <= 1e-12,
+        e1.vectors.data() == e4.vectors.data(),
         "eigenvector drift {} across widths",
         e1.vectors.max_abs_diff(&e4.vectors)
     );
     // and the pooled decomposition still reconstructs the input
     assert!(e4.reconstruct().max_abs_diff(&k) < 1e-8);
+}
+
+#[test]
+fn dac_eigendecomposition_bitwise_across_widths() {
+    let mut rng = Rng::new(19);
+    // N = 300: three recursion levels with odd splits (75/37/...), and
+    // large enough for the secular/z-hat/GEMM fan-outs to engage
+    let x = random(&mut rng, 300, 3);
+    let k = gram(Kernel::Rbf { xi2: 1.2 }, &x);
+    let e1 = with_threads(1, || SymEigen::new_with(&k, EigenSolver::Dac).unwrap());
+    for width in [2usize, 4, 8] {
+        let ew = with_threads(width, || SymEigen::new_with(&k, EigenSolver::Dac).unwrap());
+        assert_eq!(e1.values, ew.values, "D&C eigenvalues drift at width {width}");
+        assert!(
+            e1.vectors.data() == ew.vectors.data(),
+            "D&C eigenvectors drift at width {width}"
+        );
+    }
+    // width 1 is the serial merge path by construction (the pool plan
+    // collapses to the caller's thread); it must also be what a plain
+    // un-pinned serial run produces
+    let serial = with_threads(1, || SymEigen::new_with(&k, EigenSolver::Dac).unwrap());
+    assert_eq!(serial.values, e1.values);
+    assert!(serial.vectors.data() == e1.vectors.data());
+}
+
+#[test]
+fn setup_tune_predict_roundtrip_bitwise_across_widths_through_dac() {
+    // the full pipeline the solver sits under — gram -> tred2 -> D&C ->
+    // EigenSystem -> grid search -> predict — pinned to D&C at every
+    // pool width; any width-dependent partitioning anywhere in the
+    // stack shows up here as a bit difference
+    let run = |width: usize| {
+        with_threads(width, || {
+            with_solver(EigenSolver::Dac, || {
+                let mut rng = Rng::new(77);
+                let x = random(&mut rng, 260, 3);
+                let y = rng.normal_vec(260);
+                let gp = SpectralGp::fit(Kernel::Rbf { xi2: 1.2 }, x).unwrap();
+                let mut es = gp.eigensystem(&y);
+                let r = optim::grid_search(&mut es, Bounds::default(), 9, 32);
+                let mut rq = Rng::new(78);
+                let xq = random(&mut rq, 7, 3);
+                let (mean, var) = gp.predict(&xq, &y, r.hp);
+                (r.hp, r.score, mean, var)
+            })
+        })
+    };
+    let base = run(1);
+    for width in [2usize, 4, 8] {
+        let got = run(width);
+        assert_eq!(base.0, got.0, "tuned hp drift at width {width}");
+        assert_eq!(base.1, got.1, "tuned score drift at width {width}");
+        assert_eq!(base.2, got.2, "predicted mean drift at width {width}");
+        assert_eq!(base.3, got.3, "predicted variance drift at width {width}");
+    }
 }
 
 #[test]
