@@ -1,75 +1,295 @@
-//! §2.1 — comparison against sparse approximations: the spectral method
-//! costs O(N^3) + k* O(N); a Nyström/SoR baseline costs k* O(N m^2).
-//! The spectral method wins once
-//!     k* > t_eigen / (t_nystrom_eval - t_spec_eval)
-//! and that threshold shrinks as the sparsity budget m/N grows.  This
-//! bench measures the per-eval costs and reports the crossover k* for a
-//! sweep of m/N, plus the approximation error the sparse method pays.
+//! The paper's §2.1 headline: exact spectral tuning (one O(N^3) setup,
+//! then O(N) per evaluation) versus sparse low-rank baselines that pay
+//! O(N m^2) *per evaluation* when the kernel moves under the sweep.
+//!
+//! For each N and each inducing-fraction rung m/N in {1/32 .. 1/2} the
+//! bench measures
+//!
+//! - `setup_total`   — the exact method's one-time gram + eigensolve,
+//! - `spec_eval`     — the exact O(N) eq. 19 score per iterate,
+//! - `sor_eval_r*`   — subset-of-regressors score with the reduced
+//!   spectrum recomputed per call (the §2.1 sweep regime, O(N m^2)),
+//! - `nystrom_eval_r8` — the cheaper Williams–Seeger construction at
+//!   m = N/8 (O(m^3 + N m)),
+//! - `sor_cached_r8` — the cached-spectrum fast path (spectrum built
+//!   once, O(m) per probe; DESIGN.md §13),
+//!
+//! and derives the **crossover** k* = setup / (sparse_eval - spec_eval):
+//! the evaluation count beyond which paying the exact setup wins
+//! outright.  The paper's qualitative claim, asserted here, is that k*
+//! is finite at every rung (the sparse per-eval cost always exceeds the
+//! exact O(N) eval) and shrinks as m/N grows.  Per-rung sparse score
+//! error versus the exact eq. 19 value rides along so the cost
+//! comparison can't quietly trade away correctness.
+//!
+//! Writes `BENCH_sparse.json` (gated in CI at N <= 512 against
+//! `benches/baselines/BENCH_sparse.json`; the weekly `large-n` workflow
+//! runs the N >= 4096 sweep report-only).
+//!
+//! Options (after `cargo bench --bench sparse_crossover --`):
+//!   --sizes 256,512,1024            sweep override
+//!   --max-n 512                     cap the sweep (CI smoke uses this)
+//!   --iters 3                       sparse-eval repetitions per point
 
 mod bench_common;
-
-use std::time::Instant;
 
 use bench_common::*;
 use gpml::kernelfn::{gram, Kernel};
 use gpml::linalg::{Matrix, SymEigen};
-use gpml::sparse::{even_inducing, NystromEvaluator};
+use gpml::sparse::{even_inducing, SparseGp, SparseMethod};
 use gpml::spectral::{EigenSystem, HyperParams};
+use gpml::util::cli::Args;
+use gpml::util::json::Json;
 use gpml::util::rng::Rng;
-use gpml::util::timing::{measure_block, Table};
+use gpml::util::threadpool;
+use gpml::util::timing::{measure, measure_block_stats, Stats, Table};
+
+/// Inducing-fraction rungs: m = N / divisor.
+const RUNGS: [(usize, &str); 5] = [(32, "r32"), (16, "r16"), (8, "r8"), (4, "r4"), (2, "r2")];
+
+/// One (N, rung) crossover record for the JSON payload.
+struct Crossover {
+    n: usize,
+    rung: &'static str,
+    m: usize,
+    sparse_eval_us: f64,
+    err_rel: f64,
+    k_star: f64,
+}
 
 fn main() {
-    println!("== §2.1: spectral (exact) vs Nyström sparse approximation ==");
-    let n = 768;
+    let args = Args::from_env().unwrap_or_default();
+    let default_sizes = [256usize, 512, 1024, 2048, 4096, 8192];
+    let mut sizes = args.get_usize_list("sizes", &default_sizes).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    match args.get_usize("max-n", usize::MAX) {
+        Ok(cap) => sizes.retain(|&n| n <= cap),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    if sizes.is_empty() {
+        eprintln!("empty sweep after --sizes/--max-n filtering");
+        std::process::exit(2);
+    }
+    let iters = args.get_usize("iters", 0).unwrap_or(0);
+
+    let pooled = threadpool::num_threads();
     let hp = HyperParams::new(0.7, 1.3);
     let kern = Kernel::Rbf { xi2: 1.5 };
-
-    let mut rng = Rng::new(7);
-    let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
-    let y = rng.normal_vec(n);
-    let k = gram(kern, &x);
-
-    let t = Instant::now();
-    let eig = SymEigen::new(&k).expect("eigensolver");
-    let t_eigen = t.elapsed().as_secs_f64();
-    let es = EigenSystem::new(&eig, &y);
-    let exact = es.score(hp);
-    let t_spec_us = measure_block(20, rust_iters(n), || {
-        std::hint::black_box(es.score(hp));
-    });
-    println!("N={n}: eigendecomposition {t_eigen:.3} s, spectral eval {t_spec_us:.2} us, exact score {exact:.4}");
+    println!(
+        "== sparse crossover (paper §2.1): exact O(N^3)+k O(N) vs sparse k O(N m^2) \
+         ({pooled} threads) =="
+    );
 
     let mut table = Table::new(&[
+        "N",
+        "rung",
         "m",
-        "m/N",
-        "nystrom us/eval",
-        "score |err|",
-        "crossover k*",
+        "setup ms",
+        "spec us",
+        "sparse ms",
+        "err rel",
+        "k*",
     ]);
-    for &m in &[24usize, 48, 96, 192, 384] {
-        let ny = NystromEvaluator::new(kern, &x, &y, &even_inducing(n, m));
-        let iters = (200_000 / m).clamp(3, 200);
-        let t_ny_us = measure_block(2, iters, || {
+    let mut st_setup: Vec<Stats> = vec![];
+    let mut st_spec: Vec<Stats> = vec![];
+    let mut st_sor: Vec<Vec<Stats>> = vec![vec![]; RUNGS.len()];
+    let mut st_ny8: Vec<Stats> = vec![];
+    let mut st_cached8: Vec<Stats> = vec![];
+    let mut crossings: Vec<Crossover> = vec![];
+
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let x = Matrix::from_fn(n, 4, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+
+        // -- exact side: one-time setup, then O(N) per-iterate evals.
+        // The setup is minutes at N = 8192, so repetitions taper with N
+        // (the eval series carry the sample spread; the setup enters k*
+        // as a one-time numerator).
+        let setup_reps = if n <= 512 {
+            3
+        } else if n <= 2048 {
+            2
+        } else {
+            1
+        };
+        let mut captured: Option<EigenSystem> = None;
+        let setup = measure(0, setup_reps, || {
+            let k = gram(kern, &x);
+            let eig = SymEigen::new(&k).expect("gram eigensolve");
+            captured = Some(EigenSystem::new(&eig, &y));
+        });
+        let es = captured.expect("setup ran");
+        let exact_score = es.score(hp);
+        let spec = measure_block_stats(1, rust_iters(n), 5, || {
+            std::hint::black_box(es.score(hp));
+        });
+
+        for (r, &(div, rung)) in RUNGS.iter().enumerate() {
+            let m = (n / div).max(1);
+            let sp = SparseGp::new(SparseMethod::Sor, kern, &x, &y, &even_inducing(n, m))
+                .expect("sparse build");
+            // per-eval recompute cost scales as N m^2: taper repetitions
+            // to keep the largest rungs bounded (one eval is minutes at
+            // N = 8192, m = N/2)
+            let reps = if iters > 0 {
+                iters
+            } else {
+                (200_000_000 / (n * m * m).max(1)).clamp(1, 50)
+            };
+            let st = measure(0, reps, || {
+                std::hint::black_box(sp.score(hp));
+            });
+            let err_rel = (sp.score(hp) - exact_score).abs() / exact_score.abs().max(1.0);
+            // §2.1 ledger: exact = setup + k * spec, sparse = k * eval;
+            // they cross at k* = setup / (eval - spec), finite whenever
+            // the sparse per-eval cost exceeds the exact O(N) eval
+            let k_star = if st.median_us > spec.median_us {
+                setup.median_us / (st.median_us - spec.median_us)
+            } else {
+                f64::INFINITY
+            };
+            table.row(&[
+                n.to_string(),
+                rung.to_string(),
+                m.to_string(),
+                format!("{:.1}", setup.median_us / 1e3),
+                format!("{:.2}", spec.median_us),
+                format!("{:.2}", st.median_us / 1e3),
+                format!("{err_rel:.2e}"),
+                if k_star.is_finite() { format!("{k_star:.1}") } else { "never".into() },
+            ]);
+            crossings.push(Crossover { n, rung, m, sparse_eval_us: st.median_us, err_rel, k_star });
+            st_sor[r].push(st);
+        }
+
+        // -- the r8 rung again under the two alternative evaluators:
+        // Williams–Seeger recompute and the cached-spectrum fast path
+        let m8 = (n / 8).max(1);
+        let idx8 = even_inducing(n, m8);
+        let ny = SparseGp::new(SparseMethod::Nystrom, kern, &x, &y, &idx8).expect("nystrom build");
+        let reps8 = if iters > 0 {
+            iters
+        } else {
+            (200_000_000 / (n * m8 * m8).max(1)).clamp(1, 50)
+        };
+        let st_ny = measure(0, reps8, || {
             std::hint::black_box(ny.score(hp));
         });
-        let err = (ny.score(hp) - exact).abs();
-        let crossover = if t_ny_us > t_spec_us {
-            format!("{:.0}", t_eigen * 1e6 / (t_ny_us - t_spec_us))
-        } else {
-            "never".to_string()
-        };
-        table.row(&[
-            m.to_string(),
-            format!("{:.3}", m as f64 / n as f64),
-            format!("{t_ny_us:.1}"),
-            format!("{err:.3e}"),
-            crossover,
-        ]);
+        let mut cached = SparseGp::new(SparseMethod::Sor, kern, &x, &y, &idx8).expect("sor build");
+        let ces = cached.eigensystem().expect("cached spectrum").clone();
+        let st_c = measure_block_stats(1, rust_iters(n), 5, || {
+            std::hint::black_box(ces.score(hp));
+        });
+        st_ny8.push(st_ny);
+        st_cached8.push(st_c);
+        st_setup.push(setup);
+        st_spec.push(spec);
     }
     table.print();
-    println!("\npaper: 'the proposed set of identities provides a speed-up ... even with");
-    println!("respect to approximate methods, at least if k* exceeds a certain threshold");
-    println!("that depends on the sparsity rate m/N' — the crossover column is that");
-    println!("threshold; note the sparse method also pays the score |err| column, the");
-    println!("exact method pays none.");
+
+    let nsf: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+    let spec_med: Vec<f64> = st_spec.iter().map(|s| s.median_us).collect();
+    print_fit("spec_eval", &nsf, &spec_med, "tau(N) ~ a + b N (O(N) per iterate)");
+
+    // machine-readable payload FIRST, acceptance asserts after — a
+    // failed assert in CI must still leave the artifact for debugging
+    // (the upload step runs with `if: always()`)
+    let series: Vec<Series> = vec![
+        Series { label: "setup_total", stats: &st_setup },
+        Series { label: "spec_eval", stats: &st_spec },
+        Series { label: "sor_eval_r32", stats: &st_sor[0] },
+        Series { label: "sor_eval_r16", stats: &st_sor[1] },
+        Series { label: "sor_eval_r8", stats: &st_sor[2] },
+        Series { label: "sor_eval_r4", stats: &st_sor[3] },
+        Series { label: "sor_eval_r2", stats: &st_sor[4] },
+        Series { label: "nystrom_eval_r8", stats: &st_ny8 },
+        Series { label: "sor_cached_r8", stats: &st_cached8 },
+    ];
+    let crossover_json = Json::Arr(
+        crossings
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("n", Json::Num(c.n as f64)),
+                    ("rung", Json::str(c.rung)),
+                    ("m", Json::Num(c.m as f64)),
+                    ("m_over_n", Json::Num(c.m as f64 / c.n as f64)),
+                    ("sparse_eval_us", Json::Num(c.sparse_eval_us)),
+                    ("err_rel", Json::Num(c.err_rel)),
+                    // infinite k* ("sparse never loses") encodes as null
+                    ("k_star", Json::Num(c.k_star)),
+                ])
+            })
+            .collect(),
+    );
+    let payload = bench_json(
+        "sparse",
+        &sizes,
+        &series,
+        vec![
+            ("kernel", Json::str("rbf:1.5")),
+            (
+                "hp",
+                Json::obj(vec![
+                    ("sigma2", Json::Num(hp.sigma2)),
+                    ("lambda2", Json::Num(hp.lambda2)),
+                ]),
+            ),
+            ("crossover", crossover_json),
+        ],
+    );
+    write_bench_json("sparse", &payload);
+
+    // Acceptance (ISSUE 9): the §2.1 claim, qualitatively.  (1) k* is
+    // finite at every rung — a sparse recompute eval costs strictly more
+    // than the exact O(N) eval; (2) k* shrinks as m/N grows, checked at
+    // the ~256x-separated endpoint rungs so scheduler noise cannot flip
+    // the comparison.
+    for c in &crossings {
+        if c.n >= 256 {
+            assert!(
+                c.k_star.is_finite() && c.k_star > 0.0,
+                "acceptance failed: no finite crossover at N={} {} (m={}): sparse eval \
+                 {:.1}us never exceeds the exact O(N) eval",
+                c.n,
+                c.rung,
+                c.m,
+                c.sparse_eval_us
+            );
+        }
+    }
+    for &n in &sizes {
+        if n < 256 {
+            continue;
+        }
+        let at = |rung: &str| {
+            crossings
+                .iter()
+                .find(|c| c.n == n && c.rung == rung)
+                .map(|c| c.k_star)
+                .expect("rung measured")
+        };
+        let (coarse, fine) = (at("r32"), at("r2"));
+        assert!(
+            fine < coarse,
+            "acceptance failed: k* did not shrink with m/N at N={n}: \
+             k*(m=N/2)={fine:.1} vs k*(m=N/32)={coarse:.1}"
+        );
+    }
+    let last = crossings.len() - 1;
+    println!(
+        "\n@ N={}: sparse m=N/2 recompute eval {:.1} ms vs exact O(N) eval {:.3} ms — \
+         exact wins past k* = {:.1} evaluations (err_rel {:.1e})",
+        crossings[last].n,
+        crossings[last].sparse_eval_us / 1e3,
+        st_spec.last().unwrap().median_us / 1e3,
+        crossings[last].k_star,
+        crossings[last].err_rel
+    );
 }

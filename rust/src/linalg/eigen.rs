@@ -28,6 +28,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// under ~3% of the O(N^3) work at N = 2048.
 const PAR_GRAIN: usize = 1 << 16;
 
+/// Upper bound on the number of partial-sum blocks in the `tred2`
+/// transform-accumulation phase.  The block layout must stay a function
+/// of the step size only (the determinism policy), so the cap widens
+/// each block rather than shrinking the fan-out below the pool width:
+/// 64 blocks keeps every hosted-runner width saturated while bounding
+/// the reusable partials buffer at `64 * N` doubles (~4 MB at N = 8192,
+/// versus ~67 MB per step for the uncapped layout).
+const MAX_PARTIAL_BLOCKS: usize = 64;
+
 /// Eigendecomposition `A = U diag(s) U'` of a symmetric matrix.
 #[derive(Clone, Debug)]
 pub struct SymEigen {
@@ -203,6 +212,15 @@ impl SymEigen {
 /// policy; a single block collapses to the pre-pool serial sweep).
 fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
+    // Step-local scratch, hoisted: `vbuf` holds the read-only copy of
+    // row i (the Householder vector / transform row) each step, and
+    // `partials` the per-block partial sums of the accumulation phase.
+    // At N = 8192 the seed allocated these fresh every step — ~67 MB of
+    // partials per step alone; reusing (and block-capping) them keeps
+    // the large-N sweep allocation-flat without changing any arithmetic
+    // within a block.
+    let mut vbuf = vec![0.0f64; n];
+    let mut partials: Vec<f64> = Vec::new();
     for i in (1..n).rev() {
         let l = i - 1;
         let mut h = 0.0;
@@ -222,7 +240,8 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                 z[(i, l)] = f - g;
                 // Row i (the Householder vector, scaled) is read-only for
                 // the rest of this step; a copy keeps the borrows simple.
-                let zi: Vec<f64> = z.row(i)[..=l].to_vec();
+                vbuf[..=l].copy_from_slice(&z.row(i)[..=l]);
+                let zi = &vbuf[..=l];
                 let grain = (PAR_GRAIN / i).max(1);
                 {
                     // e[j] = (A v)_j / h over the leading (l+1) x (l+1)
@@ -252,7 +271,7 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     f += e[j] * zi[j];
                 }
                 let hh = f / (h + h);
-                for (ej, &zij) in e[..=l].iter_mut().zip(&zi) {
+                for (ej, &zij) in e[..=l].iter_mut().zip(zi) {
                     *ej -= hh * zij;
                 }
                 // Rank-2 update of the leading block: row j gets
@@ -268,7 +287,7 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                         let fj = zi[j];
                         let gj = e_ro[j];
                         for (zjk, (&ek, &zik)) in
-                            row[..=j].iter_mut().zip(e_ro[..=j].iter().zip(&zi))
+                            row[..=j].iter_mut().zip(e_ro[..=j].iter().zip(zi))
                         {
                             *zjk -= fj * ek + gj * zik;
                         }
@@ -290,12 +309,18 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let mut gbuf = vec![0.0f64; n];
     for i in 0..n {
         if d[i] != 0.0 {
-            let zi: Vec<f64> = z.row(i)[..i].to_vec();
-            let grain_rows = (PAR_GRAIN / i.max(1)).max(1);
+            vbuf[..i].copy_from_slice(&z.row(i)[..i]);
+            let zi = &vbuf[..i];
             // fixed-shape k-blocks of grain_rows rows: the block layout
             // depends only on the step size i, never on the pool width,
             // so the block-order reduction below is bit-identical at any
-            // GPML_THREADS (width 1 walks the same blocks serially)
+            // GPML_THREADS (width 1 walks the same blocks serially).
+            // MAX_PARTIAL_BLOCKS caps the partial-sum footprint at large
+            // i (the seed's uncapped layout hit blocks ~ i^2/PAR_GRAIN,
+            // ~67 MB of partials per step at i = 8192) while staying far
+            // above any realistic pool width.
+            let grain_rows =
+                (PAR_GRAIN / i.max(1)).max(1).max(div_ceil(i.max(1), MAX_PARTIAL_BLOCKS));
             let blocks = div_ceil(i.max(1), grain_rows);
             if blocks <= 1 {
                 // one block == the pre-pool serial sweep, bit for bit
@@ -314,10 +339,15 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             } else {
                 // contiguous k-blocks accumulate private partials (each
                 // block row-streams exactly like the serial sweep), then
-                // a serial block-order reduction
-                let mut partials = vec![0.0f64; blocks * i];
+                // a serial block-order reduction; the hoisted buffer is
+                // re-zeroed per block before accumulating
+                let plen = blocks * i;
+                if partials.len() < plen {
+                    partials.resize(plen, 0.0);
+                }
                 let zd = z.data();
-                threadpool::par_chunks_mut(&mut partials, i, |b, part| {
+                threadpool::par_chunks_mut(&mut partials[..plen], i, |b, part| {
+                    part.fill(0.0);
                     let k0 = b * grain_rows;
                     let k1 = (k0 + grain_rows).min(i);
                     for k in k0..k1 {

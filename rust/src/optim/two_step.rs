@@ -305,6 +305,11 @@ pub struct TwoStepResult {
 /// wavefront search fans one call per candidate across the thread pool.
 /// Implementations count the setups they *really* built (vs served from
 /// a cache) so [`TwoStepResult::outer_evals`] stays truthful.
+///
+/// The setup does not have to be the exact O(N^3) eigendecomposition:
+/// [`crate::sparse::SparseProvider`] satisfies the same contract with an
+/// O(N m^2) reduced spectrum, which is how the §2.1 exact-vs-sparse
+/// comparison drives both methods through one engine (DESIGN.md §13).
 pub trait SetupProvider: Sync {
     type Obj: Objective + Send;
 

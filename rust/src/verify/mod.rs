@@ -23,6 +23,10 @@
 //!   [`Kernel::RbfArd`] gram vs the isotropic gram on rescaled inputs (an
 //!   exact algebraic identity), plus a finite-difference check of the
 //!   score's slope along each theta component through both constructions.
+//! - [`sparse_differential_suite`] — the §2.1 sparse baselines
+//!   (DESIGN.md §13): full-inducing SoR/Nyström collapse to the exact
+//!   score, and the compact (m+1)-slot SoR spectrum vs the dense
+//!   `C W^{-1} C'` kernel run through the ordinary full-size pipeline.
 //!
 //! ## Tolerance model
 //!
@@ -636,6 +640,128 @@ pub fn ard_differential_suite(sizes: &[usize], seed: u64) -> VerifyReport {
     report
 }
 
+/// Sparse-baseline differential gates (the ISSUE 9 §2.1 subsystem —
+/// DESIGN.md §13): for each `N` in `sizes`, draw random 3-feature data
+/// and check
+///
+/// 1. **full-inducing exactness** — with `m = N` both the
+///    subset-of-regressors and the Williams–Seeger Nyström compact
+///    spectra must reproduce the exact eq. 19 score over a moderate
+///    hyperparameter grid (the approximations collapse to the identity
+///    there; the only legitimate daylight is the `1e-10 m` inducing-Gram
+///    jitter and the eigen-representation noise of running two different
+///    eigensolves), and
+/// 2. **compact-spectrum fidelity** — at `m = N/2` the SoR score
+///    computed from the compact (m+1)-slot spectrum must equal the eq. 19
+///    score of the *dense* N x N SoR kernel `K^ = C W^{-1} C'` evaluated
+///    through the ordinary full-size pipeline — the differential check
+///    that the residual null-slot construction ([`crate::sparse`]) is an
+///    identity, not an approximation.
+pub fn sparse_differential_suite(sizes: &[usize], seed: u64) -> VerifyReport {
+    use crate::linalg::Cholesky;
+    use crate::sparse::{even_inducing, SparseGp, SparseMethod};
+
+    let mut report = VerifyReport::default();
+    let mut rng = Rng::new(seed);
+    let kernel = Kernel::Rbf { xi2: 1.5 };
+    let hps = [
+        HyperParams::new(1e-2, 0.3),
+        HyperParams::new(0.3, 1.0),
+        HyperParams::new(1.0, 10.0),
+        HyperParams::new(10.0, 0.1),
+    ];
+    // scale-shift of the spectrum from the 1e-10 m inducing-Gram jitter,
+    // propagated like the eigen-representation noise (module docs)
+    let jitter_noise = |es: &EigenSystem, hp: HyperParams, mags: &Evaluation| -> f64 {
+        1e-10 * es.s.len() as f64 * hp.lambda2 * mags.jac[0].abs()
+    };
+    for &n in sizes {
+        let x = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let y = rng.normal_vec(n);
+        let k = kernelfn::gram(kernel, &x);
+        let ctx = format!("sparse N={n}");
+        report.cases += 1;
+        let eigen = match SymEigen::new(&k) {
+            Ok(e) => e,
+            Err(e) => {
+                report.check(&ctx, &format!("eigendecomposition ({e})"), f64::NAN, 0.0, 0.0);
+                continue;
+            }
+        };
+        let es = EigenSystem::new(&eigen, &y);
+
+        // (1) m = N: both constructions collapse to the exact method
+        let all: Vec<usize> = (0..n).collect();
+        for method in [SparseMethod::Sor, SparseMethod::Nystrom] {
+            let sp = match SparseGp::new(method, kernel, &x, &y, &all) {
+                Ok(sp) => sp,
+                Err(e) => {
+                    report.check(&ctx, &format!("sparse build ({e})"), f64::NAN, 0.0, 0.0);
+                    continue;
+                }
+            };
+            for &hp in &hps {
+                let got = sp.score(hp);
+                let want = es.score(hp);
+                let mags = es.evaluate_magnitudes(hp);
+                let repr = eigen_repr_noise(&es, hp, &mags);
+                let tol = 1e-5 * want.abs().max(got.abs())
+                    + noise_floor(n, mags.score)
+                    + 2.0 * repr.score
+                    + jitter_noise(&es, hp, &mags);
+                report.check(
+                    &ctx,
+                    &format!("score: {} m=N vs exact eq.19", method.as_str()),
+                    got,
+                    want,
+                    tol,
+                );
+            }
+        }
+
+        // (2) m = N/2: compact SoR spectrum vs the dense SoR kernel
+        if n >= 8 {
+            let idx = even_inducing(n, n / 2);
+            let cols: Vec<usize> = (0..x.cols()).collect();
+            let xu = x.select(&idx, &cols);
+            let c = kernelfn::cross_gram(kernel, &x, &xu);
+            let mut w = kernelfn::gram(kernel, &xu);
+            w.add_diag(1e-10 * idx.len() as f64);
+            let dense = Cholesky::new(&w)
+                .map_err(|e| e.to_string())
+                .map(|ch| matmul(&c, &ch.solve_mat(&c.t())))
+                .and_then(|khat| SymEigen::new(&khat).map_err(|e| e.to_string()))
+                .map(|eig| EigenSystem::new(&eig, &y));
+            let sp = SparseGp::new(SparseMethod::Sor, kernel, &x, &y, &idx)
+                .map_err(|e| e.to_string());
+            match (dense, sp) {
+                (Ok(es_hat), Ok(sp)) => {
+                    for &hp in &hps {
+                        let got = sp.score(hp);
+                        let want = es_hat.score(hp);
+                        let mags = es_hat.evaluate_magnitudes(hp);
+                        let repr = eigen_repr_noise(&es_hat, hp, &mags);
+                        let tol = 1e-5 * want.abs().max(got.abs())
+                            + noise_floor(n, mags.score)
+                            + 2.0 * repr.score;
+                        report.check(
+                            &ctx,
+                            "score: compact SoR spectrum vs dense C W^-1 C' eq.19",
+                            got,
+                            want,
+                            tol,
+                        );
+                    }
+                }
+                (Err(e), _) | (_, Err(e)) => {
+                    report.check(&ctx, &format!("SoR dense path ({e})"), f64::NAN, 0.0, 0.0);
+                }
+            }
+        }
+    }
+    report
+}
+
 /// Tolerances for [`spectral_gate`].  Every bound is relative to the
 /// spectral scale `max(1, max_j |lambda_j|)` of the decomposition under
 /// test, so the gate is meaningful for Gram matrices of any magnitude.
@@ -857,6 +983,37 @@ mod tests {
             }
         }
         assert!(maxdiff > 1e-3, "swapped lengthscales went undetected ({maxdiff:.3e})");
+    }
+
+    #[test]
+    fn sparse_suite_is_clean_at_small_sizes() {
+        let report = sparse_differential_suite(&[10, 24], 0x5ba2_5eed);
+        assert!(report.ok(), "{}", report.summary());
+        assert_eq!(report.cases, 2);
+        // per size: 2 methods x 4 hps full-inducing + 4 hps dense SoR
+        assert_eq!(report.checks, 2 * 12);
+    }
+
+    #[test]
+    fn sparse_suite_tolerance_is_discriminative() {
+        let mut rng = Rng::new(31);
+        let x = Matrix::from_fn(24, 3, |_, _| rng.normal());
+        let y = rng.normal_vec(24);
+        let kernel = Kernel::Rbf { xi2: 1.5 };
+        let k = kernelfn::gram(kernel, &x);
+        let es = EigenSystem::new(&SymEigen::new(&k).unwrap(), &y);
+        let idx = crate::sparse::even_inducing(24, 12);
+        let sp =
+            crate::sparse::SparseGp::new(crate::sparse::SparseMethod::Sor, kernel, &x, &y, &idx)
+                .unwrap();
+        let hp = HyperParams::new(0.3, 1.0);
+        // a genuinely reduced m: the sparse score is an approximation,
+        // so the *tight* full-inducing tolerance must reject it — the
+        // suite's teeth depend on that tolerance being discriminative
+        let diff = (sp.score(hp) - es.score(hp)).abs();
+        let mags = es.evaluate_magnitudes(hp);
+        let tight = 1e-5 * es.score(hp).abs() + noise_floor(24, mags.score);
+        assert!(diff > tight, "m=N/2 approximation error {diff:.3e} under tolerance {tight:.3e}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 use gpml::kernelfn::{cross_gram, gram, Kernel};
 use gpml::linalg::{gemm, strassen, with_solver, EigenSolver, Matrix, SymEigen};
 use gpml::optim::{self, Bounds, Objective};
+use gpml::sparse::{even_inducing, SparseGp, SparseMethod};
 use gpml::spectral::{EigenSystem, HyperParams, SpectralGp};
 use gpml::util::rng::Rng;
 use gpml::util::threadpool::with_threads;
@@ -270,6 +271,39 @@ fn grid_search_result_bitwise_across_widths() {
     assert_eq!(r1.hp, r4.hp);
     assert_eq!(r1.score, r4.score);
     assert_eq!(r1.evals, r4.evals);
+}
+
+#[test]
+fn sparse_reduced_spectrum_bitwise_across_widths() {
+    // ISSUE 9: the SoR pipeline fans out twice — the row-blocked
+    // B = C L^{-T} solve (fixed-shape grain, a function of m only) and
+    // the pooled ata — and Nyström leans on the pooled gram/eigen path;
+    // at m = 96 the B-solve grain is ~14 rows/block, so N_PAR = 200 rows
+    // genuinely split across workers at width 4+.
+    let mut rng = Rng::new(20);
+    let x = random(&mut rng, N_PAR, 4);
+    let y = rng.normal_vec(N_PAR);
+    let kern = Kernel::Rbf { xi2: 1.5 };
+    let idx = even_inducing(N_PAR, 96);
+    let hp = HyperParams::new(0.7, 1.3);
+    for method in [SparseMethod::Sor, SparseMethod::Nystrom] {
+        let tag = method.as_str();
+        let run = |width: usize| {
+            with_threads(width, || {
+                let mut sp = SparseGp::new(method, kern, &x, &y, &idx).unwrap();
+                let es = sp.eigensystem().unwrap().clone();
+                let score = es.score(hp);
+                (es, score)
+            })
+        };
+        let base = run(1);
+        for width in [2usize, 4, 8] {
+            let got = run(width);
+            assert_eq!(base.0.s, got.0.s, "{tag} eigenvalue drift at width {width}");
+            assert_eq!(base.0.y2t, got.0.y2t, "{tag} projected-mass drift at width {width}");
+            assert_eq!(base.1.to_bits(), got.1.to_bits(), "{tag} score drift at width {width}");
+        }
+    }
 }
 
 #[test]
