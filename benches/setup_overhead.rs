@@ -1,16 +1,21 @@
 //! Setup overhead: the one-time O(N^3) cost the paper amortizes —
-//! `gram` (Gram construction) and `SymEigen::new` (eigendecomposition) —
-//! timed separately across the sweep, serial (`threads = 1`) vs pooled
-//! (the process default width), as the before/after evidence for the
-//! scoped-pool substrate (DESIGN.md §6).
+//! `gram` (Gram construction), `matmul` (the GEMM shape the D&C
+//! back-multiply and the sparse baselines lean on) and `SymEigen::new`
+//! (eigendecomposition) — timed separately across the sweep, serial
+//! (`threads = 1`) vs pooled (the process default width), as the
+//! before/after evidence for the scoped-pool substrate (DESIGN.md §6).
 //!
 //! Since ISSUE 8 the eigendecomposition is timed under *both* solvers
 //! (DESIGN.md §12): `eigen_ql_*` is the classic implicit-shift QL
 //! sweep, `eigen_dac_*` the divide-and-conquer default.  The
 //! `dac_vs_ql` ratio (QL pooled over D&C pooled at the largest N) is
 //! the headline series, with an acceptance floor once the sweep
-//! reaches N >= 512 on >= 4-way hardware; CI smoke runs stay below
-//! that and only feed the bench-gate envelopes in BENCH_setup.json.
+//! reaches N >= 512 on >= 4-way hardware.  ISSUE 10 adds a second
+//! acceptance floor: on AVX2+FMA hardware the `GPML_KERNEL=simd`
+//! microkernel backend must be >= 2x over `scalar` for the serial gram
+//! and GEMM at N >= 1024 (DESIGN.md §14).  CI smoke runs stay below
+//! both floors and only feed the bench-gate envelopes in
+//! BENCH_setup.json.
 //!
 //! Writes `BENCH_setup.json` next to the stdout table.
 //!
@@ -23,7 +28,10 @@ mod bench_common;
 
 use bench_common::*;
 use gpml::kernelfn::{gram, Kernel};
-use gpml::linalg::{EigenSolver, Matrix, SymEigen};
+use gpml::linalg::{
+    default_kernel_backend, gemm, simd_available, with_kernel_backend, EigenSolver, KernelBackend,
+    Matrix, SymEigen,
+};
 use gpml::util::cli::Args;
 use gpml::util::json::Json;
 use gpml::util::rng::Rng;
@@ -52,9 +60,11 @@ fn main() {
 
     let pooled = threadpool::num_threads();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let kb = default_kernel_backend();
     println!(
-        "== setup overhead: gram + SymEigen (ql vs dac), serial vs pooled \
-         ({pooled} threads, {hw}-way hardware) =="
+        "== setup overhead: gram + gemm + SymEigen (ql vs dac), serial vs pooled \
+         ({pooled} threads, {hw}-way hardware, kernel backend: {}) ==",
+        kb.as_str()
     );
     if pooled < 2 {
         println!("(pool width is 1 — set GPML_THREADS or run on a multi-core host for a contrast)");
@@ -64,6 +74,8 @@ fn main() {
         "N",
         "gram 1T ms",
         "gram pooled ms",
+        "gemm 1T ms",
+        "gemm pooled ms",
         "ql 1T ms",
         "ql pooled ms",
         "dac 1T ms",
@@ -72,6 +84,8 @@ fn main() {
     ]);
     let mut g1: Vec<Stats> = vec![];
     let mut gp: Vec<Stats> = vec![];
+    let mut ge1: Vec<Stats> = vec![];
+    let mut gep: Vec<Stats> = vec![];
     let mut ql1: Vec<Stats> = vec![];
     let mut qlp: Vec<Stats> = vec![];
     let mut dac1: Vec<Stats> = vec![];
@@ -100,6 +114,14 @@ fn main() {
         let st_gp = measure(0, reps, || {
             std::hint::black_box(gram(kern, &x));
         });
+        let st_ge1 = threadpool::with_threads(1, || {
+            measure(0, reps, || {
+                std::hint::black_box(gemm::matmul(&k, &k));
+            })
+        });
+        let st_gep = measure(0, reps, || {
+            std::hint::black_box(gemm::matmul(&k, &k));
+        });
         let st_ql1 = threadpool::with_threads(1, || {
             measure(0, reps, || {
                 std::hint::black_box(SymEigen::new_with(&k, EigenSolver::Ql).expect("ql"));
@@ -121,6 +143,8 @@ fn main() {
             n.to_string(),
             format!("{:.1}", st_g1.median_us / 1e3),
             format!("{:.1}", st_gp.median_us / 1e3),
+            format!("{:.1}", st_ge1.median_us / 1e3),
+            format!("{:.1}", st_gep.median_us / 1e3),
             format!("{:.1}", st_ql1.median_us / 1e3),
             format!("{:.1}", st_qlp.median_us / 1e3),
             format!("{:.1}", st_dac1.median_us / 1e3),
@@ -129,6 +153,8 @@ fn main() {
         ]);
         g1.push(st_g1);
         gp.push(st_gp);
+        ge1.push(st_ge1);
+        gep.push(st_gep);
         ql1.push(st_ql1);
         qlp.push(st_qlp);
         dac1.push(st_dac1);
@@ -138,14 +164,15 @@ fn main() {
 
     let last = sizes.len() - 1;
     let gram_speedup = g1[last].median_us / gp[last].median_us;
+    let gemm_speedup = ge1[last].median_us / gep[last].median_us;
     let eigen_speedup = dac1[last].median_us / dacp[last].median_us;
     let dac_over_ql = qlp[last].median_us / dacp[last].median_us;
     let setup_speedup = (g1[last].median_us + dac1[last].median_us)
         / (gp[last].median_us + dacp[last].median_us);
     println!(
-        "\n@ N={}: gram {gram_speedup:.2}x, eigen(dac) {eigen_speedup:.2}x, gram+eigen \
-         {setup_speedup:.2}x ({pooled} threads vs 1); dac over ql {dac_over_ql:.2}x \
-         (acceptance floor at N>=512: dac beats ql)",
+        "\n@ N={}: gram {gram_speedup:.2}x, gemm {gemm_speedup:.2}x, eigen(dac) \
+         {eigen_speedup:.2}x, gram+eigen {setup_speedup:.2}x ({pooled} threads vs 1); \
+         dac over ql {dac_over_ql:.2}x (acceptance floor at N>=512: dac beats ql)",
         sizes[last]
     );
 
@@ -161,12 +188,62 @@ fn main() {
         );
     }
 
+    // Scalar-vs-simd contrast at the largest N (ISSUE 10): serial gram
+    // and GEMM under each pinned microkernel backend.  Off AVX2+FMA both
+    // pins resolve to the scalar path and the ratio prints as ~1x.
+    let nmax = sizes[last];
+    let mut rng = Rng::new(nmax as u64);
+    let x = Matrix::from_fn(nmax, 4, |_, _| rng.normal());
+    let kern = Kernel::Rbf { xi2: 1.5 };
+    let k = gram(kern, &x);
+    let contrast_reps = if iters > 0 { iters } else { 2 };
+    let timed = |backend: KernelBackend, f: &dyn Fn()| {
+        threadpool::with_threads(1, || {
+            with_kernel_backend(backend, || measure(0, contrast_reps, f))
+        })
+    };
+    let gram_scalar = timed(KernelBackend::Scalar, &|| {
+        std::hint::black_box(gram(kern, &x));
+    });
+    let gram_simd = timed(KernelBackend::Simd, &|| {
+        std::hint::black_box(gram(kern, &x));
+    });
+    let gemm_scalar = timed(KernelBackend::Scalar, &|| {
+        std::hint::black_box(gemm::matmul(&k, &k));
+    });
+    let gemm_simd = timed(KernelBackend::Simd, &|| {
+        std::hint::black_box(gemm::matmul(&k, &k));
+    });
+    let gram_simd_speedup = gram_scalar.median_us / gram_simd.median_us;
+    let gemm_simd_speedup = gemm_scalar.median_us / gemm_simd.median_us;
+    println!(
+        "simd vs scalar @ N={nmax} (serial): gram {gram_simd_speedup:.2}x, gemm \
+         {gemm_simd_speedup:.2}x (avx2+fma detected: {})",
+        simd_available()
+    );
+
+    // Acceptance (ISSUE 10): the vector backend must be >= 2x over the
+    // scalar backend for both GEMM-shaped kernels at N >= 1024 on
+    // hardware that can actually run it.
+    if simd_available() && nmax >= 1024 {
+        assert!(
+            gram_simd_speedup >= 2.0,
+            "acceptance failed: simd gram only {gram_simd_speedup:.2}x vs scalar at N={nmax}"
+        );
+        assert!(
+            gemm_simd_speedup >= 2.0,
+            "acceptance failed: simd gemm only {gemm_simd_speedup:.2}x vs scalar at N={nmax}"
+        );
+    }
+
     let payload = bench_json(
         "setup",
         &sizes,
         &[
             Series { label: "gram_serial", stats: &g1 },
             Series { label: "gram_pooled", stats: &gp },
+            Series { label: "gemm_serial", stats: &ge1 },
+            Series { label: "gemm_pooled", stats: &gep },
             Series { label: "eigen_ql_serial", stats: &ql1 },
             Series { label: "eigen_ql_pooled", stats: &qlp },
             Series { label: "eigen_dac_serial", stats: &dac1 },
@@ -174,11 +251,14 @@ fn main() {
         ],
         vec![
             ("threads_pooled", Json::Num(pooled as f64)),
+            ("kernel_backend", Json::str(kb.as_str())),
+            ("simd_available", Json::Bool(simd_available())),
             (
                 "speedup_at_max_n",
                 Json::obj(vec![
                     ("n", Json::Num(sizes[last] as f64)),
                     ("gram", Json::Num(gram_speedup)),
+                    ("gemm", Json::Num(gemm_speedup)),
                     ("eigen", Json::Num(eigen_speedup)),
                     ("setup", Json::Num(setup_speedup)),
                 ]),
@@ -188,6 +268,14 @@ fn main() {
                 Json::obj(vec![
                     ("n", Json::Num(sizes[last] as f64)),
                     ("ql_over_dac_pooled", Json::Num(dac_over_ql)),
+                ]),
+            ),
+            (
+                "simd_vs_scalar_at_max_n",
+                Json::obj(vec![
+                    ("n", Json::Num(nmax as f64)),
+                    ("gram_serial", Json::Num(gram_simd_speedup)),
+                    ("gemm_serial", Json::Num(gemm_simd_speedup)),
                 ]),
             ),
         ],

@@ -7,6 +7,7 @@
 //! matrices through XLA and is cross-checked against these in integration
 //! tests.
 
+use crate::linalg::microkernel::{self, KernelBackend};
 use crate::linalg::Matrix;
 use crate::util::threadpool;
 
@@ -342,30 +343,112 @@ fn dist(x: &[f64], y: &[f64]) -> f64 {
     x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
 }
 
+/// Fast-path parameters for the RBF/ARD gram builders (DESIGN.md §14):
+/// the per-dimension divisor that maps the inputs onto the isotropic
+/// `xi2 = 1` problem (`None` = no rescale) and the exponent scale
+/// `neg_inv = -1 / (2 xi2)`.  `None` overall = family not blocked
+/// (Matérn/polynomial/linear keep the per-pair [`Kernel::eval`] path).
+fn rbf_fast_params(kernel: &Kernel, p: usize) -> Option<(Option<Vec<f64>>, f64)> {
+    match *kernel {
+        Kernel::Rbf { xi2 } => Some((None, -1.0 / (2.0 * xi2))),
+        // dividing by sqrt(xi2_d) up front is bitwise the rescaled-inputs
+        // construction the ARD differential gate (verify/mod.rs) and the
+        // ARD unit tests build by hand
+        Kernel::RbfArd { xi2 } if xi2.len() == p => {
+            Some((Some(xi2.as_slice().iter().map(|v| v.sqrt()).collect()), -0.5))
+        }
+        _ => None,
+    }
+}
+
+/// One input matrix preprocessed for the RBF fast path: (rescaled)
+/// row-major data, its feature-major transpose (one feature per
+/// contiguous row — the broadcast-FMA axpy streams it), and per-row
+/// squared norms via the `sq_chain` FMA fold (which bitwise matches the
+/// row kernel's own self-inner-product, making the gram diagonal exactly
+/// 1.0).
+struct RbfSide {
+    xd: Vec<f64>,
+    xt: Vec<f64>,
+    sq: Vec<f64>,
+}
+
+impl RbfSide {
+    fn build(kb: KernelBackend, x: &Matrix, scale: Option<&[f64]>) -> RbfSide {
+        let (rows, p) = (x.rows(), x.cols());
+        if p == 0 {
+            return RbfSide { xd: vec![], xt: vec![], sq: vec![0.0; rows] };
+        }
+        let mut xd = x.data().to_vec();
+        if let Some(s) = scale {
+            for row in xd.chunks_mut(p) {
+                for (v, &sd) in row.iter_mut().zip(s) {
+                    *v /= sd;
+                }
+            }
+        }
+        let mut xt = vec![0.0f64; p * rows];
+        for (i, row) in xd.chunks(p).enumerate() {
+            for (d, &v) in row.iter().enumerate() {
+                xt[d * rows + i] = v;
+            }
+        }
+        let sq = xd.chunks(p).map(|r| microkernel::sq_chain_with(kb, r)).collect();
+        RbfSide { xd, xt, sq }
+    }
+}
+
 /// Full Gram matrix `K[i, j] = K(x_i, x_j)` (eq. 3); exploits symmetry.
 ///
 /// Row-block parallel (DESIGN.md §6): phase 1 fills each row's upper
 /// triangle `j >= i` (workers own disjoint rows; the dynamic cursor in
 /// `par_for` balances the triangular row costs), phase 2 mirrors the
 /// strict upper triangle down (row `i` writes `j < i` reading `(j, i)`,
-/// which phase 2 never writes).  Per-element arithmetic is unchanged, so
-/// output is bit-identical across thread counts.
+/// which phase 2 never writes).  Per-element arithmetic never depends on
+/// the partition, so output is bit-identical across thread counts.
+///
+/// RBF and ARD grams take the blocked fast path (DESIGN.md §14): the
+/// squared distance expands as `||x_i||^2 + ||x_j||^2 - 2 <x_i, x_j>`
+/// with the inner products accumulated by rank-p broadcast-FMA axpy over
+/// the transposed inputs and the exponential applied by the fixed
+/// `exp_fixed` pass — bitwise identical across `GPML_KERNEL` backends,
+/// with the diagonal exactly 1.0 (see `RbfSide`).  ARD rescales the
+/// inputs by `1/sqrt(xi2_d)` up front and runs the isotropic path.
+/// Other families keep the per-pair [`Kernel::eval`] loop.
 pub fn gram(kernel: Kernel, x: &Matrix) -> Matrix {
     let n = x.rows();
     let mut k = Matrix::zeros(n, n);
     if n == 0 {
         return k;
     }
+    let p = x.cols();
     let grain = (PAR_GRAIN_EVALS / n).max(1);
+    let fast = rbf_fast_params(&kernel, p);
+    // backend resolved once, on the calling thread (pool workers don't
+    // inherit the scoped override)
+    let kb = microkernel::default_kernel_backend();
     let shared = threadpool::SharedMut::new(k.data_mut());
-    threadpool::par_for(n, grain, |i| {
-        // Safety: phase-1 worker `i` writes only row `i`.
-        let row = unsafe { shared.slice_mut(i * n, (i + 1) * n) };
-        let xi = x.row(i);
-        for (j, slot) in row.iter_mut().enumerate().skip(i) {
-            *slot = kernel.eval(xi, x.row(j));
-        }
-    });
+    if let Some((scale, neg_inv)) = fast {
+        let side = RbfSide::build(kb, x, scale.as_deref());
+        threadpool::par_for(n, grain, |i| {
+            // Safety: phase-1 worker `i` writes only row `i`.
+            let row = unsafe { shared.slice_mut(i * n + i, (i + 1) * n) };
+            let xi = &side.xd[i * p..(i + 1) * p];
+            for (d, &xid) in xi.iter().enumerate() {
+                microkernel::fma_axpy_with(kb, row, xid, &side.xt[d * n + i..(d + 1) * n]);
+            }
+            microkernel::rbf_finish_with(kb, row, side.sq[i], &side.sq[i..], neg_inv);
+        });
+    } else {
+        threadpool::par_for(n, grain, |i| {
+            // Safety: phase-1 worker `i` writes only row `i`.
+            let row = unsafe { shared.slice_mut(i * n, (i + 1) * n) };
+            let xi = x.row(i);
+            for (j, slot) in row.iter_mut().enumerate().skip(i) {
+                *slot = kernel.eval(xi, x.row(j));
+            }
+        });
+    }
     threadpool::par_for(n, grain, |i| {
         // Safety: phase-2 worker `i` writes `(i, j)` strictly below the
         // diagonal and reads `(j, i)` strictly above it — the write and
@@ -378,7 +461,9 @@ pub fn gram(kernel: Kernel, x: &Matrix) -> Matrix {
 }
 
 /// Cross-Gram `K[i, j] = K(a_i, b_j)` for prediction (`k_x~` rows, eq. 4).
-/// Row-block parallel like [`gram`] (disjoint output rows).
+/// Row-block parallel like [`gram`] (disjoint output rows), with the
+/// same RBF/ARD fast path; `cross_gram(k, x, x)` is bitwise equal to
+/// `gram(k, x)` (the inner-product FMA chains commute per element).
 pub fn cross_gram(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "feature dims differ");
     let (m, n) = (a.rows(), b.rows());
@@ -386,7 +471,25 @@ pub fn cross_gram(kernel: Kernel, a: &Matrix, b: &Matrix) -> Matrix {
     if m == 0 || n == 0 {
         return k;
     }
+    let p = a.cols();
     let rows_per_chunk = (PAR_GRAIN_EVALS / n).max(1);
+    if let Some((scale, neg_inv)) = rbf_fast_params(&kernel, p) {
+        let kb = microkernel::default_kernel_backend();
+        let aside = RbfSide::build(kb, a, scale.as_deref());
+        let bside = RbfSide::build(kb, b, scale.as_deref());
+        threadpool::par_chunks_mut(k.data_mut(), rows_per_chunk * n, |ci, chunk| {
+            let i0 = ci * rows_per_chunk;
+            for (r, row) in chunk.chunks_mut(n).enumerate() {
+                let i = i0 + r;
+                let ai = &aside.xd[i * p..(i + 1) * p];
+                for (d, &aid) in ai.iter().enumerate() {
+                    microkernel::fma_axpy_with(kb, row, aid, &bside.xt[d * n..(d + 1) * n]);
+                }
+                microkernel::rbf_finish_with(kb, row, aside.sq[i], &bside.sq, neg_inv);
+            }
+        });
+        return k;
+    }
     threadpool::par_chunks_mut(k.data_mut(), rows_per_chunk * n, |ci, chunk| {
         let i0 = ci * rows_per_chunk;
         for (r, row) in chunk.chunks_mut(n).enumerate() {

@@ -16,6 +16,7 @@
 //! orthogonal `U` whose *columns* are eigenvectors, `K = U diag(s) U'`.
 
 use super::matrix::Matrix;
+use super::microkernel;
 use crate::util::threadpool::{self, div_ceil, SharedMut};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -196,6 +197,23 @@ impl SymEigen {
     }
 }
 
+/// Householder tridiagonalization alone (the `tred2` phase of
+/// [`SymEigen::new`]), exposed for the kernel-ablation bench: returns
+/// the accumulated transform, the diagonal, and the sub-diagonal
+/// (`e[1..]`).
+pub fn tridiagonalize(a: &Matrix) -> (Matrix, Vec<f64>, Vec<f64>) {
+    assert!(a.is_square(), "tridiagonalization needs a square matrix");
+    let n = a.rows();
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    if n > 0 {
+        tred2(&mut z, &mut d, &mut e);
+    }
+    (z, d, e)
+}
+
 /// Householder reduction to tridiagonal form, accumulating the transform.
 /// On exit `z` holds the orthogonal matrix, `d` the diagonal, `e[1..]` the
 /// sub-diagonal. (Port of EISPACK tred2 as given in Numerical Recipes §11.2.)
@@ -210,8 +228,17 @@ impl SymEigen {
 /// order — so the accumulated transform, and with it the whole solve,
 /// is bit-identical at any `GPML_THREADS` (DESIGN.md §12's determinism
 /// policy; a single block collapses to the pre-pool serial sweep).
+///
+/// The inner arithmetic runs on the fixed-lane microkernels
+/// (DESIGN.md §14): the symmetric matvec's row part is the 8-lane dot,
+/// the rank-2 and rank-1 row updates and the accumulation sweeps are the
+/// broadcast-FMA axpy — so the whole reduction is additionally
+/// bit-identical across `GPML_KERNEL` backends.  The backend is resolved
+/// once here, on the calling thread, and captured into the pool closures
+/// (pool workers don't inherit thread-locals).
 fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
+    let kb = microkernel::default_kernel_backend();
     // Step-local scratch, hoisted: `vbuf` holds the read-only copy of
     // row i (the Householder vector / transform row) each step, and
     // `partials` the per-block partial sums of the accumulation phase.
@@ -254,13 +281,13 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     let es = SharedMut::new(e);
                     threadpool::par_for(l + 1, grain, |j| unsafe {
                         zs.write(j * n + i, zi[j] / h);
-                        let mut g = 0.0;
+                        // contiguous row part: the fixed 8-lane dot;
+                        // strided column part: the same scalar FMA chain
+                        // on either backend
                         let zrow_j = zs.slice_ref(j * n, j * n + j + 1);
-                        for k in 0..=j {
-                            g += zrow_j[k] * zi[k];
-                        }
+                        let mut g = microkernel::dot_with(kb, zrow_j, &zi[..=j]);
                         for k in (j + 1)..=l {
-                            g += zs.read(k * n + j) * zi[k];
+                            g = zs.read(k * n + j).mul_add(zi[k], g);
                         }
                         es.write(j, g / h);
                     });
@@ -286,11 +313,14 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                         let j = j0 + r;
                         let fj = zi[j];
                         let gj = e_ro[j];
-                        for (zjk, (&ek, &zik)) in
-                            row[..=j].iter_mut().zip(e_ro[..=j].iter().zip(zi))
-                        {
-                            *zjk -= fj * ek + gj * zik;
-                        }
+                        microkernel::rank2_sub_with(
+                            kb,
+                            &mut row[..=j],
+                            fj,
+                            &e_ro[..=j],
+                            gj,
+                            &zi[..=j],
+                        );
                     }
                 });
             }
@@ -328,13 +358,8 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     *gj = 0.0;
                 }
                 for k in 0..i {
-                    let vik = zi[k];
-                    if vik != 0.0 {
-                        let row = &z.data()[k * n..k * n + i];
-                        for (gj, &zkj) in gbuf[..i].iter_mut().zip(row) {
-                            *gj += vik * zkj;
-                        }
-                    }
+                    let row = &z.data()[k * n..k * n + i];
+                    microkernel::fma_axpy_with(kb, &mut gbuf[..i], zi[k], row);
                 }
             } else {
                 // contiguous k-blocks accumulate private partials (each
@@ -351,13 +376,8 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     let k0 = b * grain_rows;
                     let k1 = (k0 + grain_rows).min(i);
                     for k in k0..k1 {
-                        let vik = zi[k];
-                        if vik != 0.0 {
-                            let row = &zd[k * n..k * n + i];
-                            for (gj, &zkj) in part.iter_mut().zip(row) {
-                                *gj += vik * zkj;
-                            }
-                        }
+                        let row = &zd[k * n..k * n + i];
+                        microkernel::fma_axpy_with(kb, part, zi[k], row);
                     }
                 });
                 for gj in gbuf[..i].iter_mut() {
@@ -374,11 +394,7 @@ fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             threadpool::par_chunks_mut(&mut z.data_mut()[..i * n], grain_rows * n, |_, chunk| {
                 for row in chunk.chunks_mut(n) {
                     let zki = row[i];
-                    if zki != 0.0 {
-                        for (zkj, &gj) in row[..i].iter_mut().zip(&gb[..i]) {
-                            *zkj -= gj * zki;
-                        }
-                    }
+                    microkernel::fma_axpy_with(kb, &mut row[..i], -zki, &gb[..i]);
                 }
             });
         }

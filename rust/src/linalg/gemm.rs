@@ -1,17 +1,23 @@
-//! Blocked dense matrix multiplication.
+//! Blocked dense matrix multiplication on the microkernel layer.
 //!
-//! A cache-blocked ikj-order GEMM with a small unrolled inner loop — not
-//! MKL, but within a small factor of peak for the N <= 8192 sizes the
-//! naive-baseline benches need, and entirely self-contained.  All three
-//! entry points drive disjoint output stripes through the scoped pool
-//! (DESIGN.md §6); the per-element accumulation order never depends on
-//! the thread count, so results are bit-identical serial vs pooled.
+//! All three entry points drive disjoint output stripes through the
+//! scoped pool (DESIGN.md §6) and do their per-element arithmetic in the
+//! fixed-lane microkernels of [`super::microkernel`] (DESIGN.md §14):
+//! `matmul`/`matmul_into` run the packed-panel 4x8 register-tile GEMM,
+//! `matmul_bt` the fixed 8-lane dot, and `ata` the broadcast-FMA axpy.
+//! The per-element accumulation order never depends on the thread count
+//! *or* the backend, so results are bit-identical serial vs pooled and
+//! `GPML_KERNEL=simd` vs `scalar`.  The backend is resolved once per
+//! call on the calling thread (before the fan-out), so the scoped
+//! [`super::microkernel::with_kernel_backend`] override applies to
+//! pooled work too.
 
 use super::matrix::Matrix;
+use super::microkernel;
 use crate::util::threadpool::{self, div_ceil};
 
-/// Cache block edge (in elements). 64x64 f64 tiles = 32 KiB per operand
-/// pair, sized for L1/L2 residency.
+/// Cache block edge (in elements) for the `matmul_bt` (j, k) tiling and
+/// the stripe-height quantum. 64x64 f64 tiles = 32 KiB per operand pair.
 const BLOCK: usize = 64;
 
 /// Minimum multiply-add count per pool worker before a GEMM fans out
@@ -36,7 +42,9 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// `C += A * B` over an existing (zeroed or accumulating) output,
-/// parallel over i-stripes of C.
+/// parallel over i-stripes of C.  Each stripe runs the packed-panel
+/// microkernel GEMM; every C element is an ascending-k FMA chain, so the
+/// result is independent of the stripe partition and the backend.
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     assert_eq!(c.rows(), m);
@@ -46,54 +54,16 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
     let ad = a.data();
     let bd = b.data();
+    let kb = microkernel::default_kernel_backend();
     let rows = stripe_rows(k, n);
     threadpool::par_chunks_mut(c.data_mut(), rows * n, |si, cstripe| {
-        matmul_stripe(ad, bd, cstripe, si * rows, k, n);
+        microkernel::gemm_stripe(kb, ad, bd, cstripe, si * rows, k, n);
     });
 }
 
-/// The blocked ikj kernel over C rows `[i0, i0 + cstripe.len()/n)`.
-fn matmul_stripe(ad: &[f64], bd: &[f64], cstripe: &mut [f64], i0: usize, k: usize, n: usize) {
-    let rows = cstripe.len() / n;
-    for b0 in (0..rows).step_by(BLOCK) {
-        let b1 = (b0 + BLOCK).min(rows);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for j0 in (0..n).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(n);
-                for r in b0..b1 {
-                    let i = i0 + r;
-                    let arow = &ad[i * k..(i + 1) * k];
-                    let crow = &mut cstripe[r * n..(r + 1) * n];
-                    for kk in k0..k1 {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[kk * n..(kk + 1) * n];
-                        // unrolled-by-4 axpy over the j tile
-                        let (mut j, end) = (j0, j1);
-                        while j + 4 <= end {
-                            crow[j] += aik * brow[j];
-                            crow[j + 1] += aik * brow[j + 1];
-                            crow[j + 2] += aik * brow[j + 2];
-                            crow[j + 3] += aik * brow[j + 3];
-                            j += 4;
-                        }
-                        while j < end {
-                            crow[j] += aik * brow[j];
-                            j += 1;
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
 /// `A * B'` without materializing the transpose — blocked over (j, k)
-/// tiles with a four-accumulator unrolled dot kernel (parity with
-/// `matmul`'s treatment), parallel over i-stripes of C.
+/// tiles with the fixed 8-lane dot as the inner kernel, parallel over
+/// i-stripes of C.
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_bt dimension mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
@@ -103,12 +73,14 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     }
     let ad = a.data();
     let bd = b.data();
+    let kb = microkernel::default_kernel_backend();
     let rows = stripe_rows(k, n);
     threadpool::par_chunks_mut(c.data_mut(), rows * n, |si, cstripe| {
         let i0 = si * rows;
         let srows = cstripe.len() / n;
         // (j0, k0) tiles keep a BLOCK x BLOCK window of B rows hot while
-        // the stripe's A rows stream over it.
+        // the stripe's A rows stream over it; C[i][j] accumulates one
+        // 8-lane dot per k block, in ascending k order.
         for j0 in (0..n).step_by(BLOCK) {
             let j1 = (j0 + BLOCK).min(n);
             for k0 in (0..k).step_by(BLOCK) {
@@ -118,7 +90,7 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
                     let crow = &mut cstripe[r * n..(r + 1) * n];
                     for j in j0..j1 {
                         let bseg = &bd[j * k + k0..j * k + k1];
-                        crow[j] += dot_unrolled(aseg, bseg);
+                        crow[j] += microkernel::dot_with(kb, aseg, bseg);
                     }
                 }
             }
@@ -127,75 +99,60 @@ pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Four-accumulator unrolled dot product (the inner kernel `matmul_bt`
-/// and `ata` share).
-#[inline]
-fn dot_unrolled(x: &[f64], y: &[f64]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    let len = x.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    let mut i = 0;
-    while i + 4 <= len {
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
-        i += 4;
+/// Column-block edges for `ata`: block `b` covers columns
+/// `[edges[b], edges[b+1])` of the upper triangle.  A block's work is
+/// the triangle strip area `m * (c1^2 - c0^2) / 2`, so equal-work edges
+/// follow `edges[b] ~ n * sqrt(b / nblocks)` — the fix for the old
+/// `PAR_GRAIN_FLOPS / m` sizing, which measured a rectangle and let the
+/// late (wide, shallow-triangle) blocks undershoot the spawn grain.
+/// Deterministic in (m, n) alone, and since column partitioning never
+/// reorders a C element's over-rows accumulation, any edge set gives the
+/// same bits.
+fn ata_col_edges(m: usize, n: usize) -> Vec<usize> {
+    let total = m.max(1) * (n * (n + 1) / 2);
+    let nblocks = div_ceil(total, PAR_GRAIN_FLOPS).clamp(1, n);
+    let mut edges = Vec::with_capacity(nblocks + 1);
+    edges.push(0usize);
+    for b in 1..=nblocks {
+        let frac = b as f64 / nblocks as f64;
+        let ideal = (n as f64 * frac.sqrt()).round() as usize;
+        let prev = *edges.last().unwrap();
+        // strictly increasing, and leave >= 1 column for each remaining
+        // block (always feasible: nblocks <= n)
+        edges.push(ideal.clamp(prev + 1, n - (nblocks - b)));
     }
-    let mut s = (s0 + s1) + (s2 + s3);
-    while i < len {
-        s += x[i] * y[i];
-        i += 1;
-    }
-    s
+    edges
 }
 
 /// `A' * A` (Gram of columns), exploiting symmetry — row-streaming
-/// rank-1 accumulation with an unrolled-by-4 inner axpy (parity with
-/// `matmul`), parallel over column blocks of C (each worker streams all
-/// of A but owns a disjoint set of output columns, so the per-element
-/// accumulation order over rows is unchanged).
+/// rank-1 accumulation through the broadcast-FMA axpy microkernel,
+/// parallel over equal-triangle-area column blocks of C (each worker
+/// streams all of A but owns a disjoint set of output columns, so the
+/// per-element accumulation order over rows is unchanged).
 pub fn ata(a: &Matrix) -> Matrix {
     let (m, n) = (a.rows(), a.cols());
     let mut c = Matrix::zeros(n, n);
     if n == 0 {
         return c;
     }
-    // column block sized so each worker's share (m rows x block columns)
-    // clears the spawn threshold
-    let bcols = div_ceil(PAR_GRAIN_FLOPS, m.max(1)).max(BLOCK).min(n);
-    let nblocks = div_ceil(n, bcols);
+    let edges = ata_col_edges(m, n);
+    let nblocks = edges.len() - 1;
     let ad = a.data();
+    let kb = microkernel::default_kernel_backend();
     {
         let shared = threadpool::SharedMut::new(c.data_mut());
         threadpool::par_for(nblocks, 1, |bi| {
-            let c0 = bi * bcols;
-            let c1 = (c0 + bcols).min(n);
+            let c0 = edges[bi];
+            let c1 = edges[bi + 1];
             for r in 0..m {
                 let row = &ad[r * n..(r + 1) * n];
                 for i in 0..c1 {
-                    let ri = row[i];
-                    if ri == 0.0 {
-                        continue;
-                    }
                     let j0 = i.max(c0);
                     // Safety: this worker owns columns [c0, c1) of C's
                     // upper triangle; writes from other workers land in
                     // disjoint columns.
                     let crow = unsafe { shared.slice_mut(i * n + j0, i * n + c1) };
-                    let rseg = &row[j0..c1];
-                    let (mut j, end) = (0usize, rseg.len());
-                    while j + 4 <= end {
-                        crow[j] += ri * rseg[j];
-                        crow[j + 1] += ri * rseg[j + 1];
-                        crow[j + 2] += ri * rseg[j + 2];
-                        crow[j + 3] += ri * rseg[j + 3];
-                        j += 4;
-                    }
-                    while j < end {
-                        crow[j] += ri * rseg[j];
-                        j += 1;
-                    }
+                    microkernel::fma_axpy_with(kb, crow, row[i], &row[j0..c1]);
                 }
             }
         });
@@ -211,6 +168,7 @@ pub fn ata(a: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::microkernel::KernelBackend;
     use crate::util::rng::Rng;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -236,6 +194,23 @@ mod tests {
     }
 
     #[test]
+    fn backends_agree_bitwise_through_the_public_entry_points() {
+        let mut rng = Rng::new(7);
+        let a = random(&mut rng, 37, 29);
+        let b = random(&mut rng, 29, 41);
+        let with = |kb| {
+            microkernel::with_kernel_backend(kb, || {
+                (matmul(&a, &b), matmul_bt(&a, &b.t()), ata(&a))
+            })
+        };
+        let (m1, bt1, g1) = with(KernelBackend::Scalar);
+        let (m2, bt2, g2) = with(KernelBackend::Simd); // resolves to scalar off-AVX2
+        assert!(m1.data() == m2.data(), "matmul backend drift");
+        assert!(bt1.data() == bt2.data(), "matmul_bt backend drift");
+        assert!(g1.data() == g2.data(), "ata backend drift");
+    }
+
+    #[test]
     fn identity_is_neutral() {
         let mut rng = Rng::new(3);
         let a = random(&mut rng, 20, 20);
@@ -256,6 +231,25 @@ mod tests {
         let mut rng = Rng::new(5);
         let a = random(&mut rng, 31, 8);
         assert!(ata(&a).max_abs_diff(&matmul(&a.t(), &a)) < 1e-12);
+    }
+
+    #[test]
+    fn ata_col_edges_cover_and_grow() {
+        for &(m, n) in &[(1usize, 1usize), (4, 7), (1000, 100), (4096, 4096), (100000, 3)] {
+            let edges = ata_col_edges(m, n);
+            assert_eq!(*edges.first().unwrap(), 0);
+            assert_eq!(*edges.last().unwrap(), n);
+            assert!(edges.windows(2).all(|w| w[0] < w[1]), "({m},{n}): {edges:?}");
+            // equal-area sizing: blocks narrow as columns (and triangle
+            // depth) grow
+            let widths: Vec<usize> = edges.windows(2).map(|w| w[1] - w[0]).collect();
+            if widths.len() > 2 {
+                assert!(
+                    widths.first().unwrap() >= widths.last().unwrap(),
+                    "({m},{n}): early blocks should be widest: {widths:?}"
+                );
+            }
+        }
     }
 
     #[test]

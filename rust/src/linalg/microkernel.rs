@@ -1,0 +1,923 @@
+//! Fixed-lane SIMD microkernel layer for the O(N^3) setup path
+//! (DESIGN.md §14).
+//!
+//! Every super-linear setup kernel — packed-panel GEMM, the fixed 8-lane
+//! dot, the broadcast-FMA axpy/rank-2 sweeps, and the RBF
+//! squared-distance + exp row kernel — is implemented twice: an AVX2/FMA
+//! path (`std::arch::x86_64`, behind runtime feature detection) and a
+//! portable scalar path.  Both execute the **identical per-element
+//! floating-point op sequence**:
+//!
+//!  * every multiply-add is a single correctly-rounded fused op —
+//!    `_mm256_fmadd_pd` on the SIMD path, [`f64::mul_add`] on the scalar
+//!    path (IEEE 754 `fusedMultiplyAdd`; one rounding in both);
+//!  * every reduction runs through the same fixed 8-lane accumulator
+//!    tree: element `i` lands in lane `i mod 8` and the lanes collapse
+//!    in the fixed shape `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`,
+//!    regardless of vector width, tail length, or backend;
+//!  * the GEMM microkernel keeps each output element a pure FMA chain
+//!    over `k` in ascending order (the 4x8 register tile reorders rows
+//!    and columns, never the `k` reduction), so its canonical semantics
+//!    are exactly the naive `mul_add` triple loop.
+//!
+//! Results are therefore **bitwise identical** across backends — the
+//! extension of the repo's determinism policy (DESIGN.md §6) from
+//! "independent of pool width" to "independent of ISA".  Backend
+//! selection mirrors `GPML_EIGEN`: the `GPML_KERNEL` environment
+//! variable (`auto`/`simd`/`scalar`, resolved once per process) plus the
+//! scoped thread-local override [`with_kernel_backend`].  Entry points
+//! in `gemm`/`kernelfn`/`eigen` resolve the backend **once on the
+//! calling thread** and capture it into their pool closures, so the
+//! override survives the fan-out.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Rows per GEMM register tile (broadcast operand).
+pub const MR: usize = 4;
+/// Columns per GEMM register tile / packed B panel width (two 4-wide
+/// vector registers).
+pub const NR: usize = 8;
+/// Lanes in the fixed accumulator tree of [`dot`].
+pub const LANES: usize = 8;
+/// `k`-depth of one packed slab (A tile: 8 KiB, L1-resident).
+const KC: usize = 256;
+/// Column width of one packed B slab (`KC x NC` = 1 MiB, L2-resident).
+const NC: usize = 512;
+
+// ---------------------------------------------------------------------
+// Backend dispatch (the GPML_EIGEN pattern: env cache + scoped override)
+// ---------------------------------------------------------------------
+
+/// Which implementation the microkernels execute.  Both produce bitwise
+/// identical results (see the module docs); the choice is purely a
+/// throughput matter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Runtime-detected AVX2+FMA vector path (x86-64 only).
+    Simd,
+    /// Portable scalar path (`f64::mul_add` everywhere the SIMD path
+    /// fuses).
+    Scalar,
+}
+
+impl KernelBackend {
+    /// Stable label, matching the accepted `GPML_KERNEL` values.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelBackend::Simd => "simd",
+            KernelBackend::Scalar => "scalar",
+        }
+    }
+}
+
+/// Whether the SIMD backend can actually run here (x86-64 with AVX2 and
+/// FMA detected at runtime).  When this is `false`, requesting
+/// [`KernelBackend::Simd`] — via env or override — resolves to the
+/// scalar path, which computes the same bits.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// Encoding shared by the env cache and the thread-local override:
+// 0 = unset, 1 = Simd, 2 = Scalar.
+const BACKEND_UNSET: usize = 0;
+const BACKEND_SIMD: usize = 1;
+const BACKEND_SCALAR: usize = 2;
+
+fn env_backend() -> KernelBackend {
+    static CACHE: AtomicUsize = AtomicUsize::new(BACKEND_UNSET);
+    match CACHE.load(Ordering::Relaxed) {
+        BACKEND_SIMD => return KernelBackend::Simd,
+        BACKEND_SCALAR => return KernelBackend::Scalar,
+        _ => {}
+    }
+    let backend = match std::env::var("GPML_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => KernelBackend::Scalar,
+        // "simd", "auto", anything else, unset: vectorize when the
+        // hardware can — the two backends are bitwise identical, so
+        // auto-selection never changes results.
+        _ if simd_available() => KernelBackend::Simd,
+        _ => KernelBackend::Scalar,
+    };
+    let code = if backend == KernelBackend::Simd { BACKEND_SIMD } else { BACKEND_SCALAR };
+    CACHE.store(code, Ordering::Relaxed);
+    backend
+}
+
+thread_local! {
+    static LOCAL_BACKEND: Cell<usize> = const { Cell::new(BACKEND_UNSET) };
+}
+
+/// The backend microkernel entry points on this thread will execute: the
+/// innermost [`with_kernel_backend`] override if one is active, else the
+/// process-wide `GPML_KERNEL` choice (default: SIMD when available).
+/// Never returns [`KernelBackend::Simd`] on hardware that cannot run it.
+pub fn default_kernel_backend() -> KernelBackend {
+    let requested = match LOCAL_BACKEND.with(Cell::get) {
+        BACKEND_SIMD => KernelBackend::Simd,
+        BACKEND_SCALAR => KernelBackend::Scalar,
+        _ => env_backend(),
+    };
+    if requested == KernelBackend::Simd && !simd_available() {
+        KernelBackend::Scalar
+    } else {
+        requested
+    }
+}
+
+/// Run `f` with every microkernel dispatch on this thread pinned to
+/// `backend`, restoring the previous choice on exit (panic-safe; nests).
+/// Thread-local, like [`crate::linalg::eigen::with_solver`]: the
+/// `gemm`/`kernelfn`/`eigen` entry points resolve the backend on the
+/// calling thread *before* fanning out, so pooled work dispatched inside
+/// `f` stays pinned; work handed to other threads that dispatches
+/// independently sees the env default.
+pub fn with_kernel_backend<R>(backend: KernelBackend, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_BACKEND.with(|c| c.set(self.0));
+        }
+    }
+    let code = if backend == KernelBackend::Simd { BACKEND_SIMD } else { BACKEND_SCALAR };
+    let _restore = Restore(LOCAL_BACKEND.with(|c| c.replace(code)));
+    f()
+}
+
+// ---------------------------------------------------------------------
+// Canonical scalar kernels: the op-sequence contract both backends meet
+// ---------------------------------------------------------------------
+
+/// Collapse the 8-lane accumulators after folding any tail (< 8
+/// elements; element `t` of the tail continues lane `t`'s chain) —
+/// the one fixed reduction tree every dot product in the repo reduces
+/// through, shared verbatim by both backends.
+#[inline(always)]
+fn lanes_finish(mut acc: [f64; LANES], xt: &[f64], yt: &[f64]) -> f64 {
+    for (l, (&xv, &yv)) in xt.iter().zip(yt).enumerate() {
+        acc[l] = xv.mul_add(yv, acc[l]);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+#[inline(always)]
+fn dot_scalar(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n8 = x.len() - x.len() % LANES;
+    let mut acc = [0.0f64; LANES];
+    let mut i = 0;
+    while i < n8 {
+        for (l, a) in acc.iter_mut().enumerate() {
+            *a = x[i + l].mul_add(y[i + l], *a);
+        }
+        i += LANES;
+    }
+    lanes_finish(acc, &x[n8..], &y[n8..])
+}
+
+#[inline(always)]
+fn axpy_scalar(dst: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(dst.len(), x.len());
+    for (d, &xv) in dst.iter_mut().zip(x) {
+        *d = a.mul_add(xv, *d);
+    }
+}
+
+/// `dst[i] -= f * e[i] + g * z[i]`, canonically
+/// `dst[i] = fma(-f, e[i], fma(-g, z[i], dst[i]))` (tred2's rank-2 row
+/// update).
+#[inline(always)]
+fn rank2_scalar(dst: &mut [f64], f: f64, e: &[f64], g: f64, z: &[f64]) {
+    debug_assert_eq!(dst.len(), e.len());
+    debug_assert_eq!(dst.len(), z.len());
+    let (nf, ng) = (-f, -g);
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d = nf.mul_add(e[i], ng.mul_add(z[i], *d));
+    }
+}
+
+// --- fixed-sequence exp -----------------------------------------------
+
+/// Cutoffs: below `EXP_LO` the result underflows past the smallest
+/// normal scale the bit-built `2^n` can represent, so both backends
+/// return exactly `0.0`; at or above `EXP_HI` they return `+inf`.
+const EXP_LO: f64 = -708.0;
+const EXP_HI: f64 = 709.0;
+/// `1.5 * 2^52`: adding it pushes the integer part of `x * log2(e)`
+/// into the mantissa's low bits, rounding ties-to-even in the process —
+/// the round-to-nearest trick shared by both backends (valid for
+/// |value| < 2^51, far beyond the cutoffs above).
+const EXP_MAGIC: f64 = 6755399441055744.0;
+const EXP_MAGIC_BITS: i64 = 0x4338000000000000;
+/// ln(2) split: the high part's low mantissa bits are zero, so
+/// `n * LN2_HI` is exact for the `|n| <= 1075` range in play.
+#[allow(clippy::excessive_precision)]
+const EXP_LN2_HI: f64 = 6.93147180369123816490e-1; // 0x3FE62E42FEE00000
+#[allow(clippy::excessive_precision)]
+const EXP_LN2_LO: f64 = 1.90821492927058770002e-10; // 0x3DEA39EF35793C76
+/// Taylor coefficients 1/12! .. 1/0! (Horner order).  Over the reduced
+/// range |r| <= ln(2)/2 the truncation error is ~r^13/13! < 2e-16
+/// relative — a correctly-rounded-to-~1-ulp exp, and (the property that
+/// matters here) the *same* ~1-ulp value from both backends.
+const EXP_POLY: [f64; 13] = [
+    1.0 / 479001600.0,
+    1.0 / 39916800.0,
+    1.0 / 3628800.0,
+    1.0 / 362880.0,
+    1.0 / 40320.0,
+    1.0 / 5040.0,
+    1.0 / 720.0,
+    1.0 / 120.0,
+    1.0 / 24.0,
+    1.0 / 6.0,
+    0.5,
+    1.0,
+    1.0,
+];
+
+#[inline(always)]
+fn exp_scalar(x: f64) -> f64 {
+    if x < EXP_LO {
+        return 0.0;
+    }
+    if x >= EXP_HI {
+        return f64::INFINITY;
+    }
+    let t = x.mul_add(std::f64::consts::LOG2_E, EXP_MAGIC);
+    let n = t - EXP_MAGIC;
+    let n_i = (t.to_bits() as i64).wrapping_sub(EXP_MAGIC_BITS);
+    let mut r = (-n).mul_add(EXP_LN2_HI, x);
+    r = (-n).mul_add(EXP_LN2_LO, r);
+    let mut q = EXP_POLY[0];
+    for &c in &EXP_POLY[1..] {
+        q = q.mul_add(r, c);
+    }
+    // 2^n assembled directly in the exponent field (n is in [-1021, 1023]
+    // between the cutoffs, so the biased exponent stays normal)
+    let scale = f64::from_bits(((n_i + 1023) << 52) as u64);
+    q * scale
+}
+
+/// The deterministic exponential the RBF gram fast path applies —
+/// `exp(x)` to ~1 ulp over `x <= 0` (the gram feeds only non-positive
+/// arguments; the full supported domain is `[-inf, 709)` with underflow
+/// to exactly `0.0` below -708).  `exp_fixed(0.0) == 1.0` exactly, and
+/// `exp_fixed(x) <= 1.0` for every `x <= 0` — the Gram diagonal/bound
+/// invariants hold by construction.  Bitwise identical on both backends;
+/// exposed so the determinism gates can build references against it.
+pub fn exp_fixed(x: f64) -> f64 {
+    exp_scalar(x)
+}
+
+/// Squared-norm FMA chain `sum_d x[d]^2`, accumulated element by element
+/// — deliberately *not* the 8-lane tree: it matches the per-element
+/// ascending-`d` chain the gram fast path builds its inner products
+/// with (rank-p [`fma_axpy_with`] over the transposed inputs), so
+/// the diagonal `d2(i,i) = (sq_i + sq_i) - 2 t_ii` cancels to exactly
+/// `0.0` and the gram diagonal is exactly `1.0`.
+#[inline]
+pub fn sq_chain(x: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    for &v in x {
+        s = v.mul_add(v, s);
+    }
+    s
+}
+
+/// `t[j] = exp(((sq_i + sq[j]) - 2 t[j]).max(0) * neg_inv)` — the
+/// combine + exp pass that turns accumulated inner products into RBF
+/// kernel values.  The clamp guards the expansion's cancellation (d2 is
+/// mathematically >= 0) so `k <= 1` survives; `neg_inv = -1/(2 xi^2)` is
+/// computed once by the caller.
+#[inline(always)]
+fn rbf_finish_scalar(t: &mut [f64], sqi: f64, sq: &[f64], neg_inv: f64) {
+    debug_assert_eq!(t.len(), sq.len());
+    for (tj, &sqj) in t.iter_mut().zip(sq) {
+        let d2 = (-2.0f64).mul_add(*tj, sqi + sqj);
+        let d2 = if d2 > 0.0 { d2 } else { 0.0 };
+        *tj = exp_scalar(d2 * neg_inv);
+    }
+}
+
+// --- GEMM: packing + the canonical tile kernel -------------------------
+
+/// Pack an up-to-MR-row sliver of A for one `k` slab: `apack[kk*MR + r]`
+/// holds `A[row0 + r][k0 + kk]`, rows past `mrb` zero-filled (the tile
+/// kernels never read them; the zeros are defensive).
+#[inline]
+fn pack_a(apack: &mut [f64], ad: &[f64], k: usize, row0: usize, mrb: usize, k0: usize, kcb: usize) {
+    for kk in 0..kcb {
+        let dst = &mut apack[kk * MR..kk * MR + MR];
+        for (r, slot) in dst.iter_mut().enumerate() {
+            *slot = if r < mrb { ad[(row0 + r) * k + k0 + kk] } else { 0.0 };
+        }
+    }
+}
+
+/// Pack a `kcb x ncb` slab of B into NR-wide panels: panel `p` occupies
+/// `bpack[p*kcb*NR ..][.. kcb*NR]` with layout `kk*NR + j` — the
+/// microkernel streams it linearly.  Tail columns zero-fill.
+#[inline]
+fn pack_b(bpack: &mut [f64], bd: &[f64], n: usize, k0: usize, kcb: usize, jc: usize, ncb: usize) {
+    let npanels = crate::util::threadpool::div_ceil(ncb, NR);
+    for p in 0..npanels {
+        let j0 = jc + p * NR;
+        let nrb = NR.min(jc + ncb - j0);
+        let panel = &mut bpack[p * kcb * NR..(p + 1) * kcb * NR];
+        for kk in 0..kcb {
+            let src = &bd[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + nrb];
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            dst[..nrb].copy_from_slice(src);
+            dst[nrb..].fill(0.0);
+        }
+    }
+}
+
+/// The canonical tile kernel: `C[r0+r][c0+j] +=` the ascending-`kk` FMA
+/// chain over the packed slab, for `r < mrb`, `j < nrb`.  Independent
+/// per-element chains (interleaved across `j` for ILP, which cannot
+/// change any chain's rounding).  The SIMD 4x8 kernel computes exactly
+/// this for full tiles; this function handles both backends' edge tiles
+/// and the whole scalar backend.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_scalar(
+    apack: &[f64],
+    bpanel: &[f64],
+    kcb: usize,
+    c: &mut [f64],
+    r0: usize,
+    c0: usize,
+    n: usize,
+    mrb: usize,
+    nrb: usize,
+) {
+    for r in 0..mrb {
+        let crow = &mut c[(r0 + r) * n + c0..(r0 + r) * n + c0 + nrb];
+        let mut acc = [0.0f64; NR];
+        acc[..nrb].copy_from_slice(crow);
+        for kk in 0..kcb {
+            let a = apack[kk * MR + r];
+            let brow = &bpanel[kk * NR..kk * NR + NR];
+            for (j, slot) in acc.iter_mut().enumerate() {
+                *slot = a.mul_add(brow[j], *slot);
+            }
+        }
+        crow.copy_from_slice(&acc[..nrb]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2/FMA backend.  Every function computes the canonical op sequence
+// above with 4-wide vector ops: vfmadd213pd lane l == mul_add on the
+// same operands, so equality is per-op IEEE semantics, not scheduling
+// luck.  Scalar tails run *inside* the target_feature fns (mul_add
+// inlines to vfmadd) and are the same code both backends run.
+// ---------------------------------------------------------------------
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// Safety: caller must have verified AVX2+FMA (all call sites
+    /// dispatch through `default_kernel_backend`, which only yields
+    /// `Simd` when `simd_available()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n8 = x.len() - x.len() % LANES;
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut i = 0;
+        while i < n8 {
+            a0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)), a0);
+            a1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(xp.add(i + 4)),
+                _mm256_loadu_pd(yp.add(i + 4)),
+                a1,
+            );
+            i += LANES;
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), a0);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), a1);
+        lanes_finish(acc, &x[n8..], &y[n8..])
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(dst: &mut [f64], a: f64, x: &[f64]) {
+        let n4 = dst.len() - dst.len() % 4;
+        let av = _mm256_set1_pd(a);
+        let (dp, xp) = (dst.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let d = _mm256_loadu_pd(dp.add(i));
+            let xv = _mm256_loadu_pd(xp.add(i));
+            _mm256_storeu_pd(dp.add(i), _mm256_fmadd_pd(av, xv, d));
+            i += 4;
+        }
+        axpy_scalar(&mut dst[n4..], a, &x[n4..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rank2(dst: &mut [f64], f: f64, e: &[f64], g: f64, z: &[f64]) {
+        let n4 = dst.len() - dst.len() % 4;
+        let nf = _mm256_set1_pd(-f);
+        let ng = _mm256_set1_pd(-g);
+        let (dp, ep, zp) = (dst.as_mut_ptr(), e.as_ptr(), z.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let d = _mm256_loadu_pd(dp.add(i));
+            let inner = _mm256_fmadd_pd(ng, _mm256_loadu_pd(zp.add(i)), d);
+            _mm256_storeu_pd(dp.add(i), _mm256_fmadd_pd(nf, _mm256_loadu_pd(ep.add(i)), inner));
+            i += 4;
+        }
+        rank2_scalar(&mut dst[n4..], f, &e[n4..], g, &z[n4..]);
+    }
+
+    /// 4-lane exp, op-for-op the sequence of `exp_scalar`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp4(x: __m256d) -> __m256d {
+        let lo = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(EXP_LO));
+        let hi = _mm256_cmp_pd::<_CMP_GE_OQ>(x, _mm256_set1_pd(EXP_HI));
+        let log2e = _mm256_set1_pd(std::f64::consts::LOG2_E);
+        let t = _mm256_fmadd_pd(x, log2e, _mm256_set1_pd(EXP_MAGIC));
+        let n = _mm256_sub_pd(t, _mm256_set1_pd(EXP_MAGIC));
+        let n_i = _mm256_sub_epi64(_mm256_castpd_si256(t), _mm256_set1_epi64x(EXP_MAGIC_BITS));
+        // -n is an exact sign flip, matching the scalar unary negation
+        let nn = _mm256_xor_pd(n, _mm256_set1_pd(-0.0));
+        let mut r = _mm256_fmadd_pd(nn, _mm256_set1_pd(EXP_LN2_HI), x);
+        r = _mm256_fmadd_pd(nn, _mm256_set1_pd(EXP_LN2_LO), r);
+        let mut q = _mm256_set1_pd(EXP_POLY[0]);
+        for &c in &EXP_POLY[1..] {
+            q = _mm256_fmadd_pd(q, r, _mm256_set1_pd(c));
+        }
+        let scale_bits =
+            _mm256_slli_epi64::<52>(_mm256_add_epi64(n_i, _mm256_set1_epi64x(1023)));
+        let res = _mm256_mul_pd(q, _mm256_castsi256_pd(scale_bits));
+        let res = _mm256_blendv_pd(res, _mm256_set1_pd(f64::INFINITY), hi);
+        _mm256_andnot_pd(lo, res)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rbf_finish(t: &mut [f64], sqi: f64, sq: &[f64], neg_inv: f64) {
+        let n4 = t.len() - t.len() % 4;
+        let sqi_v = _mm256_set1_pd(sqi);
+        let m2 = _mm256_set1_pd(-2.0);
+        let ni = _mm256_set1_pd(neg_inv);
+        let zero = _mm256_setzero_pd();
+        let (tp, sp) = (t.as_mut_ptr(), sq.as_ptr());
+        let mut i = 0;
+        while i < n4 {
+            let tv = _mm256_loadu_pd(tp.add(i));
+            let s = _mm256_add_pd(sqi_v, _mm256_loadu_pd(sp.add(i)));
+            let d2 = _mm256_fmadd_pd(m2, tv, s);
+            // max(d2, 0): maxpd returns the second operand on NaN, same
+            // as the scalar `if d2 > 0.0 { d2 } else { 0.0 }`
+            let d2 = _mm256_max_pd(d2, zero);
+            _mm256_storeu_pd(tp.add(i), exp4(_mm256_mul_pd(d2, ni)));
+            i += 4;
+        }
+        rbf_finish_scalar(&mut t[n4..], sqi, &sq[n4..], neg_inv);
+    }
+
+    /// Full 4x8 register tile: 8 accumulator registers loaded from C,
+    /// one FMA chain over the packed slab in ascending `kk`, stored
+    /// back.  Same per-element chain as `tile_scalar` with mrb=4, nrb=8.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn tile_4x8(
+        apack: *const f64,
+        bpanel: *const f64,
+        kcb: usize,
+        c: *mut f64,
+        ldc: usize,
+    ) {
+        let mut c0l = _mm256_loadu_pd(c);
+        let mut c0h = _mm256_loadu_pd(c.add(4));
+        let mut c1l = _mm256_loadu_pd(c.add(ldc));
+        let mut c1h = _mm256_loadu_pd(c.add(ldc + 4));
+        let mut c2l = _mm256_loadu_pd(c.add(2 * ldc));
+        let mut c2h = _mm256_loadu_pd(c.add(2 * ldc + 4));
+        let mut c3l = _mm256_loadu_pd(c.add(3 * ldc));
+        let mut c3h = _mm256_loadu_pd(c.add(3 * ldc + 4));
+        for kk in 0..kcb {
+            let bl = _mm256_loadu_pd(bpanel.add(kk * NR));
+            let bh = _mm256_loadu_pd(bpanel.add(kk * NR + 4));
+            let a0 = _mm256_set1_pd(*apack.add(kk * MR));
+            c0l = _mm256_fmadd_pd(a0, bl, c0l);
+            c0h = _mm256_fmadd_pd(a0, bh, c0h);
+            let a1 = _mm256_set1_pd(*apack.add(kk * MR + 1));
+            c1l = _mm256_fmadd_pd(a1, bl, c1l);
+            c1h = _mm256_fmadd_pd(a1, bh, c1h);
+            let a2 = _mm256_set1_pd(*apack.add(kk * MR + 2));
+            c2l = _mm256_fmadd_pd(a2, bl, c2l);
+            c2h = _mm256_fmadd_pd(a2, bh, c2h);
+            let a3 = _mm256_set1_pd(*apack.add(kk * MR + 3));
+            c3l = _mm256_fmadd_pd(a3, bl, c3l);
+            c3h = _mm256_fmadd_pd(a3, bh, c3h);
+        }
+        _mm256_storeu_pd(c, c0l);
+        _mm256_storeu_pd(c.add(4), c0h);
+        _mm256_storeu_pd(c.add(ldc), c1l);
+        _mm256_storeu_pd(c.add(ldc + 4), c1h);
+        _mm256_storeu_pd(c.add(2 * ldc), c2l);
+        _mm256_storeu_pd(c.add(2 * ldc + 4), c2h);
+        _mm256_storeu_pd(c.add(3 * ldc), c3l);
+        _mm256_storeu_pd(c.add(3 * ldc + 4), c3h);
+    }
+
+    /// Edge tiles on the SIMD backend: the canonical scalar kernel, but
+    /// compiled under the target features so `mul_add` inlines to
+    /// hardware FMA.  Same ops, same bits.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn tile_edge(
+        apack: &[f64],
+        bpanel: &[f64],
+        kcb: usize,
+        c: &mut [f64],
+        r0: usize,
+        c0: usize,
+        n: usize,
+        mrb: usize,
+        nrb: usize,
+    ) {
+        tile_scalar(apack, bpanel, kcb, c, r0, c0, n, mrb, nrb);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sq_chain_tf(x: &[f64]) -> f64 {
+        super::sq_chain(x)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatching entry points
+// ---------------------------------------------------------------------
+
+/// Fixed-8-lane dot product: element `i` accumulates into lane
+/// `i mod 8` (FMA), lanes collapse through the fixed pairwise tree.
+/// Bitwise identical on both backends and for any slicing of the call
+/// across threads (it is a pure function of its inputs).
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    dot_with(default_kernel_backend(), x, y)
+}
+
+/// [`dot`] with an explicit backend (entry points resolve once and pass
+/// it down so scoped overrides survive pool fan-out).
+pub fn dot_with(backend: KernelBackend, x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Simd => unsafe { simd::dot(x, y) },
+        _ => dot_scalar(x, y),
+    }
+}
+
+/// `dst[i] = fma(a, x[i], dst[i])` — the broadcast-FMA axpy all rank-1
+/// accumulation sweeps (ata, tred2 transform accumulation, RBF distance
+/// build) run on.
+pub fn fma_axpy_with(backend: KernelBackend, dst: &mut [f64], a: f64, x: &[f64]) {
+    assert_eq!(dst.len(), x.len(), "axpy length mismatch");
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Simd => unsafe { simd::axpy(dst, a, x) },
+        _ => axpy_scalar(dst, a, x),
+    }
+}
+
+/// `dst[i] = fma(-f, e[i], fma(-g, z[i], dst[i]))` — tred2's rank-2 row
+/// update.
+pub fn rank2_sub_with(
+    backend: KernelBackend,
+    dst: &mut [f64],
+    f: f64,
+    e: &[f64],
+    g: f64,
+    z: &[f64],
+) {
+    assert_eq!(dst.len(), e.len(), "rank2 length mismatch");
+    assert_eq!(dst.len(), z.len(), "rank2 length mismatch");
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Simd => unsafe { simd::rank2(dst, f, e, g, z) },
+        _ => rank2_scalar(dst, f, e, g, z),
+    }
+}
+
+/// `sq_chain` under the ambient-backend target features (bits are
+/// backend-independent; the SIMD wrapper only buys inlined FMA).
+pub fn sq_chain_with(backend: KernelBackend, x: &[f64]) -> f64 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Simd => unsafe { simd::sq_chain_tf(x) },
+        _ => sq_chain(x),
+    }
+}
+
+/// One row segment of an RBF/ARD gram: `out` must arrive holding the
+/// accumulated inner products `t[j] = <x_i, x_j>` (built with
+/// [`fma_axpy_with`] over the transposed inputs); this combines them
+/// with the squared norms and applies the fixed exp —
+/// `out[j] = exp(max((sq_i + sq[j]) - 2 t[j], 0) * neg_inv)`.
+pub fn rbf_finish_with(
+    backend: KernelBackend,
+    out: &mut [f64],
+    sqi: f64,
+    sq: &[f64],
+    neg_inv: f64,
+) {
+    assert_eq!(out.len(), sq.len(), "rbf_finish length mismatch");
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Simd => unsafe { simd::rbf_finish(out, sqi, sq, neg_inv) },
+        _ => rbf_finish_scalar(out, sqi, sq, neg_inv),
+    }
+}
+
+/// Packed-panel GEMM over one stripe of C rows: `C[i0..i0+rows] += A
+/// [i0..i0+rows] * B` with `A` m x k, `B` k x n, both row-major, `cstripe`
+/// the stripe's rows of C.  B is packed into `KC x NC` slabs of NR-wide
+/// panels and A into MR-row slivers; full 4x8 tiles run the register
+/// kernel, edges the canonical scalar kernel.  Each C element is an
+/// ascending-`k` FMA chain — bitwise equal to the naive `mul_add` triple
+/// loop on both backends, and independent of the stripe partition.
+pub fn gemm_stripe(
+    backend: KernelBackend,
+    ad: &[f64],
+    bd: &[f64],
+    cstripe: &mut [f64],
+    i0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 || cstripe.is_empty() {
+        return;
+    }
+    let rows = cstripe.len() / n;
+    if k == 0 || rows == 0 {
+        return;
+    }
+    let kc_max = KC.min(k);
+    let npanels_max = crate::util::threadpool::div_ceil(NC.min(n), NR);
+    let mut bpack = vec![0.0f64; kc_max * npanels_max * NR];
+    let mut apack = vec![0.0f64; kc_max * MR];
+    let mut jc = 0;
+    while jc < n {
+        let ncb = NC.min(n - jc);
+        let npanels = crate::util::threadpool::div_ceil(ncb, NR);
+        let mut k0 = 0;
+        while k0 < k {
+            let kcb = KC.min(k - k0);
+            pack_b(&mut bpack, bd, n, k0, kcb, jc, ncb);
+            let mut r0 = 0;
+            while r0 < rows {
+                let mrb = MR.min(rows - r0);
+                pack_a(&mut apack, ad, k, i0 + r0, mrb, k0, kcb);
+                for p in 0..npanels {
+                    let c0 = jc + p * NR;
+                    let nrb = NR.min(jc + ncb - c0);
+                    let bpanel = &bpack[p * kcb * NR..(p + 1) * kcb * NR];
+                    match backend {
+                        #[cfg(target_arch = "x86_64")]
+                        KernelBackend::Simd if mrb == MR && nrb == NR => unsafe {
+                            simd::tile_4x8(
+                                apack.as_ptr(),
+                                bpanel.as_ptr(),
+                                kcb,
+                                cstripe.as_mut_ptr().add(r0 * n + c0),
+                                n,
+                            );
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        KernelBackend::Simd => unsafe {
+                            simd::tile_edge(&apack, bpanel, kcb, cstripe, r0, c0, n, mrb, nrb);
+                        },
+                        _ => tile_scalar(&apack, bpanel, kcb, cstripe, r0, c0, n, mrb, nrb),
+                    }
+                }
+                r0 += MR;
+            }
+            k0 += KC;
+        }
+        jc += NC;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The canonical semantics: naive triple loop, ascending-k mul_add
+    /// chain per element.
+    fn naive_fma_gemm(ad: &[f64], bd: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc = ad[i * k + kk].mul_add(bd[kk * n + j], acc);
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn backends() -> Vec<KernelBackend> {
+        let mut v = vec![KernelBackend::Scalar];
+        if simd_available() {
+            v.push(KernelBackend::Simd);
+        }
+        v
+    }
+
+    #[test]
+    fn gemm_panel_tails_match_naive() {
+        // the ISSUE 10 satellite grid: every dimension crosses the
+        // packing boundaries (MR/NR/KC tails) and the cache-block edge
+        let dims = [1usize, 3, 63, 64, 65, 100];
+        let mut rng = Rng::new(101);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let ad: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                    let bd: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+                    let want = naive_fma_gemm(&ad, &bd, m, k, n);
+                    for backend in backends() {
+                        let mut c = vec![0.0f64; m * n];
+                        gemm_stripe(backend, &ad, &bd, &mut c, 0, k, n);
+                        assert!(
+                            c == want,
+                            "gemm ({m},{k},{n}) {} differs from the naive FMA chain",
+                            backend.as_str()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_the_eight_lane_reference_bitwise() {
+        let mut rng = Rng::new(102);
+        for len in [0usize, 1, 3, 7, 8, 9, 16, 31, 100, 1000] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            // independent 8-lane reference
+            let mut lanes = [0.0f64; 8];
+            for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                lanes[i % 8] = a.mul_add(b, lanes[i % 8]);
+            }
+            let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            for backend in backends() {
+                let got = dot_with(backend, &x, &y);
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "dot len {len} {}: {got:e} vs {want:e}",
+                    backend.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_rank2_match_scalar_bitwise() {
+        let mut rng = Rng::new(103);
+        for len in [1usize, 4, 5, 31, 64, 257] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let e: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let base: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let (a, f, g) = (rng.normal(), rng.normal(), rng.normal());
+            let mut want = base.clone();
+            axpy_scalar(&mut want, a, &x);
+            rank2_scalar(&mut want, f, &e, g, &x);
+            for backend in backends() {
+                let mut got = base.clone();
+                fma_axpy_with(backend, &mut got, a, &x);
+                rank2_sub_with(backend, &mut got, f, &e, g, &x);
+                assert!(got == want, "axpy/rank2 len {len} {}", backend.as_str());
+            }
+        }
+    }
+
+    #[test]
+    fn exp_fixed_accuracy_and_invariants() {
+        // ~1 ulp against std exp across the gram's operating range
+        let mut worst = 0.0f64;
+        let mut x = -700.0f64;
+        while x <= 0.0 {
+            let got = exp_fixed(x);
+            let want = x.exp();
+            if want > 0.0 {
+                let rel = ((got - want) / want).abs();
+                worst = worst.max(rel);
+            }
+            assert!(got <= 1.0, "exp_fixed({x}) = {got} > 1");
+            assert!(got >= 0.0, "exp_fixed({x}) = {got} < 0");
+            x += 0.37;
+        }
+        assert!(worst < 1e-15, "exp_fixed worst relative error {worst:e}");
+        // exact endpoints and edge cases
+        assert_eq!(exp_fixed(0.0), 1.0);
+        assert_eq!(exp_fixed(-0.0), 1.0);
+        assert_eq!(exp_fixed(-800.0), 0.0);
+        assert_eq!(exp_fixed(f64::NEG_INFINITY), 0.0);
+        assert_eq!(exp_fixed(800.0), f64::INFINITY);
+        assert!(exp_fixed(f64::NAN).is_nan());
+        // positive range still ~1 ulp (used by nothing hot, but exposed)
+        for &x in &[0.5, 1.0, 10.0, 100.0, 700.0] {
+            let rel = ((exp_fixed(x) - x.exp()) / x.exp()).abs();
+            assert!(rel < 1e-15, "exp_fixed({x}) rel err {rel:e}");
+        }
+    }
+
+    #[test]
+    fn rbf_finish_diag_is_exactly_one_and_backends_agree() {
+        let mut rng = Rng::new(104);
+        let p = 5;
+        let xi: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let sqi = sq_chain(&xi);
+        // t accumulated the same way the gram row kernel does
+        let cols = 11usize;
+        let xt: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..cols).map(|_| rng.normal()).collect())
+            .collect();
+        let mut t = vec![0.0f64; cols];
+        for (d, row) in xt.iter().enumerate() {
+            fma_axpy_with(KernelBackend::Scalar, &mut t, xi[d], row);
+        }
+        let sq: Vec<f64> = (0..cols)
+            .map(|j| sq_chain(&xt.iter().map(|r| r[j]).collect::<Vec<_>>()))
+            .collect();
+        // plant the self-column: t[0] = <xi, xi> accumulated per-d
+        let mut t0 = t.clone();
+        t0[0] = sq_chain(&xi);
+        let mut sq0 = sq.clone();
+        sq0[0] = sqi;
+        let mut want = t0.clone();
+        rbf_finish_scalar(&mut want, sqi, &sq0, -0.5);
+        assert_eq!(want[0], 1.0, "diagonal must be exactly 1.0");
+        for backend in backends() {
+            let mut got = t0.clone();
+            rbf_finish_with(backend, &mut got, sqi, &sq0, -0.5);
+            assert!(got == want, "rbf_finish {} drifts", backend.as_str());
+            assert!(got.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn backend_dispatch_override_nests_and_restores() {
+        with_kernel_backend(KernelBackend::Scalar, || {
+            assert_eq!(default_kernel_backend(), KernelBackend::Scalar);
+            if simd_available() {
+                with_kernel_backend(KernelBackend::Simd, || {
+                    assert_eq!(default_kernel_backend(), KernelBackend::Simd);
+                });
+            }
+            assert_eq!(default_kernel_backend(), KernelBackend::Scalar);
+        });
+        // forcing simd on hardware without it resolves to scalar
+        if !simd_available() {
+            with_kernel_backend(KernelBackend::Simd, || {
+                assert_eq!(default_kernel_backend(), KernelBackend::Scalar);
+            });
+        }
+        assert_eq!(KernelBackend::Simd.as_str(), "simd");
+        assert_eq!(KernelBackend::Scalar.as_str(), "scalar");
+    }
+
+    #[test]
+    fn gemm_stripe_accumulates_into_existing_c() {
+        let mut rng = Rng::new(105);
+        let (m, k, n) = (7usize, 9usize, 13usize);
+        let ad: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let bd: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let init: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut want = init.clone();
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = want[i * n + j];
+                for kk in 0..k {
+                    acc = ad[i * k + kk].mul_add(bd[kk * n + j], acc);
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        for backend in backends() {
+            let mut c = init.clone();
+            gemm_stripe(backend, &ad, &bd, &mut c, 0, k, n);
+            assert!(c == want, "accumulating gemm {} drifts", backend.as_str());
+        }
+    }
+}

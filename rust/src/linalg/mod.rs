@@ -1,5 +1,7 @@
 //! Dense linear-algebra substrate, implemented from scratch (no external
-//! linalg crates in this image): row-major [`Matrix`], blocked GEMM,
+//! linalg crates in this image): row-major [`Matrix`], the fixed-lane
+//! SIMD/scalar microkernel layer (`microkernel`, DESIGN.md §14) and the
+//! blocked GEMM on top of it,
 //! Cholesky (naive-baseline engine), the symmetric eigensolver (the
 //! paper's O(N^3) overhead; divide-and-conquer tridiagonal stage in
 //! `dac` over the shared `secular` merge machinery, with the QL
@@ -12,6 +14,7 @@ pub(crate) mod dac;
 pub mod eigen;
 pub mod gemm;
 pub mod matrix;
+pub mod microkernel;
 pub mod rankone;
 pub(crate) mod secular;
 pub mod strassen;
@@ -19,6 +22,9 @@ pub mod strassen;
 pub use chol::{CholError, Cholesky};
 pub use eigen::{with_solver, EigenSolver, SymEigen};
 pub use gemm::{matmul, matmul_bt};
+pub use microkernel::{
+    default_kernel_backend, simd_available, with_kernel_backend, KernelBackend,
+};
 pub use matrix::{axpy, dot, norm2, Matrix};
 pub use rankone::{ortho_drift, rank_one_update};
 pub use strassen::strassen;

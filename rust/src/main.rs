@@ -80,6 +80,10 @@ USAGE:
   setup and search wavefronts (DESIGN.md §6); 1 = exact serial, default =
   GPML_THREADS or all cores.
 
+  GPML_KERNEL={auto,simd,scalar} picks the microkernel backend for the
+  O(N^3) setup kernels (DESIGN.md §14); the backends are bitwise
+  identical, and `simd` degrades to `scalar` off AVX2+FMA hardware.
+
   Protocol reference: docs/PROTOCOL.md.  Quickstart: README.md.
 ";
 
@@ -497,6 +501,11 @@ fn cmd_bench_gate(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    println!(
+        "kernel backend: {} (avx2+fma detected: {}; GPML_KERNEL to pin, DESIGN.md §14)",
+        gpml::linalg::default_kernel_backend().as_str(),
+        gpml::linalg::simd_available()
+    );
     let dir: std::path::PathBuf =
         args.get("artifacts").map(Into::into).unwrap_or_else(default_artifact_dir);
     let rt = PjrtRuntime::open(&dir)?;
